@@ -1,0 +1,47 @@
+//! Quickstart: load the AOT artifacts, decode one reasoning problem with the
+//! RaaS policy, and print everything a first-time user wants to see.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use raas::config::EngineConfig;
+use raas::engine::{Engine, GenOptions};
+use raas::util::rng::Rng;
+use raas::workload::Problem;
+
+fn main() -> Result<()> {
+    // 1. Configure: RaaS policy, 256-token KV budget, alpha = 1e-4.
+    let cfg = EngineConfig {
+        budget: 256,
+        alpha: 1e-4,
+        ..Default::default()
+    };
+
+    // 2. Load the engine (compiles the HLO artifacts once, ~seconds).
+    let mut engine = Engine::new_with_capacities(cfg, &[64, 128, 256, 512])?;
+    println!("loaded: {:?}", engine.model());
+
+    // 3. Sample a reasoning problem from the synthetic benchmark.
+    let spec = engine.meta.corpus.clone();
+    let mut rng = Rng::new(7);
+    let problem = Problem::sample(&mut rng, &spec, Some(10));
+    let prompt = problem.encode_prompt(&spec);
+    println!("\nprompt:  {}", engine.tokenizer.decode(&prompt));
+
+    // 4. Generate.
+    let out = engine.generate(&prompt, &GenOptions { max_new: 96, ..Default::default() })?;
+    println!("decoded: {}", engine.tokenizer.decode(&out.tokens));
+
+    // 5. Check the answer and report serving stats.
+    let got = engine.tokenizer.parse_answer(&out.tokens);
+    println!("\nanswer: got {:?}, expected {}", got, problem.answer());
+    println!(
+        "prefill {:.1} ms | decode {:.1} ms ({:.2} ms/token) | peak resident KV {} B",
+        1e3 * out.prefill_secs,
+        1e3 * out.decode_secs,
+        1e3 * out.decode_secs / out.tokens.len().max(1) as f64,
+        out.peak_resident_bytes
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! End-to-end serving driver (the DESIGN.md validation workload): spin up
+//! engine replicas behind the router, push a batch of reasoning requests
+//! through continuous batching, and report accuracy + latency/throughput.
+//! Results land in results/serve_batch.json and EXPERIMENTS.md.
+//!
+//!     cargo run --release --example serve_batch -- [--requests 32] [--replicas 2]
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use raas::config::{ArtifactMeta, EngineConfig};
+use raas::coordinator::batcher::BatcherConfig;
+use raas::coordinator::request::{Request, Response};
+use raas::coordinator::router::{RoutePolicy, Router};
+use raas::coordinator::server::EngineServer;
+use raas::util::cli::Args;
+use raas::util::json::Json;
+use raas::util::rng::Rng;
+use raas::util::stats::Summary;
+use raas::workload::{parse_answer, Problem};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let n_requests = args.usize_or("requests", 24);
+    let replicas = args.usize_or("replicas", 2);
+    let max_batch = args.usize_or("max-batch", 4);
+    let cfg = EngineConfig::from_args(&args)?;
+
+    println!("spawning {replicas} replicas (policy={}, budget={})…", cfg.policy, cfg.budget);
+    let servers: Vec<EngineServer> = (0..replicas)
+        .map(|i| {
+            EngineServer::spawn(
+                format!("r{i}"),
+                cfg.clone(),
+                BatcherConfig { max_batch },
+                Some(vec![64, 128, 256, 512]),
+            )
+        })
+        .collect::<Result<_>>()?;
+    let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
+    let spec = meta.corpus.clone();
+    let mut router = Router::new(servers, RoutePolicy::LeastLoaded);
+
+    let mut rng = Rng::new(args.u64_or("seed", 11));
+    let (tx, rx) = std::sync::mpsc::channel::<Response>();
+    let mut answers = Vec::new();
+    let t0 = Instant::now();
+    for id in 0..n_requests as u64 {
+        let p = Problem::sample(&mut rng, &spec, None);
+        answers.push(p.answer());
+        router.route(Request {
+            id,
+            prompt: p.encode_prompt(&spec),
+            max_new: spec.max_decode_tokens(spec.max_steps),
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        })?;
+    }
+    drop(tx);
+
+    let mut jct = Summary::new();
+    let mut ttft = Summary::new();
+    let (mut tokens, mut correct, mut errors) = (0usize, 0usize, 0usize);
+    for resp in rx.iter() {
+        match &resp.error {
+            Some(e) => {
+                eprintln!("request {} failed: {e}", resp.id);
+                errors += 1;
+            }
+            None => {
+                jct.add(resp.jct_secs);
+                ttft.add(resp.ttft_secs);
+                tokens += resp.tokens.len();
+                if parse_answer(&spec, &resp.tokens) == Some(answers[resp.id as usize]) {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let done = jct.count();
+    let report = Json::obj(vec![
+        ("requests", Json::from(n_requests)),
+        ("completed", Json::from(done)),
+        ("errors", Json::from(errors)),
+        ("replicas", Json::from(replicas)),
+        ("policy", Json::str(cfg.policy.name())),
+        ("budget", Json::from(cfg.budget)),
+        ("wall_secs", Json::from(wall)),
+        ("req_per_sec", Json::from(done as f64 / wall)),
+        ("tok_per_sec", Json::from(tokens as f64 / wall)),
+        ("accuracy", Json::from(correct as f64 / done.max(1) as f64)),
+        ("jct_p50_s", Json::from(jct.percentile(50.0))),
+        ("jct_p99_s", Json::from(jct.percentile(99.0))),
+        ("ttft_p50_s", Json::from(ttft.percentile(50.0))),
+    ]);
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/serve_batch.json", report.to_string())?;
+    println!("\n== serve_batch report ==");
+    println!("served {done}/{n_requests} in {wall:.1}s on {replicas} replicas");
+    println!("throughput {:.2} req/s, {:.1} tok/s", done as f64 / wall, tokens as f64 / wall);
+    println!("JCT p50 {:.2}s p99 {:.2}s | TTFT p50 {:.0}ms", jct.percentile(50.0),
+             jct.percentile(99.0), 1e3 * ttft.percentile(50.0));
+    println!("accuracy {:.2} | errors {errors}", correct as f64 / done.max(1) as f64);
+    println!("wrote results/serve_batch.json");
+    for r in router.into_replicas() {
+        r.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""Figure-3 data: classify the trained model's attention maps.
+
+Runs the dense model over sampled problems with attention capture, then
+classifies every (layer, head) map the way the paper's §3.1 manual
+inspection does:
+
+  * **milestone map** — has a decode column that is bright (above `hi`)
+    while consumed and then fades for good (the waterfall);
+  * **phoenix map** — has a column that goes quiet for >= `gap` decode steps
+    and then re-lights (paper uses 128; scaled by --gap to this model's
+    shorter chains);
+  * **lazy map** — attention mass concentrated on the sink + local band
+    (StreamingLLM pattern).
+
+Writes ``artifacts/fig3_attention_stats.json`` which `raas fig3` renders
+next to the paper's 20-25 % / 1-2 % / >70 % figures.
+
+Usage: python -m compile.analyze_attention [--out ../artifacts] [--problems 12]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, forward_train
+from .train import load_weights
+
+
+def classify_map(attn, prompt_len: int, hi=0.2, lo=0.02, gap=24, fade=12):
+    """Classify one [T, T] attention map.  Returns set of labels."""
+    T = attn.shape[0]
+    labels = set()
+    # lazy: fraction of each decode row's mass on sink (first 2 cols) + local
+    # (previous 4 positions)
+    rows = range(prompt_len, T)
+    lazy_mass = []
+    for t in rows:
+        sink = attn[t, :2].sum()
+        local = attn[t, max(0, t - 4):t + 1].sum()
+        lazy_mass.append(min(1.0, sink + local))
+    if lazy_mass and float(np.mean(lazy_mass)) > 0.80:
+        labels.add("lazy")
+
+    # column analysis over decode steps
+    cols = attn[prompt_len:, :]  # [D, T] rows=decode steps
+    D = cols.shape[0]
+    for c in range(T):
+        series = cols[:, c]
+        hot = np.where(series >= hi)[0]
+        if len(hot) == 0:
+            continue
+        # ignore trivial self/local columns
+        if c >= prompt_len and (hot + prompt_len - c <= 2).all():
+            continue
+        # phoenix: two hots separated by a quiet gap
+        if len(hot) >= 2:
+            gaps = np.diff(hot)
+            if gaps.max() >= gap and series[hot[0] + 1:hot[-1]].max() < hi:
+                labels.add("phoenix")
+                continue
+        last = hot[-1]
+        tail = series[last + 1:]
+        if len(tail) >= fade and (tail < lo).all():
+            labels.add("milestone")
+    return labels
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--problems", type=int, default=12)
+    ap.add_argument("--gap", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = ModelConfig()
+    wpath = os.path.join(args.out, "weights.npz")
+    params = load_weights(wpath, cfg.n_layers)
+    ccfg = corpus.CorpusConfig()
+    rng = np.random.default_rng(args.seed)
+
+    counts = {"milestone": 0, "phoenix": 0, "lazy": 0}
+    n_maps = 0
+    fwd = jax.jit(lambda t: forward_train(params, cfg, t, return_attn=True))
+    for _ in range(args.problems):
+        p = corpus.sample_problem(rng, ccfg, k=ccfg.max_steps)
+        full, plen = corpus.encode_full(p)
+        toks = np.asarray([full], np.int32)
+        _, maps = fwd(toks)  # [L, 1, H, T, T]
+        maps = np.asarray(maps)
+        for l in range(cfg.n_layers):
+            for h in range(cfg.n_heads):
+                labels = classify_map(maps[l, 0, h], plen, gap=args.gap)
+                for lab in labels:
+                    counts[lab] += 1
+                n_maps += 1
+
+    stats = {
+        "n_maps": n_maps,
+        "milestone_frac": counts["milestone"] / n_maps,
+        "phoenix_frac": counts["phoenix"] / n_maps,
+        "lazy_frac": counts["lazy"] / n_maps,
+        "problems": args.problems,
+    }
+    out_path = os.path.join(args.out, "fig3_attention_stats.json")
+    with open(out_path, "w") as f:
+        json.dump(stats, f, indent=1)
+    print(json.dumps(stats, indent=1))
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

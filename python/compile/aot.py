@@ -1,0 +1,196 @@
+"""AOT compile path: bake trained weights into HLO-text executables.
+
+Emits HLO **text**, not a serialized ``HloModuleProto`` — jax >= 0.5 writes
+protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser on the rust side
+(`HloModuleProto::from_text_file`) reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Artifact set (all shapes static; weights are HLO constants):
+
+  embed.hlo.txt                  (token i32[1])                  -> (h f32[d],)
+  qkv_l{i}.hlo.txt               (h f32[d], pos f32[1])          -> (q, k, v)
+  attn_mlp_l{i}_c{C}.hlo.txt     (h, q, K[C], V[C], valid[C])    -> (h',)
+  lm_head.hlo.txt                (h f32[d])                      -> (logits,)
+  prefill_p{P}.hlo.txt           (tokens i32[P], len i32[])      -> (K, V, logits)
+
+``C`` ranges over the slot-capacity ladder: the engine picks the smallest
+capacity >= the slot count a policy selected, padding with invalid slots.
+``meta.json`` describes everything the rust runtime needs.
+
+Usage: python -m compile.aot [--out ../artifacts] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .model import (ModelConfig, embed_tok, init_params, layer_attn_mlp,
+                    layer_qkv, lm_head, prefill)
+from .train import load_weights
+
+CAPACITIES = [64, 128, 256, 512, 1024, 2048, 4096, 8192]
+PREFILL_SIZES = [256, 2048]
+QUICK_CAPACITIES = [64, 256]
+QUICK_PREFILL_SIZES = [256]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is REQUIRED: the default elides weight
+    # tensors as `constant({...})`, which the rust-side HLO text parser reads
+    # back as zeros — every baked weight would silently vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write(out_dir: str, name: str, lowered) -> str:
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    return name
+
+
+def export_all(params, cfg: ModelConfig, out_dir: str,
+               capacities=None, prefill_sizes=None, verbose=True) -> dict:
+    capacities = capacities or CAPACITIES
+    prefill_sizes = prefill_sizes or PREFILL_SIZES
+    os.makedirs(out_dir, exist_ok=True)
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f32, i32 = jnp.float32, jnp.int32
+    spec = jax.ShapeDtypeStruct
+    files = {}
+
+    def log(msg):
+        if verbose:
+            print(msg, flush=True)
+
+    t0 = time.time()
+    lowered = jax.jit(lambda t: (embed_tok(params, cfg, t),)).lower(spec((1,), i32))
+    files["embed"] = _write(out_dir, "embed.hlo.txt", lowered)
+    log(f"embed done ({time.time()-t0:.1f}s)")
+
+    lowered = jax.jit(lambda h: (lm_head(params, cfg, h),)).lower(spec((d,), f32))
+    files["lm_head"] = _write(out_dir, "lm_head.hlo.txt", lowered)
+
+    files["qkv"] = []
+    for l in range(cfg.n_layers):
+        lowered = jax.jit(
+            lambda h, pos, l=l: layer_qkv(params, cfg, l, h, pos)
+        ).lower(spec((d,), f32), spec((1,), f32))
+        files["qkv"].append(_write(out_dir, f"qkv_l{l}.hlo.txt", lowered))
+    log(f"qkv done ({time.time()-t0:.1f}s)")
+
+    files["attn_mlp"] = {}
+    for C in capacities:
+        per_layer = []
+        for l in range(cfg.n_layers):
+            lowered = jax.jit(
+                lambda h, q, k, v, valid, l=l: (
+                    layer_attn_mlp(params, cfg, l, h, q, k, v, valid),)
+            ).lower(spec((d,), f32), spec((nh, hd), f32),
+                    spec((C, nkv, hd), f32), spec((C, nkv, hd), f32),
+                    spec((C,), f32))
+            per_layer.append(_write(out_dir, f"attn_mlp_l{l}_c{C}.hlo.txt", lowered))
+        files["attn_mlp"][str(C)] = per_layer
+        log(f"attn_mlp C={C} done ({time.time()-t0:.1f}s)")
+
+    files["prefill"] = {}
+    for P in prefill_sizes:
+        lowered = jax.jit(
+            lambda toks, ln: prefill(params, cfg, toks, ln)
+        ).lower(spec((P,), i32), spec((), i32))
+        files["prefill"][str(P)] = _write(out_dir, f"prefill_p{P}.hlo.txt", lowered)
+        log(f"prefill P={P} done ({time.time()-t0:.1f}s)")
+
+    return files
+
+
+def build_meta(cfg: ModelConfig, files: dict, capacities, prefill_sizes,
+               trained: bool) -> dict:
+    ccfg = corpus.CorpusConfig()
+    return {
+        "model": cfg.to_dict(),
+        "trained": trained,
+        "capacities": capacities,
+        "prefill_sizes": prefill_sizes,
+        "files": files,
+        "page_size": 16,
+        "corpus": {
+            "min_steps": ccfg.min_steps,
+            "max_steps": ccfg.max_steps,
+            "max_lookback": ccfg.max_lookback,
+            "vocab_names": {str(k): v for k, v in corpus.TOKEN_NAMES.items()},
+            "specials": {
+                "pad": corpus.PAD, "bos": corpus.BOS, "eos": corpus.EOS,
+                "q": corpus.Q, "eq": corpus.EQ, "sep": corpus.SEP,
+                "step": corpus.STEP, "ans": corpus.ANS, "dot": corpus.DOT,
+                "plus": corpus.PLUS, "minus": corpus.MINUS,
+                "times": corpus.TIMES, "dig0": corpus.DIG0,
+                "idx0": corpus.IDX0, "n_idx": corpus.N_IDX,
+            },
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--weights", type=str, default=None,
+                    help="weights.npz (default: <out>/weights.npz; random init if absent)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small capacity ladder (CI / tests)")
+    args = ap.parse_args()
+
+    cfg = ModelConfig()
+    wpath = args.weights or os.path.join(args.out, "weights.npz")
+    trained = os.path.exists(wpath)
+    if trained:
+        params = load_weights(wpath, cfg.n_layers)
+        print(f"loaded trained weights from {wpath}")
+    else:
+        print(f"WARNING: {wpath} missing — exporting randomly initialised weights")
+        params = init_params(jax.random.PRNGKey(0), cfg)
+
+    capacities = QUICK_CAPACITIES if args.quick else CAPACITIES
+    prefill_sizes = QUICK_PREFILL_SIZES if args.quick else PREFILL_SIZES
+    files = export_all(params, cfg, args.out, capacities, prefill_sizes)
+    meta = build_meta(cfg, files, capacities, prefill_sizes, trained)
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    write_consistency(params, cfg, args.out)
+    print(f"wrote {args.out}/meta.json")
+
+
+def write_consistency(params, cfg: ModelConfig, out_dir: str, n: int = 4) -> None:
+    """Greedy dense-oracle token streams for fixed prompts: the rust
+    integration suite replays these through the serving decomposition and
+    asserts exact agreement (cross-language numerics check)."""
+    from .model import generate_dense
+
+    rng = np.random.default_rng(1234)
+    cases = []
+    ccfg = corpus.CorpusConfig()
+    for _ in range(n):
+        p = corpus.sample_problem(rng, ccfg, k=int(rng.integers(2, 7)))
+        prompt = corpus.encode_prompt(p)
+        toks = generate_dense(params, cfg, prompt, max_new=24, eos=corpus.EOS)
+        cases.append({"prompt": prompt, "dense_tokens": toks})
+    with open(os.path.join(out_dir, "consistency.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Synthetic chain-arithmetic reasoning corpus.
+
+This is the substitute for GSM8k/MATH500/AIME (see DESIGN.md §3): a task that
+*provably* contains the two phenomena RaaS exploits:
+
+  * **milestone tokens** — each reasoning step emits an intermediate value
+    ``v_i`` that a later step (possibly many steps later) consumes and that is
+    never needed again afterwards;
+  * **phoenix tokens** — the per-step instructions ``(r_i, op_i, b_i)`` live
+    in the (short) prefill prompt and are consumed mid-decode, long after any
+    recency window would have evicted them.
+
+Task
+----
+The prompt specifies ``k`` reasoning steps over single-digit values (mod 10):
+
+    prompt  = BOS Q a [ IDX_i IDX_r op b ] * k  EQ
+    decode  = [ STEP IDX_i IDX_r v_r op b IDX_i v_i SEP ] * k  ANS v_k DOT EOS
+
+where step ``i`` (1-based) computes ``v_i = v_{r_i} op_i b_i (mod 10)`` with
+``v_0 = a`` and ``r_i`` drawn from the last ``max_lookback`` steps.  Step
+indices are *single dedicated tokens* ``IDX_0 … IDX_19`` and the decode is a
+fully decomposed chain of thought — every prediction is one induction hop or
+a local table lookup, the structures a tiny model learns reliably:
+
+  * ``IDX_r``, ``op``, ``b``: copied out of the prompt group opened by
+    ``IDX_i`` — **phoenix** accesses long after prefill;
+  * ``v_r``: the input token *is* ``IDX_r``; every earlier occurrence of
+    ``IDX_r`` followed by a digit carries ``v_r`` (step ``r`` re-emits
+    ``IDX_r v_r`` before its SEP), so this is a +1 induction copy — the
+    **milestone** access, up to ``9 * max_lookback`` tokens back;
+  * ``v_i``: local arithmetic over the just-emitted ``v_r op b``.
+
+The vocabulary, framing and constants are mirrored in
+``rust/src/runtime/tokenizer.rs`` and exported via ``artifacts/meta.json``;
+keep the two in sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Vocabulary (mirrored in rust/src/runtime/tokenizer.rs)
+# ---------------------------------------------------------------------------
+PAD, BOS, EOS, Q, EQ, SEP, STEP, ANS, DOT, PLUS, MINUS, TIMES = range(12)
+DIG0 = 12  # digits 0..9 are token ids 12..21
+IDX0 = 22  # step-index tokens IDX_0..IDX_19 are ids 22..41
+N_IDX = 20
+VOCAB_SIZE = 48  # rounded up for nice MXU-friendly shapes
+
+TOKEN_NAMES = {
+    PAD: "<pad>", BOS: "<bos>", EOS: "<eos>", Q: "Q", EQ: "=", SEP: ";",
+    STEP: "s", ANS: "A", DOT: ".", PLUS: "+", MINUS: "-", TIMES: "*",
+}
+for _d in range(10):
+    TOKEN_NAMES[DIG0 + _d] = str(_d)
+for _i in range(N_IDX):
+    TOKEN_NAMES[IDX0 + _i] = f"#{_i}"
+
+OPS = (PLUS, MINUS, TIMES)
+
+
+def apply_op(x: int, op: int, y: int) -> int:
+    if op == PLUS:
+        return (x + y) % 10
+    if op == MINUS:
+        return (x - y) % 10
+    if op == TIMES:
+        return (x * y) % 10
+    raise ValueError(f"not an op token: {op}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusConfig:
+    """Distribution of synthetic reasoning problems."""
+
+    min_steps: int = 2
+    max_steps: int = 16
+    max_lookback: int = 6  # r_i >= i - max_lookback
+    seed: int = 0
+
+    # Fixed framing sizes (tokens).
+    @property
+    def prompt_len(self) -> int:  # for max_steps
+        return 3 + 4 * self.max_steps + 1
+
+    @property
+    def decode_len(self) -> int:  # for max_steps
+        return 9 * self.max_steps + 4
+
+    @property
+    def seq_len(self) -> int:
+        return self.prompt_len + self.decode_len
+
+
+@dataclasses.dataclass
+class Problem:
+    a: int
+    steps: list  # list of (r, op, b) with r 0-based index of consumed value
+    values: list  # v_0..v_k
+
+    @property
+    def answer(self) -> int:
+        return self.values[-1]
+
+
+def sample_problem(rng: np.random.Generator, cfg: CorpusConfig, k: int | None = None) -> Problem:
+    if k is None:
+        k = int(rng.integers(cfg.min_steps, cfg.max_steps + 1))
+    a = int(rng.integers(0, 10))
+    values = [a]
+    steps = []
+    for i in range(1, k + 1):
+        lo = max(0, i - cfg.max_lookback)
+        r = int(rng.integers(lo, i))  # consume v_r, r in [lo, i-1]
+        op = OPS[int(rng.integers(0, len(OPS)))]
+        b = int(rng.integers(0, 10))
+        steps.append((r, op, b))
+        values.append(apply_op(values[r], op, b))
+    return Problem(a=a, steps=steps, values=values)
+
+
+def encode_prompt(p: Problem) -> list:
+    toks = [BOS, Q, DIG0 + p.a]
+    for i, (r, op, b) in enumerate(p.steps, start=1):
+        toks += [IDX0 + i, IDX0 + r, op, DIG0 + b]
+    toks.append(EQ)
+    return toks
+
+
+def encode_decode(p: Problem) -> list:
+    toks = []
+    for i in range(1, len(p.steps) + 1):
+        r, op, b = p.steps[i - 1]
+        toks += [STEP, IDX0 + i, IDX0 + r, DIG0 + p.values[r], op, DIG0 + b,
+                 IDX0 + i, DIG0 + p.values[i], SEP]
+    toks += [ANS, DIG0 + p.answer, DOT, EOS]
+    return toks
+
+
+def encode_full(p: Problem) -> tuple:
+    """Returns (tokens, prompt_len)."""
+    pr = encode_prompt(p)
+    return pr + encode_decode(p), len(pr)
+
+
+def detok(tokens) -> str:
+    return " ".join(TOKEN_NAMES.get(int(t), f"<{int(t)}>") for t in tokens)
+
+
+def training_batch(rng: np.random.Generator, cfg: CorpusConfig, batch: int,
+                   seq_len: int | None = None):
+    """Padded token batch + loss mask (decode positions only, next-token).
+
+    ``seq_len`` fixes the padded width independently of ``cfg`` (used by the
+    curriculum so the jitted train step compiles once)."""
+    T = seq_len or cfg.seq_len
+    toks = np.full((batch, T), PAD, dtype=np.int32)
+    # loss_mask[b, t] == 1 iff position t+1 is a decode token to be predicted.
+    loss_mask = np.zeros((batch, T), dtype=np.float32)
+    for b in range(batch):
+        full, plen = encode_full(sample_problem(rng, cfg))
+        n = min(len(full), T)
+        toks[b, :n] = full[:n]
+        # predict tokens plen..n-1 from positions plen-1..n-2
+        loss_mask[b, plen - 1 : n - 1] = 1.0
+    return toks, loss_mask
+
+
+def parse_answer(decoded_tokens) -> int | None:
+    """Extract the final answer digit from a decoded token stream."""
+    toks = [int(t) for t in decoded_tokens]
+    for i, t in enumerate(toks):
+        if t == ANS and i + 1 < len(toks) and DIG0 <= toks[i + 1] <= DIG0 + 9:
+            return toks[i + 1] - DIG0
+    return None
+
+
+def milestone_positions(p: Problem, prompt_len: int) -> dict:
+    """Absolute position of each emitted value v_i (i>=1) in the full stream.
+
+    Decode step i occupies positions prompt_len + 9*(i-1) .. +8 and the
+    (re-emitted) value token sits at offset 7.  Used by tests and by the
+    attention analyzer.
+    """
+    return {i: prompt_len + 9 * (i - 1) + 7 for i in range(1, len(p.steps) + 1)}
+
+
+def phoenix_positions(p: Problem) -> dict:
+    """Absolute position of each prompt operand b_i, keyed by step i."""
+    return {i + 1: 3 + 4 * i + 3 for i in range(len(p.steps))}

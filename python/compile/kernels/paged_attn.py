@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: single-query paged sparse attention (GQA, masked slots).
+
+This is the decode hot-spot of the serving stack: one query token attending
+to the L KV slots the coordinator gathered for it (the selected pages under
+Quest/RaaS, or the full resident cache under Dense/Sink/H2O), padded to a
+static slot capacity with ``valid == 0`` entries.
+
+TPU mapping (see DESIGN.md §7): the CUDA original streams KV pages through
+shared memory with warp-level softmax; here the HBM→VMEM schedule is the
+BlockSpec + the ``block_l`` inner loop (flash-style online softmax over slot
+blocks), and the per-block score/weighted-sum contractions are MXU-shaped
+matmuls.  ``interpret=True`` is mandatory on this CPU-PJRT image — real TPU
+lowering emits Mosaic custom-calls the CPU plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, *, block_l: int, group: int):
+    h = pl.program_id(0)
+    g = h // group
+    head_dim = q_ref.shape[-1]
+    L = k_ref.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    q = q_ref[h, :]  # [hd]
+
+    n_blocks = L // block_l
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        kblk = k_ref[pl.ds(i * block_l, block_l), g, :]  # [bl, hd]
+        vblk = v_ref[pl.ds(i * block_l, block_l), g, :]  # [bl, hd]
+        vld = valid_ref[pl.ds(i * block_l, block_l)]  # [bl]
+        s = jnp.dot(kblk, q) * scale  # [bl]  (MXU contraction)
+        s = jnp.where(vld > 0.5, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        # online-softmax rescale of the running accumulator
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new) * (vld > 0.5)  # [bl]
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + jnp.dot(p, vblk)  # [hd]
+        return m_new, l_new, acc_new
+
+    init = (jnp.asarray(NEG_INF, jnp.float32), jnp.asarray(0.0, jnp.float32),
+            jnp.zeros((head_dim,), jnp.float32))
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    o_ref[h, :] = acc / jnp.maximum(l, 1e-30)
+
+
+def paged_attention(q, k, v, valid, *, block_l: int = 128, interpret: bool = True):
+    """Single-query attention over gathered KV slots.
+
+    Args:
+      q:     [n_heads, head_dim] float32
+      k, v:  [L, n_kv_heads, head_dim] float32; ``L`` must be a multiple of
+             the effective block size (capacities are powers of two >= 64).
+      valid: [L] float32 {0, 1}
+      block_l: inner slot-block size (the VMEM tile along the L axis).
+
+    Returns: [n_heads, head_dim] float32.
+    """
+    n_heads, head_dim = q.shape
+    L, n_kv, _ = k.shape
+    assert n_heads % n_kv == 0, (n_heads, n_kv)
+    bl = min(block_l, L)
+    assert L % bl == 0, f"L={L} not a multiple of block_l={bl}"
+    kernel = functools.partial(_attn_kernel, block_l=bl, group=n_heads // n_kv)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n_heads, head_dim), jnp.float32),
+        grid=(n_heads,),
+        interpret=interpret,
+    )(q, k, v, valid)
+
+
+def vmem_bytes(L: int, n_kv: int, head_dim: int, n_heads: int, block_l: int = 128) -> int:
+    """Static VMEM footprint estimate for one program instance (fp32).
+
+    Counted: q row, one K block, one V block, valid block, accumulator.
+    Used by the §Perf roofline notes in EXPERIMENTS.md.
+    """
+    bl = min(block_l, L)
+    return 4 * (head_dim + 2 * bl * head_dim + bl + head_dim)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness signal).
+
+These are deliberately written in the most obvious way possible; the pytest
+suite asserts the Pallas kernels match them across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k, v, valid):
+    """Single-query attention over gathered KV slots with a validity mask.
+
+    Args:
+      q:     [n_heads, head_dim]           query (RoPE already applied)
+      k:     [L, n_kv_heads, head_dim]     gathered keys (RoPE'd at cache time)
+      v:     [L, n_kv_heads, head_dim]     gathered values
+      valid: [L] float32 {0,1}             slot validity (padding mask)
+
+    Returns:
+      out:   [n_heads, head_dim]
+    """
+    n_heads, head_dim = q.shape
+    n_kv = k.shape[1]
+    group = n_heads // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, dtype=q.dtype))
+    kh = jnp.repeat(k, group, axis=1)  # [L, n_heads, hd]
+    scores = jnp.einsum("hd,lhd->hl", q, kh) * scale
+    scores = jnp.where(valid[None, :] > 0.5, scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs * (valid[None, :] > 0.5)
+    denom = jnp.maximum(jnp.sum(probs, axis=-1, keepdims=True), 1e-30)
+    probs = probs / denom
+    vh = jnp.repeat(v, group, axis=1)  # [L, n_heads, hd]
+    return jnp.einsum("hl,lhd->hd", probs, vh)
+
+
+def rep_score_ref(q, kmin, kmax, valid):
+    """Quest-style representative page scores (upper bound on q·k).
+
+    Args:
+      q:     [n_heads, head_dim]
+      kmin:  [P, n_kv_heads, head_dim]  channelwise min of keys in each page
+      kmax:  [P, n_kv_heads, head_dim]  channelwise max of keys in each page
+      valid: [P] float32 {0,1}
+
+    Returns:
+      scores: [n_heads, P] — sum_c max(q_c*kmin_c, q_c*kmax_c), NEG_INF on
+              invalid pages.  (Quest's criticality estimate.)
+    """
+    n_heads = q.shape[0]
+    n_kv = kmin.shape[1]
+    group = n_heads // n_kv
+    kminh = jnp.repeat(kmin, group, axis=1)  # [P, n_heads, hd]
+    kmaxh = jnp.repeat(kmax, group, axis=1)
+    prod_min = q[None, :, :] * kminh  # [P, n_heads, hd]
+    prod_max = q[None, :, :] * kmaxh
+    ub = jnp.sum(jnp.maximum(prod_min, prod_max), axis=-1).T  # [n_heads, P]
+    return jnp.where(valid[None, :] > 0.5, ub, NEG_INF)
+
+
+def page_probs_ref(scores, valid, head_dim):
+    """Softmax over valid pages of the per-page upper-bound scores.
+
+    Group-max over query heads first (GQA pages are shared), then a softmax
+    that mirrors what the rust coordinator computes to threshold against the
+    paper's alpha.  Returns [P].
+    """
+    s = jnp.max(scores, axis=0) / jnp.sqrt(jnp.asarray(head_dim, jnp.float32))
+    s = jnp.where(valid > 0.5, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s))
+    p = p * (valid > 0.5)
+    return p / jnp.maximum(jnp.sum(p), 1e-30)

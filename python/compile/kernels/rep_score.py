@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: Quest-style representative page scoring.
+
+For each resident KV page the cache keeps channelwise min/max bounds of its
+keys; the upper bound on any q·k inside the page is
+``sum_c max(q_c * kmin_c, q_c * kmax_c)``.  Quest selects the top-L pages by
+this bound; RaaS turns the bound (softmaxed, see ``ref.page_probs_ref``) into
+its timestamp-refresh test against alpha.
+
+The rust coordinator recomputes this same quantity on its side for policy
+decisions (it owns the page metadata); this kernel exists so the L2 graph can
+also emit the per-page score tensor that the engine logs for Figure 3, and so
+the estimate itself is covered by the kernel-vs-ref test sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _rep_kernel(q_ref, kmin_ref, kmax_ref, valid_ref, o_ref, *, group: int):
+    h = pl.program_id(0)
+    g = h // group
+    q = q_ref[h, :]  # [hd]
+    kmin = kmin_ref[:, g, :]  # [P, hd]
+    kmax = kmax_ref[:, g, :]
+    vld = valid_ref[:]  # [P]
+    ub = jnp.sum(jnp.maximum(q[None, :] * kmin, q[None, :] * kmax), axis=-1)  # [P]
+    o_ref[h, :] = jnp.where(vld > 0.5, ub, NEG_INF)
+
+
+def rep_score(q, kmin, kmax, valid, *, interpret: bool = True):
+    """Per-page criticality upper bounds.
+
+    Args:
+      q:          [n_heads, head_dim] float32
+      kmin, kmax: [P, n_kv_heads, head_dim] float32 page key bounds
+      valid:      [P] float32 {0, 1}
+
+    Returns: [n_heads, P] float32 (NEG_INF on invalid pages).
+    """
+    n_heads, _ = q.shape
+    P, n_kv, _ = kmin.shape
+    assert n_heads % n_kv == 0
+    kernel = functools.partial(_rep_kernel, group=n_heads // n_kv)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n_heads, P), jnp.float32),
+        grid=(n_heads,),
+        interpret=interpret,
+    )(q, kmin, kmax, valid)

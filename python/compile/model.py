@@ -1,0 +1,273 @@
+"""L2: the served model — a small GQA transformer in JAX.
+
+Two forms of the same network, numerically identical (tested):
+
+  * **training/dense form** (`forward_train`): batched causal attention over
+    full sequences, used by `train.py` and the Figure-3 attention analyzer.
+  * **serving form**: the decomposition the rust coordinator drives per decode
+    step — `embed_tok`, per-layer `layer_qkv` / `layer_attn_mlp` (which calls
+    the L1 Pallas paged-attention kernel over gathered slots), `lm_head`,
+    plus `prefill` which emits the post-RoPE KV cache for the prompt.
+
+Weights are baked into the AOT artifacts as HLO constants by `aot.py`, so the
+rust runtime never handles parameters.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.paged_attn import paged_attention
+from .kernels import ref as kref
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # Sized for the single-core CPU budget of this environment (see
+    # DESIGN.md §3): ~0.6M params trains to >95% exact-match on the
+    # synthetic reasoning task in a few thousand Adam steps.
+    vocab: int = 48
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 16
+    d_ff: int = 256
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self, params=None) -> int:
+        if params is None:
+            params = init_params(jax.random.PRNGKey(0), self)
+        return sum(int(np.prod(v.shape)) for v in jax.tree_util.tree_leaves(params))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Initialise parameters (normal 0.02 projections, unit norms)."""
+    def dense(key, shape, scale=0.02):
+        return scale * jax.random.normal(key, shape, jnp.float32)
+
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+    params = {
+        "embed": dense(keys[0], (cfg.vocab, cfg.d_model)),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    for l in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + l], 7)
+        params["layers"].append({
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "wq": dense(ks[0], (cfg.d_model, cfg.q_dim)),
+            "wk": dense(ks[1], (cfg.d_model, cfg.kv_dim)),
+            "wv": dense(ks[2], (cfg.d_model, cfg.kv_dim)),
+            "wo": dense(ks[3], (cfg.q_dim, cfg.d_model)),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "wg": dense(ks[4], (cfg.d_model, cfg.d_ff)),
+            "wu": dense(ks[5], (cfg.d_model, cfg.d_ff)),
+            "wd": dense(ks[6], (cfg.d_ff, cfg.d_model)),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-5):
+    return x * w / jnp.sqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+
+
+def rope_freqs(cfg: ModelConfig):
+    half = cfg.head_dim // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return inv  # [hd/2]
+
+
+def apply_rope(x, pos, cfg: ModelConfig):
+    """Rotate-half RoPE.  x: [..., head_dim], pos broadcastable to x[..., 0]."""
+    half = cfg.head_dim // 2
+    inv = rope_freqs(cfg)
+    ang = pos[..., None] * inv  # [..., hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, layer):
+    return (jax.nn.silu(x @ layer["wg"]) * (x @ layer["wu"])) @ layer["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Training / dense form
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens, return_attn: bool = False):
+    """Batched dense causal forward.  tokens: [B, T] int32 → logits [B, T, V].
+
+    With ``return_attn`` also returns per-layer attention probabilities
+    [n_layers, B, n_heads, T, T] (used by the Figure-3 analyzer — memory
+    heavy, only call on short sequences).
+    """
+    B, T = tokens.shape
+    group = cfg.n_heads // cfg.n_kv_heads
+    pos = jnp.arange(T, dtype=jnp.float32)
+    h = params["embed"][tokens]  # [B, T, d]
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    attn_maps = []
+    for layer in params["layers"]:
+        x = rms_norm(h, layer["ln1"], cfg.rms_eps)
+        q = (x @ layer["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = (x @ layer["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ layer["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, pos[None, :, None], cfg)
+        k = apply_rope(k, pos[None, :, None], cfg)
+        kh = jnp.repeat(k, group, axis=2)
+        vh = jnp.repeat(v, group, axis=2)
+        scores = jnp.einsum("bthd,bshd->bhts", q, kh) / jnp.sqrt(
+            jnp.asarray(cfg.head_dim, jnp.float32))
+        scores = jnp.where(causal[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        if return_attn:
+            attn_maps.append(probs)
+        attn = jnp.einsum("bhts,bshd->bthd", probs, vh).reshape(B, T, cfg.q_dim)
+        h = h + attn @ layer["wo"]
+        x = rms_norm(h, layer["ln2"], cfg.rms_eps)
+        h = h + swiglu(x, layer)
+    logits = rms_norm(h, params["ln_f"], cfg.rms_eps) @ params["embed"].T
+    if return_attn:
+        return logits, jnp.stack(attn_maps)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Serving form (what aot.py lowers, what the rust engine drives)
+# ---------------------------------------------------------------------------
+
+def embed_tok(params, cfg: ModelConfig, token):
+    """token: i32[1] → hidden f32[d]."""
+    return params["embed"][token[0]]
+
+
+def layer_qkv(params, cfg: ModelConfig, layer_idx: int, h, pos):
+    """h: f32[d], pos: f32[1] → (q [nh,hd] RoPE'd, k [nkv,hd] RoPE'd, v)."""
+    layer = params["layers"][layer_idx]
+    x = rms_norm(h, layer["ln1"], cfg.rms_eps)
+    q = (x @ layer["wq"]).reshape(cfg.n_heads, cfg.head_dim)
+    k = (x @ layer["wk"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ layer["wv"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, jnp.broadcast_to(pos, (cfg.n_heads,)), cfg)
+    k = apply_rope(k, jnp.broadcast_to(pos, (cfg.n_kv_heads,)), cfg)
+    return q, k, v
+
+
+def layer_attn_mlp(params, cfg: ModelConfig, layer_idx: int, h, q, k_sel, v_sel,
+                   valid, interpret: bool = True, use_kernel: bool = True):
+    """Post-QKV half of a decode layer over gathered slots.
+
+    h: f32[d] residual input; q: [nh,hd]; k_sel/v_sel: [L,nkv,hd]; valid: [L].
+    Returns hidden f32[d].
+    """
+    layer = params["layers"][layer_idx]
+    if use_kernel:
+        attn = paged_attention(q, k_sel, v_sel, valid, interpret=interpret)
+    else:
+        attn = kref.paged_attention_ref(q, k_sel, v_sel, valid)
+    h = h + attn.reshape(cfg.q_dim) @ layer["wo"]
+    x = rms_norm(h, layer["ln2"], cfg.rms_eps)
+    return h + swiglu(x, layer)
+
+
+def lm_head(params, cfg: ModelConfig, h):
+    """h: f32[d] → logits f32[V]."""
+    return rms_norm(h, params["ln_f"], cfg.rms_eps) @ params["embed"].T
+
+
+def prefill(params, cfg: ModelConfig, tokens, length):
+    """Dense prefill emitting the serving-form KV cache.
+
+    tokens: i32[P] (padded), length: i32[] actual prompt length.
+    Returns (k_cache [n_layers,P,nkv,hd] post-RoPE, v_cache same shape,
+    logits f32[V] at position length-1).  Entries at positions >= length are
+    zeroed; the rust engine only consumes the first ``length`` slots.
+    """
+    P = tokens.shape[0]
+    group = cfg.n_heads // cfg.n_kv_heads
+    pos = jnp.arange(P, dtype=jnp.float32)
+    idx = jnp.arange(P)
+    in_range = idx < length  # [P]
+    h = params["embed"][tokens]  # [P, d]
+    causal = (idx[:, None] >= idx[None, :]) & in_range[None, :]
+    ks, vs = [], []
+    for layer in params["layers"]:
+        x = rms_norm(h, layer["ln1"], cfg.rms_eps)
+        q = (x @ layer["wq"]).reshape(P, cfg.n_heads, cfg.head_dim)
+        k = (x @ layer["wk"]).reshape(P, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ layer["wv"]).reshape(P, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, pos[:, None], cfg)
+        k = apply_rope(k, pos[:, None], cfg)
+        ks.append(jnp.where(in_range[:, None, None], k, 0.0))
+        vs.append(jnp.where(in_range[:, None, None], v, 0.0))
+        kh = jnp.repeat(k, group, axis=1)
+        vh = jnp.repeat(v, group, axis=1)
+        scores = jnp.einsum("thd,shd->hts", q, kh) / jnp.sqrt(
+            jnp.asarray(cfg.head_dim, jnp.float32))
+        scores = jnp.where(causal[None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("hts,shd->thd", probs, vh).reshape(P, cfg.q_dim)
+        h = h + attn @ layer["wo"]
+        x = rms_norm(h, layer["ln2"], cfg.rms_eps)
+        h = h + swiglu(x, layer)
+    logits_all = rms_norm(h, params["ln_f"], cfg.rms_eps) @ params["embed"].T
+    logits = logits_all[jnp.maximum(length - 1, 0)]
+    return jnp.stack(ks), jnp.stack(vs), logits
+
+
+_GEN_CACHE = {}
+
+
+def generate_dense(params, cfg: ModelConfig, prompt_tokens, max_new: int, eos: int,
+                   pad: int = 0):
+    """Reference greedy generation (dense, python loop) — used by train-time
+    eval and by tests as the oracle for the rust serving path.
+
+    Uses a fixed-size token buffer so the jitted forward compiles once per
+    (model, buffer-length) pair instead of once per sequence length.
+    """
+    toks = [int(t) for t in prompt_tokens]
+    T = len(toks) + max_new
+    # round buffer up to a multiple of 64 to bound recompiles
+    T = ((T + 63) // 64) * 64
+    key = (id(params), T)
+    if key not in _GEN_CACHE:
+        _GEN_CACHE[key] = jax.jit(lambda t: forward_train(params, cfg, t))
+    fwd = _GEN_CACHE[key]
+    buf = np.full((1, T), pad, dtype=np.int32)
+    buf[0, : len(toks)] = toks
+    out = []
+    n = len(toks)
+    for _ in range(max_new):
+        logits = fwd(jnp.asarray(buf))
+        nxt = int(jnp.argmax(logits[0, n - 1]))
+        buf[0, n] = nxt
+        n += 1
+        out.append(nxt)
+        if nxt == eos:
+            break
+    return out

@@ -1,0 +1,8 @@
+"""Make `pytest python/tests/` work from the repo root: the test modules
+import the build-time package as `compile.*`, which lives in this
+directory."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,55 @@
+"""Figure-3 analyzer: map classifiers on synthetic attention maps."""
+
+import numpy as np
+
+from compile.analyze_attention import classify_map
+
+
+def _blank(T):
+    # uniform-ish causal map
+    m = np.zeros((T, T), np.float32)
+    for t in range(T):
+        m[t, : t + 1] = 1.0 / (t + 1)
+    return m
+
+
+def test_lazy_map_detected():
+    T, plen = 60, 20
+    m = np.zeros((T, T), np.float32)
+    for t in range(T):
+        m[t, 0] = 0.5  # sink
+        lo = max(0, t - 3)
+        m[t, lo:t + 1] = 0.5 / (t + 1 - lo)  # local band
+    labels = classify_map(m, plen)
+    assert "lazy" in labels
+
+
+def test_milestone_map_detected():
+    T, plen = 80, 20
+    m = _blank(T)
+    c = 30  # milestone column (decode region)
+    # bright for decode steps 12..20, then dark forever
+    for t in range(plen + 12, plen + 21):
+        m[t, c] = 0.5
+    for t in range(plen + 21, T):
+        m[t, c] = 0.001
+    labels = classify_map(m, plen, fade=10)
+    assert "milestone" in labels
+
+
+def test_phoenix_map_detected():
+    T, plen = 90, 20
+    m = _blank(T)
+    c = 5  # prompt column
+    m[plen + 2, c] = 0.5
+    for t in range(plen + 3, plen + 60):
+        m[t, c] = 0.0001
+    m[plen + 62, c] = 0.5
+    labels = classify_map(m, plen, gap=24)
+    assert "phoenix" in labels
+
+
+def test_blank_map_unlabelled():
+    labels = classify_map(_blank(60), 20)
+    assert "milestone" not in labels
+    assert "phoenix" not in labels

@@ -1,0 +1,91 @@
+"""Corpus semantics: the synthetic reasoning task used across both layers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import corpus
+
+
+def test_apply_op():
+    assert corpus.apply_op(7, corpus.PLUS, 5) == 2
+    assert corpus.apply_op(3, corpus.MINUS, 7) == 6
+    assert corpus.apply_op(4, corpus.TIMES, 4) == 6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_problem_values_consistent(seed):
+    rng = np.random.default_rng(seed)
+    cfg = corpus.CorpusConfig()
+    p = corpus.sample_problem(rng, cfg)
+    assert p.values[0] == p.a
+    for i, (r, op, b) in enumerate(p.steps, start=1):
+        assert 0 <= r < i
+        assert i - r <= cfg.max_lookback
+        assert p.values[i] == corpus.apply_op(p.values[r], op, b)
+    assert 0 <= p.answer <= 9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_encode_lengths_match_config(seed):
+    rng = np.random.default_rng(seed)
+    cfg = corpus.CorpusConfig()
+    p = corpus.sample_problem(rng, cfg, k=cfg.max_steps)
+    assert len(corpus.encode_prompt(p)) == cfg.prompt_len
+    assert len(corpus.encode_decode(p)) == cfg.decode_len
+
+
+def test_parse_answer_roundtrip():
+    rng = np.random.default_rng(0)
+    cfg = corpus.CorpusConfig()
+    for _ in range(20):
+        p = corpus.sample_problem(rng, cfg)
+        dec = corpus.encode_decode(p)
+        assert corpus.parse_answer(dec) == p.answer
+
+
+def test_parse_answer_garbage_is_none():
+    assert corpus.parse_answer([corpus.STEP, corpus.SEP, corpus.EOS]) is None
+    assert corpus.parse_answer([]) is None
+    # ANS not followed by a digit
+    assert corpus.parse_answer([corpus.ANS, corpus.SEP]) is None
+
+
+def test_milestone_positions_point_at_values():
+    rng = np.random.default_rng(1)
+    cfg = corpus.CorpusConfig()
+    p = corpus.sample_problem(rng, cfg)
+    full, plen = corpus.encode_full(p)
+    for i, pos in corpus.milestone_positions(p, plen).items():
+        assert full[pos] == corpus.DIG0 + p.values[i]
+
+
+def test_phoenix_positions_point_at_operands():
+    rng = np.random.default_rng(2)
+    cfg = corpus.CorpusConfig()
+    p = corpus.sample_problem(rng, cfg)
+    full, _ = corpus.encode_full(p)
+    for i, pos in corpus.phoenix_positions(p).items():
+        r, op, b = p.steps[i - 1]
+        assert full[pos] == corpus.DIG0 + b
+
+
+def test_training_batch_masks_only_decode():
+    rng = np.random.default_rng(3)
+    cfg = corpus.CorpusConfig()
+    toks, mask = corpus.training_batch(rng, cfg, 4)
+    assert toks.shape == mask.shape == (4, cfg.seq_len)
+    # mask never set on pure-pad tail beyond sequence end
+    for b in range(4):
+        n = int((toks[b] != corpus.PAD).sum())
+        assert mask[b, n:].sum() == 0
+        assert mask[b].sum() > 0
+
+
+def test_detok_readable():
+    rng = np.random.default_rng(4)
+    p = corpus.sample_problem(rng, corpus.CorpusConfig(), k=2)
+    s = corpus.detok(corpus.encode_full(p)[0])
+    assert "Q" in s and "=" in s and "A" in s

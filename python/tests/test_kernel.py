@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (the CORE signal).
+
+Hypothesis sweeps shapes / GQA ratios / mask patterns; assert_allclose
+against ref.py.  All kernels run interpret=True (CPU image)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.paged_attn import paged_attention, vmem_bytes
+from compile.kernels.rep_score import rep_score
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _mk(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# paged_attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([(8, 4, 16), (8, 8, 16), (4, 2, 32), (8, 2, 8), (2, 1, 64)]),
+    st.sampled_from([64, 128, 256]),
+    st.floats(min_value=0.05, max_value=1.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_paged_attention_matches_ref(heads_kv_hd, L, density, seed):
+    nh, nkv, hd = heads_kv_hd
+    rng = np.random.default_rng(seed)
+    q = _mk(rng, nh, hd)
+    k = _mk(rng, L, nkv, hd)
+    v = _mk(rng, L, nkv, hd)
+    valid = (rng.random(L) < density).astype(np.float32)
+    valid[rng.integers(0, L)] = 1.0  # at least one valid slot
+    valid = jnp.asarray(valid)
+    out = paged_attention(q, k, v, valid)
+    want = ref.paged_attention_ref(q, k, v, valid)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_paged_attention_all_valid():
+    rng = np.random.default_rng(0)
+    q, k, v = _mk(rng, 8, 16), _mk(rng, 128, 4, 16), _mk(rng, 128, 4, 16)
+    valid = jnp.ones((128,), jnp.float32)
+    np.testing.assert_allclose(
+        paged_attention(q, k, v, valid),
+        ref.paged_attention_ref(q, k, v, valid), rtol=RTOL, atol=ATOL)
+
+
+def test_paged_attention_single_valid_slot_returns_that_value():
+    """With exactly one valid slot, output == that slot's value (per group)."""
+    rng = np.random.default_rng(1)
+    nh, nkv, hd, L = 8, 4, 16, 64
+    q, k, v = _mk(rng, nh, hd), _mk(rng, L, nkv, hd), _mk(rng, L, nkv, hd)
+    valid = np.zeros(L, np.float32)
+    valid[17] = 1.0
+    out = paged_attention(q, k, v, jnp.asarray(valid))
+    group = nh // nkv
+    for h in range(nh):
+        np.testing.assert_allclose(out[h], v[17, h // group], rtol=RTOL, atol=ATOL)
+
+
+def test_paged_attention_block_sizes_agree():
+    rng = np.random.default_rng(2)
+    q, k, v = _mk(rng, 8, 16), _mk(rng, 256, 4, 16), _mk(rng, 256, 4, 16)
+    valid = jnp.asarray((rng.random(256) < 0.5).astype(np.float32))
+    a = paged_attention(q, k, v, valid, block_l=64)
+    b = paged_attention(q, k, v, valid, block_l=256)
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+
+
+def test_paged_attention_invalid_slots_are_ignored():
+    """Garbage in invalid slots must not perturb the output."""
+    rng = np.random.default_rng(3)
+    q = _mk(rng, 8, 16)
+    k = np.asarray(_mk(rng, 128, 4, 16))
+    v = np.asarray(_mk(rng, 128, 4, 16))
+    valid = (rng.random(128) < 0.5).astype(np.float32)
+    valid[0] = 1.0
+    k2, v2 = k.copy(), v.copy()
+    k2[valid < 0.5] = 1e6  # poison
+    v2[valid < 0.5] = -1e6
+    a = paged_attention(q, jnp.asarray(k), jnp.asarray(v), jnp.asarray(valid))
+    b = paged_attention(q, jnp.asarray(k2), jnp.asarray(v2), jnp.asarray(valid))
+    np.testing.assert_allclose(a, b, rtol=RTOL, atol=ATOL)
+
+
+def test_paged_attention_rejects_ragged_L():
+    rng = np.random.default_rng(4)
+    with pytest.raises(AssertionError):
+        paged_attention(_mk(rng, 8, 16), _mk(rng, 96, 4, 16), _mk(rng, 96, 4, 16),
+                        jnp.ones((96,)), block_l=64)
+
+
+def test_vmem_estimate_monotone_in_block():
+    assert vmem_bytes(8192, 4, 16, 8, block_l=128) > vmem_bytes(8192, 4, 16, 8, block_l=64)
+    # must fit a ~16 MB VMEM budget comfortably
+    assert vmem_bytes(8192, 4, 16, 8, block_l=128) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# rep_score
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([(8, 4, 16), (4, 4, 32), (8, 2, 16)]),
+    st.integers(min_value=1, max_value=64),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rep_score_matches_ref(heads_kv_hd, P, seed):
+    nh, nkv, hd = heads_kv_hd
+    rng = np.random.default_rng(seed)
+    q = _mk(rng, nh, hd)
+    kmin = _mk(rng, P, nkv, hd)
+    kmax = jnp.asarray(np.asarray(kmin) + np.abs(rng.normal(size=(P, nkv, hd))).astype(np.float32))
+    valid = jnp.asarray((rng.random(P) < 0.8).astype(np.float32))
+    out = rep_score(q, kmin, kmax, valid)
+    want = ref.rep_score_ref(q, kmin, kmax, valid)
+    np.testing.assert_allclose(out, want, rtol=RTOL, atol=ATOL)
+
+
+def test_rep_score_is_upper_bound():
+    """The Quest bound must dominate the true q·k of every key in the page."""
+    rng = np.random.default_rng(5)
+    nh, nkv, hd, page = 8, 4, 16, 16
+    q = _mk(rng, nh, hd)
+    keys = rng.normal(size=(page, nkv, hd)).astype(np.float32)
+    kmin = jnp.asarray(keys.min(axis=0, keepdims=True))  # [1, nkv, hd]
+    kmax = jnp.asarray(keys.max(axis=0, keepdims=True))
+    score = np.asarray(rep_score(q, kmin, kmax, jnp.ones((1,), jnp.float32)))
+    group = nh // nkv
+    for h in range(nh):
+        true = keys[:, h // group, :] @ np.asarray(q[h])
+        assert score[h, 0] >= true.max() - 1e-4
+
+
+def test_page_probs_sum_to_one():
+    rng = np.random.default_rng(6)
+    scores = _mk(rng, 8, 32)
+    valid = jnp.asarray((rng.random(32) < 0.6).astype(np.float32))
+    p = ref.page_probs_ref(scores, valid, 16)
+    assert abs(float(jnp.sum(p)) - 1.0) < 1e-5
+    assert float(jnp.max(jnp.where(valid > 0.5, 0.0, p))) == 0.0

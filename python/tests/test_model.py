@@ -1,0 +1,108 @@
+"""L2 correctness: dense/training form vs serving decomposition."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import corpus
+from compile.model import (ModelConfig, embed_tok, forward_train, init_params,
+                           layer_attn_mlp, layer_qkv, lm_head, prefill)
+
+CFG = ModelConfig()
+PARAMS = init_params(jax.random.PRNGKey(0), CFG)
+
+
+def test_forward_shapes():
+    toks = jnp.zeros((2, 17), jnp.int32)
+    logits = forward_train(PARAMS, CFG, toks)
+    assert logits.shape == (2, 17, CFG.vocab)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, CFG.vocab, size=(1, 24)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[0, 20] = (toks2[0, 20] + 1) % CFG.vocab
+    a = forward_train(PARAMS, CFG, jnp.asarray(toks))
+    b = forward_train(PARAMS, CFG, jnp.asarray(toks2))
+    np.testing.assert_allclose(a[0, :20], b[0, :20], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(a[0, 20:], b[0, 20:])
+
+
+def test_attention_maps_shape_and_rowsum():
+    toks = jnp.zeros((1, 12), jnp.int32)
+    _, maps = forward_train(PARAMS, CFG, toks, return_attn=True)
+    assert maps.shape == (CFG.n_layers, 1, CFG.n_heads, 12, 12)
+    np.testing.assert_allclose(np.asarray(maps).sum(-1), 1.0, rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_matches_dense_forward():
+    """prefill logits == forward_train logits at the last prompt position."""
+    rng = np.random.default_rng(1)
+    plen = 13
+    toks = rng.integers(3, CFG.vocab, size=(plen,)).astype(np.int32)
+    P = 32
+    padded = np.full((P,), corpus.PAD, np.int32)
+    padded[:plen] = toks
+    k_c, v_c, logits = prefill(PARAMS, CFG, jnp.asarray(padded), jnp.asarray(plen))
+    assert k_c.shape == (CFG.n_layers, P, CFG.n_kv_heads, CFG.head_dim)
+    dense = forward_train(PARAMS, CFG, jnp.asarray(toks[None]))
+    np.testing.assert_allclose(logits, dense[0, plen - 1], rtol=2e-4, atol=2e-4)
+    # zeroed beyond length
+    assert float(jnp.abs(k_c[:, plen:]).max()) == 0.0
+
+
+def test_serving_decode_matches_dense():
+    """One full greedy decode step via the serving decomposition must equal
+    the dense forward's next-token logits."""
+    rng = np.random.default_rng(2)
+    plen = 11
+    toks = rng.integers(3, CFG.vocab, size=(plen,)).astype(np.int32)
+    P = 16
+    padded = np.full((P,), corpus.PAD, np.int32)
+    padded[:plen] = toks
+    k_c, v_c, logits_p = prefill(PARAMS, CFG, jnp.asarray(padded), jnp.asarray(plen))
+    next_tok = int(jnp.argmax(logits_p))
+
+    # serving step for next_tok at position plen over the prefill cache
+    L = 64
+    k_buf = np.zeros((CFG.n_layers, L, CFG.n_kv_heads, CFG.head_dim), np.float32)
+    v_buf = np.zeros_like(k_buf)
+    k_buf[:, :plen] = np.asarray(k_c[:, :plen])
+    v_buf[:, :plen] = np.asarray(v_c[:, :plen])
+    h = embed_tok(PARAMS, CFG, jnp.asarray([next_tok], jnp.int32))
+    pos = jnp.asarray([plen], jnp.float32)
+    for l in range(CFG.n_layers):
+        q, k, v = layer_qkv(PARAMS, CFG, l, h, pos)
+        kb, vb = k_buf[l].copy(), v_buf[l].copy()
+        kb[plen], vb[plen] = np.asarray(k), np.asarray(v)  # self KV visible
+        valid = np.zeros((L,), np.float32)
+        valid[: plen + 1] = 1.0
+        h = layer_attn_mlp(PARAMS, CFG, l, h, q, jnp.asarray(kb), jnp.asarray(vb),
+                           jnp.asarray(valid))
+    logits_s = lm_head(PARAMS, CFG, h)
+
+    dense = forward_train(
+        PARAMS, CFG, jnp.asarray(np.concatenate([toks, [next_tok]])[None]))
+    np.testing.assert_allclose(logits_s, dense[0, plen], rtol=5e-4, atol=5e-4)
+
+
+def test_kernel_vs_ref_inside_layer():
+    """layer_attn_mlp(use_kernel=True) == layer_attn_mlp(use_kernel=False)."""
+    rng = np.random.default_rng(3)
+    L = 64
+    h = jnp.asarray(rng.normal(size=(CFG.d_model,)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(CFG.n_heads, CFG.head_dim)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(L, CFG.n_kv_heads, CFG.head_dim)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(L, CFG.n_kv_heads, CFG.head_dim)).astype(np.float32))
+    valid = jnp.asarray((rng.random(L) < 0.5).astype(np.float32)).at[0].set(1.0)
+    a = layer_attn_mlp(PARAMS, CFG, 0, h, q, k, v, valid, use_kernel=True)
+    b = layer_attn_mlp(PARAMS, CFG, 0, h, q, k, v, valid, use_kernel=False)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)
+
+
+def test_param_count_reasonable():
+    n = CFG.param_count(PARAMS)
+    assert 3e5 < n < 3e6

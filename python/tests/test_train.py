@@ -1,0 +1,55 @@
+"""Training smoke: loss decreases, weights round-trip through npz."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus
+from compile.model import ModelConfig, init_params
+from compile.train import (adam_init, adam_update, flatten_params, load_weights,
+                           loss_fn, save_weights, unflatten_params)
+
+CFG = ModelConfig()
+
+
+def test_loss_decreases_over_a_few_steps():
+    params = init_params(jax.random.PRNGKey(0), CFG)
+    opt = adam_init(params)
+    rng = np.random.default_rng(0)
+    ccfg = corpus.CorpusConfig(max_steps=6)
+
+    @jax.jit
+    def step(params, opt, t, m, lr):
+        loss, g = jax.value_and_grad(loss_fn)(params, CFG, t, m)
+        params, opt = adam_update(params, g, opt, lr)
+        return params, opt, loss
+
+    lr = jnp.asarray(1e-3, jnp.float32)
+    losses = []
+    for _ in range(8):
+        t, m = corpus.training_batch(rng, ccfg, 8)
+        params, opt, loss = step(params, opt, jnp.asarray(t), jnp.asarray(m), lr)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_weights_roundtrip():
+    params = init_params(jax.random.PRNGKey(1), CFG)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "w.npz")
+        save_weights(path, params)
+        back = load_weights(path, CFG.n_layers)
+    np.testing.assert_array_equal(params["embed"], back["embed"])
+    for a, b in zip(params["layers"], back["layers"]):
+        assert set(a.keys()) == set(b.keys())
+        np.testing.assert_array_equal(a["wq"], b["wq"])
+
+
+def test_flatten_unflatten_inverse():
+    params = init_params(jax.random.PRNGKey(2), CFG)
+    flat = flatten_params(params)
+    back = unflatten_params(flat, CFG.n_layers)
+    np.testing.assert_array_equal(params["layers"][2]["wd"], back["layers"][2]["wd"])

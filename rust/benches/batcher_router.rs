@@ -1,0 +1,65 @@
+//! Coordinator microbenchmarks: continuous-batcher tick throughput and
+//! router dispatch cost over a mock backend (pure L3 scheduling overhead,
+//! independent of PJRT).
+//!
+//!     cargo bench --bench batcher_router
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::Result;
+use raas::bench::{Bencher, BenchConfig};
+use raas::coordinator::batcher::{Batcher, BatcherConfig, StepBackend};
+use raas::coordinator::request::Request;
+
+struct NullBackend;
+
+impl StepBackend for NullBackend {
+    type Seq = u32;
+    fn begin(&mut self, prompt: &[u32]) -> Result<(u32, u32)> {
+        Ok((prompt.len() as u32, 1))
+    }
+    fn step(&mut self, seq: &mut u32, _token: u32, _now: u64) -> Result<u32> {
+        *seq = seq.wrapping_mul(1664525).wrapping_add(1013904223);
+        Ok(1 + (*seq % 40))
+    }
+    fn finish(&mut self, _seq: u32) {}
+    fn is_eos(&self, token: u32) -> bool {
+        token == 0
+    }
+    fn has_capacity(&self, active: usize) -> bool {
+        active < 64
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new(BenchConfig { warmup_iters: 3, iters: 50, ..Default::default() });
+    Bencher::print_header();
+
+    for &batch in &[1usize, 8, 32] {
+        b.bench(&format!("batcher/tick/{batch}seqs"), || {
+            let (tx, _rx) = channel();
+            let mut batcher =
+                Batcher::new(NullBackend, BatcherConfig { max_batch: batch });
+            for id in 0..batch as u64 {
+                batcher.submit(Request {
+                    id,
+                    prompt: vec![1, 2, 3],
+                    max_new: 64,
+                    submitted: Instant::now(),
+                    reply: tx.clone(),
+                });
+            }
+            // 64 scheduler iterations over `batch` live sequences
+            let mut steps = 0;
+            for _ in 0..64 {
+                steps += batcher.tick();
+            }
+            steps
+        });
+    }
+
+    std::fs::create_dir_all("results").ok();
+    b.dump_json("results/bench_batcher_router.json").ok();
+    println!("\nwrote results/bench_batcher_router.json");
+}

@@ -1,0 +1,68 @@
+//! End-to-end bench behind paper Figure 7 / Table rows: per-token decode
+//! latency and resident memory for Dense / Quest / RaaS at increasing
+//! context lengths, on the real engine.  Skips (with a notice) when
+//! artifacts are absent so `cargo bench` stays green pre-`make artifacts`.
+//!
+//!     cargo bench --bench fig7_latency_memory
+
+use raas::bench::{fmt_ns, Bencher, BenchConfig};
+use raas::config::{EngineConfig, PolicyKind};
+use raas::engine::{Engine, GenOptions};
+use raas::util::rng::Rng;
+use raas::workload::Problem;
+
+fn main() {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        println!("SKIP: artifacts/meta.json not found — run `make artifacts` first");
+        return;
+    }
+    let mut b = Bencher::new(BenchConfig {
+        warmup_iters: 0,
+        iters: 2,
+        max_time: std::time::Duration::from_secs(120),
+    });
+    Bencher::print_header();
+
+    for kind in [PolicyKind::Dense, PolicyKind::Quest, PolicyKind::Raas] {
+        for &decode_len in &[128usize, 512] {
+            let cfg = EngineConfig { policy: kind, budget: 512, ..Default::default() };
+            let mut engine = match Engine::new_with_capacities(cfg, &[64, 256, 512, 1024, 2048]) {
+                Ok(e) => e,
+                Err(e) => {
+                    println!("SKIP ({kind:?}): {e:#}");
+                    continue;
+                }
+            };
+            let spec = engine.meta.corpus.clone();
+            let mut rng = Rng::new(7);
+            let mut prompt = Vec::new();
+            while prompt.len() < 128 {
+                prompt.extend(Problem::sample(&mut rng, &spec, None).encode_prompt(&spec));
+            }
+            prompt.truncate(128);
+            let mut peak = 0usize;
+            let r = b.bench(&format!("{}/decode{decode_len}", kind.name()), || {
+                let out = engine
+                    .generate(
+                        &prompt,
+                        &GenOptions {
+                            max_new: decode_len,
+                            force_len: Some(decode_len),
+                            ..Default::default()
+                        },
+                    )
+                    .expect("generate");
+                peak = peak.max(out.peak_resident_bytes);
+                out.decode_secs
+            });
+            println!(
+                "    -> {} per token, peak resident {} bytes",
+                fmt_ns(r.mean_ns / decode_len as f64),
+                peak
+            );
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    b.dump_json("results/bench_fig7.json").ok();
+    println!("\nwrote results/bench_fig7.json (full curves: `raas fig7`)");
+}

@@ -1,0 +1,68 @@
+//! Microbenchmark: per-step policy overhead (observe + select + evict
+//! bookkeeping) as a function of resident page count.  This is the L3 cost
+//! the paper claims is negligible (Appendix B) — EXPERIMENTS.md §Perf
+//! records it against the PJRT step time.
+//!
+//!     cargo bench --bench policy_overhead
+
+use raas::bench::{Bencher, BenchConfig};
+use raas::config::{EngineConfig, PolicyKind};
+use raas::kvcache::page::{page_probs, PageMeta, RepBounds};
+use raas::kvcache::policy::make_policy;
+use raas::util::rng::Rng;
+
+fn mk_table(n_pages: usize, rng: &mut Rng) -> (Vec<PageMeta>, Vec<f32>) {
+    let mut table = Vec::new();
+    let mut scores = Vec::new();
+    for i in 0..n_pages {
+        let mut m = PageMeta::new(i as u32, i * 16, i < 4, 0);
+        m.len = 16;
+        table.push(m);
+        scores.push(rng.f64() as f32 * 4.0 - 2.0);
+    }
+    (table, scores)
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let mut b = Bencher::new(BenchConfig { warmup_iters: 10, iters: 200, ..Default::default() });
+    Bencher::print_header();
+
+    for &n_pages in &[16usize, 64, 256, 1024] {
+        let (mut table, scores) = mk_table(n_pages, &mut rng);
+        let mut probs = Vec::new();
+        page_probs(&scores, 16, &mut probs);
+
+        for kind in PolicyKind::all() {
+            let cfg = EngineConfig { policy: kind, budget: n_pages * 16 / 2, ..Default::default() };
+            let policy = make_policy(&cfg);
+            b.bench(&format!("{}/observe+select+evict/{n_pages}p", kind.name()), || {
+                policy.observe(&mut table, &probs, 1);
+                let sel = policy.select(&table, &scores, cfg.budget, 16);
+                let ev = policy.evict_candidate(&table);
+                (sel.len(), ev)
+            });
+        }
+        // rep scoring itself (the rust-side O(pages) hot loop)
+        let rep = RepBounds {
+            kmin: vec![-1.0; 64],
+            kmax: vec![1.0; 64],
+        };
+        let q = vec![0.5f32; 128];
+        b.bench(&format!("rep_score/{n_pages}p"), || {
+            let mut acc = 0.0f32;
+            for _ in 0..n_pages {
+                acc += rep.score(&q, 8, 4, 16);
+            }
+            acc
+        });
+        b.bench(&format!("page_probs/{n_pages}p"), || {
+            page_probs(&scores, 16, &mut probs);
+            probs.len()
+        });
+    }
+
+    std::fs::create_dir_all("results").ok();
+    b.dump_json("results/bench_policy_overhead.json").ok();
+    println!("\nwrote results/bench_policy_overhead.json");
+}

@@ -1,0 +1,177 @@
+//! Criterion-like micro/endtoend bench harness (criterion is unavailable
+//! offline).  Warmup, fixed-iteration timing, mean/σ/percentiles, aligned
+//! table output and JSON dump for EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on wall time per benchmark (stops early, keeps samples).
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, iters: 30, max_time: Duration::from_secs(20) }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::from(self.iters)),
+            ("mean_ns", Json::from(self.mean_ns)),
+            ("std_ns", Json::from(self.std_ns)),
+            ("p50_ns", Json::from(self.p50_ns)),
+            ("p99_ns", Json::from(self.p99_ns)),
+            ("min_ns", Json::from(self.min_ns)),
+        ])
+    }
+}
+
+pub struct Bencher {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(cfg: BenchConfig) -> Self {
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    pub fn with_defaults() -> Self {
+        Self::new(BenchConfig::default())
+    }
+
+    /// Time `f` (one call = one sample).  Return value is black-boxed.
+    pub fn bench<R, F: FnMut() -> R>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            black_box(f());
+        }
+        let mut s = Summary::new();
+        let start = Instant::now();
+        for _ in 0..self.cfg.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            s.add(t0.elapsed().as_nanos() as f64);
+            if start.elapsed() > self.cfg.max_time && s.count() >= 5 {
+                break;
+            }
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: s.count(),
+            mean_ns: s.mean(),
+            std_ns: s.std(),
+            p50_ns: s.percentile(50.0),
+            p99_ns: s.percentile(99.0),
+            min_ns: s.min(),
+        };
+        println!("{}", format_row(&r));
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn print_header() {
+        println!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+            "benchmark", "iters", "mean", "p50", "p99", "min"
+        );
+        println!("{}", "-".repeat(104));
+    }
+
+    pub fn dump_json(&self, path: &str) -> std::io::Result<()> {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, arr.to_string())
+    }
+}
+
+fn format_row(r: &BenchResult) -> String {
+    format!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        r.name,
+        r.iters,
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.p50_ns),
+        fmt_ns(r.p99_ns),
+        fmt_ns(r.min_ns)
+    )
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from eliding benched computations.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new(BenchConfig { warmup_iters: 1, iters: 10, max_time: Duration::from_secs(5) });
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p99_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn dump_json_writes(){
+        let dir = std::env::temp_dir().join("raas_bench_test.json");
+        let mut b = Bencher::new(BenchConfig { warmup_iters: 0, iters: 3, max_time: Duration::from_secs(1) });
+        b.bench("x", || 1 + 1);
+        b.dump_json(dir.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(dir);
+    }
+}

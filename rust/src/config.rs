@@ -1,0 +1,317 @@
+//! Configuration system: model/artifact metadata (from `artifacts/meta.json`,
+//! written by the AOT path) + engine/policy configuration (JSON file and/or
+//! CLI overrides).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Architecture of the AOT-compiled model (mirrors python ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+}
+
+impl ModelSpec {
+    pub fn kv_bytes_per_token_layer(&self) -> usize {
+        // K + V, f32
+        2 * self.n_kv_heads * self.head_dim * 4
+    }
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.kv_bytes_per_token_layer() * self.n_layers
+    }
+    pub fn group(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+}
+
+/// Everything the runtime needs to load and drive the artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub model: ModelSpec,
+    pub trained: bool,
+    pub capacities: Vec<usize>,
+    pub prefill_sizes: Vec<usize>,
+    pub page_size: usize,
+    pub corpus: CorpusSpec,
+}
+
+/// Mirror of python CorpusConfig + token ids (kept in sync via meta.json).
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub min_steps: usize,
+    pub max_steps: usize,
+    pub max_lookback: usize,
+    pub pad: u32,
+    pub bos: u32,
+    pub eos: u32,
+    pub q: u32,
+    pub eq: u32,
+    pub sep: u32,
+    pub step: u32,
+    pub ans: u32,
+    pub dot: u32,
+    pub plus: u32,
+    pub minus: u32,
+    pub times: u32,
+    pub dig0: u32,
+    /// First of the dedicated step-index tokens IDX_0..IDX_{n_idx-1}.
+    pub idx0: u32,
+    pub n_idx: u32,
+}
+
+impl CorpusSpec {
+    /// Worst-case decode length for a problem of `k` steps (9 tokens per
+    /// step + ANS v DOT EOS), plus slack for malformed tails.
+    pub fn max_decode_tokens(&self, k: usize) -> usize {
+        9 * k + 4 + 8
+    }
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{meta_path:?}: {e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<ArtifactMeta> {
+        let need = |path: &str| -> Result<&Json> {
+            j.path(path).ok_or_else(|| anyhow!("meta.json missing '{path}'"))
+        };
+        let model = ModelSpec {
+            vocab: need("model.vocab")?.as_usize().unwrap(),
+            d_model: need("model.d_model")?.as_usize().unwrap(),
+            n_layers: need("model.n_layers")?.as_usize().unwrap(),
+            n_heads: need("model.n_heads")?.as_usize().unwrap(),
+            n_kv_heads: need("model.n_kv_heads")?.as_usize().unwrap(),
+            head_dim: need("model.head_dim")?.as_usize().unwrap(),
+            d_ff: need("model.d_ff")?.as_usize().unwrap(),
+        };
+        let caps: Vec<usize> = need("capacities")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("capacities not an array"))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        let prefills: Vec<usize> = need("prefill_sizes")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("prefill_sizes not an array"))?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        let sp = |name: &str| -> Result<u32> {
+            Ok(need(&format!("corpus.specials.{name}"))?.as_i64().unwrap() as u32)
+        };
+        let corpus = CorpusSpec {
+            min_steps: need("corpus.min_steps")?.as_usize().unwrap(),
+            max_steps: need("corpus.max_steps")?.as_usize().unwrap(),
+            max_lookback: need("corpus.max_lookback")?.as_usize().unwrap(),
+            pad: sp("pad")?,
+            bos: sp("bos")?,
+            eos: sp("eos")?,
+            q: sp("q")?,
+            eq: sp("eq")?,
+            sep: sp("sep")?,
+            step: sp("step")?,
+            ans: sp("ans")?,
+            dot: sp("dot")?,
+            plus: sp("plus")?,
+            minus: sp("minus")?,
+            times: sp("times")?,
+            dig0: sp("dig0")?,
+            idx0: sp("idx0")?,
+            n_idx: sp("n_idx")?,
+        };
+        if model.n_heads % model.n_kv_heads != 0 {
+            bail!("n_heads must be a multiple of n_kv_heads");
+        }
+        Ok(ArtifactMeta {
+            dir: dir.to_path_buf(),
+            model,
+            trained: j.get("trained").and_then(|v| v.as_bool()).unwrap_or(false),
+            capacities: caps,
+            prefill_sizes: prefills,
+            page_size: need("page_size")?.as_usize().unwrap(),
+            corpus,
+        })
+    }
+}
+
+/// Which sparsity algorithm drives the KV cache (paper Figure 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// Standard attention: O(N) time, O(N) memory.
+    Dense,
+    /// StreamingLLM: sink + recent window.  O(L)/O(L) but poor accuracy.
+    Sink,
+    /// Heavy-Hitter Oracle: accumulated scores.  O(L)/O(L) (theoretical).
+    H2o,
+    /// Query-aware page selection; retains ALL pages: O(L) time, O(N) memory.
+    Quest,
+    /// This paper: milestone timestamps + pinned prefill: O(L)/O(L).
+    Raas,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" | "full" => PolicyKind::Dense,
+            "sink" | "streamingllm" | "streaming" => PolicyKind::Sink,
+            "h2o" => PolicyKind::H2o,
+            "quest" => PolicyKind::Quest,
+            "raas" => PolicyKind::Raas,
+            other => bail!("unknown policy '{other}' (dense|sink|h2o|quest|raas)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            PolicyKind::Dense => "dense",
+            PolicyKind::Sink => "sink",
+            PolicyKind::H2o => "h2o",
+            PolicyKind::Quest => "quest",
+            PolicyKind::Raas => "raas",
+        }
+    }
+    pub fn all() -> [PolicyKind; 5] {
+        [PolicyKind::Dense, PolicyKind::Sink, PolicyKind::H2o, PolicyKind::Quest, PolicyKind::Raas]
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Engine + policy configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub artifacts_dir: PathBuf,
+    pub policy: PolicyKind,
+    /// Cache budget in tokens (the paper's L).
+    pub budget: usize,
+    /// Timestamp-refresh threshold (paper's alpha).  <= 0 selects the
+    /// top-`stamp_fraction` variant instead.
+    pub alpha: f64,
+    /// RaaS r parameter: fraction of pages stamped per step when alpha <= 0.
+    pub stamp_fraction: f64,
+    /// StreamingLLM sink size in tokens.
+    pub sink_tokens: usize,
+    /// H2O recent-window fraction of the budget.
+    pub h2o_recent_fraction: f64,
+    /// Pin prefill pages against eviction (RaaS idea #2; the ablation
+    /// switch behind `raas ablate`).
+    pub pin_prefill: bool,
+    /// Hard cap on decode length (paper Fig. 8 uses 4k).
+    pub max_decode: usize,
+    /// Total KV pool size in pages (across sequences).
+    pub pool_pages: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            policy: PolicyKind::Raas,
+            budget: 256,
+            alpha: 1e-4,
+            stamp_fraction: 0.5,
+            sink_tokens: 16,
+            h2o_recent_fraction: 0.5,
+            pin_prefill: true,
+            max_decode: 4096,
+            pool_pages: 16384,
+            seed: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// CLI overrides: --artifacts --policy --budget --alpha --max-decode --seed.
+    pub fn from_args(args: &Args) -> Result<EngineConfig> {
+        let mut c = EngineConfig::default();
+        c.artifacts_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+        c.policy = PolicyKind::parse(&args.str_or("policy", "raas"))?;
+        c.budget = args.usize_or("budget", c.budget);
+        c.alpha = args.f64_or("alpha", c.alpha);
+        c.stamp_fraction = args.f64_or("stamp-fraction", c.stamp_fraction);
+        c.sink_tokens = args.usize_or("sink-tokens", c.sink_tokens);
+        if args.switch("no-pin-prefill") {
+            c.pin_prefill = false;
+        }
+        c.max_decode = args.usize_or("max-decode", c.max_decode);
+        c.pool_pages = args.usize_or("pool-pages", c.pool_pages);
+        c.seed = args.u64_or("seed", c.seed);
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta_json() -> Json {
+        Json::parse(
+            r#"{
+              "model": {"vocab":48,"d_model":128,"n_layers":4,"n_heads":8,
+                        "n_kv_heads":4,"head_dim":16,"d_ff":256,
+                        "rope_theta":10000.0,"rms_eps":1e-5},
+              "trained": true,
+              "capacities": [64,128],
+              "prefill_sizes": [256],
+              "page_size": 16,
+              "files": {},
+              "corpus": {"min_steps":2,"max_steps":16,"max_lookback":6,
+                "specials":{"pad":0,"bos":1,"eos":2,"q":3,"eq":4,"sep":5,
+                            "step":6,"ans":7,"dot":8,"plus":9,"minus":10,
+                            "times":11,"dig0":12,"idx0":22,"n_idx":20}}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn meta_parses() {
+        let m = ArtifactMeta::from_json(Path::new("/tmp"), &meta_json()).unwrap();
+        assert_eq!(m.model.n_layers, 4);
+        assert_eq!(m.capacities, vec![64, 128]);
+        assert_eq!(m.corpus.dig0, 12);
+        assert!(m.trained);
+        assert_eq!(m.model.kv_bytes_per_token(), 2 * 4 * 16 * 4 * 4);
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(PolicyKind::parse("RaaS").unwrap(), PolicyKind::Raas);
+        assert_eq!(PolicyKind::parse("streamingllm").unwrap(), PolicyKind::Sink);
+        assert!(PolicyKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn engine_config_overrides() {
+        let args = Args::parse(
+            ["x", "--policy", "quest", "--budget", "512", "--alpha", "0.01"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let c = EngineConfig::from_args(&args).unwrap();
+        assert_eq!(c.policy, PolicyKind::Quest);
+        assert_eq!(c.budget, 512);
+        assert_eq!(c.alpha, 0.01);
+    }
+}

@@ -1,0 +1,278 @@
+//! Continuous batching: interleaves decode steps of all admitted sequences
+//! (Orca-style iteration-level scheduling, prefill-first admission).
+//!
+//! The batcher is generic over a [`StepBackend`] so the scheduling logic is
+//! testable without AOT artifacts; the real backend is [`crate::engine::Engine`]
+//! via [`super::server::EngineBackend`].
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::request::{Request, Response};
+
+/// What the batcher needs from an inference engine.
+pub trait StepBackend {
+    type Seq;
+    /// Prefill: build sequence state, return the first decoded token.
+    fn begin(&mut self, prompt: &[u32]) -> Result<(Self::Seq, u32)>;
+    /// One decode step; `now` is the per-sequence step counter.
+    fn step(&mut self, seq: &mut Self::Seq, token: u32, now: u64) -> Result<u32>;
+    /// Release sequence resources.
+    fn finish(&mut self, seq: Self::Seq);
+    fn is_eos(&self, token: u32) -> bool;
+    /// True when another sequence can be admitted (pool headroom).
+    fn has_capacity(&self, active: usize) -> bool;
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Hard cap on concurrently decoding sequences.
+    pub max_batch: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8 }
+    }
+}
+
+struct Active<S> {
+    req: Request,
+    seq: S,
+    token: u32,
+    produced: Vec<u32>,
+    step: u64,
+    ttft_secs: f64,
+}
+
+/// Iteration-level scheduler over a [`StepBackend`].
+pub struct Batcher<B: StepBackend> {
+    pub backend: B,
+    cfg: BatcherConfig,
+    active: Vec<Active<B::Seq>>,
+    queue: Vec<Request>,
+    pub completed: u64,
+}
+
+impl<B: StepBackend> Batcher<B> {
+    pub fn new(backend: B, cfg: BatcherConfig) -> Self {
+        Batcher { backend, cfg, active: Vec::new(), queue: Vec::new(), completed: 0 }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// Admit queued requests while capacity allows (prefill-first policy:
+    /// admission runs before the decode sweep each iteration).
+    fn admit(&mut self) {
+        while !self.queue.is_empty()
+            && self.active.len() < self.cfg.max_batch
+            && self.backend.has_capacity(self.active.len())
+        {
+            let req = self.queue.remove(0);
+            let t0 = Instant::now();
+            match self.backend.begin(&req.prompt) {
+                Ok((seq, token)) => {
+                    let ttft = req.submitted.elapsed().as_secs_f64();
+                    let _ = t0;
+                    self.active.push(Active {
+                        req,
+                        seq,
+                        token,
+                        produced: Vec::new(),
+                        step: 0,
+                        ttft_secs: ttft,
+                    });
+                }
+                Err(e) => {
+                    let resp = Response::err(req.id, req.submitted, format!("prefill: {e:#}"));
+                    let _ = req.reply.send(resp);
+                }
+            }
+        }
+    }
+
+    /// One scheduler iteration: admit, then one decode step per active
+    /// sequence (round-robin).  Returns the number of decode steps taken.
+    pub fn tick(&mut self) -> usize {
+        self.admit();
+        let mut steps = 0;
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            a.produced.push(a.token);
+            let done_eos = self.backend.is_eos(a.token);
+            let done_len = a.produced.len() >= a.req.max_new;
+            if done_eos || done_len {
+                let a = self.active.remove(i);
+                let resp = Response {
+                    id: a.req.id,
+                    tokens: a.produced,
+                    jct_secs: a.req.submitted.elapsed().as_secs_f64(),
+                    ttft_secs: a.ttft_secs,
+                    error: None,
+                };
+                self.backend.finish(a.seq);
+                let _ = a.req.reply.send(resp);
+                self.completed += 1;
+                continue; // i now points at the next sequence
+            }
+            a.step += 1;
+            match self.backend.step(&mut a.seq, a.token, a.step) {
+                Ok(next) => {
+                    a.token = next;
+                    steps += 1;
+                    i += 1;
+                }
+                Err(e) => {
+                    let a = self.active.remove(i);
+                    let resp =
+                        Response::err(a.req.id, a.req.submitted, format!("decode: {e:#}"));
+                    self.backend.finish(a.seq);
+                    let _ = a.req.reply.send(resp);
+                    self.completed += 1;
+                }
+            }
+        }
+        steps
+    }
+
+    /// Drive until all submitted work completes.
+    pub fn run_to_completion(&mut self) {
+        while self.pending() > 0 {
+            self.tick();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    /// Scripted backend: echoes prompt[0], counts down, then EOS (token 0).
+    struct MockBackend {
+        capacity: usize,
+        begun: usize,
+        finished: usize,
+    }
+
+    impl StepBackend for MockBackend {
+        type Seq = u32; // remaining tokens before EOS
+        fn begin(&mut self, prompt: &[u32]) -> Result<(u32, u32)> {
+            self.begun += 1;
+            if prompt.is_empty() {
+                anyhow::bail!("empty prompt");
+            }
+            Ok((prompt[0], 100 + prompt[0]))
+        }
+        fn step(&mut self, seq: &mut u32, _token: u32, _now: u64) -> Result<u32> {
+            if *seq == 0 {
+                return Ok(0);
+            }
+            *seq -= 1;
+            Ok(if *seq == 0 { 0 } else { 100 + *seq })
+        }
+        fn finish(&mut self, _seq: u32) {
+            self.finished += 1;
+        }
+        fn is_eos(&self, token: u32) -> bool {
+            token == 0
+        }
+        fn has_capacity(&self, active: usize) -> bool {
+            active < self.capacity
+        }
+    }
+
+    fn mk_req(id: u64, first: u32, max_new: usize, tx: &std::sync::mpsc::Sender<Response>)
+              -> Request {
+        Request { id, prompt: vec![first], max_new, submitted: Instant::now(), reply: tx.clone() }
+    }
+
+    #[test]
+    fn conservation_no_lost_or_duplicated_requests() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 3, begun: 0, finished: 0 },
+            BatcherConfig { max_batch: 3 },
+        );
+        for id in 0..10 {
+            b.submit(mk_req(id, (id % 4) as u32 + 1, 64, &tx));
+        }
+        b.run_to_completion();
+        drop(tx);
+        let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert_eq!(b.backend.begun, 10);
+        assert_eq!(b.backend.finished, 10, "all sequences released");
+        assert_eq!(b.completed, 10);
+    }
+
+    #[test]
+    fn respects_max_new() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 8, begun: 0, finished: 0 },
+            BatcherConfig::default(),
+        );
+        b.submit(mk_req(1, 50, 5, &tx)); // would emit 50 tokens, capped at 5
+        b.run_to_completion();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+        assert!(resp.error.is_none());
+    }
+
+    #[test]
+    fn eos_terminates_early() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 8, begun: 0, finished: 0 },
+            BatcherConfig::default(),
+        );
+        b.submit(mk_req(1, 2, 64, &tx)); // 2 countdown steps then EOS
+        b.run_to_completion();
+        let resp = rx.recv().unwrap();
+        assert_eq!(*resp.tokens.last().unwrap(), 0);
+        assert!(resp.tokens.len() < 64);
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let (tx, _rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 2, begun: 0, finished: 0 },
+            BatcherConfig { max_batch: 8 },
+        );
+        for id in 0..5 {
+            b.submit(mk_req(id, 30, 64, &tx));
+        }
+        b.tick();
+        assert_eq!(b.backend.begun, 2, "only 2 admitted");
+        assert_eq!(b.pending(), 5);
+    }
+
+    #[test]
+    fn prefill_error_is_reported_not_fatal() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 8, begun: 0, finished: 0 },
+            BatcherConfig::default(),
+        );
+        b.submit(Request { id: 1, prompt: vec![], max_new: 4, submitted: Instant::now(), reply: tx.clone() });
+        b.submit(mk_req(2, 1, 8, &tx));
+        b.run_to_completion();
+        drop(tx);
+        let mut resps: Vec<Response> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert!(resps[0].error.is_some());
+        assert!(resps[1].error.is_none());
+    }
+}

@@ -1,0 +1,13 @@
+//! Layer-3 serving coordinator: request lifecycle, continuous batching,
+//! multi-replica routing.  Threads + mpsc mailboxes stand in for the async
+//! runtime (tokio is unavailable offline; DESIGN.md §3).
+
+pub mod batcher;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, StepBackend};
+pub use request::{Request, RequestId, Response};
+pub use router::{Router, RoutePolicy};
+pub use server::EngineServer;

@@ -1,0 +1,58 @@
+//! Request lifecycle types.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// A generation request submitted to the coordinator.
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub submitted: Instant,
+    /// Where the response is delivered.
+    pub reply: Sender<Response>,
+}
+
+/// The completed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    /// Job completion time (paper metric): submission → full response.
+    pub jct_secs: f64,
+    /// Time to first token.
+    pub ttft_secs: f64,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn err(id: RequestId, submitted: Instant, msg: String) -> Self {
+        Response {
+            id,
+            tokens: Vec::new(),
+            jct_secs: submitted.elapsed().as_secs_f64(),
+            ttft_secs: 0.0,
+            error: Some(msg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn request_roundtrip() {
+        let (tx, rx) = channel();
+        let req = Request { id: 7, prompt: vec![1, 2], max_new: 4, submitted: Instant::now(), reply: tx };
+        req.reply
+            .send(Response { id: req.id, tokens: vec![9], jct_secs: 0.1, ttft_secs: 0.05, error: None })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert!(resp.error.is_none());
+    }
+}

@@ -1,0 +1,172 @@
+//! Multi-replica request router (vllm-project/router-style): dispatches
+//! requests across engine replicas by round-robin, least-loaded, or
+//! session-affinity hashing.
+
+use anyhow::Result;
+
+use super::request::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    /// Hash the prompt prefix (session affinity: same session hits the same
+    /// replica, maximising KV-cache locality in prefix-caching setups).
+    Affinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rr" | "roundrobin" | "round-robin" => RoutePolicy::RoundRobin,
+            "least" | "leastloaded" | "least-loaded" => RoutePolicy::LeastLoaded,
+            "affinity" | "hash" => RoutePolicy::Affinity,
+            other => anyhow::bail!("unknown route policy '{other}'"),
+        })
+    }
+}
+
+/// What the router needs from a replica (implemented by `EngineServer`;
+/// mocked in tests).
+pub trait Replica {
+    fn submit(&self, req: Request) -> Result<()>;
+    fn pending(&self) -> usize;
+}
+
+impl Replica for super::server::EngineServer {
+    fn submit(&self, req: Request) -> Result<()> {
+        // inherent method (mailbox send) — inherent methods take precedence,
+        // so this does not recurse.
+        EngineServer::submit(self, req)
+    }
+    fn pending(&self) -> usize {
+        EngineServer::pending(self)
+    }
+}
+
+use super::server::EngineServer;
+
+pub struct Router<R: Replica> {
+    replicas: Vec<R>,
+    policy: RoutePolicy,
+    next_rr: usize,
+    pub routed: u64,
+}
+
+impl<R: Replica> Router<R> {
+    pub fn new(replicas: Vec<R>, policy: RoutePolicy) -> Self {
+        assert!(!replicas.is_empty());
+        Router { replicas, policy, next_rr: 0, routed: 0 }
+    }
+
+    pub fn replicas(&self) -> &[R] {
+        &self.replicas
+    }
+
+    pub fn into_replicas(self) -> Vec<R> {
+        self.replicas
+    }
+
+    fn pick(&mut self, req: &Request) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.replicas.len();
+                i
+            }
+            RoutePolicy::LeastLoaded => self
+                .replicas
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, r)| r.pending())
+                .map(|(i, _)| i)
+                .unwrap(),
+            RoutePolicy::Affinity => {
+                // FNV-1a over the first 8 prompt tokens + avalanche finaliser
+                // (low-entropy token ids need the final mix to spread mod n)
+                let mut h: u64 = 0xcbf29ce484222325;
+                for &t in req.prompt.iter().take(8) {
+                    h ^= t as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+                h = (h ^ (h >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+                h = (h ^ (h >> 27)).wrapping_mul(0x94d049bb133111eb);
+                h ^= h >> 31;
+                (h % self.replicas.len() as u64) as usize
+            }
+        }
+    }
+
+    pub fn route(&mut self, req: Request) -> Result<usize> {
+        let i = self.pick(&req);
+        self.replicas[i].submit(req)?;
+        self.routed += 1;
+        Ok(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::Cell;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    struct MockReplica {
+        sent: Cell<usize>,
+        load: usize,
+    }
+    impl Replica for MockReplica {
+        fn submit(&self, _req: Request) -> Result<()> {
+            self.sent.set(self.sent.get() + 1);
+            Ok(())
+        }
+        fn pending(&self) -> usize {
+            self.load
+        }
+    }
+
+    fn req(prompt: Vec<u32>) -> Request {
+        let (tx, _rx) = channel();
+        // leak the receiver side: mock never replies
+        std::mem::forget(_rx);
+        Request { id: 0, prompt, max_new: 1, submitted: Instant::now(), reply: tx }
+    }
+
+    fn mocks(loads: &[usize]) -> Vec<MockReplica> {
+        loads.iter().map(|&l| MockReplica { sent: Cell::new(0), load: l }).collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(mocks(&[0, 0, 0]), RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.route(req(vec![1])).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(r.routed, 6);
+    }
+
+    #[test]
+    fn least_loaded_prefers_idle() {
+        let mut r = Router::new(mocks(&[5, 0, 9]), RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(req(vec![1])).unwrap(), 1);
+    }
+
+    #[test]
+    fn affinity_is_deterministic_and_spreads() {
+        let mut r = Router::new(mocks(&[0, 0, 0, 0]), RoutePolicy::Affinity);
+        let a1 = r.route(req(vec![1, 2, 3])).unwrap();
+        let a2 = r.route(req(vec![1, 2, 3])).unwrap();
+        assert_eq!(a1, a2, "same session, same replica");
+        let mut hit = std::collections::BTreeSet::new();
+        for seed in 0..32u32 {
+            hit.insert(r.route(req(vec![seed, seed + 1])).unwrap());
+        }
+        assert!(hit.len() >= 3, "hashing should spread sessions: {hit:?}");
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert!(RoutePolicy::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Engine replica server: an [`Engine`] + [`Batcher`] living on a dedicated
+//! thread, fed through an mpsc mailbox.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig, StepBackend};
+use super::request::Request;
+use crate::config::EngineConfig;
+use crate::engine::Engine;
+use crate::kvcache::SeqCache;
+
+/// [`StepBackend`] implementation over the real engine.
+pub struct EngineBackend {
+    pub engine: Engine,
+    /// Reserve this many free pool pages per admitted sequence.
+    pub pages_per_seq_estimate: usize,
+}
+
+impl StepBackend for EngineBackend {
+    type Seq = SeqCache;
+
+    fn begin(&mut self, prompt: &[u32]) -> Result<(SeqCache, u32)> {
+        let mut seq = self.engine.new_seq();
+        let tok = self.engine.prefill_seq(&mut seq, prompt)?;
+        Ok((seq, tok))
+    }
+
+    fn step(&mut self, seq: &mut SeqCache, token: u32, now: u64) -> Result<u32> {
+        self.engine.decode_step(seq, token, now, None)
+    }
+
+    fn finish(&mut self, mut seq: SeqCache) {
+        self.engine.release_seq(&mut seq);
+    }
+
+    fn is_eos(&self, token: u32) -> bool {
+        self.engine.tokenizer.is_eos(token)
+    }
+
+    fn has_capacity(&self, _active: usize) -> bool {
+        self.engine.pool().free_pages() >= self.pages_per_seq_estimate
+    }
+}
+
+enum Msg {
+    Req(Request),
+    Shutdown,
+}
+
+/// Handle to a replica thread.
+pub struct EngineServer {
+    tx: Sender<Msg>,
+    pub load: Arc<AtomicUsize>,
+    handle: Option<JoinHandle<()>>,
+    pub name: String,
+}
+
+impl EngineServer {
+    /// Spawn a replica.  Engine construction happens on the replica thread
+    /// (PJRT clients are not Send-safe to move casually).
+    pub fn spawn(name: String, cfg: EngineConfig, bcfg: BatcherConfig,
+                 caps: Option<Vec<usize>>) -> Result<EngineServer> {
+        let (tx, rx) = channel::<Msg>();
+        let load = Arc::new(AtomicUsize::new(0));
+        let load2 = Arc::clone(&load);
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread_name = name.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("raas-replica-{name}"))
+            .spawn(move || {
+                let engine = match caps {
+                    Some(c) => Engine::new_with_capacities(cfg, &c),
+                    None => Engine::new(cfg),
+                };
+                let engine = match engine {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let backend = EngineBackend { engine, pages_per_seq_estimate: 64 };
+                let mut batcher = Batcher::new(backend, bcfg);
+                loop {
+                    // Drain the mailbox without blocking while work is active;
+                    // block when idle.
+                    let msg = if batcher.pending() == 0 {
+                        match rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => break,
+                        }
+                    } else {
+                        match rx.try_recv() {
+                            Ok(m) => Some(m),
+                            Err(TryRecvError::Empty) => None,
+                            Err(TryRecvError::Disconnected) => break,
+                        }
+                    };
+                    match msg {
+                        Some(Msg::Req(r)) => {
+                            batcher.submit(r);
+                            continue; // keep draining before stepping
+                        }
+                        Some(Msg::Shutdown) => {
+                            batcher.run_to_completion();
+                            break;
+                        }
+                        None => {}
+                    }
+                    batcher.tick();
+                    load2.store(batcher.pending(), Ordering::Relaxed);
+                }
+                load2.store(0, Ordering::Relaxed);
+            })
+            .expect("spawn replica");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("replica {thread_name} died during startup"))??;
+        Ok(EngineServer { tx, load, handle: Some(handle), name: thread_name })
+    }
+
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.load.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .send(Msg::Req(req))
+            .map_err(|_| anyhow::anyhow!("replica {} is down", self.name))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.load.load(Ordering::Relaxed)
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EngineServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

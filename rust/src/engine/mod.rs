@@ -1,0 +1,297 @@
+//! The inference engine: sequence state machine + the per-token decode loop
+//! that stitches runtime executables, the paged KV cache and the sparsity
+//! policy together (DESIGN.md §2 dataflow).
+//!
+//! Per decode token, per layer:
+//!   qkv exec → append (k,v) to the paged pool → rep-score resident pages
+//!   (rust, O(pages)) → policy.select → gather selected slots O(L) →
+//!   attn_mlp exec (Pallas kernel) → next layer.
+//! After all layers: lm_head exec → greedy sample → policy.observe +
+//! budget-bounded eviction (timestamps/eviction are batched per iteration,
+//! as in the paper's implementation, Appendix B).
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactMeta, EngineConfig, PolicyKind};
+use crate::kvcache::page::page_probs;
+use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
+use crate::kvcache::{KvPool, SeqCache};
+use crate::metrics::Metrics;
+use crate::runtime::{ModelRuntime, RuntimeClient, Tokenizer};
+
+#[derive(Debug, Clone, Default)]
+pub struct GenOptions {
+    pub max_new: usize,
+    /// Decode exactly this many tokens, ignoring EOS (Figure-7 workloads).
+    pub force_len: Option<usize>,
+    /// Record per-step layer-0 page probabilities (Figure-3 analysis).
+    pub log_scores: bool,
+    /// Record cumulative decode latency and resident bytes at each step
+    /// (Figure-7 series).
+    pub log_series: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct GenOutput {
+    pub tokens: Vec<u32>,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub peak_resident_bytes: usize,
+    pub peak_resident_tokens_l0: usize,
+    /// (step, cumulative decode secs, resident bytes) — when log_series.
+    pub series: Vec<(usize, f64, usize)>,
+    /// (step, [(page_start_pos, prob)]) for layer 0 — when log_scores.
+    pub score_log: Vec<(u64, Vec<(usize, f32)>)>,
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub meta: ArtifactMeta,
+    pub tokenizer: Tokenizer,
+    pub metrics: Metrics,
+    model: ModelRuntime,
+    pool: KvPool,
+    policy: Box<dyn SparsityPolicy>,
+    // scratch buffers reused across steps (no allocation in the hot loop)
+    scores: Vec<f32>,
+    probs: Vec<f32>,
+    k_buf: Vec<f32>,
+    v_buf: Vec<f32>,
+    valid_buf: Vec<f32>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
+        let client = RuntimeClient::cpu()?;
+        let model = ModelRuntime::load(&client, &meta, None)?;
+        Self::with_runtime(cfg, meta, model)
+    }
+
+    /// Restrict loaded capacities (tests / fast startup).
+    pub fn new_with_capacities(cfg: EngineConfig, caps: &[usize]) -> Result<Self> {
+        let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
+        let client = RuntimeClient::cpu()?;
+        let model = ModelRuntime::load(&client, &meta, Some(caps))?;
+        Self::with_runtime(cfg, meta, model)
+    }
+
+    pub fn with_runtime(cfg: EngineConfig, meta: ArtifactMeta, model: ModelRuntime)
+                        -> Result<Self> {
+        let kv_dim = meta.model.n_kv_heads * meta.model.head_dim;
+        let pool = KvPool::new(cfg.pool_pages, meta.page_size, kv_dim);
+        let policy = make_policy(&cfg);
+        Ok(Engine {
+            tokenizer: Tokenizer::new(meta.corpus.clone()),
+            metrics: Metrics::new(),
+            model,
+            pool,
+            policy,
+            cfg,
+            meta,
+            scores: Vec::new(),
+            probs: Vec::new(),
+            k_buf: Vec::new(),
+            v_buf: Vec::new(),
+            valid_buf: Vec::new(),
+        })
+    }
+
+    pub fn model(&self) -> &ModelRuntime {
+        &self.model
+    }
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+    pub fn policy_kind(&self) -> PolicyKind {
+        self.cfg.policy
+    }
+
+    /// Return a finished sequence's pages to the pool.
+    pub fn release_seq(&mut self, seq: &mut SeqCache) {
+        seq.release_all(&mut self.pool);
+    }
+
+    /// Create a fresh sequence cache for this engine's model.
+    pub fn new_seq(&self) -> SeqCache {
+        let kv_dim = self.meta.model.n_kv_heads * self.meta.model.head_dim;
+        SeqCache::new(self.meta.model.n_layers, self.meta.page_size, kv_dim)
+    }
+
+    /// Run prefill for `prompt`, filling `seq` (pinned pages) and returning
+    /// the first decoded token.
+    pub fn prefill_seq(&mut self, seq: &mut SeqCache, prompt: &[u32]) -> Result<u32> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let out = self.model.prefill(prompt).context("prefill")?;
+        let n_layers = self.meta.model.n_layers;
+        for layer in 0..n_layers {
+            for pos in 0..prompt.len() {
+                let (k, v) = self.model.prefill_kv_at(&out, layer, pos);
+                seq.append(layer, &mut self.pool, pos, k, v, self.cfg.pin_prefill, 0)?;
+            }
+        }
+        seq.n_tokens = prompt.len();
+        seq.prompt_len = prompt.len();
+        // budget enforcement after prefill (Sink/H2O trim immediately; RaaS
+        // pins prefill so nothing is evictable — paper §4.2's small-budget
+        // pathology reproduces here)
+        for layer in 0..n_layers {
+            self.enforce_budget(seq, layer);
+        }
+        Ok(argmax(&out.logits) as u32)
+    }
+
+    fn enforce_budget(&mut self, seq: &mut SeqCache, layer: usize) {
+        while resident_tokens(&seq.layers[layer].table) > self.cfg.budget {
+            match self.policy.evict_candidate(&seq.layers[layer].table) {
+                Some(idx) => seq.evict(layer, idx, &mut self.pool),
+                None => break,
+            }
+        }
+    }
+
+    /// Decode one token: returns the next token id.
+    ///
+    /// Per-phase wall time is accumulated into the metrics registry
+    /// (`step.exec_secs` = PJRT executions, `step.policy_secs` = rep scoring
+    /// + selection + stamps + eviction, `step.gather_secs` = page gather) —
+    /// the basis of the EXPERIMENTS.md §Perf breakdown.
+    pub fn decode_step(&mut self, seq: &mut SeqCache, token: u32, now: u64,
+                       score_log: Option<&mut Vec<(u64, Vec<(usize, f32)>)>>)
+                       -> Result<u32> {
+        let spec = self.meta.model.clone();
+        let pos = seq.n_tokens;
+        let mut t_exec = 0.0f64;
+        let mut t_policy = 0.0f64;
+        let mut t_gather = 0.0f64;
+
+        let t0 = Instant::now();
+        let mut h = self.model.embed_tok(token)?;
+        t_exec += t0.elapsed().as_secs_f64();
+        let mut log_entry: Option<Vec<(usize, f32)>> = None;
+
+        for layer in 0..spec.n_layers {
+            let t0 = Instant::now();
+            let qkv = self.model.layer_qkv(layer, &h, pos)?;
+            t_exec += t0.elapsed().as_secs_f64();
+            // append first so the token attends to itself
+            seq.append(layer, &mut self.pool, pos, &qkv.k, &qkv.v, false, now)?;
+
+            let t0 = Instant::now();
+            let lc = &seq.layers[layer];
+            lc.rep_scores(&qkv.q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
+                          &mut self.scores);
+            page_probs(&self.scores, spec.head_dim, &mut self.probs);
+            let sel = self.policy.select(&lc.table, &self.scores, self.cfg.budget,
+                                         self.meta.page_size);
+            t_policy += t0.elapsed().as_secs_f64();
+
+            let n_slots: usize = sel.iter().map(|&i| lc.table[i].len).sum();
+            let capacity = self.model.capacity_for(n_slots)?;
+            let t0 = Instant::now();
+            let used = seq.gather(layer, &self.pool, &sel, capacity, &mut self.k_buf,
+                                  &mut self.v_buf, &mut self.valid_buf);
+            t_gather += t0.elapsed().as_secs_f64();
+            debug_assert_eq!(used, n_slots);
+            let t0 = Instant::now();
+            h = self.model.layer_attn_mlp(layer, capacity, &h, &qkv.q, &self.k_buf,
+                                          &self.v_buf, &self.valid_buf)?;
+            t_exec += t0.elapsed().as_secs_f64();
+            // per-layer observation (stamps, accumulators)
+            let t0 = Instant::now();
+            self.policy.observe(&mut seq.layers[layer].table, &self.probs, now);
+            t_policy += t0.elapsed().as_secs_f64();
+            if layer == 0 && score_log.is_some() {
+                log_entry = Some(
+                    seq.layers[0]
+                        .table
+                        .iter()
+                        .zip(&self.probs)
+                        .map(|(p, &pr)| (p.start_pos, pr))
+                        .collect(),
+                );
+            }
+        }
+        // batched eviction after the full iteration (paper Appendix B)
+        let t0 = Instant::now();
+        for layer in 0..spec.n_layers {
+            self.enforce_budget(seq, layer);
+        }
+        t_policy += t0.elapsed().as_secs_f64();
+        seq.n_tokens += 1;
+        if let (Some(log), Some(entry)) = (score_log, log_entry) {
+            log.push((now, entry));
+        }
+        let t0 = Instant::now();
+        let logits = self.model.lm_head(&h)?;
+        t_exec += t0.elapsed().as_secs_f64();
+        self.metrics.record_secs("step.exec_secs", t_exec);
+        self.metrics.record_secs("step.policy_secs", t_policy);
+        self.metrics.record_secs("step.gather_secs", t_gather);
+        Ok(argmax(&logits) as u32)
+    }
+
+    /// Full request: prefill + decode until EOS/limit.
+    pub fn generate(&mut self, prompt: &[u32], opts: &GenOptions) -> Result<GenOutput> {
+        let mut out = GenOutput::default();
+        let mut seq = self.new_seq();
+        let t0 = Instant::now();
+        let mut token = self.prefill_seq(&mut seq, prompt)?;
+        out.prefill_secs = t0.elapsed().as_secs_f64();
+        self.metrics.record_secs("prefill_secs", out.prefill_secs);
+
+        let limit = opts.force_len.unwrap_or(opts.max_new);
+        let t1 = Instant::now();
+        let mut score_log = Vec::new();
+        for step in 1..=limit {
+            out.tokens.push(token);
+            if opts.force_len.is_none() && self.tokenizer.is_eos(token) {
+                break;
+            }
+            let log = if opts.log_scores { Some(&mut score_log) } else { None };
+            token = self
+                .decode_step(&mut seq, token, step as u64, log)
+                .with_context(|| format!("decode step {step}"))?;
+            let resident = seq.resident_bytes(&self.pool);
+            out.peak_resident_bytes = out.peak_resident_bytes.max(resident);
+            out.peak_resident_tokens_l0 =
+                out.peak_resident_tokens_l0.max(seq.resident_tokens(0));
+            if opts.log_series {
+                out.series.push((step, t1.elapsed().as_secs_f64(), resident));
+            }
+        }
+        out.decode_secs = t1.elapsed().as_secs_f64();
+        out.score_log = score_log;
+        self.metrics.record_secs("decode_secs", out.decode_secs);
+        self.metrics.add("decode_tokens", out.tokens.len() as u64);
+        self.metrics.gauge_max("pool_high_water_bytes", self.pool.high_water_bytes() as f64);
+        seq.release_all(&mut self.pool);
+        Ok(out)
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0, "ties break low");
+    }
+}

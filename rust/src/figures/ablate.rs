@@ -1,0 +1,124 @@
+//! Ablations of RaaS design choices (DESIGN.md §6 calls these out):
+//!
+//!  A. **Prefill pinning** on/off — removes idea #2; phoenix operands get
+//!     evicted and accuracy collapses on reasoning prompts.
+//!  B. **alpha-threshold vs top-r stamping** — the paper argues the two are
+//!     "two sides of the same coin" (§3.2); the grid shows they track.
+//!  C. **Page size** 8/16/32 — granularity of eviction decisions.
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, PolicyKind};
+use crate::kvcache::policy::make_policy;
+use crate::sim::reasoning::{run_trials, SimParams};
+use crate::sim::{DATASETS, MODELS};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+use super::common::{print_table, results_dir, write_csv};
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = results_dir(args.str_opt("out"))?;
+    let trials = args.usize_or("trials", 150);
+    let budgets = args.usize_list_or("budgets", &[128, 256, 512]);
+    let seed = args.u64_or("seed", 77);
+    let dp = DATASETS[1];
+    let mp = MODELS[1];
+    let mut rows = Vec::new();
+
+    // --- A: prefill pinning ---------------------------------------------------
+    let mut tbl = Vec::new();
+    for (label, pin) in [("raas (pinned prefill)", true), ("raas (no pinning)", false)] {
+        let mut line = vec![label.to_string()];
+        for &budget in &budgets {
+            let cfg = EngineConfig { policy: PolicyKind::Raas, budget, ..Default::default() };
+            let policy = make_policy(&cfg);
+            let params = SimParams {
+                budget_tokens: budget,
+                pin_prefill: pin,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(seed ^ budget as u64 ^ pin as u64);
+            let agg = run_trials(policy.as_ref(), &params, &mp, &dp, trials, &mut rng);
+            line.push(format!("{:.3}", agg.accuracy));
+            rows.push(vec![
+                "pinning".into(),
+                label.into(),
+                budget.to_string(),
+                format!("{:.3}", agg.accuracy),
+                format!("{:.2}", agg.phoenix_miss_rate),
+            ]);
+        }
+        tbl.push(line);
+    }
+    println!("Ablation A — prefill pinning (math500 persona, accuracy):");
+    let mut headers = vec!["variant"];
+    let bs: Vec<String> = budgets.iter().map(|b| b.to_string()).collect();
+    headers.extend(bs.iter().map(|s| s.as_str()));
+    print_table(&headers, &tbl);
+
+    // --- B: alpha vs top-r stamping --------------------------------------------
+    let mut tbl = Vec::new();
+    for (label, alpha, frac) in [
+        ("alpha = 1e-4", 1e-4, 0.5),
+        ("top-r, r = 0.5", 0.0, 0.5),
+        ("top-r, r = 0.25", 0.0, 0.25),
+        ("top-r, r = 0.75", 0.0, 0.75),
+    ] {
+        let mut line = vec![label.to_string()];
+        for &budget in &budgets {
+            let cfg = EngineConfig {
+                policy: PolicyKind::Raas,
+                budget,
+                alpha,
+                stamp_fraction: frac,
+                ..Default::default()
+            };
+            let policy = make_policy(&cfg);
+            let params = SimParams { budget_tokens: budget, ..Default::default() };
+            let mut rng = Rng::new(seed ^ budget as u64 ^ alpha.to_bits() ^ frac.to_bits());
+            let agg = run_trials(policy.as_ref(), &params, &mp, &dp, trials, &mut rng);
+            line.push(format!("{:.3}", agg.accuracy));
+            rows.push(vec![
+                "stamping".into(),
+                label.into(),
+                budget.to_string(),
+                format!("{:.3}", agg.accuracy),
+                format!("{:.2}", agg.milestone_miss_rate),
+            ]);
+        }
+        tbl.push(line);
+    }
+    println!("\nAblation B — stamping rule (alpha threshold vs top-r fraction):");
+    print_table(&headers, &tbl);
+
+    // --- C: page size -----------------------------------------------------------
+    let mut tbl = Vec::new();
+    for page_size in [8usize, 16, 32] {
+        let mut line = vec![format!("page_size = {page_size}")];
+        for &budget in &budgets {
+            let cfg = EngineConfig { policy: PolicyKind::Raas, budget, ..Default::default() };
+            let policy = make_policy(&cfg);
+            let params =
+                SimParams { budget_tokens: budget, page_size, ..Default::default() };
+            let mut rng = Rng::new(seed ^ budget as u64 ^ (page_size as u64) << 40);
+            let agg = run_trials(policy.as_ref(), &params, &mp, &dp, trials, &mut rng);
+            line.push(format!("{:.3}", agg.accuracy));
+            rows.push(vec![
+                "page_size".into(),
+                page_size.to_string(),
+                budget.to_string(),
+                format!("{:.3}", agg.accuracy),
+                format!("{:.2}", agg.milestone_miss_rate),
+            ]);
+        }
+        tbl.push(line);
+    }
+    println!("\nAblation C — page size:");
+    print_table(&headers, &tbl);
+
+    let path = dir.join("ablation.csv");
+    write_csv(&path, &["ablation", "variant", "budget", "accuracy", "miss_rate"], &rows)?;
+    println!("\nwrote {path:?}");
+    Ok(())
+}

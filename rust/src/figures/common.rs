@@ -1,0 +1,83 @@
+//! Shared figure-harness helpers: results directory, CSV writing, budgets.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub const DEFAULT_BUDGETS: [usize; 5] = [64, 128, 256, 512, 1024];
+
+pub fn results_dir(custom: Option<String>) -> Result<PathBuf> {
+    let dir = PathBuf::from(custom.unwrap_or_else(|| "results".to_string()));
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+    Ok(dir)
+}
+
+/// Write a CSV file with a header row.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+/// Simple aligned table printer.
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("raas_fig_common_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn bytes_fmt() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert!(fmt_bytes(2048.0).contains("KiB"));
+        assert!(fmt_bytes(3.0 * 1024.0 * 1024.0).contains("MiB"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Figure 1: (a) prefill/decode length CDFs for long-prefill (LongBench)
+//! datasets; (b) the same for math reasoning datasets; (c) prefill-vs-decode
+//! time breakdown at a fixed total length, measured on the real engine.
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::engine::{Engine, GenOptions};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats::{ascii_plot, cdf_points};
+use crate::workload::{LengthProfile, Problem, LONGBENCH, MATH};
+
+use super::common::{print_table, results_dir, write_csv};
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = results_dir(args.str_opt("out"))?;
+    let n = args.usize_or("samples", 2000);
+    let seed = args.u64_or("seed", 1);
+    let measure = args.switch("measure");
+
+    // -- (a)/(b): length CDFs ------------------------------------------------
+    for (panel, profiles) in [("a", &LONGBENCH[..]), ("b", &MATH[..])] {
+        let mut rows = Vec::new();
+        let mut series_store: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+        for p in profiles {
+            let mut rng = Rng::new(seed);
+            let prefills: Vec<f64> =
+                (0..n).map(|_| p.sample_prefill(&mut rng) as f64).collect();
+            let decodes: Vec<f64> =
+                (0..n).map(|_| p.sample_decode(&mut rng) as f64).collect();
+            for (kind, samples) in [("prefill", &prefills), ("decode", &decodes)] {
+                let pts = cdf_points(samples);
+                // decimate for the CSV
+                for (x, y) in pts.iter().step_by((pts.len() / 64).max(1)) {
+                    rows.push(vec![
+                        p.name.to_string(),
+                        kind.to_string(),
+                        format!("{x:.0}"),
+                        format!("{y:.4}"),
+                    ]);
+                }
+                series_store.push((
+                    format!("{}-{}", p.name, &kind[..1].to_uppercase()),
+                    pts.iter()
+                        .step_by((pts.len() / 48).max(1))
+                        .map(|&(x, y)| (x.max(1.0).log2(), y))
+                        .collect(),
+                ));
+            }
+        }
+        let path = dir.join(format!("fig1{panel}.csv"));
+        write_csv(&path, &["dataset", "phase", "tokens", "cdf"], &rows)?;
+        println!("wrote {path:?}");
+        let series: Vec<(&str, &[(f64, f64)])> = series_store
+            .iter()
+            .map(|(n, p)| (n.as_str(), p.as_slice()))
+            .collect();
+        println!(
+            "{}",
+            ascii_plot(
+                &format!("Figure 1({panel}): token-length CDF (x = log2 tokens)"),
+                &series,
+                72,
+                14
+            )
+        );
+    }
+    println!("paper shape check: reasoning datasets (b) have prefill ≪ decode;");
+    println!("RAG datasets (a) the opposite.\n");
+
+    // -- (c): measured prefill/decode time breakdown -------------------------
+    if measure {
+        measure_breakdown(args, &dir)?;
+    } else {
+        println!("(run with --measure and built artifacts for Figure 1(c))");
+    }
+    Ok(())
+}
+
+/// Figure 1(c): fixed total token count, sweep the prefill/decode split and
+/// measure where the time goes (paper: decode dominates as its share grows;
+/// total 32k on an A100 → scaled to the CPU testbed by --total).
+fn measure_breakdown(args: &Args, dir: &std::path::Path) -> Result<()> {
+    let total = args.usize_or("total", 768);
+    let cfg = EngineConfig::from_args(args)?;
+    let mut cfg = cfg;
+    cfg.policy = crate::config::PolicyKind::Dense;
+    let mut engine = Engine::new(cfg)?;
+    let spec = engine.meta.corpus.clone();
+    let mut rng = Rng::new(args.u64_or("seed", 1));
+
+    let mut rows = Vec::new();
+    let mut display = Vec::new();
+    for frac in [1, 2, 3, 4, 5, 6] {
+        let decode = total * frac / 8;
+        let prefill_target = total - decode;
+        // synth a prompt of the right length: repeat problem prompts
+        let mut prompt = Vec::new();
+        while prompt.len() < prefill_target {
+            let p = Problem::sample(&mut rng, &spec, None);
+            prompt.extend(p.encode_prompt(&spec));
+        }
+        prompt.truncate(prefill_target);
+        let out = engine.generate(
+            &prompt,
+            &GenOptions { max_new: decode, force_len: Some(decode), ..Default::default() },
+        )?;
+        rows.push(vec![
+            prefill_target.to_string(),
+            decode.to_string(),
+            format!("{:.3}", out.prefill_secs),
+            format!("{:.3}", out.decode_secs),
+        ]);
+        display.push(vec![
+            format!("{prefill_target}+{decode}"),
+            format!("{:.2}s", out.prefill_secs),
+            format!("{:.2}s", out.decode_secs),
+            format!("{:.0}%", 100.0 * out.decode_secs / (out.decode_secs + out.prefill_secs)),
+        ]);
+    }
+    let path = dir.join("fig1c.csv");
+    write_csv(&path, &["prefill_tokens", "decode_tokens", "prefill_secs", "decode_secs"], &rows)?;
+    println!("wrote {path:?}");
+    println!("Figure 1(c): time breakdown at fixed total = {total} tokens (dense)");
+    print_table(&["prefill+decode", "prefill time", "decode time", "decode share"], &display);
+    println!("paper shape check: decode share rises sharply with decode fraction.");
+    Ok(())
+}
+
+/// Expose profiles for tests.
+pub fn all_profiles() -> Vec<LengthProfile> {
+    LONGBENCH.iter().chain(MATH.iter()).copied().collect()
+}

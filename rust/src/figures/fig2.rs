@@ -1,0 +1,113 @@
+//! Figure 2: the "impossible trinity" comparison table — accuracy / time /
+//! memory per algorithm.  Analytic complexity columns come from the policy
+//! definitions; the *measured* columns are the log-log exponents fitted to
+//! the Figure 7 series and the Figure 6 accuracy at budget 1024 (run those
+//! first, or pass --analytic for the paper's table only).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::PolicyKind;
+use crate::util::cli::Args;
+use crate::util::stats::loglog_slope;
+
+use super::common::{print_table, results_dir};
+
+struct RowSpec {
+    kind: PolicyKind,
+    time: &'static str,
+    memory: &'static str,
+    accuracy: &'static str,
+    note: &'static str,
+}
+
+const ANALYTIC: [RowSpec; 5] = [
+    RowSpec { kind: PolicyKind::Dense, time: "O(N)", memory: "O(N)", accuracy: "high",
+              note: "reference" },
+    RowSpec { kind: PolicyKind::Sink, time: "O(L)", memory: "O(L)", accuracy: "low",
+              note: "drops milestones" },
+    RowSpec { kind: PolicyKind::H2o, time: "O(L)*", memory: "O(L)*", accuracy: "low",
+              note: "* theoretical; stale heavy hitters" },
+    RowSpec { kind: PolicyKind::Quest, time: "O(L)", memory: "O(N)", accuracy: "high",
+              note: "retains all KV" },
+    RowSpec { kind: PolicyKind::Raas, time: "O(L)", memory: "O(L)", accuracy: "high",
+              note: "this paper" },
+];
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = results_dir(args.str_opt("out"))?;
+    let fig7 = dir.join("fig7.csv");
+    let fig6 = dir.join("fig6.csv");
+
+    let mut rows = Vec::new();
+    for spec in &ANALYTIC {
+        let (lat_slope, mem_slope) = measured_slopes(&fig7, spec.kind)
+            .map(|(l, m)| (format!("{l:.2}"), format!("{m:.2}")))
+            .unwrap_or_else(|| ("-".into(), "-".into()));
+        let acc = measured_accuracy(&fig6, spec.kind)
+            .map(|a| format!("{a:.2}"))
+            .unwrap_or_else(|| "-".into());
+        rows.push(vec![
+            spec.kind.name().to_string(),
+            spec.time.to_string(),
+            spec.memory.to_string(),
+            spec.accuracy.to_string(),
+            lat_slope,
+            mem_slope,
+            acc,
+            spec.note.to_string(),
+        ]);
+    }
+    println!("Figure 2: sparsity-algorithm comparison (paper analytic + this repo measured)");
+    print_table(
+        &["algorithm", "time", "memory", "acc (paper)", "lat exp*", "mem exp*",
+          "acc@1024 (sim)", "note"],
+        &rows,
+    );
+    println!("* fitted log-log exponents from results/fig7.csv (run `raas fig7`);");
+    println!("  accuracy from results/fig6.csv (run `raas fig6`).  Latency exponent is");
+    println!("  for TOTAL decode time: O(L)/step ⇒ ≈1, O(N)/step ⇒ ≈2.");
+    Ok(())
+}
+
+/// (latency slope, memory slope) for one policy from fig7.csv, if present.
+fn measured_slopes(path: &Path, kind: PolicyKind) -> Option<(f64, f64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut xs = Vec::new();
+    let mut lat = Vec::new();
+    let mut mem = Vec::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() == 4 && f[0] == kind.name() {
+            xs.push(f[1].parse::<f64>().ok()?);
+            lat.push(f[2].parse::<f64>().ok()?);
+            mem.push(f[3].parse::<f64>().ok()?);
+        }
+    }
+    if xs.len() < 2 {
+        return None;
+    }
+    Some((loglog_slope(&xs, &lat), loglog_slope(&xs, &mem)))
+}
+
+/// Mean accuracy at the largest budget for one policy from fig6.csv.
+fn measured_accuracy(path: &Path, kind: PolicyKind) -> Option<f64> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut max_budget = 0usize;
+    let mut rows: Vec<(usize, f64)> = Vec::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() >= 5 && f[2] == kind.name() {
+            let b = f[3].parse::<usize>().ok()?;
+            let a = f[4].parse::<f64>().ok()?;
+            max_budget = max_budget.max(b);
+            rows.push((b, a));
+        }
+    }
+    let accs: Vec<f64> = rows.iter().filter(|(b, _)| *b == max_budget).map(|(_, a)| *a).collect();
+    if accs.is_empty() {
+        return None;
+    }
+    Some(accs.iter().sum::<f64>() / accs.len() as f64)
+}

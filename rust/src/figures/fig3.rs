@@ -1,0 +1,204 @@
+//! Figure 3: the waterfall attention pattern — fractions of attention maps
+//! showing milestone columns (paper: 20–25 %), phoenix tokens (1–2 %), and
+//! lazy sink+recent structure (> 70 %).
+//!
+//! Two data sources:
+//!  * `artifacts/fig3_attention_stats.json` — per-(layer, head) token-level
+//!    classification from the trained model (python/compile/analyze_attention.py,
+//!    run at build time via `make fig3data`);
+//!  * the engine's own page-level score logs from a dense run (always
+//!    available once artifacts are built) — classified here.
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, PolicyKind};
+use crate::engine::{Engine, GenOptions};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::Problem;
+
+use super::common::{print_table, results_dir, write_csv};
+
+/// Classification of one page's probability time series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnKind {
+    Milestone,
+    Phoenix,
+    Background,
+}
+
+/// Detector thresholds (page-level analogues of the paper's map inspection).
+pub struct Detector {
+    pub hi: f32,
+    pub lo: f32,
+    /// Steps of sustained quiet after the last high for a milestone.
+    pub fade_window: usize,
+    /// Minimum inactive gap between highs for a phoenix (paper: 128).
+    pub phoenix_gap: usize,
+}
+
+impl Default for Detector {
+    fn default() -> Self {
+        Detector { hi: 0.25, lo: 0.02, fade_window: 12, phoenix_gap: 64 }
+    }
+}
+
+impl Detector {
+    /// Classify a page's probability series over decode steps.
+    pub fn classify(&self, series: &[f32]) -> ColumnKind {
+        let highs: Vec<usize> = series
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p >= self.hi)
+            .map(|(i, _)| i)
+            .collect();
+        if highs.is_empty() {
+            return ColumnKind::Background;
+        }
+        // phoenix: two highs separated by a long quiet gap
+        for w in highs.windows(2) {
+            if w[1] - w[0] >= self.phoenix_gap
+                && series[w[0] + 1..w[1]].iter().all(|&p| p < self.hi)
+            {
+                return ColumnKind::Phoenix;
+            }
+        }
+        // milestone: after the last high, sustained quiet until the end
+        let last_hi = *highs.last().unwrap();
+        let tail = &series[(last_hi + 1).min(series.len())..];
+        if tail.len() >= self.fade_window && tail.iter().all(|&p| p < self.lo * 8.0) {
+            return ColumnKind::Milestone;
+        }
+        ColumnKind::Background
+    }
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = results_dir(args.str_opt("out"))?;
+    // --- source 1: python per-head stats, if generated -----------------------
+    let stats_path =
+        std::path::PathBuf::from(args.str_or("artifacts", "artifacts")).join("fig3_attention_stats.json");
+    if let Ok(text) = std::fs::read_to_string(&stats_path) {
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!("Figure 3 — trained-model attention maps ({} maps analysed):",
+                 j.get("n_maps").and_then(|v| v.as_i64()).unwrap_or(0));
+        print_table(
+            &["pattern", "paper", "measured"],
+            &[
+                vec!["milestone maps".into(), "20–25 %".into(),
+                     pct(j.get("milestone_frac"))],
+                vec!["phoenix maps".into(), "1–2 %".into(), pct(j.get("phoenix_frac"))],
+                vec!["lazy (sink+recent) maps".into(), "> 70 %".into(),
+                     pct(j.get("lazy_frac"))],
+            ],
+        );
+    } else {
+        println!("(no {stats_path:?} — run `make fig3data` for per-head map stats)");
+    }
+
+    // --- source 2: engine page-level score logs ------------------------------
+    if !args.switch("no-engine") {
+        match engine_page_stats(args) {
+            Ok((rows, n_pages)) => {
+                let path = dir.join("fig3_pages.csv");
+                write_csv(&path, &["kind", "count", "fraction"], &rows)?;
+                println!("\nengine page-column classification over {n_pages} decode pages");
+                println!("wrote {path:?}");
+            }
+            Err(e) => println!("(engine page stats skipped: {e:#})"),
+        }
+    }
+    Ok(())
+}
+
+fn pct(v: Option<&Json>) -> String {
+    v.and_then(|x| x.as_f64()).map(|f| format!("{:.1} %", 100.0 * f)).unwrap_or("-".into())
+}
+
+/// Run the real engine densely over a few problems, log layer-0 page probs
+/// and classify the columns.
+fn engine_page_stats(args: &Args) -> Result<(Vec<Vec<String>>, usize)> {
+    let mut cfg = EngineConfig::from_args(args)?;
+    cfg.policy = PolicyKind::Dense;
+    let mut engine = Engine::new_with_capacities(cfg, &[256, 2048])?;
+    let spec = engine.meta.corpus.clone();
+    let mut rng = Rng::new(args.u64_or("seed", 3));
+    let det = Detector::default();
+    let n_problems = args.usize_or("problems", 8);
+
+    let mut counts = [0usize; 3];
+    let mut total = 0usize;
+    for _ in 0..n_problems {
+        let p = Problem::sample(&mut rng, &spec, Some(spec.max_steps));
+        let prompt = p.encode_prompt(&spec);
+        let out = engine.generate(
+            &prompt,
+            &GenOptions { max_new: 128, log_scores: true, ..Default::default() },
+        )?;
+        // pivot the log: page start_pos -> series over steps
+        let mut pages: std::collections::BTreeMap<usize, Vec<f32>> = Default::default();
+        for (step_idx, (_, entries)) in out.score_log.iter().enumerate() {
+            for &(start_pos, prob) in entries {
+                let series = pages.entry(start_pos).or_insert_with(|| vec![0.0; step_idx]);
+                while series.len() < step_idx {
+                    series.push(0.0);
+                }
+                series.push(prob);
+            }
+        }
+        for (_, series) in pages {
+            match det.classify(&series) {
+                ColumnKind::Milestone => counts[0] += 1,
+                ColumnKind::Phoenix => counts[1] += 1,
+                ColumnKind::Background => counts[2] += 1,
+            }
+            total += 1;
+        }
+    }
+    let rows = [("milestone", 0), ("phoenix", 1), ("background", 2)]
+        .iter()
+        .map(|&(name, i)| {
+            vec![
+                name.to_string(),
+                counts[i].to_string(),
+                format!("{:.3}", counts[i] as f64 / total.max(1) as f64),
+            ]
+        })
+        .collect();
+    Ok((rows, total))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_milestone_shape() {
+        let det = Detector { fade_window: 8, ..Default::default() };
+        // hot early, then fades for good
+        let mut s = vec![0.3, 0.4, 0.3, 0.05];
+        s.extend(vec![0.001; 30]);
+        assert_eq!(det.classify(&s), ColumnKind::Milestone);
+    }
+
+    #[test]
+    fn detects_phoenix_shape() {
+        let det = Detector { phoenix_gap: 16, ..Default::default() };
+        let mut s = vec![0.3];
+        s.extend(vec![0.0001; 30]);
+        s.push(0.3);
+        assert_eq!(det.classify(&s), ColumnKind::Phoenix);
+    }
+
+    #[test]
+    fn background_stays_background() {
+        let det = Detector::default();
+        assert_eq!(det.classify(&vec![0.001; 50]), ColumnKind::Background);
+        assert_eq!(det.classify(&[]), ColumnKind::Background);
+        // still hot at the end: not a milestone
+        let mut s = vec![0.001; 30];
+        s.push(0.5);
+        assert_eq!(det.classify(&s), ColumnKind::Background);
+    }
+}

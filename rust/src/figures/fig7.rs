@@ -1,0 +1,112 @@
+//! Figure 7: latency and memory vs decode length (prefill fixed at 128),
+//! measured end-to-end on the real engine: Dense grows quadratically in
+//! total decode time and linearly in memory; Quest is O(L) per step but O(N)
+//! memory; RaaS is O(L) in both.
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, PolicyKind};
+use crate::engine::{Engine, GenOptions};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats::{ascii_plot, loglog_slope};
+use crate::workload::Problem;
+
+use super::common::{fmt_bytes, print_table, results_dir, write_csv};
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = results_dir(args.str_opt("out"))?;
+    let max_decode = args.usize_or("max-decode", 4096);
+    let prefill_len = args.usize_or("prefill", 128);
+    let budget = args.usize_or("budget", 1024);
+    let policies = args.str_list_or("policies", &["dense", "quest", "raas", "sink", "h2o"]);
+    let checkpoints: Vec<usize> = {
+        let mut cs = vec![];
+        let mut c = 512;
+        while c <= max_decode {
+            cs.push(c);
+            c *= 2;
+        }
+        cs
+    };
+
+    let mut rows = Vec::new();
+    let mut lat_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut mem_series: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+    let mut summary = Vec::new();
+
+    for pname in &policies {
+        let mut cfg = EngineConfig::from_args(args)?;
+        cfg.policy = PolicyKind::parse(pname)?;
+        cfg.budget = budget;
+        // one engine per policy; fresh pool so high-water is per-policy
+        let mut engine = Engine::new(cfg)?;
+        let spec = engine.meta.corpus.clone();
+        let mut rng = Rng::new(args.u64_or("seed", 7));
+
+        // synth a prompt of exactly prefill_len tokens
+        let mut prompt = Vec::new();
+        while prompt.len() < prefill_len {
+            prompt.extend(Problem::sample(&mut rng, &spec, None).encode_prompt(&spec));
+        }
+        prompt.truncate(prefill_len);
+
+        let out = engine.generate(
+            &prompt,
+            &GenOptions {
+                max_new: max_decode,
+                force_len: Some(max_decode),
+                log_series: true,
+                ..Default::default()
+            },
+        )?;
+
+        let mut lat_pts = Vec::new();
+        let mut mem_pts = Vec::new();
+        for &cp in &checkpoints {
+            if let Some(&(step, secs, bytes)) = out.series.iter().find(|(s, _, _)| *s == cp) {
+                rows.push(vec![
+                    pname.clone(),
+                    step.to_string(),
+                    format!("{secs:.3}"),
+                    bytes.to_string(),
+                ]);
+                lat_pts.push((step as f64, secs));
+                mem_pts.push((step as f64, bytes as f64));
+            }
+        }
+        let xs: Vec<f64> = lat_pts.iter().map(|p| p.0).collect();
+        let lat: Vec<f64> = lat_pts.iter().map(|p| p.1).collect();
+        let mem: Vec<f64> = mem_pts.iter().map(|p| p.1).collect();
+        summary.push(vec![
+            pname.clone(),
+            format!("{:.2}", loglog_slope(&xs, &lat)),
+            format!("{:.2}", loglog_slope(&xs, &mem)),
+            format!("{:.1}s", out.decode_secs),
+            fmt_bytes(*mem.last().unwrap_or(&0.0)),
+        ]);
+        lat_series.push((pname.clone(), lat_pts));
+        mem_series.push((pname.clone(), mem_pts));
+        println!("{pname}: decode {max_decode} tokens in {:.1}s", out.decode_secs);
+    }
+
+    let path = dir.join("fig7.csv");
+    write_csv(&path, &["policy", "decode_tokens", "cum_decode_secs", "resident_bytes"], &rows)?;
+    println!("wrote {path:?}");
+
+    println!("\nFigure 7 summary (log-log slopes: latency exponent ≈2 ⇒ O(N²) total,");
+    println!("≈1 ⇒ O(N) total i.e. O(L)/step; memory exponent ≈1 ⇒ O(N), ≈0 ⇒ O(L)):");
+    print_table(
+        &["policy", "latency slope", "memory slope", "total decode", "final resident"],
+        &summary,
+    );
+    let ls: Vec<(&str, &[(f64, f64)])> =
+        lat_series.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    println!("{}", ascii_plot("cumulative decode latency vs decode length", &ls, 64, 12));
+    let ms: Vec<(&str, &[(f64, f64)])> =
+        mem_series.iter().map(|(n, p)| (n.as_str(), p.as_slice())).collect();
+    println!("{}", ascii_plot("resident KV bytes vs decode length", &ms, 64, 12));
+    println!("paper shape check: Dense latency superlinear; Quest/RaaS linear;");
+    println!("Dense+Quest memory linear; RaaS (and Sink/H2O) plateau at the budget.");
+    Ok(())
+}

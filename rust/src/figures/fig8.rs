@@ -1,0 +1,98 @@
+//! Figure 8: decode-length inflation when milestone tokens are discarded —
+//! H2O-128 / Sink-128 derail, re-reason and hit the 4k cap; Dense/Quest/RaaS
+//! do not.  Plus the qualitative derailment demo on the real model.
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, PolicyKind};
+use crate::engine::{Engine, GenOptions};
+use crate::kvcache::policy::make_policy;
+use crate::sim::reasoning::{run_trials, SimParams};
+use crate::sim::{DATASETS, MODELS};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::workload::Problem;
+
+use super::common::{print_table, results_dir, write_csv};
+
+pub fn run(args: &Args) -> Result<()> {
+    let dir = results_dir(args.str_opt("out"))?;
+    let trials = args.usize_or("trials", 200);
+    let cap = args.usize_or("max-decode", 4096);
+    let seed = args.u64_or("seed", 8);
+
+    // paper setup: five configurations on MATH500 with a 4k context cap
+    let configs: [(&str, PolicyKind, usize); 5] = [
+        ("dense", PolicyKind::Dense, usize::MAX / 2),
+        ("quest-1024", PolicyKind::Quest, 1024),
+        ("raas-1024", PolicyKind::Raas, 1024),
+        ("h2o-128", PolicyKind::H2o, 128),
+        ("sink-128", PolicyKind::Sink, 128),
+    ];
+    let dp = DATASETS[1]; // math500
+    let mp = MODELS[1]; // qwen-math persona
+
+    let mut rows = Vec::new();
+    let mut tbl = Vec::new();
+    for (name, kind, budget) in configs {
+        let cfg = EngineConfig { policy: kind, budget, ..Default::default() };
+        let policy = make_policy(&cfg);
+        let params = SimParams { budget_tokens: budget, max_decode: cap, ..Default::default() };
+        let mut rng = Rng::new(seed ^ (budget as u64));
+        let agg = run_trials(policy.as_ref(), &params, &mp, &dp, trials, &mut rng);
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}", agg.mean_decode_len),
+            format!("{:.3}", agg.cap_rate),
+            format!("{:.3}", agg.accuracy),
+            format!("{:.2}", agg.milestone_miss_rate),
+        ]);
+        tbl.push(vec![
+            name.to_string(),
+            format!("{:.0}", agg.mean_decode_len),
+            format!("{:.0}%", 100.0 * agg.cap_rate),
+            format!("{:.2}", agg.milestone_miss_rate),
+        ]);
+    }
+    let path = dir.join("fig8.csv");
+    write_csv(&path, &["config", "mean_decode_len", "cap_rate", "accuracy",
+                       "milestone_miss_rate"], &rows)?;
+    println!("wrote {path:?}");
+    println!("Figure 8: decode lengths on math500 (cap {cap})");
+    print_table(&["config", "mean decode len", "hits 4k cap", "milestone misses/req"], &tbl);
+    println!("paper shape check: H2O-128/Sink-128 inflate decode length and hit the");
+    println!("cap; Dense/Quest-1024/RaaS-1024 stay near the natural chain length.\n");
+
+    if args.switch("demo") {
+        demo_real_model(args)?;
+    } else {
+        println!("(run with --demo and built artifacts for the real-model derailment sample)");
+    }
+    Ok(())
+}
+
+/// Right panel of Figure 8: decode a real problem under a milestone-hostile
+/// policy and show the derailment in the token stream.
+fn demo_real_model(args: &Args) -> Result<()> {
+    let mut cfg = EngineConfig::from_args(args)?;
+    cfg.policy = PolicyKind::Sink;
+    cfg.budget = 64;
+    let mut engine = Engine::new_with_capacities(cfg, &[64, 256, 2048])?;
+    let spec = engine.meta.corpus.clone();
+    let mut rng = Rng::new(args.u64_or("seed", 8));
+    let p = Problem::sample(&mut rng, &spec, Some(spec.max_steps));
+    let prompt = p.encode_prompt(&spec);
+    let out = engine.generate(&prompt, &GenOptions { max_new: spec.max_decode_tokens(spec.max_steps), ..Default::default() })?;
+    println!("prompt:   {}", engine.tokenizer.decode(&prompt));
+    println!("expected: {}", engine.tokenizer.decode(&p.encode_decode(&spec)));
+    println!("sink-64:  {}", engine.tokenizer.decode(&out.tokens));
+    let got = engine.tokenizer.parse_answer(&out.tokens);
+    println!(
+        "answer: expected {} got {:?} — decode len {} (expected {})",
+        p.answer(),
+        got,
+        out.tokens.len(),
+        p.encode_decode(&spec).len()
+    );
+    Ok(())
+}

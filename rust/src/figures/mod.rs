@@ -1,0 +1,14 @@
+//! One module per figure of the paper's evaluation section.  Every command
+//! writes `results/figN*.csv` (the data behind the figure) plus an ASCII
+//! rendering, and prints the paper-vs-measured comparison recorded in
+//! EXPERIMENTS.md.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod ablate;
+pub mod fig9;

@@ -1,0 +1,15 @@
+//! Paged KV-cache manager: the memory substrate the sparsity policies act on.
+//!
+//! Layout follows vLLM-style paged attention adapted to this stack: the pool
+//! owns fixed-size pages of post-RoPE keys and raw values for **one layer**
+//! each; a sequence holds one page table per layer.  All memory accounting
+//! (the paper's Figure-7 memory axis) is byte-accurate against the pool.
+
+pub mod page;
+pub mod policy;
+pub mod pool;
+pub mod seq;
+
+pub use page::{PageId, PageMeta, RepBounds};
+pub use pool::KvPool;
+pub use seq::SeqCache;

@@ -1,0 +1,164 @@
+//! Page metadata: what the sparsity policies reason about.
+
+/// Index into the pool's page slab.
+pub type PageId = u32;
+
+/// Per-page bookkeeping.  One `PageMeta` per (sequence, layer, page).
+#[derive(Debug, Clone)]
+pub struct PageMeta {
+    /// Pool slab index holding this page's KV data (u32::MAX in simulation,
+    /// where no real KV bytes exist).
+    pub pool_id: PageId,
+    /// Absolute position of the first token in this page.
+    pub start_pos: usize,
+    /// Number of filled slots (≤ page_size).
+    pub len: usize,
+    /// Prefill pages are pinned: RaaS never evicts them (phoenix protection).
+    pub pinned: bool,
+    /// RaaS: last step at which this page's estimated attention score
+    /// exceeded alpha (or placed in the top-r fraction).
+    pub last_stamp: u64,
+    /// H2O: accumulated estimated attention mass.
+    pub acc_score: f64,
+}
+
+pub const NO_POOL: PageId = u32::MAX;
+
+impl PageMeta {
+    pub fn new(pool_id: PageId, start_pos: usize, pinned: bool, now: u64) -> Self {
+        PageMeta { pool_id, start_pos, len: 0, pinned, last_stamp: now, acc_score: 0.0 }
+    }
+    pub fn end_pos(&self) -> usize {
+        self.start_pos + self.len
+    }
+}
+
+/// Quest-style representative key bounds for one page (one layer):
+/// channelwise min/max over the page's post-RoPE keys, per kv head.
+#[derive(Debug, Clone)]
+pub struct RepBounds {
+    /// [n_kv_heads * head_dim]
+    pub kmin: Vec<f32>,
+    pub kmax: Vec<f32>,
+}
+
+impl RepBounds {
+    pub fn empty(kv_dim: usize) -> Self {
+        RepBounds { kmin: vec![f32::INFINITY; kv_dim], kmax: vec![f32::NEG_INFINITY; kv_dim] }
+    }
+
+    /// Fold one token's key vector (length kv_dim) into the bounds.
+    pub fn update(&mut self, key: &[f32]) {
+        debug_assert_eq!(key.len(), self.kmin.len());
+        for (i, &x) in key.iter().enumerate() {
+            if x < self.kmin[i] {
+                self.kmin[i] = x;
+            }
+            if x > self.kmax[i] {
+                self.kmax[i] = x;
+            }
+        }
+    }
+
+    /// Quest upper bound: max over query heads in the kv group of
+    /// sum_c max(q_c*kmin_c, q_c*kmax_c).
+    ///
+    /// `q` is [n_heads * head_dim]; heads h map to kv head h / group.
+    pub fn score(&self, q: &[f32], n_heads: usize, n_kv: usize, head_dim: usize) -> f32 {
+        let group = n_heads / n_kv;
+        let mut best = f32::NEG_INFINITY;
+        for h in 0..n_heads {
+            let g = h / group;
+            let qh = &q[h * head_dim..(h + 1) * head_dim];
+            let kmin = &self.kmin[g * head_dim..(g + 1) * head_dim];
+            let kmax = &self.kmax[g * head_dim..(g + 1) * head_dim];
+            let mut s = 0.0f32;
+            for c in 0..head_dim {
+                s += (qh[c] * kmin[c]).max(qh[c] * kmax[c]);
+            }
+            if s > best {
+                best = s;
+            }
+        }
+        best
+    }
+}
+
+/// Softmax the per-page upper-bound scores into pseudo-probabilities —
+/// the quantity RaaS thresholds against alpha (mirrors page_probs_ref).
+pub fn page_probs(scores: &[f32], head_dim: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(scores.len(), 0.0);
+    if scores.is_empty() {
+        return;
+    }
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max) * scale;
+    let mut denom = 0.0f32;
+    for (i, &s) in scores.iter().enumerate() {
+        let e = (s * scale - m).exp();
+        out[i] = e;
+        denom += e;
+    }
+    if denom > 0.0 {
+        for p in out.iter_mut() {
+            *p /= denom;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_contain_keys() {
+        let mut b = RepBounds::empty(4);
+        b.update(&[1.0, -2.0, 0.5, 0.0]);
+        b.update(&[0.0, 3.0, 0.5, -1.0]);
+        assert_eq!(b.kmin, vec![0.0, -2.0, 0.5, -1.0]);
+        assert_eq!(b.kmax, vec![1.0, 3.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn score_upper_bounds_true_dot() {
+        // 1 head, 1 kv head, dim 4
+        let keys = [[0.3f32, -0.5, 1.0, 0.2], [-0.1, 0.4, -0.2, 0.8]];
+        let mut b = RepBounds::empty(4);
+        for k in &keys {
+            b.update(k);
+        }
+        let q = [0.7f32, -0.3, 0.5, 1.1];
+        let bound = b.score(&q, 1, 1, 4);
+        for k in &keys {
+            let dot: f32 = q.iter().zip(k).map(|(a, b)| a * b).sum();
+            assert!(bound >= dot - 1e-6, "bound {bound} < dot {dot}");
+        }
+    }
+
+    #[test]
+    fn gqa_group_max() {
+        // 2 q heads sharing 1 kv head: score = max over heads
+        let mut b = RepBounds::empty(2);
+        b.update(&[1.0, 1.0]);
+        let q = [1.0f32, 0.0, /* head 1: */ 5.0, 5.0];
+        let s = b.score(&q, 2, 1, 2);
+        assert!((s - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let mut out = Vec::new();
+        page_probs(&[1.0, 2.0, 3.0], 16, &mut out);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(out[2] > out[0]);
+    }
+
+    #[test]
+    fn probs_empty_ok() {
+        let mut out = vec![1.0];
+        page_probs(&[], 16, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,43 @@
+//! Dense (standard attention): attend everything, evict nothing.
+//! O(N) time, O(N) memory, reference accuracy (paper Figure 2, col 1).
+
+use super::{PageMeta, SparsityPolicy};
+use crate::config::PolicyKind;
+
+pub struct DensePolicy;
+
+impl SparsityPolicy for DensePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Dense
+    }
+
+    fn observe(&self, _table: &mut [PageMeta], _probs: &[f32], _now: u64) {}
+
+    fn select(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+              _page_size: usize) -> Vec<usize> {
+        (0..table.len()).collect()
+    }
+
+    fn evict_candidate(&self, _table: &[PageMeta]) -> Option<usize> {
+        None
+    }
+
+    fn bounds_memory(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mk_table;
+    use super::*;
+
+    #[test]
+    fn selects_everything_evicts_nothing() {
+        let p = DensePolicy;
+        let t = mk_table(&[(16, false), (16, false), (3, false)]);
+        assert_eq!(p.select(&t, &[0.0; 3], 32, 16), vec![0, 1, 2]);
+        assert_eq!(p.evict_candidate(&t), None);
+        assert!(!p.bounds_memory());
+    }
+}

@@ -1,0 +1,107 @@
+//! H2O (Heavy-Hitter Oracle): accumulate attention mass per page; evict the
+//! lightest non-recent page.  O(L) time/memory in theory, but — as the paper
+//! observes — the *accumulated* statistic overweights stale milestones: an
+//! old lemma that once drew heavy attention outlives the newer lemma the
+//! chain actually needs (Figures 6 and 8).
+
+use super::{PageMeta, SparsityPolicy};
+use crate::config::PolicyKind;
+
+pub struct H2oPolicy {
+    /// Fraction of the budget protected as a recent window.
+    pub recent_fraction: f64,
+    pub budget_tokens: usize,
+}
+
+impl H2oPolicy {
+    fn recent_pages(&self, page_size: usize) -> usize {
+        (((self.budget_tokens as f64 * self.recent_fraction) / page_size as f64).ceil()
+            as usize)
+            .max(1)
+    }
+}
+
+impl SparsityPolicy for H2oPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::H2o
+    }
+
+    fn observe(&self, table: &mut [PageMeta], probs: &[f32], _now: u64) {
+        for (page, &p) in table.iter_mut().zip(probs) {
+            page.acc_score += p as f64;
+        }
+    }
+
+    fn select(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+              _page_size: usize) -> Vec<usize> {
+        (0..table.len()).collect()
+    }
+
+    fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize> {
+        if table.len() <= 1 {
+            return None;
+        }
+        let page_size = table.iter().map(|p| p.len).max().unwrap_or(16).max(1);
+        let protected = self.recent_pages(page_size).min(table.len() - 1);
+        let evictable = &table[..table.len() - protected];
+        evictable
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| a.acc_score.partial_cmp(&b.acc_score).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    fn bounds_memory(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mk_table;
+    use super::*;
+
+    fn policy() -> H2oPolicy {
+        H2oPolicy { recent_fraction: 0.25, budget_tokens: 64 }
+    }
+
+    #[test]
+    fn accumulates_scores() {
+        let p = policy();
+        let mut t = mk_table(&[(16, false), (16, false)]);
+        p.observe(&mut t, &[0.7, 0.3], 1);
+        p.observe(&mut t, &[0.2, 0.8], 2);
+        assert!((t[0].acc_score - 0.9).abs() < 1e-6);
+        assert!((t[1].acc_score - 1.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn evicts_lightest_outside_recent_window() {
+        let p = policy(); // recent window = 64*0.25/16 = 1 page
+        let mut t = mk_table(&[(16, false), (16, false), (16, false), (8, false)]);
+        p.observe(&mut t, &[0.5, 0.05, 0.3, 0.15], 1);
+        // lightest is page 1; last page protected
+        assert_eq!(p.evict_candidate(&t), Some(1));
+    }
+
+    #[test]
+    fn stale_heavy_hitter_outlives_new_milestone() {
+        // The failure mode the paper describes: page 0 accumulated a lot of
+        // mass long ago; the newer milestone page 1 has less *accumulated*
+        // mass even though it is what the chain needs next — H2O evicts it.
+        let p = policy();
+        let mut t = mk_table(&[(16, false), (16, false), (8, false)]);
+        for _ in 0..50 {
+            p.observe(&mut t, &[0.9, 0.0, 0.1], 0); // old milestone era
+        }
+        for _ in 0..3 {
+            p.observe(&mut t, &[0.0, 0.8, 0.2], 0); // new milestone era
+        }
+        assert_eq!(p.evict_candidate(&t), Some(1), "H2O drops the new milestone");
+    }
+
+    #[test]
+    fn singleton_table_not_evictable() {
+        assert_eq!(policy().evict_candidate(&mk_table(&[(4, false)])), None);
+    }
+}

@@ -1,0 +1,109 @@
+//! The five sparsity algorithms of the paper's evaluation (Figure 2).
+//!
+//! A policy sees, per decode step and per layer, the resident page table and
+//! the per-page estimated attention probabilities (softmaxed Quest-style
+//! representative scores — `page::page_probs`).  It decides
+//!
+//!  * which resident pages the Pallas kernel attends this step (`select`),
+//!  * how per-page statistics evolve (`observe` — RaaS timestamps, H2O
+//!    accumulators), and
+//!  * which page to evict when the resident set exceeds the budget
+//!    (`evict_candidate`).
+//!
+//! The same implementations serve both the real engine and the trace
+//! simulator, so the accuracy grids (Figures 6/8/9) exercise exactly the
+//! code that runs on the serving path.
+
+mod dense;
+mod h2o;
+mod quest;
+mod raas;
+mod sink;
+
+pub use dense::DensePolicy;
+pub use h2o::H2oPolicy;
+pub use quest::QuestPolicy;
+pub use raas::RaasPolicy;
+pub use sink::SinkPolicy;
+
+use super::page::PageMeta;
+use crate::config::{EngineConfig, PolicyKind};
+
+pub trait SparsityPolicy: Send {
+    fn kind(&self) -> PolicyKind;
+
+    /// Update per-page statistics after this step's estimated probabilities
+    /// are known.  `now` is the decode-step counter.
+    fn observe(&self, table: &mut [PageMeta], probs: &[f32], now: u64);
+
+    /// Indices (into `table`) of pages to attend this step.  `scores` are
+    /// the raw representative upper bounds (pre-softmax), aligned with
+    /// `table`.  Must always include the final page (the one receiving new
+    /// tokens) when the table is non-empty.
+    fn select(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
+              page_size: usize) -> Vec<usize>;
+
+    /// Page to evict while the resident set exceeds the budget.  `None`
+    /// means nothing is evictable (Dense/Quest always; RaaS when only
+    /// pinned prefill pages remain — the paper retains prefill regardless).
+    fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize>;
+
+    /// Whether resident memory is bounded by the budget (O(L) memory).
+    fn bounds_memory(&self) -> bool;
+}
+
+/// Instantiate the policy named by the config.
+pub fn make_policy(cfg: &EngineConfig) -> Box<dyn SparsityPolicy> {
+    match cfg.policy {
+        PolicyKind::Dense => Box::new(DensePolicy),
+        PolicyKind::Sink => Box::new(SinkPolicy { sink_tokens: cfg.sink_tokens }),
+        PolicyKind::H2o => Box::new(H2oPolicy {
+            recent_fraction: cfg.h2o_recent_fraction,
+            budget_tokens: cfg.budget,
+        }),
+        PolicyKind::Quest => Box::new(QuestPolicy),
+        PolicyKind::Raas => Box::new(RaasPolicy {
+            alpha: cfg.alpha,
+            stamp_fraction: cfg.stamp_fraction,
+        }),
+    }
+}
+
+/// Total resident tokens in a table.
+pub fn resident_tokens(table: &[PageMeta]) -> usize {
+    table.iter().map(|p| p.len).sum()
+}
+
+#[cfg(test)]
+pub(crate) fn mk_table(lens: &[(usize, bool)]) -> Vec<PageMeta> {
+    // (len, pinned) pages laid out contiguously from position 0
+    let mut pos = 0;
+    lens.iter()
+        .enumerate()
+        .map(|(i, &(len, pinned))| {
+            let mut m = PageMeta::new(i as u32, pos, pinned, 0);
+            m.len = len;
+            pos += len;
+            m
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_matches_kind() {
+        for kind in PolicyKind::all() {
+            let cfg = EngineConfig { policy: kind, ..Default::default() };
+            assert_eq!(make_policy(&cfg).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn resident_token_count() {
+        let t = mk_table(&[(16, true), (16, false), (5, false)]);
+        assert_eq!(resident_tokens(&t), 37);
+    }
+}

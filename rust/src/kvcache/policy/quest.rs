@@ -1,0 +1,71 @@
+//! Quest: query-aware top-L page selection per decode step, but the full KV
+//! cache stays resident — O(L) attention time, **O(N) memory** (the corner
+//! of the impossible trinity RaaS removes; paper Figures 2 and 7).
+
+use super::{PageMeta, SparsityPolicy};
+use crate::config::PolicyKind;
+
+pub struct QuestPolicy;
+
+impl SparsityPolicy for QuestPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Quest
+    }
+
+    fn observe(&self, _table: &mut [PageMeta], _probs: &[f32], _now: u64) {}
+
+    fn select(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
+              page_size: usize) -> Vec<usize> {
+        let budget_pages = (budget_tokens / page_size.max(1)).max(1);
+        if table.len() <= budget_pages {
+            return (0..table.len()).collect();
+        }
+        // Rank by representative score; the active (last) page is always
+        // included, as in Quest's implementation.
+        let last = table.len() - 1;
+        let mut order: Vec<usize> = (0..last).collect();
+        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        let mut sel: Vec<usize> = order.into_iter().take(budget_pages - 1).collect();
+        sel.push(last);
+        sel.sort_unstable();
+        sel
+    }
+
+    fn evict_candidate(&self, _table: &[PageMeta]) -> Option<usize> {
+        None // retains everything
+    }
+
+    fn bounds_memory(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mk_table;
+    use super::*;
+
+    #[test]
+    fn selects_top_scoring_pages_plus_active() {
+        let p = QuestPolicy;
+        let t = mk_table(&[(16, false); 6]);
+        // 6 pages, budget 3 pages = 48 tokens
+        let sel = p.select(&t, &[0.1, 0.9, 0.2, 0.8, 0.05, 0.0], 48, 16);
+        assert_eq!(sel, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn small_table_selected_fully() {
+        let p = QuestPolicy;
+        let t = mk_table(&[(16, false), (8, false)]);
+        assert_eq!(p.select(&t, &[0.0, 0.0], 1024, 16), vec![0, 1]);
+    }
+
+    #[test]
+    fn never_evicts() {
+        let p = QuestPolicy;
+        let t = mk_table(&[(16, false); 8]);
+        assert_eq!(p.evict_candidate(&t), None);
+        assert!(!p.bounds_memory());
+    }
+}

@@ -1,0 +1,176 @@
+//! RaaS — the paper's contribution.
+//!
+//! Two ideas (paper §3.2):
+//!
+//! 1. **Milestone tracking via timestamps.**  Each page carries the last
+//!    step at which its estimated attention probability exceeded `alpha`
+//!    (default 1e-4).  A milestone page keeps receiving fresh stamps while
+//!    the chain consumes it, then its stamp freezes as the waterfall fades.
+//!    On overflow, evict the page with the *oldest* stamp — exactly the
+//!    lemma the reasoning no longer needs.  (`alpha <= 0` switches to the
+//!    equivalent top-`stamp_fraction` formulation, paper's r = 50%.)
+//!
+//! 2. **Pinned prefill.**  Phoenix tokens live almost exclusively in the
+//!    short prompt of reasoning tasks; prefill pages are exempt from
+//!    eviction, so they are retained even when the budget is tight (which
+//!    also reproduces the paper's small-budget pathology in Figure 6).
+//!
+//! Result: O(L) time **and** O(L) memory at Quest-level accuracy.
+
+use super::{PageMeta, SparsityPolicy};
+use crate::config::PolicyKind;
+
+pub struct RaasPolicy {
+    /// Timestamp-refresh threshold on estimated attention probability.
+    pub alpha: f64,
+    /// Used instead when `alpha <= 0`: stamp the top fraction each step.
+    pub stamp_fraction: f64,
+}
+
+impl SparsityPolicy for RaasPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Raas
+    }
+
+    fn observe(&self, table: &mut [PageMeta], probs: &[f32], now: u64) {
+        if table.is_empty() {
+            return;
+        }
+        if self.alpha > 0.0 {
+            for (page, &p) in table.iter_mut().zip(probs) {
+                if p as f64 >= self.alpha {
+                    page.last_stamp = now;
+                }
+            }
+        } else {
+            // top-r formulation: stamp the ceil(r * n) highest-probability pages
+            let n = table.len();
+            let k = ((self.stamp_fraction * n as f64).ceil() as usize).clamp(1, n);
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            for &i in order.iter().take(k) {
+                table[i].last_stamp = now;
+            }
+        }
+        // The active page always carries the latest stamp: its tokens are
+        // the current reasoning frontier.
+        if let Some(last) = table.last_mut() {
+            last.last_stamp = now;
+        }
+    }
+
+    fn select(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+              _page_size: usize) -> Vec<usize> {
+        // RaaS attends the full (budget-bounded) resident set; sparsity comes
+        // from eviction, which is what keeps memory at O(L).
+        (0..table.len()).collect()
+    }
+
+    fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize> {
+        if table.len() <= 1 {
+            return None;
+        }
+        table[..table.len() - 1]
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !p.pinned)
+            .min_by(|(_, a), (_, b)| {
+                a.last_stamp
+                    .cmp(&b.last_stamp)
+                    .then(a.start_pos.cmp(&b.start_pos))
+            })
+            .map(|(i, _)| i)
+    }
+
+    fn bounds_memory(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mk_table;
+    use super::*;
+
+    fn policy() -> RaasPolicy {
+        RaasPolicy { alpha: 0.01, stamp_fraction: 0.5 }
+    }
+
+    #[test]
+    fn stamps_pages_above_alpha() {
+        let p = policy();
+        let mut t = mk_table(&[(16, false), (16, false), (16, false)]);
+        p.observe(&mut t, &[0.5, 0.001, 0.3], 7);
+        assert_eq!(t[0].last_stamp, 7);
+        assert_eq!(t[1].last_stamp, 0, "below alpha keeps old stamp");
+        assert_eq!(t[2].last_stamp, 7);
+    }
+
+    #[test]
+    fn active_page_always_stamped() {
+        let p = policy();
+        let mut t = mk_table(&[(16, false), (4, false)]);
+        p.observe(&mut t, &[0.9, 0.0], 3);
+        assert_eq!(t[1].last_stamp, 3);
+    }
+
+    #[test]
+    fn top_r_formulation() {
+        let p = RaasPolicy { alpha: 0.0, stamp_fraction: 0.5 };
+        let mut t = mk_table(&[(16, false), (16, false), (16, false), (16, false)]);
+        p.observe(&mut t, &[0.4, 0.1, 0.45, 0.05], 9);
+        assert_eq!(t[0].last_stamp, 9);
+        assert_eq!(t[2].last_stamp, 9);
+        assert_eq!(t[1].last_stamp, 0);
+        assert_eq!(t[3].last_stamp, 9, "active page stamped regardless");
+    }
+
+    #[test]
+    fn evicts_oldest_stamp_skipping_pinned() {
+        let p = policy();
+        let mut t = mk_table(&[(16, true), (16, false), (16, false), (8, false)]);
+        t[1].last_stamp = 2;
+        t[2].last_stamp = 10;
+        assert_eq!(p.evict_candidate(&t), Some(1));
+        // even if the pinned prefill page is the oldest:
+        t[1].last_stamp = 50;
+        assert_eq!(p.evict_candidate(&t), Some(2));
+    }
+
+    #[test]
+    fn all_pinned_is_unevictable() {
+        let p = policy();
+        let t = mk_table(&[(16, true), (16, true), (8, false)]);
+        // only unpinned page is the active one -> None (paper: prefill is
+        // retained even when it exceeds the budget)
+        assert_eq!(p.evict_candidate(&t), None);
+    }
+
+    #[test]
+    fn milestone_lifecycle() {
+        // A milestone page keeps its stamp fresh while consumed, then goes
+        // cold and becomes the eviction victim — the waterfall in miniature.
+        let p = policy();
+        let mut t = mk_table(&[(16, true), (16, false), (16, false), (16, false)]);
+        // steps 1..5: page 1 is the hot milestone
+        for now in 1..=5 {
+            p.observe(&mut t, &[0.02, 0.9, 0.02, 0.06], now);
+        }
+        // steps 6..9: reasoning moved on; page 2 is the new milestone
+        for now in 6..=9 {
+            p.observe(&mut t, &[0.02, 0.001, 0.9, 0.08], now);
+        }
+        assert_eq!(t[1].last_stamp, 5);
+        assert_eq!(t[2].last_stamp, 9);
+        assert_eq!(p.evict_candidate(&t), Some(1), "faded milestone evicted first");
+    }
+
+    #[test]
+    fn ties_break_towards_older_position() {
+        let p = policy();
+        let mut t = mk_table(&[(16, false), (16, false), (8, false)]);
+        t[0].last_stamp = 4;
+        t[1].last_stamp = 4;
+        assert_eq!(p.evict_candidate(&t), Some(0));
+    }
+}

@@ -1,0 +1,91 @@
+//! StreamingLLM / attention-sink: keep the first `sink_tokens` plus a recent
+//! window; evict everything in the middle.  O(L) time and memory, but it
+//! indiscriminately discards milestone tokens — the paper's Figure 6 shows
+//! the resulting accuracy collapse on reasoning tasks.
+
+use super::{PageMeta, SparsityPolicy};
+use crate::config::PolicyKind;
+
+pub struct SinkPolicy {
+    pub sink_tokens: usize,
+}
+
+impl SinkPolicy {
+    fn is_sink(&self, page: &PageMeta) -> bool {
+        page.start_pos < self.sink_tokens
+    }
+}
+
+impl SparsityPolicy for SinkPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Sink
+    }
+
+    fn observe(&self, _table: &mut [PageMeta], _probs: &[f32], _now: u64) {}
+
+    fn select(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+              _page_size: usize) -> Vec<usize> {
+        // Attend the whole resident set: eviction already enforces the
+        // sink+window structure.
+        (0..table.len()).collect()
+    }
+
+    fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize> {
+        if table.len() <= 1 {
+            return None;
+        }
+        // Oldest page that is not a sink page; never the final (active) page.
+        table[..table.len() - 1]
+            .iter()
+            .position(|p| !self.is_sink(p))
+    }
+
+    fn bounds_memory(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mk_table;
+    use super::*;
+
+    #[test]
+    fn evicts_oldest_middle_page() {
+        let p = SinkPolicy { sink_tokens: 16 };
+        // page 0: positions 0..16 (sink); pages 1..3 decode
+        let t = mk_table(&[(16, false), (16, false), (16, false), (4, false)]);
+        assert_eq!(p.evict_candidate(&t), Some(1));
+    }
+
+    #[test]
+    fn never_evicts_active_page() {
+        let p = SinkPolicy { sink_tokens: 16 };
+        let t = mk_table(&[(16, false), (4, false)]);
+        // only non-sink page is the last (active) one -> nothing evictable
+        assert_eq!(p.evict_candidate(&t), None);
+        let t2 = mk_table(&[(16, false)]);
+        assert_eq!(p.evict_candidate(&t2), None);
+    }
+
+    #[test]
+    fn sink_window_structure_emerges() {
+        // Simulate: pages stream in; evict whenever above 3 pages.
+        let p = SinkPolicy { sink_tokens: 16 };
+        let mut table = mk_table(&[(16, false)]);
+        for i in 1..10 {
+            let mut m = PageMeta::new(i as u32, i * 16, false, 0);
+            m.len = 16;
+            table.push(m);
+            while table.len() > 3 {
+                let victim = p.evict_candidate(&table).expect("evictable");
+                table.remove(victim);
+            }
+        }
+        // sink page survives; remaining pages are the most recent ones
+        assert_eq!(table[0].start_pos, 0);
+        assert_eq!(table.len(), 3);
+        assert_eq!(table[2].start_pos, 9 * 16);
+        assert_eq!(table[1].start_pos, 8 * 16);
+    }
+}

@@ -1,0 +1,163 @@
+//! The physical page pool: a slab of fixed-size KV pages with a free list
+//! and byte-accurate accounting (drives the Figure-7 memory axis and the
+//! coordinator's admission control).
+
+use anyhow::{bail, Result};
+
+use super::page::PageId;
+
+/// KV data for one page of one layer: `page_size` slots of post-RoPE keys
+/// and raw values, each `kv_dim = n_kv_heads * head_dim` floats.
+#[derive(Debug)]
+struct PageData {
+    k: Vec<f32>, // [page_size * kv_dim]
+    v: Vec<f32>,
+}
+
+#[derive(Debug)]
+pub struct KvPool {
+    page_size: usize,
+    kv_dim: usize,
+    pages: Vec<PageData>,
+    free: Vec<PageId>,
+    allocated: usize,
+    high_water: usize,
+}
+
+impl KvPool {
+    /// `capacity_pages` pages of `page_size` tokens, `kv_dim` floats per
+    /// token for K and V each.
+    pub fn new(capacity_pages: usize, page_size: usize, kv_dim: usize) -> Self {
+        let pages = (0..capacity_pages)
+            .map(|_| PageData {
+                k: vec![0.0; page_size * kv_dim],
+                v: vec![0.0; page_size * kv_dim],
+            })
+            .collect();
+        let free = (0..capacity_pages as u32).rev().collect();
+        KvPool { page_size, kv_dim, pages, free, allocated: 0, high_water: 0 }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+    pub fn capacity_pages(&self) -> usize {
+        self.pages.len()
+    }
+    pub fn allocated_pages(&self) -> usize {
+        self.allocated
+    }
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+    pub fn high_water_pages(&self) -> usize {
+        self.high_water
+    }
+    pub fn bytes_per_page(&self) -> usize {
+        2 * self.page_size * self.kv_dim * 4
+    }
+    pub fn allocated_bytes(&self) -> usize {
+        self.allocated * self.bytes_per_page()
+    }
+    pub fn high_water_bytes(&self) -> usize {
+        self.high_water * self.bytes_per_page()
+    }
+    pub fn reset_high_water(&mut self) {
+        self.high_water = self.allocated;
+    }
+
+    pub fn alloc(&mut self) -> Result<PageId> {
+        let Some(id) = self.free.pop() else {
+            bail!("kv pool exhausted ({} pages)", self.pages.len());
+        };
+        self.allocated += 1;
+        self.high_water = self.high_water.max(self.allocated);
+        Ok(id)
+    }
+
+    pub fn release(&mut self, id: PageId) {
+        debug_assert!((id as usize) < self.pages.len());
+        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        self.allocated -= 1;
+        self.free.push(id);
+    }
+
+    /// Write one token's K and V into `slot` of page `id`.
+    pub fn write_slot(&mut self, id: PageId, slot: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(slot < self.page_size);
+        debug_assert_eq!(k.len(), self.kv_dim);
+        let off = slot * self.kv_dim;
+        let page = &mut self.pages[id as usize];
+        page.k[off..off + self.kv_dim].copy_from_slice(k);
+        page.v[off..off + self.kv_dim].copy_from_slice(v);
+    }
+
+    /// Copy `len` slots of page `id` into the destination slices (gather).
+    pub fn read_page(&self, id: PageId, len: usize, dst_k: &mut [f32], dst_v: &mut [f32]) {
+        debug_assert!(len <= self.page_size);
+        let n = len * self.kv_dim;
+        let page = &self.pages[id as usize];
+        dst_k[..n].copy_from_slice(&page.k[..n]);
+        dst_v[..n].copy_from_slice(&page.v[..n]);
+    }
+
+    pub fn slot_k(&self, id: PageId, slot: usize) -> &[f32] {
+        let off = slot * self.kv_dim;
+        &self.pages[id as usize].k[off..off + self.kv_dim]
+    }
+    pub fn slot_v(&self, id: PageId, slot: usize) -> &[f32] {
+        let off = slot * self.kv_dim;
+        &self.pages[id as usize].v[off..off + self.kv_dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut pool = KvPool::new(3, 16, 8);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        let c = pool.alloc().unwrap();
+        assert!(pool.alloc().is_err(), "pool should be exhausted");
+        assert_eq!(pool.allocated_pages(), 3);
+        pool.release(b);
+        assert_eq!(pool.allocated_pages(), 2);
+        let d = pool.alloc().unwrap();
+        assert_eq!(d, b, "free list reuses released page");
+        pool.release(a);
+        pool.release(c);
+        pool.release(d);
+        assert_eq!(pool.allocated_pages(), 0);
+        assert_eq!(pool.high_water_pages(), 3);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut pool = KvPool::new(1, 4, 3);
+        let id = pool.alloc().unwrap();
+        pool.write_slot(id, 0, &[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]);
+        pool.write_slot(id, 2, &[7.0, 8.0, 9.0], &[10.0, 11.0, 12.0]);
+        let mut k = vec![0.0; 3 * 3];
+        let mut v = vec![0.0; 3 * 3];
+        pool.read_page(id, 3, &mut k, &mut v);
+        assert_eq!(&k[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&k[6..9], &[7.0, 8.0, 9.0]);
+        assert_eq!(&v[6..9], &[10.0, 11.0, 12.0]);
+        assert_eq!(pool.slot_k(id, 2), &[7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut pool = KvPool::new(4, 16, 64);
+        assert_eq!(pool.bytes_per_page(), 2 * 16 * 64 * 4);
+        let _a = pool.alloc().unwrap();
+        let _b = pool.alloc().unwrap();
+        assert_eq!(pool.allocated_bytes(), 2 * pool.bytes_per_page());
+    }
+}

@@ -1,0 +1,234 @@
+//! Per-sequence cache state: one page table (+ representative bounds) per
+//! layer, backed by the shared pool.
+
+use anyhow::Result;
+
+use super::page::{page_probs, PageMeta, RepBounds};
+use super::pool::KvPool;
+
+/// One layer's view of a sequence's cache.
+#[derive(Debug, Default)]
+pub struct LayerCache {
+    /// Resident pages in position order.  The final page is the active one.
+    pub table: Vec<PageMeta>,
+    /// Quest-style representative bounds, aligned with `table`.
+    pub reps: Vec<RepBounds>,
+}
+
+impl LayerCache {
+    pub fn resident_tokens(&self) -> usize {
+        self.table.iter().map(|p| p.len).sum()
+    }
+
+    /// Raw upper-bound scores for every resident page given this step's q.
+    pub fn rep_scores(&self, q: &[f32], n_heads: usize, n_kv: usize, head_dim: usize,
+                      out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.reps.iter().map(|r| r.score(q, n_heads, n_kv, head_dim)));
+    }
+
+    /// Softmaxed pseudo-probabilities (what RaaS thresholds against alpha).
+    pub fn rep_probs(&self, scores: &[f32], head_dim: usize, out: &mut Vec<f32>) {
+        page_probs(scores, head_dim, out);
+    }
+}
+
+/// All layers of one sequence.
+#[derive(Debug)]
+pub struct SeqCache {
+    pub layers: Vec<LayerCache>,
+    /// Tokens appended so far (= next absolute position).
+    pub n_tokens: usize,
+    pub prompt_len: usize,
+    page_size: usize,
+    kv_dim: usize,
+}
+
+impl SeqCache {
+    pub fn new(n_layers: usize, page_size: usize, kv_dim: usize) -> Self {
+        SeqCache {
+            layers: (0..n_layers).map(|_| LayerCache::default()).collect(),
+            n_tokens: 0,
+            prompt_len: 0,
+            page_size,
+            kv_dim,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Append one token's K/V to `layer` at absolute position `pos`.
+    /// A new page is opened when the active page is full, or at the
+    /// prefill/decode boundary (so pinning stays page-aligned).
+    pub fn append(&mut self, layer: usize, pool: &mut KvPool, pos: usize,
+                  k: &[f32], v: &[f32], pinned: bool, now: u64) -> Result<()> {
+        debug_assert_eq!(k.len(), self.kv_dim);
+        let lc = &mut self.layers[layer];
+        let need_new = match lc.table.last() {
+            None => true,
+            Some(p) => p.len >= self.page_size || p.pinned != pinned,
+        };
+        if need_new {
+            let id = pool.alloc()?;
+            lc.table.push(PageMeta::new(id, pos, pinned, now));
+            lc.reps.push(RepBounds::empty(self.kv_dim));
+        }
+        let page = lc.table.last_mut().unwrap();
+        debug_assert_eq!(page.end_pos(), pos, "non-contiguous append");
+        pool.write_slot(page.pool_id, page.len, k, v);
+        page.len += 1;
+        lc.reps.last_mut().unwrap().update(k);
+        Ok(())
+    }
+
+    /// Evict page `idx` of `layer`, releasing its pool page.
+    pub fn evict(&mut self, layer: usize, idx: usize, pool: &mut KvPool) {
+        let lc = &mut self.layers[layer];
+        let meta = lc.table.remove(idx);
+        lc.reps.remove(idx);
+        pool.release(meta.pool_id);
+    }
+
+    /// Gather the selected pages' slots into contiguous buffers padded to
+    /// `capacity` slots.  Returns the number of valid slots.
+    pub fn gather(&self, layer: usize, pool: &KvPool, sel: &[usize], capacity: usize,
+                  k_out: &mut Vec<f32>, v_out: &mut Vec<f32>, valid_out: &mut Vec<f32>)
+                  -> usize {
+        let kv = self.kv_dim;
+        k_out.clear();
+        v_out.clear();
+        valid_out.clear();
+        k_out.resize(capacity * kv, 0.0);
+        v_out.resize(capacity * kv, 0.0);
+        valid_out.resize(capacity, 0.0);
+        let lc = &self.layers[layer];
+        let mut used = 0usize;
+        for &i in sel {
+            let page = &lc.table[i];
+            debug_assert!(used + page.len <= capacity, "capacity too small for selection");
+            pool.read_page(
+                page.pool_id,
+                page.len,
+                &mut k_out[used * kv..(used + page.len) * kv],
+                &mut v_out[used * kv..(used + page.len) * kv],
+            );
+            for s in 0..page.len {
+                valid_out[used + s] = 1.0;
+            }
+            used += page.len;
+        }
+        used
+    }
+
+    pub fn resident_tokens(&self, layer: usize) -> usize {
+        self.layers[layer].resident_tokens()
+    }
+
+    pub fn resident_pages_total(&self) -> usize {
+        self.layers.iter().map(|l| l.table.len()).sum()
+    }
+
+    pub fn resident_bytes(&self, pool: &KvPool) -> usize {
+        self.resident_pages_total() * pool.bytes_per_page()
+    }
+
+    /// Release every page back to the pool (sequence finished).
+    pub fn release_all(&mut self, pool: &mut KvPool) {
+        for lc in &mut self.layers {
+            for page in lc.table.drain(..) {
+                pool.release(page.pool_id);
+            }
+            lc.reps.clear();
+        }
+        self.n_tokens = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> (SeqCache, KvPool) {
+        (SeqCache::new(2, 4, 3), KvPool::new(64, 4, 3))
+    }
+
+    #[test]
+    fn append_opens_pages_as_needed() {
+        let (mut sc, mut pool) = mk();
+        for pos in 0..6 {
+            sc.append(0, &mut pool, pos, &[pos as f32; 3], &[0.0; 3], true, 0).unwrap();
+        }
+        assert_eq!(sc.layers[0].table.len(), 2); // 4 + 2
+        assert_eq!(sc.layers[0].table[0].len, 4);
+        assert_eq!(sc.layers[0].table[1].len, 2);
+        assert_eq!(sc.resident_tokens(0), 6);
+    }
+
+    #[test]
+    fn prefill_decode_boundary_starts_new_page() {
+        let (mut sc, mut pool) = mk();
+        sc.append(0, &mut pool, 0, &[0.0; 3], &[0.0; 3], true, 0).unwrap();
+        sc.append(0, &mut pool, 1, &[0.0; 3], &[0.0; 3], false, 0).unwrap();
+        assert_eq!(sc.layers[0].table.len(), 2);
+        assert!(sc.layers[0].table[0].pinned);
+        assert!(!sc.layers[0].table[1].pinned);
+    }
+
+    #[test]
+    fn gather_concatenates_selected_pages() {
+        let (mut sc, mut pool) = mk();
+        for pos in 0..8 {
+            sc.append(0, &mut pool, pos, &[pos as f32; 3], &[10.0 + pos as f32; 3], false, 0)
+                .unwrap();
+        }
+        let (mut k, mut v, mut valid) = (Vec::new(), Vec::new(), Vec::new());
+        // select page 1 only (positions 4..8)
+        let used = sc.gather(0, &pool, &[1], 8, &mut k, &mut v, &mut valid);
+        assert_eq!(used, 4);
+        assert_eq!(k[0], 4.0);
+        assert_eq!(v[0], 14.0);
+        assert_eq!(valid[3], 1.0);
+        assert_eq!(valid[4], 0.0, "padding invalid");
+    }
+
+    #[test]
+    fn evict_releases_pool_page() {
+        let (mut sc, mut pool) = mk();
+        for pos in 0..8 {
+            sc.append(0, &mut pool, pos, &[0.0; 3], &[0.0; 3], false, 0).unwrap();
+        }
+        let before = pool.allocated_pages();
+        sc.evict(0, 0, &mut pool);
+        assert_eq!(pool.allocated_pages(), before - 1);
+        assert_eq!(sc.layers[0].table[0].start_pos, 4);
+    }
+
+    #[test]
+    fn release_all_returns_everything() {
+        let (mut sc, mut pool) = mk();
+        for layer in 0..2 {
+            for pos in 0..5 {
+                sc.append(layer, &mut pool, pos, &[0.0; 3], &[0.0; 3], false, 0).unwrap();
+            }
+        }
+        assert!(pool.allocated_pages() > 0);
+        sc.release_all(&mut pool);
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn rep_scores_align_with_pages() {
+        let (mut sc, mut pool) = mk();
+        // kv_dim 3 => treat as 1 kv head, head_dim 3, 1 q head
+        sc.append(0, &mut pool, 0, &[1.0, 0.0, 0.0], &[0.0; 3], false, 0).unwrap();
+        for pos in 1..5 {
+            sc.append(0, &mut pool, pos, &[0.0, 1.0, 0.0], &[0.0; 3], false, 0).unwrap();
+        }
+        let mut scores = Vec::new();
+        sc.layers[0].rep_scores(&[2.0, 0.0, 0.0], 1, 1, 3, &mut scores);
+        assert_eq!(scores.len(), 2);
+        assert!(scores[0] >= 2.0 - 1e-6, "page 0 contains the aligned key");
+    }
+}

@@ -1,0 +1,33 @@
+//! # RaaS — Reasoning-Aware Attention Sparsity (full-system reproduction)
+//!
+//! A three-layer serving stack reproducing *"Efficient Long-Decoding
+//! Inference with Reasoning-Aware Attention Sparsity"* (Hu et al., ACL 2025
+//! Findings):
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request router,
+//!   continuous batcher, paged KV-cache manager and the five sparsity
+//!   policies (Dense, StreamingLLM/Sink, H2O, Quest, **RaaS**), plus the
+//!   trace-driven evaluation substrate that regenerates every figure of the
+//!   paper's evaluation section.
+//! * **Layer 2** — a small GQA transformer authored in JAX (`python/compile`),
+//!   AOT-lowered to HLO-text executables with the weights baked in.
+//! * **Layer 1** — Pallas paged sparse-attention kernel, lowered inside the
+//!   same executables.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) — python never runs on the request path.
+//!
+//! See `DESIGN.md` for the architecture and the per-experiment index and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod figures;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,297 @@
+//! `raas` — CLI for the RaaS serving stack and the paper-figure harness.
+//!
+//! Commands:
+//!   inspect                    show artifact metadata
+//!   run                        decode one sampled problem end-to-end
+//!   sweep                      real-model accuracy sweep (policies × budgets)
+//!   serve                      multi-replica router + continuous batching demo
+//!   fig1 fig2 fig3 fig6 fig7 fig8 fig9
+//!                              regenerate each paper figure (see DESIGN.md)
+//!
+//! Common flags: --artifacts DIR --policy P --budget N --alpha A --seed S
+
+use anyhow::{bail, Result};
+
+use raas::config::{ArtifactMeta, EngineConfig, PolicyKind};
+use raas::coordinator::batcher::BatcherConfig;
+use raas::coordinator::request::{Request, Response};
+use raas::coordinator::router::{RoutePolicy, Router};
+use raas::coordinator::server::EngineServer;
+use raas::engine::{Engine, GenOptions};
+use raas::figures;
+use raas::util::cli::Args;
+use raas::util::rng::Rng;
+use raas::util::stats::Summary;
+use raas::workload::{parse_answer, Problem};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("inspect") => inspect(args),
+        Some("run") => run_one(args),
+        Some("sweep") => sweep(args),
+        Some("serve") => serve(args),
+        Some("fig1") => figures::fig1::run(args),
+        Some("fig2") => figures::fig2::run(args),
+        Some("fig3") => figures::fig3::run(args),
+        Some("fig6") => figures::fig6::run(args),
+        Some("fig7") => figures::fig7::run(args),
+        Some("fig8") => figures::fig8::run(args),
+        Some("fig9") => figures::fig9::run(args),
+        Some("ablate") => figures::ablate::run(args),
+        Some("perf") => perf(args),
+        Some(other) => bail!("unknown command '{other}' (run `raas` for help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }?;
+    args.finish()?;
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "raas — Reasoning-Aware Attention Sparsity serving stack\n\
+         \n\
+         usage: raas <command> [--flags]\n\
+         \n\
+         commands:\n\
+           inspect     show artifact metadata (model, capacities, corpus)\n\
+           run         decode one sampled problem (--policy, --budget, --steps)\n\
+           sweep       real-model accuracy sweep (--policies, --budgets, --problems)\n\
+           serve       multi-replica serving demo (--replicas, --requests, --rate)\n\
+           fig1..fig9  regenerate the paper's figures (writes results/*.csv)\n\
+         \n\
+         common flags: --artifacts DIR  --policy dense|sink|h2o|quest|raas\n\
+           --budget N  --alpha A  --seed S  --out results/"
+    );
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let meta = ArtifactMeta::load(&dir)?;
+    println!("artifacts: {dir:?}");
+    println!("model: {:?}", meta.model);
+    println!("trained weights: {}", meta.trained);
+    println!("page size: {}", meta.page_size);
+    println!("slot capacities: {:?}", meta.capacities);
+    println!("prefill sizes: {:?}", meta.prefill_sizes);
+    println!(
+        "corpus: steps {}..{}, lookback {}",
+        meta.corpus.min_steps, meta.corpus.max_steps, meta.corpus.max_lookback
+    );
+    println!("kv bytes/token (all layers): {}", meta.model.kv_bytes_per_token());
+    Ok(())
+}
+
+fn run_one(args: &Args) -> Result<()> {
+    let cfg = EngineConfig::from_args(args)?;
+    let steps = args.usize_opt("steps");
+    let mut engine = Engine::new(cfg)?;
+    let spec = engine.meta.corpus.clone();
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let p = Problem::sample(&mut rng, &spec, steps);
+    let prompt = p.encode_prompt(&spec);
+    println!("prompt:   {}", engine.tokenizer.decode(&prompt));
+    let out = engine.generate(
+        &prompt,
+        &GenOptions { max_new: args.usize_or("max-new", 160), ..Default::default() },
+    )?;
+    println!("decoded:  {}", engine.tokenizer.decode(&out.tokens));
+    println!("expected: {}", engine.tokenizer.decode(&p.encode_decode(&spec)));
+    let got = engine.tokenizer.parse_answer(&out.tokens);
+    println!(
+        "\npolicy={} budget={} → answer {:?} (expected {}), {} tokens, \
+         prefill {:.0} ms, decode {:.0} ms ({:.1} ms/token), peak KV {} bytes",
+        engine.policy_kind(),
+        engine.cfg.budget,
+        got,
+        p.answer(),
+        out.tokens.len(),
+        1e3 * out.prefill_secs,
+        1e3 * out.decode_secs,
+        1e3 * out.decode_secs / out.tokens.len().max(1) as f64,
+        out.peak_resident_bytes,
+    );
+    Ok(())
+}
+
+/// Real-model validation of the Figure-6 orderings: accuracy per policy ×
+/// budget on n sampled problems.
+fn sweep(args: &Args) -> Result<()> {
+    let n = args.usize_or("problems", 30);
+    let budgets = args.usize_list_or("budgets", &[64, 128, 256]);
+    let policies = args.str_list_or("policies", &["dense", "sink", "h2o", "quest", "raas"]);
+    let out_dir = figures::common::results_dir(args.str_opt("out"))?;
+
+    let mut rows = Vec::new();
+    let mut tbl = Vec::new();
+    for pname in &policies {
+        let kind = PolicyKind::parse(pname)?;
+        let mut line = vec![pname.clone()];
+        for &budget in &budgets {
+            let mut cfg = EngineConfig::from_args(args)?;
+            cfg.policy = kind;
+            cfg.budget = budget;
+            let mut engine = Engine::new_with_capacities(cfg, &[64, 128, 256, 512, 2048])?;
+            let spec = engine.meta.corpus.clone();
+            let mut rng = Rng::new(args.u64_or("seed", 42));
+            let mut correct = 0usize;
+            let mut decode_len = Summary::new();
+            for _ in 0..n {
+                let p = Problem::sample(&mut rng, &spec, None);
+                let prompt = p.encode_prompt(&spec);
+                let out = engine.generate(
+                    &prompt,
+                    &GenOptions { max_new: spec.max_decode_tokens(spec.max_steps), ..Default::default() },
+                )?;
+                decode_len.add(out.tokens.len() as f64);
+                if engine.tokenizer.parse_answer(&out.tokens) == Some(p.answer()) {
+                    correct += 1;
+                }
+            }
+            let acc = correct as f64 / n as f64;
+            rows.push(vec![
+                pname.clone(),
+                budget.to_string(),
+                format!("{acc:.3}"),
+                format!("{:.1}", decode_len.mean()),
+            ]);
+            line.push(format!("{acc:.2}"));
+            println!("{pname} @ {budget}: acc {acc:.3} (decode mean {:.0})", decode_len.mean());
+        }
+        tbl.push(line);
+    }
+    let path = out_dir.join("sweep_real_model.csv");
+    figures::common::write_csv(&path, &["policy", "budget", "accuracy", "mean_decode_len"], &rows)?;
+    println!("\nreal-model accuracy sweep ({n} problems/cell):");
+    let mut headers = vec!["policy"];
+    let bs: Vec<String> = budgets.iter().map(|b| b.to_string()).collect();
+    headers.extend(bs.iter().map(|s| s.as_str()));
+    figures::common::print_table(&headers, &tbl);
+    println!("wrote {path:?}");
+    Ok(())
+}
+
+/// Multi-replica serving demo: router + continuous batching under a Poisson
+/// or batch arrival workload; reports throughput and latency percentiles.
+fn serve(args: &Args) -> Result<()> {
+    let replicas = args.usize_or("replicas", 2);
+    let n_requests = args.usize_or("requests", 16);
+    let rate = args.f64_or("rate", 0.0); // 0 = offline batch
+    let route = RoutePolicy::parse(&args.str_or("route", "least"))?;
+    let max_batch = args.usize_or("max-batch", 4);
+    let cfg = EngineConfig::from_args(args)?;
+    let caps: Option<Vec<usize>> = Some(args.usize_list_or("capacities", &[64, 128, 256, 512]));
+
+    println!("spawning {replicas} replica(s) (policy={}, budget={})…", cfg.policy, cfg.budget);
+    let servers: Vec<EngineServer> = (0..replicas)
+        .map(|i| {
+            EngineServer::spawn(format!("r{i}"), cfg.clone(),
+                                BatcherConfig { max_batch }, caps.clone())
+        })
+        .collect::<Result<_>>()?;
+    let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
+    let spec = meta.corpus.clone();
+    let mut router = Router::new(servers, route);
+
+    let mut rng = Rng::new(args.u64_or("seed", 123));
+    let (tx, rx) = std::sync::mpsc::channel::<Response>();
+    let t0 = std::time::Instant::now();
+    let mut answers = Vec::new();
+    for id in 0..n_requests as u64 {
+        if rate > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(rate)));
+        }
+        let p = Problem::sample(&mut rng, &spec, None);
+        answers.push(p.answer());
+        let req = Request {
+            id,
+            prompt: p.encode_prompt(&spec),
+            max_new: spec.max_decode_tokens(spec.max_steps),
+            submitted: std::time::Instant::now(),
+            reply: tx.clone(),
+        };
+        router.route(req)?;
+    }
+    drop(tx);
+
+    let mut jct = Summary::new();
+    let mut ttft = Summary::new();
+    let mut tokens = 0usize;
+    let mut correct = 0usize;
+    let mut errors = 0usize;
+    for resp in rx.iter() {
+        if let Some(e) = &resp.error {
+            eprintln!("request {} failed: {e}", resp.id);
+            errors += 1;
+            continue;
+        }
+        jct.add(resp.jct_secs);
+        ttft.add(resp.ttft_secs);
+        tokens += resp.tokens.len();
+        if parse_answer(&spec, &resp.tokens) == Some(answers[resp.id as usize]) {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let done = jct.count();
+    println!("\nserved {done}/{n_requests} requests on {replicas} replica(s) in {wall:.1}s");
+    println!("throughput: {:.2} req/s, {:.1} tok/s", done as f64 / wall, tokens as f64 / wall);
+    println!("JCT  p50 {:.2}s  p99 {:.2}s  mean {:.2}s", jct.percentile(50.0),
+             jct.percentile(99.0), jct.mean());
+    println!("TTFT p50 {:.0}ms p99 {:.0}ms", 1e3 * ttft.percentile(50.0),
+             1e3 * ttft.percentile(99.0));
+    println!("accuracy: {:.2} ({correct}/{done}), errors {errors}",
+             correct as f64 / done.max(1) as f64);
+    for r in router.into_replicas() {
+        r.shutdown();
+    }
+    Ok(())
+}
+
+/// Decode hot-path phase breakdown: where each decode-step millisecond goes
+/// (PJRT executions vs rust-side policy bookkeeping vs page gather).
+fn perf(args: &Args) -> Result<()> {
+    let force = args.usize_or("decode", 512);
+    let policies = args.str_list_or("policies", &["dense", "quest", "raas"]);
+    for pname in &policies {
+        let mut cfg = EngineConfig::from_args(args)?;
+        cfg.policy = PolicyKind::parse(pname)?;
+        let mut engine = Engine::new_with_capacities(cfg, &[64, 128, 256, 512, 1024, 2048])?;
+        let spec = engine.meta.corpus.clone();
+        let mut rng = Rng::new(args.u64_or("seed", 0));
+        let mut prompt = Vec::new();
+        while prompt.len() < 128 {
+            prompt.extend(Problem::sample(&mut rng, &spec, None).encode_prompt(&spec));
+        }
+        prompt.truncate(128);
+        let out = engine.generate(
+            &prompt,
+            &GenOptions { max_new: force, force_len: Some(force), ..Default::default() },
+        )?;
+        let g = |n: &str| engine.metrics.timer(n).map(|t| t.mean() * 1e3).unwrap_or(0.0);
+        let (e, p, ga) = (g("step.exec_secs"), g("step.policy_secs"), g("step.gather_secs"));
+        let total = 1e3 * out.decode_secs / force as f64;
+        println!(
+            "{pname:>6}: {total:.3} ms/token | exec {e:.3} ms ({:.0}%) | policy {p:.4} ms ({:.1}%) | gather {ga:.4} ms ({:.1}%) | other {:.3} ms",
+            100.0 * e / total, 100.0 * p / total, 100.0 * ga / total,
+            total - e - p - ga
+        );
+    }
+    Ok(())
+}

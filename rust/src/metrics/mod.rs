@@ -1,0 +1,147 @@
+//! Serving metrics: counters, timers, gauges, JCT tracking, and the memory
+//! high-water series behind the Figure-7 memory axis.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// A registry of named metrics for one engine/coordinator instance.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timers: BTreeMap<String, Summary>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+    pub fn add(&mut self, name: &str, n: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+    /// Keep the maximum seen (high-water gauges, e.g. pool bytes).
+    pub fn gauge_max(&mut self, name: &str, v: f64) {
+        let e = self.gauges.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if v > *e {
+            *e = v;
+        }
+    }
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn record_secs(&mut self, name: &str, secs: f64) {
+        self.timers.entry(name.to_string()).or_default().add(secs);
+    }
+    pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.record_secs(name, t0.elapsed().as_secs_f64());
+        r
+    }
+    pub fn timer(&self, name: &str) -> Option<&Summary> {
+        self.timers.get(name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+        for (k, v) in &self.counters {
+            obj.insert(format!("counter.{k}"), Json::Num(*v as f64));
+        }
+        for (k, v) in &self.gauges {
+            obj.insert(format!("gauge.{k}"), Json::Num(*v));
+        }
+        for (k, s) in &self.timers {
+            obj.insert(
+                format!("timer.{k}"),
+                Json::obj(vec![
+                    ("count", Json::from(s.count())),
+                    ("mean_s", Json::from(s.mean())),
+                    ("p50_s", Json::from(s.percentile(50.0))),
+                    ("p99_s", Json::from(s.percentile(99.0))),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// Per-request latency breakdown (the paper's JCT metric).
+#[derive(Debug, Clone)]
+pub struct RequestTiming {
+    pub arrival: Instant,
+    pub prefill_done: Option<Instant>,
+    pub finished: Option<Instant>,
+}
+
+impl RequestTiming {
+    pub fn start() -> Self {
+        RequestTiming { arrival: Instant::now(), prefill_done: None, finished: None }
+    }
+    pub fn ttft(&self) -> Option<Duration> {
+        self.prefill_done.map(|t| t - self.arrival)
+    }
+    pub fn jct(&self) -> Option<Duration> {
+        self.finished.map(|t| t - self.arrival)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.inc("req");
+        m.add("req", 4);
+        assert_eq!(m.counter("req"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        m.gauge_max("hw", 10.0);
+        m.gauge_max("hw", 3.0);
+        assert_eq!(m.gauge_value("hw"), Some(10.0));
+    }
+
+    #[test]
+    fn timers_record() {
+        let mut m = Metrics::new();
+        let out = m.time("op", || 42);
+        assert_eq!(out, 42);
+        m.record_secs("op", 0.5);
+        let t = m.timer("op").unwrap();
+        assert_eq!(t.count(), 2);
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let mut m = Metrics::new();
+        m.inc("x");
+        m.gauge("g", 1.5);
+        m.record_secs("t", 0.1);
+        let j = m.to_json().to_string();
+        assert!(crate::util::json::Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn request_timing() {
+        let mut t = RequestTiming::start();
+        assert!(t.ttft().is_none());
+        t.prefill_done = Some(Instant::now());
+        t.finished = Some(Instant::now());
+        assert!(t.ttft().unwrap() <= t.jct().unwrap());
+    }
+}

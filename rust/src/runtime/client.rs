@@ -1,0 +1,42 @@
+//! PJRT CPU client + HLO-text loading (the pattern from
+//! /opt/xla-example/load_hlo — HLO *text* is the interchange format, see
+//! DESIGN.md and aot.py).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable::new(exe, path.display().to_string()))
+    }
+}
+
+impl std::fmt::Debug for RuntimeClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RuntimeClient({})", self.platform())
+    }
+}

@@ -1,0 +1,60 @@
+//! Typed execution wrapper over a compiled PJRT executable: literal
+//! marshalling helpers + tuple decomposition (aot.py lowers with
+//! `return_tuple=True`, so every module returns a tuple).
+
+use anyhow::{anyhow, Context, Result};
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Build an f32 literal from a slice + dims (zero intermediate copies).
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .map_err(|e| anyhow!("f32 literal {dims:?}: {e:?}"))
+}
+
+/// Build an i32 literal from a slice + dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .map_err(|e| anyhow!("i32 literal {dims:?}: {e:?}"))
+}
+
+impl Executable {
+    pub fn new(exe: xla::PjRtLoadedExecutable, name: String) -> Self {
+        Executable { exe, name }
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("{}: result not a tuple: {e:?}", self.name))
+    }
+
+    /// Execute and read all outputs as f32 vectors.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(inputs)?
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("{}: {e:?}", self.name)))
+            .collect()
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Executable({})", self.name)
+    }
+}

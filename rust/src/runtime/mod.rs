@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! decode hot path.  Python never runs here — the artifacts are
+//! self-contained (weights are HLO constants).
+
+pub mod client;
+pub mod executable;
+pub mod model;
+pub mod tokenizer;
+
+pub use client::RuntimeClient;
+pub use executable::Executable;
+pub use model::ModelRuntime;
+pub use tokenizer::Tokenizer;

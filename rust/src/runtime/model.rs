@@ -1,0 +1,196 @@
+//! The model runtime: the per-layer executable set and typed entry points
+//! the engine drives per decode step (DESIGN.md §2 dataflow).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::client::RuntimeClient;
+use super::executable::{lit_f32, lit_i32, Executable};
+use crate::config::{ArtifactMeta, ModelSpec};
+
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+    pub page_size: usize,
+    embed: Executable,
+    lm_head: Executable,
+    qkv: Vec<Executable>,
+    /// capacity -> per-layer attn_mlp executables
+    attn_mlp: BTreeMap<usize, Vec<Executable>>,
+    /// prefill size -> executable
+    prefill: BTreeMap<usize, Executable>,
+}
+
+/// Output of one layer-qkv call.
+pub struct Qkv {
+    pub q: Vec<f32>, // [n_heads * head_dim], RoPE applied
+    pub k: Vec<f32>, // [n_kv * head_dim], RoPE applied
+    pub v: Vec<f32>, // [n_kv * head_dim]
+}
+
+pub struct PrefillOut {
+    /// [n_layers][prompt_len][kv_dim]
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub logits: Vec<f32>,
+    pub padded: usize,
+}
+
+impl ModelRuntime {
+    /// Load every artifact listed in `meta` (capacities can be restricted to
+    /// save compile time, e.g. for tests).
+    pub fn load(client: &RuntimeClient, meta: &ArtifactMeta,
+                only_capacities: Option<&[usize]>) -> Result<ModelRuntime> {
+        let dir = &meta.dir;
+        let ld = |name: String| -> Result<Executable> { client.load(&dir.join(name)) };
+        let embed = ld("embed.hlo.txt".into())?;
+        let lm_head = ld("lm_head.hlo.txt".into())?;
+        let mut qkv = Vec::new();
+        for l in 0..meta.model.n_layers {
+            qkv.push(ld(format!("qkv_l{l}.hlo.txt"))?);
+        }
+        let mut attn_mlp = BTreeMap::new();
+        for &cap in &meta.capacities {
+            if let Some(only) = only_capacities {
+                if !only.contains(&cap) {
+                    continue;
+                }
+            }
+            let mut per_layer = Vec::new();
+            for l in 0..meta.model.n_layers {
+                per_layer.push(ld(format!("attn_mlp_l{l}_c{cap}.hlo.txt"))?);
+            }
+            attn_mlp.insert(cap, per_layer);
+        }
+        if attn_mlp.is_empty() {
+            bail!("no attn_mlp capacities loaded");
+        }
+        let mut prefill = BTreeMap::new();
+        for &p in &meta.prefill_sizes {
+            prefill.insert(p, ld(format!("prefill_p{p}.hlo.txt"))?);
+        }
+        Ok(ModelRuntime {
+            spec: meta.model.clone(),
+            page_size: meta.page_size,
+            embed,
+            lm_head,
+            qkv,
+            attn_mlp,
+            prefill,
+        })
+    }
+
+    /// Smallest compiled slot capacity >= `n_slots`.
+    pub fn capacity_for(&self, n_slots: usize) -> Result<usize> {
+        self.attn_mlp
+            .keys()
+            .find(|&&c| c >= n_slots)
+            .copied()
+            .ok_or_else(|| {
+                anyhow!(
+                    "no attn_mlp capacity >= {n_slots} (max compiled: {:?})",
+                    self.attn_mlp.keys().last()
+                )
+            })
+    }
+
+    pub fn capacities(&self) -> Vec<usize> {
+        self.attn_mlp.keys().copied().collect()
+    }
+
+    pub fn max_capacity(&self) -> usize {
+        *self.attn_mlp.keys().last().unwrap()
+    }
+
+    /// token -> hidden [d]
+    pub fn embed_tok(&self, token: u32) -> Result<Vec<f32>> {
+        let out = self.embed.run_f32(&[lit_i32(&[token as i32], &[1])?])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// hidden [d] + absolute position -> (q, k, v)
+    pub fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
+        let out = self.qkv[layer].run_f32(&[
+            lit_f32(h, &[self.spec.d_model])?,
+            lit_f32(&[pos as f32], &[1])?,
+        ])?;
+        let mut it = out.into_iter();
+        Ok(Qkv {
+            q: it.next().context("missing q")?,
+            k: it.next().context("missing k")?,
+            v: it.next().context("missing v")?,
+        })
+    }
+
+    /// Attention over gathered slots + MLP.  `k_sel`/`v_sel` are
+    /// [capacity * kv_dim], `valid` is [capacity]; returns hidden' [d].
+    pub fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
+                          k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let exes = self
+            .attn_mlp
+            .get(&capacity)
+            .ok_or_else(|| anyhow!("capacity {capacity} not loaded"))?;
+        let out = exes[layer].run_f32(&[
+            lit_f32(h, &[s.d_model])?,
+            lit_f32(q, &[s.n_heads, s.head_dim])?,
+            lit_f32(k_sel, &[capacity, s.n_kv_heads, s.head_dim])?,
+            lit_f32(v_sel, &[capacity, s.n_kv_heads, s.head_dim])?,
+            lit_f32(valid, &[capacity])?,
+        ])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// hidden [d] -> logits [vocab]
+    pub fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
+        let out = self.lm_head.run_f32(&[lit_f32(h, &[self.spec.d_model])?])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Dense prefill of `tokens`; returns per-layer post-RoPE KV for the
+    /// first `tokens.len()` positions plus next-token logits.
+    pub fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+        let n = tokens.len();
+        let (&padded, exe) = self
+            .prefill
+            .iter()
+            .find(|(&p, _)| p >= n)
+            .ok_or_else(|| anyhow!("prompt of {n} tokens exceeds max prefill size"))?;
+        let mut buf = vec![0i32; padded];
+        for (i, &t) in tokens.iter().enumerate() {
+            buf[i] = t as i32;
+        }
+        let out = exe.run_f32(&[
+            lit_i32(&buf, &[padded])?,
+            lit_i32(&[n as i32], &[])?,
+        ])?;
+        let mut it = out.into_iter();
+        Ok(PrefillOut {
+            k: it.next().context("missing K")?,
+            v: it.next().context("missing V")?,
+            logits: it.next().context("missing logits")?,
+            padded,
+        })
+    }
+
+    /// Slice one (layer, position) KV vector out of a PrefillOut.
+    pub fn prefill_kv_at<'a>(&self, out: &'a PrefillOut, layer: usize, pos: usize)
+                             -> (&'a [f32], &'a [f32]) {
+        let kv_dim = self.spec.n_kv_heads * self.spec.head_dim;
+        let stride_layer = out.padded * kv_dim;
+        let off = layer * stride_layer + pos * kv_dim;
+        (&out.k[off..off + kv_dim], &out.v[off..off + kv_dim])
+    }
+}
+
+impl std::fmt::Debug for ModelRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ModelRuntime(layers={}, capacities={:?}, prefill={:?})",
+            self.spec.n_layers,
+            self.capacities(),
+            self.prefill.keys().collect::<Vec<_>>()
+        )
+    }
+}

@@ -1,0 +1,46 @@
+//! Tokenizer for the synthetic reasoning vocabulary (vocabulary and framing
+//! are defined by python/compile/corpus.py and shipped in meta.json).
+
+use crate::config::CorpusSpec;
+use crate::workload;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub spec: CorpusSpec,
+}
+
+impl Tokenizer {
+    pub fn new(spec: CorpusSpec) -> Self {
+        Tokenizer { spec }
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        workload::detok(&self.spec, tokens)
+    }
+
+    pub fn is_eos(&self, t: u32) -> bool {
+        t == self.spec.eos
+    }
+
+    pub fn parse_answer(&self, decoded: &[u32]) -> Option<u8> {
+        workload::parse_answer(&self.spec, decoded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{test_spec, Problem};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn decode_and_answer() {
+        let tok = Tokenizer::new(test_spec());
+        let mut rng = Rng::new(0);
+        let p = Problem::sample(&mut rng, &tok.spec, Some(3));
+        let dec = p.encode_decode(&tok.spec);
+        assert!(tok.is_eos(*dec.last().unwrap()));
+        assert_eq!(tok.parse_answer(&dec), Some(p.answer()));
+        assert!(tok.decode(&dec).contains('A'));
+    }
+}

@@ -1,0 +1,17 @@
+//! Trace-driven evaluation substrate.
+//!
+//! The paper's accuracy grids (Figures 6/8/9) run four 1.5B–7B reasoning
+//! models over three math benchmarks — none of which exist in this offline
+//! environment.  This module substitutes a **reasoning-trace simulator**
+//! (DESIGN.md §3): it synthesises the decode-stage attention structure the
+//! paper documents (waterfall milestones, phoenix prompt tokens, sink and
+//! background mass) and drives the *real* policy implementations from
+//! `kvcache::policy` against it, so the grids exercise exactly the code
+//! that runs on the serving path.  The in-repo-trained tiny model validates
+//! the same orderings end-to-end (`examples/budget_sweep.rs`).
+
+pub mod profiles;
+pub mod reasoning;
+
+pub use profiles::{DatasetProfile, ModelProfile, DATASETS, MODELS};
+pub use reasoning::{run_trial, AggregateOutcome, SimParams, TrialOutcome};

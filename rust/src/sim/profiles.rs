@@ -1,0 +1,137 @@
+//! Calibration profiles: four model personae × three dataset personae,
+//! qualitatively matched to the paper's Figure 1(b) length CDFs and the
+//! Figure 6 dense ceilings.
+
+/// How a (simulated) reasoning model attends and derails.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// Dense-accuracy ceiling per dataset, indexed by `DatasetProfile.idx`
+    /// (gsm8k, math500, aime) — paper Figure 6 top row ≈ these.
+    pub base_acc: [f64; 3],
+    /// Log-normal (mu, sigma) of tokens per reasoning sentence/step.
+    pub step_tokens: (f64, f64),
+    /// Attention mass on the milestone page while it is being consumed.
+    pub milestone_hot: f64,
+    /// Attention mass on the phoenix (prompt operand) page while consumed.
+    pub phoenix_hot: f64,
+    /// Per-step decay of a faded milestone's residual mass (the waterfall).
+    pub decay: f64,
+    /// Total background mass spread over all other pages.
+    pub noise: f64,
+    /// Extra decode steps on a derailment, log-normal (mu, sigma).
+    pub derail_extra: (f64, f64),
+    /// Probability a derailment loops until the decode cap (Figure 8).
+    pub stuck_p: f64,
+    /// Multiplicative log-normal noise on the *estimated* page scores the
+    /// policies see (representative keys are an approximation; Quest/RaaS
+    /// mis-rank pages occasionally, as on real attention).
+    pub est_noise: f64,
+}
+
+/// Task shape per dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    pub idx: usize,
+    /// Reasoning chain length (min, max) in steps.
+    pub steps: (usize, usize),
+    /// Max lookback distance (in steps) of milestone consumption.
+    pub lookback: usize,
+    /// Prompt length = base + per_step * k tokens.
+    pub base_prompt: usize,
+    pub prompt_per_step: usize,
+}
+
+pub const MODELS: [ModelProfile; 4] = [
+    ModelProfile {
+        name: "marco-o1",
+        base_acc: [0.90, 0.62, 0.16],
+        step_tokens: (2.95, 0.32), // verbose ~20-token sentences
+        milestone_hot: 0.30,
+        phoenix_hot: 0.12,
+        decay: 0.60,
+        noise: 0.005,
+        derail_extra: (2.2, 0.6),
+        stuck_p: 0.35,
+        est_noise: 0.35,
+    },
+    ModelProfile {
+        name: "qwen2.5-math-7b",
+        base_acc: [0.93, 0.70, 0.20],
+        step_tokens: (2.80, 0.30),
+        milestone_hot: 0.34,
+        phoenix_hot: 0.14,
+        decay: 0.55,
+        noise: 0.004,
+        derail_extra: (2.0, 0.6),
+        stuck_p: 0.30,
+        est_noise: 0.30,
+    },
+    ModelProfile {
+        name: "mistral-math-7b",
+        base_acc: [0.84, 0.52, 0.10],
+        step_tokens: (2.75, 0.35),
+        milestone_hot: 0.26,
+        phoenix_hot: 0.10,
+        decay: 0.62,
+        noise: 0.008, // noisier attention
+        derail_extra: (2.3, 0.7),
+        stuck_p: 0.40,
+        est_noise: 0.45,
+    },
+    ModelProfile {
+        name: "deepscaler-1.5b",
+        base_acc: [0.87, 0.64, 0.24],
+        step_tokens: (3.05, 0.35), // RL-trained long chains
+        milestone_hot: 0.28,
+        phoenix_hot: 0.11,
+        decay: 0.58,
+        noise: 0.006,
+        derail_extra: (2.5, 0.7),
+        stuck_p: 0.45,
+        est_noise: 0.40,
+    },
+];
+
+pub const DATASETS: [DatasetProfile; 3] = [
+    DatasetProfile { name: "gsm8k", idx: 0, steps: (4, 10), lookback: 4, base_prompt: 48, prompt_per_step: 2 },
+    DatasetProfile { name: "math500", idx: 1, steps: (8, 22), lookback: 6, base_prompt: 64, prompt_per_step: 2 },
+    DatasetProfile { name: "aime", idx: 2, steps: (16, 40), lookback: 7, base_prompt: 88, prompt_per_step: 2 },
+];
+
+pub fn model_by_name(name: &str) -> Option<ModelProfile> {
+    MODELS.iter().find(|m| m.name == name).copied()
+}
+pub fn dataset_by_name(name: &str) -> Option<DatasetProfile> {
+    DATASETS.iter().find(|d| d.name == name).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookups() {
+        assert_eq!(model_by_name("marco-o1").unwrap().name, "marco-o1");
+        assert_eq!(dataset_by_name("aime").unwrap().idx, 2);
+        assert!(model_by_name("gpt-5").is_none());
+    }
+
+    #[test]
+    fn ceilings_ordered_by_difficulty() {
+        for m in MODELS {
+            assert!(m.base_acc[0] > m.base_acc[1]);
+            assert!(m.base_acc[1] > m.base_acc[2]);
+        }
+    }
+
+    #[test]
+    fn attention_mass_budgets_sane() {
+        for m in MODELS {
+            assert!(m.milestone_hot + m.phoenix_hot + m.noise < 0.6);
+            assert!(m.decay > 0.0 && m.decay < 1.0);
+            assert!(m.est_noise >= 0.0);
+        }
+    }
+}

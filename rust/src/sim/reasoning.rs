@@ -1,0 +1,453 @@
+//! Reasoning-chain simulation: drives the real sparsity policies over
+//! synthesised waterfall/phoenix attention traces and scores the outcome.
+//!
+//! One trial = one problem: a chain of `k` reasoning steps; step `i`
+//! consumes the milestone emitted by step `r_i` (lookback ≤ L steps) and a
+//! phoenix operand from the prompt.  Per decode token the simulator
+//! synthesises page-level attention probabilities (the structure of paper
+//! Figure 3), feeds them to the policy exactly as the engine feeds
+//! estimated rep-scores, enforces the cache budget by eviction, and checks
+//! *visibility* of required pages at consumption time:
+//!
+//! * bounded policies (RaaS/Sink/H2O): required page still resident?
+//! * Quest: required page inside the top-L selection?
+//! * Dense: always visible.
+//!
+//! A missed milestone derails the chain (extra re-derivation steps, chance
+//! of looping to the decode cap — Figure 8) and usually costs the answer;
+//! a missed phoenix operand usually costs the answer.
+
+use crate::config::PolicyKind;
+use crate::kvcache::page::{PageMeta, NO_POOL};
+use crate::kvcache::policy::{resident_tokens, SparsityPolicy};
+use crate::sim::profiles::{DatasetProfile, ModelProfile};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    pub budget_tokens: usize,
+    pub page_size: usize,
+    pub max_decode: usize,
+    /// Pin prefill pages (RaaS idea #2); the ablation switch.
+    pub pin_prefill: bool,
+    /// Probability a milestone miss still recovers the right answer.
+    pub milestone_survive_p: f64,
+    /// Probability a phoenix miss still recovers the right answer.
+    pub phoenix_survive_p: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            budget_tokens: 256,
+            page_size: 16,
+            max_decode: 4096,
+            pin_prefill: true,
+            milestone_survive_p: 0.15,
+            phoenix_survive_p: 0.40,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TrialOutcome {
+    pub correct: bool,
+    pub decode_len: usize,
+    pub hit_cap: bool,
+    pub milestone_misses: usize,
+    pub phoenix_misses: usize,
+    /// High-water resident KV in tokens (per-layer equivalent).
+    pub peak_resident_tokens: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct AggregateOutcome {
+    pub trials: usize,
+    pub accuracy: f64,
+    pub mean_decode_len: f64,
+    pub cap_rate: f64,
+    pub milestone_miss_rate: f64,
+    pub phoenix_miss_rate: f64,
+    pub mean_peak_resident: f64,
+}
+
+/// Simulator-side page table: mirrors what the engine's SeqCache tracks,
+/// plus ground-truth annotations for score synthesis.
+struct SimCache {
+    table: Vec<PageMeta>,
+    /// For each page: milestones (chain step, emit decode-step) it contains.
+    milestones: Vec<Vec<(usize, u64)>>,
+    /// For each page: chain steps whose phoenix operand it contains.
+    phoenixes: Vec<Vec<usize>>,
+    page_size: usize,
+    evicted_milestones: Vec<bool>, // indexed by chain step
+    evicted_phoenixes: Vec<bool>,
+}
+
+impl SimCache {
+    fn new(page_size: usize, k: usize) -> Self {
+        SimCache {
+            table: Vec::new(),
+            milestones: Vec::new(),
+            phoenixes: Vec::new(),
+            page_size,
+            evicted_milestones: vec![false; k + 1],
+            evicted_phoenixes: vec![false; k + 1],
+        }
+    }
+
+    fn append_token(&mut self, pos: usize, pinned: bool, now: u64) {
+        let need_new = match self.table.last() {
+            None => true,
+            Some(p) => p.len >= self.page_size || p.pinned != pinned,
+        };
+        if need_new {
+            self.table.push(PageMeta::new(NO_POOL, pos, pinned, now));
+            self.milestones.push(Vec::new());
+            self.phoenixes.push(Vec::new());
+        }
+        self.table.last_mut().unwrap().len += 1;
+    }
+
+    fn active(&self) -> usize {
+        self.table.len() - 1
+    }
+
+    fn tag_milestone(&mut self, step: usize, emit_step: u64) {
+        let idx = self.active();
+        self.milestones[idx].push((step, emit_step));
+    }
+
+    /// Resident page index containing milestone of `step`, if any.
+    fn milestone_page(&self, step: usize) -> Option<usize> {
+        self.milestones.iter().position(|ms| ms.iter().any(|&(s, _)| s == step))
+    }
+    fn phoenix_page(&self, step: usize) -> Option<usize> {
+        self.phoenixes.iter().position(|ps| ps.contains(&step))
+    }
+
+    fn evict(&mut self, idx: usize) {
+        for &(s, _) in &self.milestones[idx] {
+            self.evicted_milestones[s] = true;
+        }
+        for &s in &self.phoenixes[idx] {
+            self.evicted_phoenixes[s] = true;
+        }
+        self.table.remove(idx);
+        self.milestones.remove(idx);
+        self.phoenixes.remove(idx);
+    }
+
+    /// Synthesize this decode-token's page attention probabilities.
+    ///
+    /// `consuming`: (milestone page, phoenix page) of the current chain step.
+    #[allow(clippy::too_many_arguments)]
+    fn synth_probs(&self, mp: &ModelProfile, now: u64, consuming_ms: Option<usize>,
+                   consuming_ph: Option<usize>, probs: &mut Vec<f32>) {
+        let n = self.table.len();
+        probs.clear();
+        probs.resize(n, 0.0);
+        if n == 0 {
+            return;
+        }
+        let bg = mp.noise as f32 / n as f32;
+        for i in 0..n {
+            probs[i] = bg;
+            // waterfall residual of faded milestones
+            for &(_, emit) in &self.milestones[i] {
+                let age = now.saturating_sub(emit) as f64;
+                probs[i] += (mp.milestone_hot * mp.decay.powf(age / 8.0)) as f32 * 0.5;
+            }
+        }
+        probs[0] += 0.05; // sink
+        let active = n - 1;
+        probs[active] += 0.35;
+        if let Some(i) = consuming_ms {
+            probs[i] += mp.milestone_hot as f32;
+        }
+        if let Some(i) = consuming_ph {
+            probs[i] += mp.phoenix_hot as f32;
+        }
+        let sum: f32 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= sum;
+        }
+    }
+}
+
+/// Run one simulated problem under `policy`.
+pub fn run_trial(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProfile,
+                 dp: &DatasetProfile, rng: &mut Rng) -> TrialOutcome {
+    let k = rng.range(dp.steps.0, dp.steps.1 + 1);
+    let prompt_len = dp.base_prompt + dp.prompt_per_step * k;
+    let mut cache = SimCache::new(params.page_size, k);
+    let mut out = TrialOutcome::default();
+
+    // ---- prefill: pinned pages; phoenix operands spread over the prompt ---
+    for pos in 0..prompt_len {
+        cache.append_token(pos, params.pin_prefill, 0);
+        // operand for step i sits at a deterministic prompt offset
+    }
+    for step in 1..=k {
+        // retroactively tag the prompt page holding step's operand
+        let pos = (3 + 4 * (step - 1) + 3).min(prompt_len - 1);
+        let page = (pos / params.page_size).min(cache.phoenixes.len() - 1);
+        cache.phoenixes[page].push(step);
+    }
+
+    // chain structure
+    let lookbacks: Vec<usize> = (1..=k)
+        .map(|i| {
+            let lo = i.saturating_sub(dp.lookback).max(0);
+            rng.range(lo, i) // consume v_r with r in [lo, i)
+        })
+        .collect();
+
+    // ---- decode ------------------------------------------------------------
+    let mut pos = prompt_len;
+    let mut now: u64 = 0;
+    let mut probs: Vec<f32> = Vec::new();
+    let mut pending: Vec<usize> = (1..=k).collect(); // chain steps left
+    let mut emitted_ok = vec![false; k + 1];
+    emitted_ok[0] = true; // v_0 comes from the prompt
+
+    'outer: while let Some(step) = pending.first().copied() {
+        pending.remove(0);
+        let r = lookbacks[step - 1];
+        let step_len = rng.lognormal(mp.step_tokens.0, mp.step_tokens.1).round().max(3.0) as usize;
+
+        // visibility check happens mid-step, when the consumed operands are read
+        let consume_at = step_len / 2;
+        let mut ms_missed = false;
+        let mut ph_missed = false;
+
+        for t in 0..step_len {
+            if out.decode_len >= params.max_decode {
+                out.hit_cap = true;
+                break 'outer;
+            }
+            now += 1;
+            out.decode_len += 1;
+
+            let consuming = t >= consume_at;
+            let ms_page = if r > 0 { cache.milestone_page(r) } else { None };
+            let ph_page = cache.phoenix_page(step);
+            cache.synth_probs(mp, now, if consuming { ms_page } else { None },
+                              if consuming { ph_page } else { None }, &mut probs);
+
+            // The policy sees *estimated* scores: true attention perturbed by
+            // multiplicative noise (representative keys are an approximation).
+            let est: Vec<f32> = probs
+                .iter()
+                .map(|&p| p * ((mp.est_noise * rng.normal()).exp() as f32))
+                .collect();
+            let sel = policy.select(&cache.table, &est, params.budget_tokens, params.page_size);
+
+            if t == consume_at {
+                // milestone of step r needed (unless it comes from the prompt)
+                if r > 0 {
+                    let visible = match ms_page {
+                        Some(i) => policy.kind() != PolicyKind::Quest || sel.contains(&i),
+                        None => false,
+                    };
+                    if !visible && emitted_ok[r] {
+                        ms_missed = true;
+                    }
+                }
+                let ph_visible = match ph_page {
+                    Some(i) => policy.kind() != PolicyKind::Quest || sel.contains(&i),
+                    None => false,
+                };
+                if !ph_visible {
+                    ph_missed = true;
+                }
+            }
+
+            // observation uses the (renormalised) estimated probabilities —
+            // RaaS thresholds what the rep-keys report, not ground truth
+            let est_sum: f32 = est.iter().sum();
+            let est_probs: Vec<f32> = est.iter().map(|&e| e / est_sum.max(1e-30)).collect();
+            policy.observe(&mut cache.table, &est_probs, now);
+            cache.append_token(pos, false, now);
+            pos += 1;
+
+            // budget enforcement
+            while resident_tokens(&cache.table) > params.budget_tokens {
+                match policy.evict_candidate(&cache.table) {
+                    Some(idx) => cache.evict(idx),
+                    None => break,
+                }
+            }
+            out.peak_resident_tokens = out.peak_resident_tokens.max(resident_tokens(&cache.table));
+        }
+
+        // milestone for this step emitted at the step's final token
+        cache.tag_milestone(step, now);
+        emitted_ok[step] = true;
+
+        if ms_missed {
+            out.milestone_misses += 1;
+            // derailment: re-derivation steps (Figure 8)
+            if rng.chance(mp.stuck_p) {
+                // model loses track and loops until the cap
+                while out.decode_len < params.max_decode {
+                    now += 1;
+                    out.decode_len += 1;
+                    // still exercises the cache so memory accounting holds
+                    cache.synth_probs(mp, now, None, None, &mut probs);
+                    policy.observe(&mut cache.table, &probs, now);
+                    cache.append_token(pos, false, now);
+                    pos += 1;
+                    while resident_tokens(&cache.table) > params.budget_tokens {
+                        match policy.evict_candidate(&cache.table) {
+                            Some(idx) => cache.evict(idx),
+                            None => break,
+                        }
+                    }
+                }
+                out.hit_cap = true;
+                break 'outer;
+            } else {
+                let extra = rng.lognormal(mp.derail_extra.0, mp.derail_extra.1).round() as usize;
+                for _ in 0..extra.min(params.max_decode.saturating_sub(out.decode_len)) {
+                    now += 1;
+                    out.decode_len += 1;
+                    cache.synth_probs(mp, now, None, None, &mut probs);
+                    policy.observe(&mut cache.table, &probs, now);
+                    cache.append_token(pos, false, now);
+                    pos += 1;
+                    while resident_tokens(&cache.table) > params.budget_tokens {
+                        match policy.evict_candidate(&cache.table) {
+                            Some(idx) => cache.evict(idx),
+                            None => break,
+                        }
+                    }
+                }
+            }
+        }
+        if ph_missed {
+            out.phoenix_misses += 1;
+        }
+        out.peak_resident_tokens = out.peak_resident_tokens.max(resident_tokens(&cache.table));
+    }
+
+    // compose the answer probability
+    let mut p_correct = mp.base_acc[dp.idx];
+    for _ in 0..out.milestone_misses {
+        p_correct *= params.milestone_survive_p;
+    }
+    for _ in 0..out.phoenix_misses {
+        p_correct *= params.phoenix_survive_p;
+    }
+    if out.hit_cap {
+        p_correct = 0.0; // never produced an answer (paper Figure 8)
+    }
+    out.correct = rng.chance(p_correct);
+    out
+}
+
+/// Run `n` trials and aggregate.
+pub fn run_trials(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProfile,
+                  dp: &DatasetProfile, n: usize, rng: &mut Rng) -> AggregateOutcome {
+    let mut agg = AggregateOutcome { trials: n, ..Default::default() };
+    let mut ms_den = 0usize;
+    for _ in 0..n {
+        let t = run_trial(policy, params, mp, dp, rng);
+        agg.accuracy += t.correct as usize as f64;
+        agg.mean_decode_len += t.decode_len as f64;
+        agg.cap_rate += t.hit_cap as usize as f64;
+        agg.milestone_miss_rate += t.milestone_misses as f64;
+        agg.phoenix_miss_rate += t.phoenix_misses as f64;
+        agg.mean_peak_resident += t.peak_resident_tokens as f64;
+        ms_den += 1;
+    }
+    let n = ms_den as f64;
+    agg.accuracy /= n;
+    agg.mean_decode_len /= n;
+    agg.cap_rate /= n;
+    agg.milestone_miss_rate /= n;
+    agg.phoenix_miss_rate /= n;
+    agg.mean_peak_resident /= n;
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineConfig, PolicyKind};
+    use crate::kvcache::policy::make_policy;
+    use crate::sim::profiles::{DATASETS, MODELS};
+
+    fn agg_on(kind: PolicyKind, budget: usize, n: usize, ds: usize) -> AggregateOutcome {
+        let cfg = EngineConfig { policy: kind, budget, ..Default::default() };
+        let policy = make_policy(&cfg);
+        let params = SimParams { budget_tokens: budget, max_decode: 2048, ..Default::default() };
+        let mut rng = Rng::new(99);
+        run_trials(policy.as_ref(), &params, &MODELS[1], &DATASETS[ds], n, &mut rng)
+    }
+
+    fn agg(kind: PolicyKind, budget: usize, n: usize) -> AggregateOutcome {
+        agg_on(kind, budget, n, 1)
+    }
+
+    #[test]
+    fn dense_matches_ceiling() {
+        let a = agg(PolicyKind::Dense, 1024, 150);
+        assert!(a.milestone_miss_rate == 0.0 && a.phoenix_miss_rate == 0.0);
+        assert!((a.accuracy - MODELS[1].base_acc[1]).abs() < 0.12,
+                "dense accuracy {} vs ceiling {}", a.accuracy, MODELS[1].base_acc[1]);
+    }
+
+    #[test]
+    fn raas_tracks_dense_at_moderate_budget() {
+        let dense = agg(PolicyKind::Dense, 512, 120);
+        let raas = agg(PolicyKind::Raas, 512, 120);
+        assert!(raas.accuracy > dense.accuracy - 0.15,
+                "raas {} vs dense {}", raas.accuracy, dense.accuracy);
+    }
+
+    #[test]
+    fn sink_collapses_at_small_budget() {
+        let sink = agg(PolicyKind::Sink, 128, 120);
+        let raas = agg(PolicyKind::Raas, 128, 120);
+        assert!(sink.accuracy < raas.accuracy + 0.05,
+                "sink {} should not beat raas {}", sink.accuracy, raas.accuracy);
+        assert!(sink.milestone_misses_nonzero(), "sink must lose milestones");
+    }
+
+    impl AggregateOutcome {
+        fn milestone_misses_nonzero(&self) -> bool {
+            self.milestone_miss_rate > 0.0
+        }
+    }
+
+    #[test]
+    fn raas_memory_bounded_quest_not() {
+        // aime: longest chains — the O(N) vs O(L) gap is widest there
+        let raas = agg_on(PolicyKind::Raas, 256, 60, 2);
+        let quest = agg_on(PolicyKind::Quest, 256, 60, 2);
+        // RaaS peak resident stays near the budget (prefill pinning may push
+        // it slightly over); Quest grows with the decode length.
+        assert!(raas.mean_peak_resident < 256.0 + 160.0,
+                "raas peak {}", raas.mean_peak_resident);
+        assert!(quest.mean_peak_resident > 1.5 * raas.mean_peak_resident,
+                "quest {} vs raas {}", quest.mean_peak_resident, raas.mean_peak_resident);
+    }
+
+    #[test]
+    fn h2o_small_budget_hits_cap_often() {
+        let h2o = agg(PolicyKind::H2o, 128, 100);
+        let dense = agg(PolicyKind::Dense, 128, 100);
+        assert!(h2o.cap_rate > dense.cap_rate,
+                "h2o cap {} vs dense {}", h2o.cap_rate, dense.cap_rate);
+        assert!(h2o.mean_decode_len > dense.mean_decode_len);
+    }
+
+    #[test]
+    fn budget_monotone_for_raas() {
+        let small = agg(PolicyKind::Raas, 64, 100);
+        let large = agg(PolicyKind::Raas, 1024, 100);
+        assert!(large.accuracy >= small.accuracy - 0.05,
+                "raas acc should improve with budget: {} -> {}", small.accuracy, large.accuracy);
+    }
+}

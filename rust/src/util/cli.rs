@@ -1,0 +1,157 @@
+//! Tiny argument parser (clap is unavailable offline).
+//!
+//! Grammar: `raas <subcommand> [--flag value | --switch] ...`
+//! Values are typed on access; unknown flags are rejected by `finish()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    accessed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                return Err(CliError(format!("unexpected positional argument '{tok}'")));
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                args.flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                args.switches.push(name.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn note(&self, key: &str) {
+        self.accessed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<String> {
+        self.note(key);
+        self.flags.get(key).cloned()
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or_else(|| default.to_string())
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.note(key);
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn usize_opt(&self, key: &str) -> Option<usize> {
+        self.note(key);
+        self.flags.get(key).and_then(|v| v.parse().ok())
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.note(key);
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.note(key);
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn switch(&self, key: &str) -> bool {
+        self.note(key);
+        self.switches.iter().any(|s| s == key)
+    }
+    /// Comma-separated list flag: `--budgets 64,128,256`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        self.note(key);
+        match self.flags.get(key) {
+            Some(v) => v.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        self.note(key);
+        match self.flags.get(key) {
+            Some(v) => v.split(',').map(|t| t.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Reject flags that were provided but never accessed (typo guard).
+    pub fn finish(&self) -> Result<(), CliError> {
+        let seen = self.accessed.borrow();
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !seen.iter().any(|s| s == k) {
+                return Err(CliError(format!("unknown flag '--{k}'")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["fig7", "--budget", "256", "--policy=raas", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig7"));
+        assert_eq!(a.usize_or("budget", 0), 256);
+        assert_eq!(a.str_or("policy", ""), "raas");
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--budgets", "64,128, 256"]);
+        assert_eq!(a.usize_list_or("budgets", &[]), vec![64, 128, 256]);
+        assert_eq!(a.usize_list_or("other", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.f64_or("alpha", 1e-4), 1e-4);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse(&["x", "--oops", "1"]);
+        let _ = a.usize_or("fine", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(["x".to_string(), "stray".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree substrates for facilities that would normally come from crates
+//! (serde, clap, rand, criterion, …) — this environment is offline and only
+//! the `xla` crate's dependency closure is available (see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

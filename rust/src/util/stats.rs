@@ -1,0 +1,253 @@
+//! Summary statistics, histograms, CDFs and log-log fits.
+//!
+//! The log-log slope fit is what turns the Figure-7 latency/memory series
+//! into the *measured complexity exponents* reported in the Figure-2 table
+//! (O(L) ⇒ slope ≈ 0 in N; O(N) ⇒ slope ≈ 1; O(N²) total ⇒ slope ≈ 2).
+
+/// Streaming summary over f64 samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+    pub fn extend<I: IntoIterator<Item = f64>>(&mut self, xs: I) {
+        self.samples.extend(xs);
+    }
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+    /// p in [0, 100]; nearest-rank on the sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
+
+/// Empirical CDF as (x, fraction <= x) points, for the Figure-1 plots.
+pub fn cdf_points(samples: &[f64]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    sorted
+        .into_iter()
+        .enumerate()
+        .map(|(i, x)| (x, (i + 1) as f64 / n as f64))
+        .collect()
+}
+
+/// Least-squares fit of y = a + b*x.  Returns (a, b, r2).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let a = my - b * mx;
+    let r2 = if sxx > 0.0 && syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    (a, b, r2)
+}
+
+/// Slope of log(y) vs log(x): the empirical complexity exponent.
+/// Points with non-positive x or y are skipped.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys)
+        .filter(|(x, y)| **x > 0.0 && **y > 0.0)
+        .map(|(x, y)| (x.ln(), y.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return 0.0;
+    }
+    let lx: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ly: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    linear_fit(&lx, &ly).1
+}
+
+/// Fixed-width histogram.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<usize>,
+    pub underflow: usize,
+    pub overflow: usize,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram { lo, hi, bins: vec![0; n_bins], underflow: 0, overflow: 0 }
+    }
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let n = self.bins.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            self.bins[idx.min(n - 1)] += 1;
+        }
+    }
+    pub fn total(&self) -> usize {
+        self.bins.iter().sum::<usize>() + self.underflow + self.overflow
+    }
+}
+
+/// Render an ASCII line plot (one series) — used for terminal figure output.
+pub fn ascii_plot(title: &str, series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+    let mut out = String::new();
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    let (xmin, xmax) = all.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), p| {
+        (lo.min(p.0), hi.max(p.0))
+    });
+    let (ymin, ymax) = all.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), p| {
+        (lo.min(p.1), hi.max(p.1))
+    });
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+    let marks = ['*', '+', 'o', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (x, y) in pts.iter() {
+            let cx = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("  y: [{ymin:.3} .. {ymax:.3}]\n"));
+    for row in grid {
+        out.push_str("  |");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("  +{}\n", "-".repeat(width)));
+    out.push_str(&format!("  x: [{xmin:.1} .. {xmax:.1}]   legend: "));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        s.extend([1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn summary_std() {
+        let mut s = Summary::new();
+        s.extend([2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.std() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let pts = cdf_points(&[3.0, 1.0, 2.0]);
+        assert_eq!(pts[0], (1.0, 1.0 / 3.0));
+        assert_eq!(pts[2], (3.0, 1.0));
+    }
+
+    #[test]
+    fn fit_exact_line() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [3.0, 5.0, 7.0];
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+        assert!((r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn loglog_exponent() {
+        // y = x^2
+        let xs: Vec<f64> = (1..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 2.0).abs() < 1e-9);
+        // constant ⇒ slope 0
+        let ys0 = vec![5.0; xs.len()];
+        assert!(loglog_slope(&xs, &ys0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        h.add(-1.0);
+        h.add(100.0);
+        assert_eq!(h.bins, vec![1; 10]);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 12);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let pts = [(0.0, 0.0), (1.0, 1.0)];
+        let s = ascii_plot("t", &[("a", &pts)], 20, 5);
+        assert!(s.contains('*'));
+        assert!(s.contains("legend"));
+    }
+}

@@ -1,0 +1,314 @@
+//! Workload generation: the rust mirror of `python/compile/corpus.py` (kept
+//! in sync through `artifacts/meta.json`) plus the dataset length profiles
+//! behind the paper's Figure 1 CDFs.
+
+use crate::config::CorpusSpec;
+use crate::util::rng::Rng;
+
+/// One synthetic chain-arithmetic problem (mirror of corpus.Problem).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub a: u8,
+    /// (r, op, b): step i computes v_i = v_r op b (mod 10); op is a token id.
+    pub steps: Vec<(usize, u32, u8)>,
+    pub values: Vec<u8>,
+}
+
+pub fn apply_op(spec: &CorpusSpec, x: u8, op: u32, y: u8) -> u8 {
+    let (x, y) = (x as i32, y as i32);
+    let r = if op == spec.plus {
+        x + y
+    } else if op == spec.minus {
+        x - y
+    } else if op == spec.times {
+        x * y
+    } else {
+        panic!("not an op token: {op}")
+    };
+    (r.rem_euclid(10)) as u8
+}
+
+impl Problem {
+    pub fn sample(rng: &mut Rng, spec: &CorpusSpec, k: Option<usize>) -> Problem {
+        let k = k.unwrap_or_else(|| rng.range(spec.min_steps, spec.max_steps + 1));
+        let a = rng.range(0, 10) as u8;
+        let mut values = vec![a];
+        let mut steps = Vec::with_capacity(k);
+        let ops = [spec.plus, spec.minus, spec.times];
+        for i in 1..=k {
+            let lo = i.saturating_sub(spec.max_lookback);
+            let r = rng.range(lo, i);
+            let op = *rng.choose(&ops);
+            let b = rng.range(0, 10) as u8;
+            steps.push((r, op, b));
+            values.push(apply_op(spec, values[r], op, b));
+        }
+        Problem { a, steps, values }
+    }
+
+    pub fn answer(&self) -> u8 {
+        *self.values.last().unwrap()
+    }
+
+    /// prompt = BOS Q a [IDX_i IDX_r op b]*k EQ  (mirror of
+    /// corpus.encode_prompt — instruction groups are content-addressed by
+    /// their dedicated single index tokens).
+    pub fn encode_prompt(&self, spec: &CorpusSpec) -> Vec<u32> {
+        let mut t = vec![spec.bos, spec.q, spec.dig0 + self.a as u32];
+        for (i, &(r, op, b)) in self.steps.iter().enumerate() {
+            let i = i + 1;
+            t.push(spec.idx0 + i as u32);
+            t.push(spec.idx0 + r as u32);
+            t.push(op);
+            t.push(spec.dig0 + b as u32);
+        }
+        t.push(spec.eq);
+        t
+    }
+
+    /// decode = [STEP IDX_i IDX_r v_r op b IDX_i v_i SEP]*k ANS v_k DOT EOS
+    /// (fully decomposed chain of thought — see corpus.py for the rationale)
+    pub fn encode_decode(&self, spec: &CorpusSpec) -> Vec<u32> {
+        let mut t = Vec::new();
+        for i in 1..=self.steps.len() {
+            let (r, op, b) = self.steps[i - 1];
+            t.push(spec.step);
+            t.push(spec.idx0 + i as u32);
+            t.push(spec.idx0 + r as u32);
+            t.push(spec.dig0 + self.values[r] as u32);
+            t.push(op);
+            t.push(spec.dig0 + b as u32);
+            t.push(spec.idx0 + i as u32);
+            t.push(spec.dig0 + self.values[i] as u32);
+            t.push(spec.sep);
+        }
+        t.push(spec.ans);
+        t.push(spec.dig0 + self.answer() as u32);
+        t.push(spec.dot);
+        t.push(spec.eos);
+        t
+    }
+
+    /// Absolute position of emitted value v_i in the full stream (i >= 1).
+    pub fn milestone_position(&self, prompt_len: usize, i: usize) -> usize {
+        prompt_len + 9 * (i - 1) + 7
+    }
+
+    /// Absolute position of prompt operand b_i (step i, 1-based).
+    pub fn phoenix_position(&self, i: usize) -> usize {
+        3 + 4 * (i - 1) + 3
+    }
+}
+
+/// Extract the answer digit from a decoded stream (mirror of parse_answer).
+pub fn parse_answer(spec: &CorpusSpec, decoded: &[u32]) -> Option<u8> {
+    for (i, &t) in decoded.iter().enumerate() {
+        if t == spec.ans {
+            if let Some(&d) = decoded.get(i + 1) {
+                if d >= spec.dig0 && d < spec.dig0 + 10 {
+                    return Some((d - spec.dig0) as u8);
+                }
+            }
+        }
+    }
+    None
+}
+
+pub fn detok(spec: &CorpusSpec, tokens: &[u32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| {
+            if t == spec.pad { "·".into() }
+            else if t == spec.bos { "<bos>".into() }
+            else if t == spec.eos { "<eos>".into() }
+            else if t == spec.q { "Q".into() }
+            else if t == spec.eq { "=".into() }
+            else if t == spec.sep { ";".into() }
+            else if t == spec.step { "s".into() }
+            else if t == spec.ans { "A".into() }
+            else if t == spec.dot { ".".into() }
+            else if t == spec.plus { "+".into() }
+            else if t == spec.minus { "-".into() }
+            else if t == spec.times { "*".into() }
+            else if t >= spec.dig0 && t < spec.dig0 + 10 { (t - spec.dig0).to_string() }
+            else if t >= spec.idx0 && t < spec.idx0 + spec.n_idx { format!("#{}", t - spec.idx0) }
+            else { format!("<{t}>") }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+// ---------------------------------------------------------------------------
+// Dataset length profiles (Figure 1)
+// ---------------------------------------------------------------------------
+
+/// Prefill/decode length distributions for one dataset family.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthProfile {
+    pub name: &'static str,
+    /// log-normal (mu, sigma) of the prefill length in tokens
+    pub prefill: (f64, f64),
+    /// log-normal (mu, sigma) of the decode length in tokens
+    pub decode: (f64, f64),
+    pub reasoning: bool,
+}
+
+/// Long-prefill (RAG-style, LongBench) profiles — Figure 1(a).
+pub const LONGBENCH: [LengthProfile; 5] = [
+    LengthProfile { name: "narrativeqa", prefill: (9.8, 0.45), decode: (2.7, 0.5), reasoning: false },
+    LengthProfile { name: "qasper", prefill: (8.3, 0.5), decode: (2.9, 0.6), reasoning: false },
+    LengthProfile { name: "hotpotqa", prefill: (9.1, 0.35), decode: (2.5, 0.5), reasoning: false },
+    LengthProfile { name: "triviaqa", prefill: (8.9, 0.5), decode: (2.3, 0.55), reasoning: false },
+    LengthProfile { name: "gov_report", prefill: (9.0, 0.4), decode: (6.2, 0.35), reasoning: false },
+];
+
+/// Long-decode (math reasoning) profiles — Figure 1(b); calibrated to the
+/// paper's Marco-O1 CDFs (prefill ≈ 40–200 tokens, decode ≈ 200–2000).
+pub const MATH: [LengthProfile; 3] = [
+    LengthProfile { name: "gsm8k", prefill: (4.1, 0.35), decode: (5.6, 0.45), reasoning: true },
+    LengthProfile { name: "math500", prefill: (4.4, 0.40), decode: (6.1, 0.50), reasoning: true },
+    LengthProfile { name: "aime", prefill: (4.7, 0.35), decode: (6.7, 0.45), reasoning: true },
+];
+
+impl LengthProfile {
+    pub fn by_name(name: &str) -> Option<LengthProfile> {
+        LONGBENCH.iter().chain(MATH.iter()).find(|p| p.name == name).copied()
+    }
+    pub fn sample_prefill(&self, rng: &mut Rng) -> usize {
+        rng.lognormal(self.prefill.0, self.prefill.1).round().max(4.0) as usize
+    }
+    pub fn sample_decode(&self, rng: &mut Rng) -> usize {
+        rng.lognormal(self.decode.0, self.decode.1).round().max(8.0) as usize
+    }
+}
+
+/// Request arrival process for the coordinator benches.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// All requests available at t=0 (offline batch).
+    Batch,
+    /// Poisson with the given rate (requests/second).
+    Poisson(f64),
+}
+
+impl Arrival {
+    /// Arrival offsets in seconds for `n` requests.
+    pub fn times(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        match self {
+            Arrival::Batch => vec![0.0; n],
+            Arrival::Poisson(rate) => {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.exp(*rate);
+                        t
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_spec() -> CorpusSpec {
+    CorpusSpec {
+        min_steps: 2, max_steps: 16, max_lookback: 6,
+        pad: 0, bos: 1, eos: 2, q: 3, eq: 4, sep: 5, step: 6, ans: 7,
+        dot: 8, plus: 9, minus: 10, times: 11, dig0: 12, idx0: 22, n_idx: 20,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CorpusSpec {
+        test_spec()
+    }
+
+    #[test]
+    fn problem_values_consistent() {
+        let s = spec();
+        let mut rng = Rng::new(0);
+        for _ in 0..50 {
+            let p = Problem::sample(&mut rng, &s, None);
+            assert_eq!(p.values[0], p.a);
+            for (i, &(r, op, b)) in p.steps.iter().enumerate() {
+                let i = i + 1;
+                assert!(r < i && i - r <= s.max_lookback);
+                assert_eq!(p.values[i], apply_op(&s, p.values[r], op, b));
+            }
+        }
+    }
+
+    #[test]
+    fn encode_lengths() {
+        let s = spec();
+        let mut rng = Rng::new(1);
+        let p = Problem::sample(&mut rng, &s, Some(16));
+        assert_eq!(p.encode_prompt(&s).len(), 3 + 4 * 16 + 1);
+        assert_eq!(p.encode_decode(&s).len(), 9 * 16 + 4);
+    }
+
+    #[test]
+    fn parse_answer_roundtrip() {
+        let s = spec();
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let p = Problem::sample(&mut rng, &s, None);
+            assert_eq!(parse_answer(&s, &p.encode_decode(&s)), Some(p.answer()));
+        }
+    }
+
+    #[test]
+    fn positions_point_at_tokens() {
+        let s = spec();
+        let mut rng = Rng::new(3);
+        let p = Problem::sample(&mut rng, &s, Some(5));
+        let prompt = p.encode_prompt(&s);
+        let mut full = prompt.clone();
+        full.extend(p.encode_decode(&s));
+        for i in 1..=5 {
+            assert_eq!(full[p.milestone_position(prompt.len(), i)], s.dig0 + p.values[i] as u32);
+            let (_, _, b) = p.steps[i - 1];
+            assert_eq!(full[p.phoenix_position(i)], s.dig0 + b as u32);
+        }
+    }
+
+    #[test]
+    fn length_profiles_sane() {
+        let mut rng = Rng::new(4);
+        let gsm = LengthProfile::by_name("gsm8k").unwrap();
+        let nqa = LengthProfile::by_name("narrativeqa").unwrap();
+        let mut gsm_pre = 0.0;
+        let mut nqa_pre = 0.0;
+        let mut gsm_dec = 0.0;
+        for _ in 0..200 {
+            gsm_pre += gsm.sample_prefill(&mut rng) as f64;
+            nqa_pre += nqa.sample_prefill(&mut rng) as f64;
+            gsm_dec += gsm.sample_decode(&mut rng) as f64;
+        }
+        // reasoning: short prefill, long decode; RAG: the opposite
+        assert!(nqa_pre / 200.0 > 20.0 * (gsm_pre / 200.0));
+        assert!(gsm_dec / 200.0 > 3.0 * (gsm_pre / 200.0));
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let mut rng = Rng::new(5);
+        let times = Arrival::Poisson(10.0).times(&mut rng, 50);
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(Arrival::Batch.times(&mut rng, 3).iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn detok_readable() {
+        let s = spec();
+        let mut rng = Rng::new(6);
+        let p = Problem::sample(&mut rng, &s, Some(2));
+        let txt = detok(&s, &p.encode_prompt(&s));
+        assert!(txt.contains('Q') && txt.contains('='));
+    }
+}

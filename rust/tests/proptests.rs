@@ -1,0 +1,393 @@
+//! Property-based tests (hand-rolled driver over the in-tree PRNG —
+//! proptest is unavailable offline).  Each property runs hundreds of
+//! randomized cases; failures print the offending seed for replay.
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::coordinator::batcher::{Batcher, BatcherConfig, StepBackend};
+use raas::coordinator::request::Request;
+use raas::kvcache::page::{page_probs, PageMeta, RepBounds};
+use raas::kvcache::policy::{make_policy, resident_tokens};
+use raas::kvcache::{KvPool, SeqCache};
+use raas::util::json::Json;
+use raas::util::rng::Rng;
+
+const CASES: u64 = 200;
+
+/// Run `f` over `CASES` seeds, reporting the failing seed.
+fn forall(name: &str, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed * 7919 + 13);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if result.is_err() {
+            panic!("property '{name}' failed at seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pool invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_never_over_allocates() {
+    forall("pool_alloc", |rng| {
+        let cap = rng.range(1, 32);
+        let mut pool = KvPool::new(cap, 16, 8);
+        let mut held = Vec::new();
+        for _ in 0..200 {
+            if rng.chance(0.6) {
+                match pool.alloc() {
+                    Ok(id) => held.push(id),
+                    Err(_) => assert_eq!(pool.allocated_pages(), cap, "alloc fails only when full"),
+                }
+            } else if let Some(id) = held.pop() {
+                pool.release(id);
+            }
+            assert!(pool.allocated_pages() <= cap);
+            assert_eq!(pool.allocated_pages(), held.len());
+            assert!(pool.high_water_pages() >= pool.allocated_pages());
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// sequence cache invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_seq_resident_accounting() {
+    forall("seq_accounting", |rng| {
+        let page_size = 4;
+        let mut pool = KvPool::new(256, page_size, 6);
+        let mut seq = SeqCache::new(2, page_size, 6);
+        let mut appended = vec![0usize; 2];
+        let mut evicted_tokens = vec![0usize; 2];
+        for pos in 0..rng.range(1, 80) {
+            for layer in 0..2 {
+                seq.append(layer, &mut pool, pos, &[0.5; 6], &[0.1; 6], pos < 8, 0).unwrap();
+                appended[layer] += 1;
+            }
+            if rng.chance(0.1) {
+                let layer = rng.range(0, 2);
+                if seq.layers[layer].table.len() > 1 {
+                    let idx = rng.range(0, seq.layers[layer].table.len() - 1);
+                    evicted_tokens[layer] += seq.layers[layer].table[idx].len;
+                    seq.evict(layer, idx, &mut pool);
+                }
+            }
+        }
+        for layer in 0..2 {
+            assert_eq!(seq.resident_tokens(layer), appended[layer] - evicted_tokens[layer]);
+            // table ordered by start_pos, reps aligned
+            let t = &seq.layers[layer].table;
+            assert_eq!(t.len(), seq.layers[layer].reps.len());
+            for w in t.windows(2) {
+                assert!(w[0].start_pos < w[1].start_pos);
+            }
+        }
+        seq.release_all(&mut pool);
+        assert_eq!(pool.allocated_pages(), 0);
+    });
+}
+
+#[test]
+fn prop_gather_valid_matches_selection() {
+    forall("gather", |rng| {
+        let page_size = 4;
+        let mut pool = KvPool::new(128, page_size, 3);
+        let mut seq = SeqCache::new(1, page_size, 3);
+        let n = rng.range(1, 60);
+        for pos in 0..n {
+            seq.append(0, &mut pool, pos, &[pos as f32; 3], &[0.0; 3], false, 0).unwrap();
+        }
+        let n_pages = seq.layers[0].table.len();
+        let mut sel: Vec<usize> = (0..n_pages).filter(|_| rng.chance(0.5)).collect();
+        if sel.is_empty() {
+            sel.push(n_pages - 1);
+        }
+        let expect: usize = sel.iter().map(|&i| seq.layers[0].table[i].len).sum();
+        let cap = expect.next_power_of_two().max(8);
+        let (mut k, mut v, mut valid) = (Vec::new(), Vec::new(), Vec::new());
+        let used = seq.gather(0, &pool, &sel, cap, &mut k, &mut v, &mut valid);
+        assert_eq!(used, expect);
+        assert_eq!(valid.iter().filter(|&&x| x > 0.5).count(), expect);
+        assert!(valid[expect..].iter().all(|&x| x == 0.0));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// policy invariants
+// ---------------------------------------------------------------------------
+
+fn random_table(rng: &mut Rng) -> (Vec<PageMeta>, Vec<f32>, Vec<f32>) {
+    let n = rng.range(1, 40);
+    let mut table = Vec::new();
+    let mut pos = 0;
+    for i in 0..n {
+        let mut m = PageMeta::new(i as u32, pos, i < 3 && rng.chance(0.5), 0);
+        m.len = rng.range(1, 17);
+        m.last_stamp = rng.range(0, 50) as u64;
+        m.acc_score = rng.f64() * 10.0;
+        pos += m.len;
+        table.push(m);
+    }
+    let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 6.0 - 3.0).collect();
+    let mut probs = Vec::new();
+    page_probs(&scores, 16, &mut probs);
+    (table, scores, probs)
+}
+
+#[test]
+fn prop_policies_select_valid_indices_including_active() {
+    forall("select_valid", |rng| {
+        let (table, scores, _) = random_table(rng);
+        for kind in PolicyKind::all() {
+            let budget = rng.range(16, 2048);
+            let cfg = EngineConfig { policy: kind, budget, ..Default::default() };
+            let policy = make_policy(&cfg);
+            let sel = policy.select(&table, &scores, budget, 16);
+            assert!(!sel.is_empty());
+            let mut seen = std::collections::BTreeSet::new();
+            for &i in &sel {
+                assert!(i < table.len(), "{kind:?} selected out of range");
+                assert!(seen.insert(i), "{kind:?} duplicate selection");
+            }
+            assert!(sel.contains(&(table.len() - 1)), "{kind:?} must include active page");
+        }
+    });
+}
+
+#[test]
+fn prop_eviction_respects_pins_and_active_page() {
+    forall("evict_valid", |rng| {
+        let (table, _, _) = random_table(rng);
+        for kind in PolicyKind::all() {
+            let cfg = EngineConfig { policy: kind, budget: 64, ..Default::default() };
+            let policy = make_policy(&cfg);
+            if let Some(victim) = policy.evict_candidate(&table) {
+                assert!(victim < table.len() - 1, "{kind:?} evicted the active page");
+                if kind == PolicyKind::Raas {
+                    assert!(!table[victim].pinned, "raas evicted pinned prefill");
+                }
+            } else {
+                assert!(
+                    matches!(kind, PolicyKind::Dense | PolicyKind::Quest)
+                        || table.len() <= 1
+                        || table[..table.len() - 1].iter().all(|p| match kind {
+                            PolicyKind::Raas => p.pinned,
+                            PolicyKind::Sink => p.start_pos < cfg.sink_tokens,
+                            _ => false,
+                        }),
+                    "{kind:?} refused eviction with evictable pages present"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_eviction_loop_reaches_budget_or_pins() {
+    forall("evict_loop", |rng| {
+        let (mut table, _, _) = random_table(rng);
+        let budget = rng.range(16, 256);
+        let cfg = EngineConfig { policy: PolicyKind::Raas, budget, ..Default::default() };
+        let policy = make_policy(&cfg);
+        loop {
+            if resident_tokens(&table) <= budget {
+                break;
+            }
+            match policy.evict_candidate(&table) {
+                Some(i) => {
+                    table.remove(i);
+                }
+                None => break,
+            }
+        }
+        let resident = resident_tokens(&table);
+        let pinned: usize =
+            table.iter().filter(|p| p.pinned).map(|p| p.len).sum();
+        let active = table.last().map(|p| p.len).unwrap_or(0);
+        assert!(
+            resident <= budget || resident <= pinned + active,
+            "over budget with evictable pages left: resident={resident} budget={budget}"
+        );
+    });
+}
+
+#[test]
+fn prop_raas_stamps_monotone() {
+    forall("stamps_monotone", |rng| {
+        let (mut table, _, probs) = random_table(rng);
+        let cfg = EngineConfig { policy: PolicyKind::Raas, ..Default::default() };
+        let policy = make_policy(&cfg);
+        let before: Vec<u64> = table.iter().map(|p| p.last_stamp).collect();
+        let now = 1000;
+        policy.observe(&mut table, &probs, now);
+        for (b, a) in before.iter().zip(&table) {
+            assert!(a.last_stamp >= *b, "stamp moved backwards");
+            assert!(a.last_stamp == *b || a.last_stamp == now);
+        }
+    });
+}
+
+#[test]
+fn prop_quest_selection_is_top_k_by_score() {
+    forall("quest_topk", |rng| {
+        let (table, scores, _) = random_table(rng);
+        let cfg = EngineConfig { policy: PolicyKind::Quest, budget: 64, ..Default::default() };
+        let policy = make_policy(&cfg);
+        let sel = policy.select(&table, &scores, 64, 16);
+        let k = sel.len();
+        // every non-selected, non-active page must score <= the minimum
+        // selected non-active page
+        let min_sel = sel
+            .iter()
+            .filter(|&&i| i != table.len() - 1)
+            .map(|&i| scores[i])
+            .fold(f32::INFINITY, f32::min);
+        for i in 0..table.len() - 1 {
+            if !sel.contains(&i) {
+                assert!(
+                    scores[i] <= min_sel + 1e-6,
+                    "unselected page {i} outscores a selected one"
+                );
+            }
+        }
+        assert!(k <= (64 / 16).max(1) || k == table.len());
+    });
+}
+
+#[test]
+fn prop_rep_bounds_dominate_member_keys() {
+    forall("rep_bounds", |rng| {
+        let kv_dim = 8; // 2 kv heads × hd 4
+        let mut bounds = RepBounds::empty(kv_dim);
+        let keys: Vec<Vec<f32>> = (0..rng.range(1, 16))
+            .map(|_| (0..kv_dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        for k in &keys {
+            bounds.update(k);
+        }
+        let q: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect(); // 4 heads × hd 4
+        let bound = bounds.score(&q, 4, 2, 4);
+        let group = 4 / 2;
+        for k in &keys {
+            for h in 0..4 {
+                let g = h / group;
+                let dot: f32 = (0..4).map(|c| q[h * 4 + c] * k[g * 4 + c]).sum();
+                assert!(bound >= dot - 1e-4, "bound {bound} < member dot {dot}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_page_probs_is_distribution() {
+    forall("page_probs", |rng| {
+        let n = rng.range(1, 64);
+        let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 20.0 - 10.0).collect();
+        let mut probs = Vec::new();
+        page_probs(&scores, 16, &mut probs);
+        assert_eq!(probs.len(), n);
+        assert!(probs.iter().all(|&p| (0.0..=1.0 + 1e-5).contains(&p)));
+        let sum: f32 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum {sum}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator conservation
+// ---------------------------------------------------------------------------
+
+struct CountBackend {
+    live: usize,
+    peak: usize,
+    cap: usize,
+}
+
+impl StepBackend for CountBackend {
+    type Seq = u32;
+    fn begin(&mut self, prompt: &[u32]) -> anyhow::Result<(u32, u32)> {
+        self.live += 1;
+        self.peak = self.peak.max(self.live);
+        Ok((prompt[0], 1))
+    }
+    fn step(&mut self, seq: &mut u32, _t: u32, _n: u64) -> anyhow::Result<u32> {
+        if *seq == 0 {
+            return Ok(0);
+        }
+        *seq -= 1;
+        Ok(if *seq == 0 { 0 } else { 5 })
+    }
+    fn finish(&mut self, _s: u32) {
+        self.live -= 1;
+    }
+    fn is_eos(&self, t: u32) -> bool {
+        t == 0
+    }
+    fn has_capacity(&self, active: usize) -> bool {
+        active < self.cap
+    }
+}
+
+#[test]
+fn prop_batcher_conserves_requests_and_capacity() {
+    forall("batcher_conservation", |rng| {
+        let cap = rng.range(1, 6);
+        let n = rng.range(1, 30);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut b = Batcher::new(
+            CountBackend { live: 0, peak: 0, cap },
+            BatcherConfig { max_batch: rng.range(1, 8) },
+        );
+        for id in 0..n as u64 {
+            b.submit(Request {
+                id,
+                prompt: vec![rng.range(1, 20) as u32],
+                max_new: rng.range(1, 40),
+                submitted: std::time::Instant::now(),
+                reply: tx.clone(),
+            });
+        }
+        b.run_to_completion();
+        drop(tx);
+        let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "requests lost or duplicated");
+        assert_eq!(b.backend.live, 0, "sequences leaked");
+        assert!(b.backend.peak <= cap, "admission exceeded pool capacity");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// json roundtrip
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 || rng.chance(0.4) {
+        match rng.range(0, 4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            _ => Json::Str(format!("s{}-\"q\"\n☃", rng.range(0, 1000))),
+        }
+    } else if rng.chance(0.5) {
+        Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect())
+    } else {
+        Json::Obj(
+            (0..rng.range(0, 5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        )
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    forall("json_roundtrip", |rng| {
+        let v = random_json(rng, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("parse '{text}': {e}"));
+        assert_eq!(v, back);
+    });
+}
