@@ -1,7 +1,9 @@
-//! Real-model budget sweep: accuracy of every policy at several cache
-//! budgets on the trained tiny model — the end-to-end validation of the
-//! Figure-6 orderings (the full grid runs in the trace simulator; this
-//! example shows the same ordering emerges from the real serving stack).
+//! Budget sweep: accuracy of every policy at several cache budgets — the
+//! end-to-end validation of the Figure-6 orderings (the full grid runs in
+//! the trace simulator; this example shows the same ordering emerges from
+//! the serving stack).  Absolute accuracies need the trained model
+//! (`--features backend-xla` build + `--backend xla`); the default sim
+//! surrogate exercises the full path but cannot solve the task.
 //!
 //!     cargo run --release --example budget_sweep -- [--problems 25]
 
@@ -18,13 +20,16 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let n = args.usize_or("problems", 25);
     let budgets = args.usize_list_or("budgets", &[64, 96, 128, 256]);
+    // parse once: per-cell configs are clones with policy/budget overridden
+    let base_cfg = EngineConfig::from_args(&args)?;
+    let backend = base_cfg.backend;
 
     let mut tbl = Vec::new();
     let mut rows = Vec::new();
     for kind in PolicyKind::all() {
         let mut line = vec![kind.name().to_string()];
         for &budget in &budgets {
-            let mut cfg = EngineConfig::from_args(&args)?;
+            let mut cfg = base_cfg.clone();
             cfg.policy = kind;
             cfg.budget = budget;
             let mut engine = Engine::new_with_capacities(cfg, &[64, 128, 256, 512])?;
@@ -52,9 +57,9 @@ fn main() -> Result<()> {
         tbl.push(line);
     }
     std::fs::create_dir_all("results")?;
-    write_csv(std::path::Path::new("results/budget_sweep_real.csv"),
-              &["policy", "budget", "accuracy"], &rows)?;
-    println!("\nreal-model accuracy by policy × budget ({n} problems, longest chains):");
+    let csv = format!("results/budget_sweep_{}.csv", backend.name());
+    write_csv(std::path::Path::new(&csv), &["policy", "budget", "accuracy"], &rows)?;
+    println!("\n`{backend}` backend accuracy by policy × budget ({n} problems, longest chains):");
     let mut headers = vec!["policy"];
     let bs: Vec<String> = budgets.iter().map(|b| b.to_string()).collect();
     headers.extend(bs.iter().map(|s| s.as_str()));

@@ -1,7 +1,11 @@
-//! Quickstart: load the AOT artifacts, decode one reasoning problem with the
-//! RaaS policy, and print everything a first-time user wants to see.
+//! Quickstart: decode one reasoning problem with the RaaS policy and print
+//! everything a first-time user wants to see.  Runs on the default `sim`
+//! backend — deterministic, pure Rust, no artifacts needed:
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!
+//! To drive the PJRT/HLO path instead, build with `--features backend-xla`,
+//! run `make artifacts`, and set `backend: BackendKind::Xla` below.
 
 use anyhow::Result;
 
@@ -11,14 +15,15 @@ use raas::util::rng::Rng;
 use raas::workload::Problem;
 
 fn main() -> Result<()> {
-    // 1. Configure: RaaS policy, 256-token KV budget, alpha = 1e-4.
+    // 1. Configure: sim backend, RaaS policy, 256-token KV budget, alpha = 1e-4.
     let cfg = EngineConfig {
         budget: 256,
         alpha: 1e-4,
         ..Default::default()
     };
 
-    // 2. Load the engine (compiles the HLO artifacts once, ~seconds).
+    // 2. Load the engine (instant on the sim backend; the xla backend
+    //    compiles the HLO artifacts once, ~seconds).
     let mut engine = Engine::new_with_capacities(cfg, &[64, 128, 256, 512])?;
     println!("loaded: {:?}", engine.model());
 

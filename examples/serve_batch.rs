@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use raas::config::{ArtifactMeta, EngineConfig};
+use raas::config::EngineConfig;
 use raas::coordinator::batcher::BatcherConfig;
 use raas::coordinator::request::{Request, Response};
 use raas::coordinator::router::{RoutePolicy, Router};
@@ -27,7 +27,10 @@ fn main() -> Result<()> {
     let max_batch = args.usize_or("max-batch", 4);
     let cfg = EngineConfig::from_args(&args)?;
 
-    println!("spawning {replicas} replicas (policy={}, budget={})…", cfg.policy, cfg.budget);
+    println!(
+        "spawning {replicas} replicas (backend={}, policy={}, budget={})…",
+        cfg.backend, cfg.policy, cfg.budget
+    );
     let servers: Vec<EngineServer> = (0..replicas)
         .map(|i| {
             EngineServer::spawn(
@@ -38,7 +41,7 @@ fn main() -> Result<()> {
             )
         })
         .collect::<Result<_>>()?;
-    let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
+    let meta = cfg.resolve_meta()?;
     let spec = meta.corpus.clone();
     let mut router = Router::new(servers, RoutePolicy::LeastLoaded);
 

@@ -1,7 +1,10 @@
 """Figure-3 analyzer: map classifiers on synthetic attention maps."""
 
 import numpy as np
+import pytest
 
+# analyze_attention imports jax at module scope
+pytest.importorskip("jax", reason="jax not installed (hermetic CI)")
 from compile.analyze_attention import classify_map
 
 

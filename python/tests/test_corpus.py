@@ -2,6 +2,8 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (hermetic CI)")
 from hypothesis import given, settings, strategies as st
 
 from compile import corpus

@@ -4,8 +4,11 @@ Hypothesis sweeps shapes / GQA ratios / mask patterns; assert_allclose
 against ref.py.  All kernels run interpret=True (CPU image)."""
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("jax", reason="jax not installed (hermetic CI)")
+pytest.importorskip("hypothesis", reason="hypothesis not installed (hermetic CI)")
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

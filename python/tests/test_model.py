@@ -1,9 +1,11 @@
 """L2 correctness: dense/training form vs serving decomposition."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed (hermetic CI)")
 import jax
 import jax.numpy as jnp
-import pytest
 
 from compile import corpus
 from compile.model import (ModelConfig, embed_tok, forward_train, init_params,

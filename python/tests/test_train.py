@@ -3,9 +3,12 @@
 import os
 import tempfile
 
+import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="jax not installed (hermetic CI)")
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from compile import corpus
 from compile.model import ModelConfig, init_params

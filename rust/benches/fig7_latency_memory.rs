@@ -1,7 +1,9 @@
 //! End-to-end bench behind paper Figure 7 / Table rows: per-token decode
 //! latency and resident memory for Dense / Quest / RaaS at increasing
-//! context lengths, on the real engine.  Skips (with a notice) when
-//! artifacts are absent so `cargo bench` stays green pre-`make artifacts`.
+//! context lengths.  Runs on whichever backend the default `EngineConfig`
+//! selects — the hermetic `sim` surrogate out of the box; build with
+//! `--features backend-xla` (plus `make artifacts`) and flip the backend to
+//! measure the PJRT path.
 //!
 //!     cargo bench --bench fig7_latency_memory
 
@@ -12,10 +14,6 @@ use raas::util::rng::Rng;
 use raas::workload::Problem;
 
 fn main() {
-    if !std::path::Path::new("artifacts/meta.json").exists() {
-        println!("SKIP: artifacts/meta.json not found — run `make artifacts` first");
-        return;
-    }
     let mut b = Bencher::new(BenchConfig {
         warmup_iters: 0,
         iters: 2,

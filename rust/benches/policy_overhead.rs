@@ -3,7 +3,11 @@
 //! the paper claims is negligible (Appendix B) — EXPERIMENTS.md §Perf
 //! records it against the PJRT step time.
 //!
-//!     cargo bench --bench policy_overhead
+//!     cargo bench --bench policy_overhead              # full run
+//!     cargo bench --bench policy_overhead -- --test    # CI smoke (--quick works too)
+//!
+//! Writes `results/BENCH_policy_overhead.json`, the artifact the CI bench
+//! job uploads to seed the perf trajectory.
 
 use raas::bench::{Bencher, BenchConfig};
 use raas::config::{EngineConfig, PolicyKind};
@@ -24,11 +28,19 @@ fn mk_table(n_pages: usize, rng: &mut Rng) -> (Vec<PageMeta>, Vec<f32>) {
 }
 
 fn main() {
+    // `--test` / `--quick`: a fast smoke pass (CI); full fidelity otherwise.
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
     let mut rng = Rng::new(42);
-    let mut b = Bencher::new(BenchConfig { warmup_iters: 10, iters: 200, ..Default::default() });
+    let cfg = if quick {
+        BenchConfig { warmup_iters: 1, iters: 10, ..Default::default() }
+    } else {
+        BenchConfig { warmup_iters: 10, iters: 200, ..Default::default() }
+    };
+    let mut b = Bencher::new(cfg);
     Bencher::print_header();
 
-    for &n_pages in &[16usize, 64, 256, 1024] {
+    let page_counts: &[usize] = if quick { &[16, 256] } else { &[16, 64, 256, 1024] };
+    for &n_pages in page_counts {
         let (mut table, scores) = mk_table(n_pages, &mut rng);
         let mut probs = Vec::new();
         page_probs(&scores, 16, &mut probs);
@@ -63,6 +75,6 @@ fn main() {
     }
 
     std::fs::create_dir_all("results").ok();
-    b.dump_json("results/bench_policy_overhead.json").ok();
-    println!("\nwrote results/bench_policy_overhead.json");
+    b.dump_json("results/BENCH_policy_overhead.json").ok();
+    println!("\nwrote results/BENCH_policy_overhead.json");
 }

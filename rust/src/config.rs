@@ -79,6 +79,49 @@ impl CorpusSpec {
 }
 
 impl ArtifactMeta {
+    /// Built-in metadata for the simulated backend: mirrors the shape the
+    /// AOT path exports (python ModelConfig/CorpusConfig defaults) so every
+    /// harness runs hermetically with zero artifacts on disk.
+    pub fn sim_default() -> ArtifactMeta {
+        ArtifactMeta {
+            // display-only sentinel: the sim backend never reads the disk
+            dir: PathBuf::from("(built-in)"),
+            model: ModelSpec {
+                vocab: 48,
+                d_model: 128,
+                n_layers: 4,
+                n_heads: 8,
+                n_kv_heads: 4,
+                head_dim: 16,
+                d_ff: 256,
+            },
+            trained: false,
+            capacities: vec![64, 128, 256, 512, 1024, 2048, 4096, 8192],
+            prefill_sizes: vec![8192],
+            page_size: 16,
+            corpus: CorpusSpec {
+                min_steps: 2,
+                max_steps: 16,
+                max_lookback: 6,
+                pad: 0,
+                bos: 1,
+                eos: 2,
+                q: 3,
+                eq: 4,
+                sep: 5,
+                step: 6,
+                ans: 7,
+                dot: 8,
+                plus: 9,
+                minus: 10,
+                times: 11,
+                dig0: 12,
+                idx0: 22,
+                n_idx: 20,
+            },
+        }
+    }
+
     pub fn load(dir: &Path) -> Result<ArtifactMeta> {
         let meta_path = dir.join("meta.json");
         let text = std::fs::read_to_string(&meta_path)
@@ -150,6 +193,37 @@ impl ArtifactMeta {
     }
 }
 
+/// Which execution backend serves the model (DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Deterministic pure-Rust transformer surrogate (default; hermetic).
+    Sim,
+    /// PJRT/HLO-text runtime over AOT artifacts (`--features backend-xla`).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sim" | "surrogate" => BackendKind::Sim,
+            "xla" | "pjrt" => BackendKind::Xla,
+            other => bail!("unknown backend '{other}' (sim|xla)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 /// Which sparsity algorithm drives the KV cache (paper Figure 2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PolicyKind {
@@ -199,6 +273,8 @@ impl std::fmt::Display for PolicyKind {
 /// Engine + policy configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
+    /// Execution backend serving the model.
+    pub backend: BackendKind,
     pub artifacts_dir: PathBuf,
     pub policy: PolicyKind,
     /// Cache budget in tokens (the paper's L).
@@ -225,6 +301,7 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
+            backend: BackendKind::Sim,
             artifacts_dir: PathBuf::from("artifacts"),
             policy: PolicyKind::Raas,
             budget: 256,
@@ -241,10 +318,34 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
-    /// CLI overrides: --artifacts --policy --budget --alpha --max-decode --seed.
+    /// Metadata for this configuration: loaded from `artifacts_dir` for the
+    /// AOT backend, built-in for the simulated one (no disk access).
+    pub fn resolve_meta(&self) -> Result<ArtifactMeta> {
+        match self.backend {
+            BackendKind::Sim => Ok(ArtifactMeta::sim_default()),
+            BackendKind::Xla => ArtifactMeta::load(&self.artifacts_dir),
+        }
+    }
+
+    /// CLI overrides: --backend --artifacts --policy --budget --alpha
+    /// --max-decode --seed.
+    ///
+    /// An explicit `--backend` wins; a bare `--artifacts DIR` implies the
+    /// xla backend so pre-backend invocations keep driving the real model
+    /// instead of silently falling back to the surrogate.
     pub fn from_args(args: &Args) -> Result<EngineConfig> {
         let mut c = EngineConfig::default();
-        c.artifacts_dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+        let backend_flag = args.str_opt("backend");
+        let artifacts_flag = args.str_opt("artifacts");
+        c.backend = match &backend_flag {
+            Some(s) => BackendKind::parse(s)?,
+            None if artifacts_flag.is_some() => BackendKind::Xla,
+            None => BackendKind::Sim,
+        };
+        if c.backend == BackendKind::Sim && artifacts_flag.is_some() {
+            eprintln!("warning: --artifacts is ignored by the sim backend (built-in metadata)");
+        }
+        c.artifacts_dir = PathBuf::from(artifacts_flag.unwrap_or_else(|| "artifacts".into()));
         c.policy = PolicyKind::parse(&args.str_or("policy", "raas"))?;
         c.budget = args.usize_or("budget", c.budget);
         c.alpha = args.f64_or("alpha", c.alpha);
@@ -299,6 +400,45 @@ mod tests {
         assert_eq!(PolicyKind::parse("RaaS").unwrap(), PolicyKind::Raas);
         assert_eq!(PolicyKind::parse("streamingllm").unwrap(), PolicyKind::Sink);
         assert!(PolicyKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn backend_parse_and_default() {
+        assert_eq!(BackendKind::parse("sim").unwrap(), BackendKind::Sim);
+        assert_eq!(BackendKind::parse("PJRT").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(EngineConfig::default().backend, BackendKind::Sim);
+    }
+
+    #[test]
+    fn bare_artifacts_flag_implies_xla() {
+        let parse = |argv: &[&str]| {
+            EngineConfig::from_args(
+                &Args::parse(argv.iter().map(|s| s.to_string())).unwrap(),
+            )
+            .unwrap()
+        };
+        // pre-backend invocation: --artifacts alone selects the real model
+        let c = parse(&["x", "--artifacts", "trained"]);
+        assert_eq!(c.backend, BackendKind::Xla);
+        assert_eq!(c.artifacts_dir, PathBuf::from("trained"));
+        // explicit --backend always wins
+        let c = parse(&["x", "--artifacts", "trained", "--backend", "sim"]);
+        assert_eq!(c.backend, BackendKind::Sim);
+        // no flags: hermetic default
+        assert_eq!(parse(&["x"]).backend, BackendKind::Sim);
+    }
+
+    #[test]
+    fn sim_default_meta_is_consistent() {
+        let m = ArtifactMeta::sim_default();
+        assert_eq!(m.model.n_heads % m.model.n_kv_heads, 0);
+        assert_eq!(m.model.d_model, m.model.n_heads * m.model.head_dim);
+        // vocab covers every special + digit + index token
+        assert!(m.model.vocab as u32 >= m.corpus.idx0 + m.corpus.n_idx);
+        // sim meta resolves without touching the filesystem
+        let cfg = EngineConfig::default();
+        assert_eq!(cfg.resolve_meta().unwrap().page_size, m.page_size);
     }
 
     #[test]

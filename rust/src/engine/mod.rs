@@ -1,11 +1,13 @@
 //! The inference engine: sequence state machine + the per-token decode loop
-//! that stitches runtime executables, the paged KV cache and the sparsity
-//! policy together (DESIGN.md §2 dataflow).
+//! that stitches the execution [`Backend`], the paged KV cache and the
+//! sparsity policy together (DESIGN.md §2 dataflow).  The engine is backend
+//! agnostic: the same loop drives the PJRT executables and the pure-Rust
+//! surrogate.
 //!
 //! Per decode token, per layer:
-//!   qkv exec → append (k,v) to the paged pool → rep-score resident pages
+//!   backend qkv → append (k,v) to the paged pool → rep-score resident pages
 //!   (rust, O(pages)) → policy.select → gather selected slots O(L) →
-//!   attn_mlp exec (Pallas kernel) → next layer.
+//!   backend attn_mlp (Pallas kernel on the xla path) → next layer.
 //! After all layers: lm_head exec → greedy sample → policy.observe +
 //! budget-bounded eviction (timestamps/eviction are batched per iteration,
 //! as in the paper's implementation, Appendix B).
@@ -14,12 +16,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{ArtifactMeta, EngineConfig, PolicyKind};
+use crate::config::{ArtifactMeta, BackendKind, EngineConfig, PolicyKind};
 use crate::kvcache::page::page_probs;
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
 use crate::kvcache::{KvPool, SeqCache};
 use crate::metrics::Metrics;
-use crate::runtime::{ModelRuntime, RuntimeClient, Tokenizer};
+use crate::runtime::{Backend, SimBackend, Tokenizer};
 
 #[derive(Debug, Clone, Default)]
 pub struct GenOptions {
@@ -51,7 +53,7 @@ pub struct Engine {
     pub meta: ArtifactMeta,
     pub tokenizer: Tokenizer,
     pub metrics: Metrics,
-    model: ModelRuntime,
+    model: Box<dyn Backend>,
     pool: KvPool,
     policy: Box<dyn SparsityPolicy>,
     // scratch buffers reused across steps (no allocation in the hot loop)
@@ -63,22 +65,38 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine on the backend named by `cfg.backend` (sim by
+    /// default — hermetic; xla needs `--features backend-xla` + artifacts).
     pub fn new(cfg: EngineConfig) -> Result<Self> {
-        let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
-        let client = RuntimeClient::cpu()?;
-        let model = ModelRuntime::load(&client, &meta, None)?;
-        Self::with_runtime(cfg, meta, model)
+        Self::build(cfg, None)
     }
 
-    /// Restrict loaded capacities (tests / fast startup).
+    /// Restrict loaded capacities (tests / fast startup).  For the AOT
+    /// backend this limits which executables are compiled; for the
+    /// surrogate it only shapes attention padding.
     pub fn new_with_capacities(cfg: EngineConfig, caps: &[usize]) -> Result<Self> {
-        let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
-        let client = RuntimeClient::cpu()?;
-        let model = ModelRuntime::load(&client, &meta, Some(caps))?;
-        Self::with_runtime(cfg, meta, model)
+        Self::build(cfg, Some(caps))
     }
 
-    pub fn with_runtime(cfg: EngineConfig, meta: ArtifactMeta, model: ModelRuntime)
+    fn build(cfg: EngineConfig, caps: Option<&[usize]>) -> Result<Self> {
+        // Fail on the missing feature *before* touching artifact metadata,
+        // so the user is pointed at the right fix (rebuild), not at
+        // `make artifacts`.
+        if cfg.backend == BackendKind::Xla && !cfg!(feature = "backend-xla") {
+            bail!("{NO_XLA_BACKEND}");
+        }
+        let meta = cfg.resolve_meta()?;
+        let model: Box<dyn Backend> = match cfg.backend {
+            BackendKind::Sim => match caps {
+                Some(c) => Box::new(SimBackend::with_capacities(&meta, cfg.seed, c)),
+                None => Box::new(SimBackend::new(&meta, cfg.seed)),
+            },
+            BackendKind::Xla => load_xla_backend(&meta, caps)?,
+        };
+        Self::with_backend(cfg, meta, model)
+    }
+
+    pub fn with_backend(cfg: EngineConfig, meta: ArtifactMeta, model: Box<dyn Backend>)
                         -> Result<Self> {
         let kv_dim = meta.model.n_kv_heads * meta.model.head_dim;
         let pool = KvPool::new(cfg.pool_pages, meta.page_size, kv_dim);
@@ -99,8 +117,8 @@ impl Engine {
         })
     }
 
-    pub fn model(&self) -> &ModelRuntime {
-        &self.model
+    pub fn model(&self) -> &dyn Backend {
+        self.model.as_ref()
     }
     pub fn pool(&self) -> &KvPool {
         &self.pool
@@ -130,7 +148,7 @@ impl Engine {
         let n_layers = self.meta.model.n_layers;
         for layer in 0..n_layers {
             for pos in 0..prompt.len() {
-                let (k, v) = self.model.prefill_kv_at(&out, layer, pos);
+                let (k, v) = out.kv_at(&self.meta.model, layer, pos);
                 seq.append(layer, &mut self.pool, pos, k, v, self.cfg.pin_prefill, 0)?;
             }
         }
@@ -274,6 +292,23 @@ impl Engine {
     }
 }
 
+const NO_XLA_BACKEND: &str = "this build does not include the XLA/PJRT backend; rebuild \
+                              with `--features backend-xla` or run with `--backend sim`";
+
+#[cfg(feature = "backend-xla")]
+fn load_xla_backend(meta: &ArtifactMeta, caps: Option<&[usize]>) -> Result<Box<dyn Backend>> {
+    use crate::runtime::{ModelRuntime, RuntimeClient};
+    let client = RuntimeClient::cpu()?;
+    Ok(Box::new(ModelRuntime::load(&client, meta, caps)?))
+}
+
+/// Unreachable in practice — `Engine::build` bails first — but kept so the
+/// dispatch match stays total without feature-conditional arms.
+#[cfg(not(feature = "backend-xla"))]
+fn load_xla_backend(_meta: &ArtifactMeta, _caps: Option<&[usize]>) -> Result<Box<dyn Backend>> {
+    bail!("{NO_XLA_BACKEND}")
+}
+
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate() {
@@ -293,5 +328,30 @@ mod tests {
         assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
         assert_eq!(argmax(&[3.0]), 0);
         assert_eq!(argmax(&[1.0, 1.0]), 0, "ties break low");
+    }
+
+    #[test]
+    fn sim_engine_decodes_deterministically() {
+        let cfg = EngineConfig { budget: 128, ..Default::default() };
+        let mut e = Engine::new(cfg).unwrap();
+        let prompt = vec![1, 3, 13, 4];
+        let opts = GenOptions { max_new: 24, force_len: Some(24), ..Default::default() };
+        let a = e.generate(&prompt, &opts).unwrap();
+        let b = e.generate(&prompt, &opts).unwrap();
+        assert_eq!(a.tokens, b.tokens, "sim backend must be bit-deterministic");
+        assert_eq!(a.tokens.len(), 24);
+        assert!(a.tokens.iter().all(|&t| (t as usize) < e.meta.model.vocab));
+    }
+
+    #[test]
+    fn xla_backend_unavailable_is_a_clean_error() {
+        // Without `--features backend-xla` (and without artifacts on disk)
+        // requesting the PJRT backend must fail with a diagnostic, not panic.
+        let cfg = EngineConfig {
+            backend: BackendKind::Xla,
+            artifacts_dir: std::path::PathBuf::from("/nonexistent-artifacts"),
+            ..Default::default()
+        };
+        assert!(Engine::new(cfg).is_err());
     }
 }

@@ -12,7 +12,7 @@
 
 use anyhow::{bail, Result};
 
-use raas::config::{ArtifactMeta, EngineConfig, PolicyKind};
+use raas::config::{BackendKind, EngineConfig, PolicyKind};
 use raas::coordinator::batcher::BatcherConfig;
 use raas::coordinator::request::{Request, Response};
 use raas::coordinator::router::{RoutePolicy, Router};
@@ -70,21 +70,28 @@ fn print_help() {
          usage: raas <command> [--flags]\n\
          \n\
          commands:\n\
-           inspect     show artifact metadata (model, capacities, corpus)\n\
+           inspect     show model metadata (backend, capacities, corpus)\n\
            run         decode one sampled problem (--policy, --budget, --steps)\n\
-           sweep       real-model accuracy sweep (--policies, --budgets, --problems)\n\
+           sweep       model accuracy sweep (--policies, --budgets, --problems)\n\
            serve       multi-replica serving demo (--replicas, --requests, --rate)\n\
            fig1..fig9  regenerate the paper's figures (writes results/*.csv)\n\
          \n\
-         common flags: --artifacts DIR  --policy dense|sink|h2o|quest|raas\n\
-           --budget N  --alpha A  --seed S  --out results/"
+         common flags: --backend sim|xla  --artifacts DIR\n\
+           --policy dense|sink|h2o|quest|raas\n\
+           --budget N  --alpha A  --seed S  --out results/\n\
+         \n\
+         the default `sim` backend is a deterministic pure-Rust surrogate\n\
+         (no artifacts needed); `xla` drives the PJRT/HLO path and needs a\n\
+         build with --features backend-xla plus `make artifacts`.  Passing\n\
+         --artifacts without --backend implies `--backend xla`."
     );
 }
 
 fn inspect(args: &Args) -> Result<()> {
-    let dir = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let meta = ArtifactMeta::load(&dir)?;
-    println!("artifacts: {dir:?}");
+    let cfg = EngineConfig::from_args(args)?;
+    let meta = cfg.resolve_meta()?;
+    println!("backend: {}", cfg.backend);
+    println!("artifacts: {:?}", meta.dir);
     println!("model: {:?}", meta.model);
     println!("trained weights: {}", meta.trained);
     println!("page size: {}", meta.page_size);
@@ -115,8 +122,9 @@ fn run_one(args: &Args) -> Result<()> {
     println!("expected: {}", engine.tokenizer.decode(&p.encode_decode(&spec)));
     let got = engine.tokenizer.parse_answer(&out.tokens);
     println!(
-        "\npolicy={} budget={} → answer {:?} (expected {}), {} tokens, \
+        "\nbackend={} policy={} budget={} → answer {:?} (expected {}), {} tokens, \
          prefill {:.0} ms, decode {:.0} ms ({:.1} ms/token), peak KV {} bytes",
+        engine.cfg.backend,
         engine.policy_kind(),
         engine.cfg.budget,
         got,
@@ -130,13 +138,24 @@ fn run_one(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Real-model validation of the Figure-6 orderings: accuracy per policy ×
-/// budget on n sampled problems.
+/// End-to-end validation of the Figure-6 orderings: accuracy per policy ×
+/// budget on n sampled problems.  Absolute accuracies are only meaningful
+/// on the trained model (`--backend xla`); the sim surrogate cannot solve
+/// the task and the output says so.
 fn sweep(args: &Args) -> Result<()> {
     let n = args.usize_or("problems", 30);
     let budgets = args.usize_list_or("budgets", &[64, 128, 256]);
     let policies = args.str_list_or("policies", &["dense", "sink", "h2o", "quest", "raas"]);
     let out_dir = figures::common::results_dir(args.str_opt("out"))?;
+    // parse once: per-cell configs are clones with policy/budget overridden
+    let base_cfg = EngineConfig::from_args(args)?;
+    let backend = base_cfg.backend;
+    if backend == BackendKind::Sim {
+        println!(
+            "note: sweeping the `sim` surrogate backend — accuracies are not \
+             paper-comparable (pass --backend xla for the trained model)"
+        );
+    }
 
     let mut rows = Vec::new();
     let mut tbl = Vec::new();
@@ -144,7 +163,7 @@ fn sweep(args: &Args) -> Result<()> {
         let kind = PolicyKind::parse(pname)?;
         let mut line = vec![pname.clone()];
         for &budget in &budgets {
-            let mut cfg = EngineConfig::from_args(args)?;
+            let mut cfg = base_cfg.clone();
             cfg.policy = kind;
             cfg.budget = budget;
             let mut engine = Engine::new_with_capacities(cfg, &[64, 128, 256, 512, 2048])?;
@@ -176,9 +195,9 @@ fn sweep(args: &Args) -> Result<()> {
         }
         tbl.push(line);
     }
-    let path = out_dir.join("sweep_real_model.csv");
+    let path = out_dir.join(format!("sweep_{}.csv", backend.name()));
     figures::common::write_csv(&path, &["policy", "budget", "accuracy", "mean_decode_len"], &rows)?;
-    println!("\nreal-model accuracy sweep ({n} problems/cell):");
+    println!("\naccuracy sweep on the `{backend}` backend ({n} problems/cell):");
     let mut headers = vec!["policy"];
     let bs: Vec<String> = budgets.iter().map(|b| b.to_string()).collect();
     headers.extend(bs.iter().map(|s| s.as_str()));
@@ -205,7 +224,7 @@ fn serve(args: &Args) -> Result<()> {
                                 BatcherConfig { max_batch }, caps.clone())
         })
         .collect::<Result<_>>()?;
-    let meta = ArtifactMeta::load(&cfg.artifacts_dir)?;
+    let meta = cfg.resolve_meta()?;
     let spec = meta.corpus.clone();
     let mut router = Router::new(servers, route);
 

@@ -1,0 +1,124 @@
+//! The execution-backend abstraction: everything the engine needs from a
+//! model implementation, per decode step (DESIGN.md §4).
+//!
+//! Two implementations ship in-tree:
+//!
+//! * [`crate::runtime::SimBackend`] (default) — a deterministic, seeded
+//!   pure-Rust transformer surrogate.  No native dependencies; used by CI
+//!   and every figure harness that does not need trained weights.
+//! * `ModelRuntime` (`--features backend-xla`) — the PJRT/HLO-text runtime
+//!   over the AOT artifacts produced by `python/compile/aot.py`.
+//!
+//! The engine is written against this trait only; backends are selected at
+//! runtime through [`crate::config::BackendKind`].
+
+use anyhow::Result;
+
+use crate::config::ModelSpec;
+
+/// Output of one layer-qkv call.
+pub struct Qkv {
+    /// `[n_heads * head_dim]`, RoPE applied (or surrogate equivalent).
+    pub q: Vec<f32>,
+    /// `[n_kv_heads * head_dim]`, RoPE applied.
+    pub k: Vec<f32>,
+    /// `[n_kv_heads * head_dim]`.
+    pub v: Vec<f32>,
+}
+
+/// Output of a dense prefill call.
+pub struct PrefillOut {
+    /// `[n_layers][padded][kv_dim]` post-RoPE keys.
+    pub k: Vec<f32>,
+    /// `[n_layers][padded][kv_dim]` values.
+    pub v: Vec<f32>,
+    /// Next-token logits `[vocab]`.
+    pub logits: Vec<f32>,
+    /// Padded sequence length of the `k`/`v` buffers.
+    pub padded: usize,
+}
+
+impl PrefillOut {
+    /// Slice one (layer, position) KV vector out of the prefill buffers.
+    pub fn kv_at(&self, spec: &ModelSpec, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        let kv_dim = spec.n_kv_heads * spec.head_dim;
+        let stride_layer = self.padded * kv_dim;
+        let off = layer * stride_layer + pos * kv_dim;
+        (&self.k[off..off + kv_dim], &self.v[off..off + kv_dim])
+    }
+}
+
+/// A model execution backend.
+///
+/// The engine drives it per decode token, per layer:
+/// `embed_tok` → `layer_qkv` → (policy select + gather) → `layer_attn_mlp`
+/// → … → `lm_head`; prompts go through `prefill` in one call.
+pub trait Backend: std::fmt::Debug {
+    /// Short backend identifier (`"sim"`, `"xla"`).
+    fn name(&self) -> &'static str;
+
+    /// Architecture of the served model.
+    fn spec(&self) -> &ModelSpec;
+
+    /// Slot capacities this backend can attend over (informational; the
+    /// ladder of compiled kernel shapes for AOT backends).
+    fn capacities(&self) -> Vec<usize>;
+
+    /// Smallest supported slot capacity >= `n_slots`.
+    fn capacity_for(&self, n_slots: usize) -> Result<usize>;
+
+    /// token -> hidden `[d_model]`.
+    fn embed_tok(&self, token: u32) -> Result<Vec<f32>>;
+
+    /// hidden `[d_model]` + absolute position -> (q, k, v).
+    fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv>;
+
+    /// Attention over gathered slots + MLP.  `k_sel`/`v_sel` are
+    /// `[capacity * kv_dim]`, `valid` is `[capacity]`; returns hidden'
+    /// `[d_model]`.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
+                      k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>>;
+
+    /// hidden `[d_model]` -> logits `[vocab]`.
+    fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>>;
+
+    /// Dense prefill of `tokens`; returns per-layer post-RoPE KV for the
+    /// first `tokens.len()` positions plus next-token logits.
+    fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_kv_slicing() {
+        let spec = ModelSpec {
+            vocab: 8,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 2,
+            d_ff: 8,
+        };
+        let kv_dim = 2;
+        let padded = 3;
+        // k[layer][pos][c] = 100*layer + 10*pos + c
+        let mut k = Vec::new();
+        for layer in 0..2 {
+            for pos in 0..padded {
+                for c in 0..kv_dim {
+                    k.push((100 * layer + 10 * pos + c) as f32);
+                }
+            }
+        }
+        let out = PrefillOut { k: k.clone(), v: k, logits: vec![], padded };
+        let (ks, vs) = out.kv_at(&spec, 1, 2);
+        assert_eq!(ks, &[120.0, 121.0]);
+        assert_eq!(vs, &[120.0, 121.0]);
+        let (ks, _) = out.kv_at(&spec, 0, 0);
+        assert_eq!(ks, &[0.0, 1.0]);
+    }
+}

@@ -1,13 +1,30 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! decode hot path.  Python never runs here — the artifacts are
-//! self-contained (weights are HLO constants).
+//! Execution backends (DESIGN.md §4).
+//!
+//! [`Backend`] is the abstraction the engine drives on the decode hot path.
+//! The default implementation is [`SimBackend`], a deterministic pure-Rust
+//! transformer surrogate with zero native dependencies.  With
+//! `--features backend-xla` the PJRT runtime is also compiled: it loads the
+//! AOT HLO-text artifacts (weights are HLO constants — python never runs on
+//! the request path) through the `xla` crate.
 
-pub mod client;
-pub mod executable;
-pub mod model;
+pub mod backend;
+pub mod sim_backend;
 pub mod tokenizer;
 
-pub use client::RuntimeClient;
-pub use executable::Executable;
-pub use model::ModelRuntime;
+#[cfg(feature = "backend-xla")]
+pub mod client;
+#[cfg(feature = "backend-xla")]
+pub mod executable;
+#[cfg(feature = "backend-xla")]
+pub mod model;
+
+pub use backend::{Backend, PrefillOut, Qkv};
+pub use sim_backend::SimBackend;
 pub use tokenizer::Tokenizer;
+
+#[cfg(feature = "backend-xla")]
+pub use client::RuntimeClient;
+#[cfg(feature = "backend-xla")]
+pub use executable::Executable;
+#[cfg(feature = "backend-xla")]
+pub use model::ModelRuntime;

@@ -1,10 +1,12 @@
-//! The model runtime: the per-layer executable set and typed entry points
-//! the engine drives per decode step (DESIGN.md §2 dataflow).
+//! The PJRT model runtime: the per-layer executable set loaded from AOT
+//! HLO-text artifacts, exposed to the engine through the [`Backend`] trait
+//! (DESIGN.md §2 dataflow).  Compiled only with `--features backend-xla`.
 
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::backend::{Backend, PrefillOut, Qkv};
 use super::client::RuntimeClient;
 use super::executable::{lit_f32, lit_i32, Executable};
 use crate::config::{ArtifactMeta, ModelSpec};
@@ -19,21 +21,6 @@ pub struct ModelRuntime {
     attn_mlp: BTreeMap<usize, Vec<Executable>>,
     /// prefill size -> executable
     prefill: BTreeMap<usize, Executable>,
-}
-
-/// Output of one layer-qkv call.
-pub struct Qkv {
-    pub q: Vec<f32>, // [n_heads * head_dim], RoPE applied
-    pub k: Vec<f32>, // [n_kv * head_dim], RoPE applied
-    pub v: Vec<f32>, // [n_kv * head_dim]
-}
-
-pub struct PrefillOut {
-    /// [n_layers][prompt_len][kv_dim]
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
-    pub logits: Vec<f32>,
-    pub padded: usize,
 }
 
 impl ModelRuntime {
@@ -101,15 +88,35 @@ impl ModelRuntime {
     pub fn max_capacity(&self) -> usize {
         *self.attn_mlp.keys().last().unwrap()
     }
+}
+
+impl Backend for ModelRuntime {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn capacities(&self) -> Vec<usize> {
+        // inherent method (executable-ladder keys); inherent methods take
+        // precedence, so this does not recurse.
+        ModelRuntime::capacities(self)
+    }
+
+    fn capacity_for(&self, n_slots: usize) -> Result<usize> {
+        ModelRuntime::capacity_for(self, n_slots)
+    }
 
     /// token -> hidden [d]
-    pub fn embed_tok(&self, token: u32) -> Result<Vec<f32>> {
+    fn embed_tok(&self, token: u32) -> Result<Vec<f32>> {
         let out = self.embed.run_f32(&[lit_i32(&[token as i32], &[1])?])?;
         Ok(out.into_iter().next().unwrap())
     }
 
     /// hidden [d] + absolute position -> (q, k, v)
-    pub fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
+    fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
         let out = self.qkv[layer].run_f32(&[
             lit_f32(h, &[self.spec.d_model])?,
             lit_f32(&[pos as f32], &[1])?,
@@ -124,8 +131,8 @@ impl ModelRuntime {
 
     /// Attention over gathered slots + MLP.  `k_sel`/`v_sel` are
     /// [capacity * kv_dim], `valid` is [capacity]; returns hidden' [d].
-    pub fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
-                          k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
+    fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
+                      k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
         let s = &self.spec;
         let exes = self
             .attn_mlp
@@ -142,14 +149,14 @@ impl ModelRuntime {
     }
 
     /// hidden [d] -> logits [vocab]
-    pub fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
+    fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
         let out = self.lm_head.run_f32(&[lit_f32(h, &[self.spec.d_model])?])?;
         Ok(out.into_iter().next().unwrap())
     }
 
     /// Dense prefill of `tokens`; returns per-layer post-RoPE KV for the
     /// first `tokens.len()` positions plus next-token logits.
-    pub fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+    fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
         let n = tokens.len();
         let (&padded, exe) = self
             .prefill
@@ -172,15 +179,6 @@ impl ModelRuntime {
             padded,
         })
     }
-
-    /// Slice one (layer, position) KV vector out of a PrefillOut.
-    pub fn prefill_kv_at<'a>(&self, out: &'a PrefillOut, layer: usize, pos: usize)
-                             -> (&'a [f32], &'a [f32]) {
-        let kv_dim = self.spec.n_kv_heads * self.spec.head_dim;
-        let stride_layer = out.padded * kv_dim;
-        let off = layer * stride_layer + pos * kv_dim;
-        (&out.k[off..off + kv_dim], &out.v[off..off + kv_dim])
-    }
 }
 
 impl std::fmt::Debug for ModelRuntime {
@@ -189,7 +187,7 @@ impl std::fmt::Debug for ModelRuntime {
             f,
             "ModelRuntime(layers={}, capacities={:?}, prefill={:?})",
             self.spec.n_layers,
-            self.capacities(),
+            ModelRuntime::capacities(self),
             self.prefill.keys().collect::<Vec<_>>()
         )
     }

@@ -1,0 +1,484 @@
+//! `SimBackend` — a deterministic, seeded pure-Rust transformer surrogate.
+//!
+//! It is *not* a trained model: it is a stateless family of hash-derived
+//! feature functions chosen so that the engine observes the attention
+//! structure the paper documents (Figure 3) while staying fully
+//! reproducible and dependency-free:
+//!
+//! * every position `p` owns a pseudo-random unit feature `phi(layer, p)`;
+//!   keys are scaled copies of `phi`, so Quest-style representative bounds
+//!   recover query/position affinity faithfully;
+//! * queries mix `phi` directions with the weights of a
+//!   [`ModelProfile`](crate::sim::profiles::ModelProfile): a hot recency
+//!   window, a sink component, **milestone** components that decay like the
+//!   paper's waterfall (`milestone_hot * decay^(age/8)`), and periodic
+//!   **phoenix** re-lights of early (prompt-region) positions;
+//! * values and the post-attention mixing depend on the *gathered* KV, so
+//!   evicting a page genuinely changes downstream logits — sparsity
+//!   policies have end-to-end consequences, exactly as on the PJRT path.
+//!
+//! All functions are pure in `(seed, inputs)`: greedy decoding is
+//! bit-deterministic, which the integration suite relies on.
+
+use anyhow::{bail, Result};
+
+use super::backend::{Backend, PrefillOut, Qkv};
+use crate::config::{ArtifactMeta, ModelSpec};
+use crate::sim::profiles::{ModelProfile, MODELS};
+
+/// Period (in tokens) of milestone emission, mirroring the 9-token reasoning
+/// steps of the synthetic corpus (`workload::Problem::encode_decode`).
+const STEP_PERIOD: usize = 9;
+/// Offset of the milestone (emitted value) token within a step.
+const MILESTONE_OFFSET: usize = 7;
+/// Milestones older than this many steps contribute negligible mass.
+const MILESTONE_HORIZON: usize = 40;
+/// Key feature scale: spreads pre-softmax page scores enough that the
+/// waterfall survives `page_probs`' 1/sqrt(head_dim) temperature.
+const KEY_SCALE: f32 = 4.0;
+
+fn splitmix64(x: &mut u64) -> u64 {
+    *x = x.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Domain tags keep the feature families independent.
+const TAG_EMBED: u64 = 0xe1;
+const TAG_POS: u64 = 0xe2;
+const TAG_VAL: u64 = 0xe3;
+const TAG_OUT: u64 = 0xe4;
+const TAG_MIX: u64 = 0xe5;
+const TAG_NOISE: u64 = 0xe6;
+
+pub struct SimBackend {
+    spec: ModelSpec,
+    capacities: Vec<usize>,
+    seed: u64,
+    profile: ModelProfile,
+    /// Precomputed lm-head dictionary, `[vocab * d_model]` (hot path:
+    /// rebuilding it per decoded token is pure waste).
+    out_dirs: Vec<f32>,
+}
+
+impl SimBackend {
+    /// Build from artifact metadata (the sim default is
+    /// [`ArtifactMeta::sim_default`]); attention structure follows
+    /// `sim::profiles::MODELS[1]` (the qwen-math persona).
+    pub fn new(meta: &ArtifactMeta, seed: u64) -> SimBackend {
+        Self::with_capacities(meta, seed, &meta.capacities)
+    }
+
+    /// Restrict the advertised capacity ladder (mirrors
+    /// `ModelRuntime::load`'s `only_capacities`); unlike the AOT backend the
+    /// surrogate can serve any capacity, so the ladder only shapes padding.
+    pub fn with_capacities(meta: &ArtifactMeta, seed: u64, caps: &[usize]) -> SimBackend {
+        let mut capacities: Vec<usize> = caps.to_vec();
+        capacities.sort_unstable();
+        capacities.dedup();
+        let mut b = SimBackend {
+            spec: meta.model.clone(),
+            capacities,
+            seed,
+            profile: MODELS[1],
+            out_dirs: Vec::new(),
+        };
+        let mut dirs = Vec::with_capacity(b.spec.vocab * b.spec.d_model);
+        for t in 0..b.spec.vocab {
+            dirs.extend(b.feat(TAG_OUT, 0, t as u64, b.spec.d_model));
+        }
+        b.out_dirs = dirs;
+        b
+    }
+
+    /// Deterministic pseudo-random unit vector for `(tag, a, b)`.
+    fn feat(&self, tag: u64, a: u64, b: u64, dim: usize) -> Vec<f32> {
+        let mut x = self
+            .seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            ^ tag.wrapping_mul(0xd1342543de82ef95)
+            ^ a.wrapping_mul(0xaf251af3b0f025b5)
+            ^ b.wrapping_mul(0xb564ef22ec7aece5);
+        let mut v = Vec::with_capacity(dim);
+        let mut norm2 = 0.0f32;
+        for _ in 0..dim {
+            let r = splitmix64(&mut x);
+            // uniform in [-1, 1)
+            let f = ((r >> 11) as f64 * (2.0 / (1u64 << 53) as f64) - 1.0) as f32;
+            norm2 += f * f;
+            v.push(f);
+        }
+        let inv = 1.0 / norm2.sqrt().max(1e-12);
+        for f in v.iter_mut() {
+            *f *= inv;
+        }
+        v
+    }
+
+    /// Positional key/query dictionary entry `phi(layer, pos)` (head_dim).
+    fn phi(&self, layer: usize, pos: usize) -> Vec<f32> {
+        self.feat(TAG_POS, layer as u64, pos as u64, self.spec.head_dim)
+    }
+
+    /// The query direction at `(layer, pos)`: weighted sum of dictionary
+    /// entries reproducing recency + sink + waterfall + phoenix structure.
+    fn query_dir(&self, layer: usize, pos: usize) -> Vec<f32> {
+        let hd = self.spec.head_dim;
+        let mp = &self.profile;
+        let mut q = vec![0.0f32; hd];
+        let add = |dir: &[f32], w: f32, q: &mut Vec<f32>| {
+            for (qc, &dc) in q.iter_mut().zip(dir) {
+                *qc += w * dc;
+            }
+        };
+        // recency window: the active page stays hot
+        for a in 0..4usize {
+            let Some(p) = pos.checked_sub(a) else { break };
+            add(&self.phi(layer, p), 0.6f32.powi(a as i32), &mut q);
+        }
+        // sink mass on the first positions
+        add(&self.phi(layer, 0), 0.35, &mut q);
+        // waterfall: decaying attention to previously emitted milestones
+        if pos >= STEP_PERIOD {
+            let cur_step = pos / STEP_PERIOD;
+            let lo_step = cur_step.saturating_sub(MILESTONE_HORIZON);
+            for s in lo_step..cur_step {
+                let mpos = s * STEP_PERIOD + MILESTONE_OFFSET;
+                if mpos >= pos {
+                    continue;
+                }
+                let age = (pos - mpos) as f64;
+                let w = mp.milestone_hot * mp.decay.powf(age / 8.0);
+                if w > 1e-3 {
+                    add(&self.phi(layer, mpos), w as f32 * 2.0, &mut q);
+                }
+            }
+            // phoenix: mid-step, re-light an early (prompt-region) operand
+            let in_step = pos % STEP_PERIOD;
+            if in_step == STEP_PERIOD / 2 || in_step == STEP_PERIOD / 2 + 1 {
+                let ppos = 6 + 4 * (cur_step % 12);
+                if ppos < pos {
+                    add(&self.phi(layer, ppos), (mp.phoenix_hot * 2.0) as f32, &mut q);
+                }
+            }
+        }
+        // background noise so estimated scores are never exactly tied
+        add(&self.feat(TAG_NOISE, layer as u64, pos as u64, hd), mp.noise as f32, &mut q);
+        q
+    }
+
+    /// Shared residual mixing: rotate the hidden stream, fold in a
+    /// contribution vector (attention output on the decode path, the value
+    /// vector on the attention-free prefill path) and a per-layer bias,
+    /// then renormalise.
+    fn mix_hidden(&self, layer: usize, h: &[f32], contrib: &[f32]) -> Vec<f32> {
+        let d = self.spec.d_model;
+        let bias = self.feat(TAG_MIX, layer as u64, 0, d);
+        let clen = contrib.len();
+        let mut out = Vec::with_capacity(d);
+        let mut norm2 = 0.0f32;
+        for i in 0..d {
+            let sign = if (i / 2) % 2 == 0 { 1.0 } else { -1.0 };
+            let x = 0.7 * sign * h[(i + 1) % d] + 0.6 * contrib[i % clen] + 0.15 * bias[i];
+            norm2 += x * x;
+            out.push(x);
+        }
+        let inv = 1.0 / norm2.sqrt().max(1e-12);
+        for x in out.iter_mut() {
+            *x *= inv;
+        }
+        out
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn capacities(&self) -> Vec<usize> {
+        self.capacities.clone()
+    }
+
+    fn capacity_for(&self, n_slots: usize) -> Result<usize> {
+        if let Some(&c) = self.capacities.iter().find(|&&c| c >= n_slots) {
+            return Ok(c);
+        }
+        // the surrogate attends any width: fall through to a padded size
+        Ok((n_slots.max(1) + 63) / 64 * 64)
+    }
+
+    fn embed_tok(&self, token: u32) -> Result<Vec<f32>> {
+        if (token as usize) >= self.spec.vocab {
+            bail!("token {token} out of vocab {}", self.spec.vocab);
+        }
+        Ok(self.feat(TAG_EMBED, 0, token as u64, self.spec.d_model))
+    }
+
+    fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
+        let s = &self.spec;
+        let hd = s.head_dim;
+        let kv_dim = s.n_kv_heads * hd;
+        // keys: the positional dictionary entry, shared across kv heads
+        let phi = self.phi(layer, pos);
+        let mut k = Vec::with_capacity(kv_dim);
+        for _ in 0..s.n_kv_heads {
+            k.extend(phi.iter().map(|&c| c * KEY_SCALE));
+        }
+        // queries: structured direction, shared across query heads
+        let qdir = self.query_dir(layer, pos);
+        let mut q = Vec::with_capacity(s.n_heads * hd);
+        for _ in 0..s.n_heads {
+            q.extend_from_slice(&qdir);
+        }
+        // values: positional feature tinted by the current hidden state, so
+        // attended history influences downstream computation
+        let val = self.feat(TAG_VAL, layer as u64, pos as u64, kv_dim);
+        let mut v = Vec::with_capacity(kv_dim);
+        for (i, &b) in val.iter().enumerate() {
+            v.push(0.8 * b + 0.2 * h[i % h.len()]);
+        }
+        Ok(Qkv { q, k, v })
+    }
+
+    fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
+                      k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let hd = s.head_dim;
+        let kv_dim = s.n_kv_heads * hd;
+        let group = s.n_heads / s.n_kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut attn = vec![0.0f32; s.n_heads * hd];
+        let mut scores = vec![0.0f32; capacity];
+        for head in 0..s.n_heads {
+            let g = head / group;
+            let qh = &q[head * hd..(head + 1) * hd];
+            let mut max = f32::NEG_INFINITY;
+            for slot in 0..capacity {
+                if valid[slot] < 0.5 {
+                    scores[slot] = f32::NEG_INFINITY;
+                    continue;
+                }
+                let ks = &k_sel[slot * kv_dim + g * hd..slot * kv_dim + (g + 1) * hd];
+                let mut dot = 0.0f32;
+                for c in 0..hd {
+                    dot += qh[c] * ks[c];
+                }
+                let sc = dot * scale;
+                scores[slot] = sc;
+                if sc > max {
+                    max = sc;
+                }
+            }
+            if max == f32::NEG_INFINITY {
+                continue; // nothing valid: attention contributes nothing
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                if *sc > f32::NEG_INFINITY {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                } else {
+                    *sc = 0.0;
+                }
+            }
+            let out = &mut attn[head * hd..(head + 1) * hd];
+            for slot in 0..capacity {
+                let w = scores[slot] / denom;
+                if w == 0.0 {
+                    continue;
+                }
+                let vs = &v_sel[slot * kv_dim + g * hd..slot * kv_dim + (g + 1) * hd];
+                for c in 0..hd {
+                    out[c] += w * vs[c];
+                }
+            }
+        }
+        // deterministic residual mixing, sensitive to which pages were
+        // attended (and therefore to eviction decisions)
+        Ok(self.mix_hidden(layer, h, &attn))
+    }
+
+    fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let d = s.d_model;
+        let mut logits = Vec::with_capacity(s.vocab);
+        for t in 0..s.vocab {
+            let dir = &self.out_dirs[t * d..(t + 1) * d];
+            let mut dot = 0.0f32;
+            for (a, b) in h.iter().zip(dir) {
+                dot += a * b;
+            }
+            logits.push(dot * 8.0);
+        }
+        Ok(logits)
+    }
+
+    fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        let s = &self.spec;
+        let n = tokens.len();
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        let mut k = vec![0.0f32; s.n_layers * n * kv_dim];
+        let mut v = vec![0.0f32; s.n_layers * n * kv_dim];
+        let mut logits = Vec::new();
+        for (pos, &tok) in tokens.iter().enumerate() {
+            let mut h = self.embed_tok(tok)?;
+            for layer in 0..s.n_layers {
+                let qkv = self.layer_qkv(layer, &h, pos)?;
+                let off = layer * n * kv_dim + pos * kv_dim;
+                k[off..off + kv_dim].copy_from_slice(&qkv.k);
+                v[off..off + kv_dim].copy_from_slice(&qkv.v);
+                // attention-free hidden update: prefill hiddens only shape
+                // the first decoded token, decode re-derives h per token
+                h = self.mix_hidden(layer, &h, &qkv.v);
+            }
+            if pos == n - 1 {
+                logits = self.lm_head(&h)?;
+            }
+        }
+        Ok(PrefillOut { k, v, logits, padded: n })
+    }
+}
+
+impl std::fmt::Debug for SimBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SimBackend(layers={}, d_model={}, seed={}, profile={})",
+            self.spec.n_layers, self.spec.d_model, self.seed, self.profile.name
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> SimBackend {
+        SimBackend::new(&ArtifactMeta::sim_default(), 0)
+    }
+
+    #[test]
+    fn deterministic_and_unit_norm() {
+        let b = backend();
+        let a = b.embed_tok(5).unwrap();
+        let c = b.embed_tok(5).unwrap();
+        assert_eq!(a, c);
+        let n2: f32 = a.iter().map(|x| x * x).sum();
+        assert!((n2 - 1.0).abs() < 1e-4, "embed norm {n2}");
+        assert_ne!(a, b.embed_tok(6).unwrap());
+    }
+
+    #[test]
+    fn seeds_produce_different_models() {
+        let meta = ArtifactMeta::sim_default();
+        let a = SimBackend::new(&meta, 1).embed_tok(3).unwrap();
+        let b = SimBackend::new(&meta, 2).embed_tok(3).unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn qkv_shapes() {
+        let b = backend();
+        let s = b.spec().clone();
+        let h = b.embed_tok(1).unwrap();
+        let qkv = b.layer_qkv(0, &h, 3).unwrap();
+        assert_eq!(qkv.q.len(), s.n_heads * s.head_dim);
+        assert_eq!(qkv.k.len(), s.n_kv_heads * s.head_dim);
+        assert_eq!(qkv.v.len(), s.n_kv_heads * s.head_dim);
+    }
+
+    #[test]
+    fn waterfall_structure_in_scores() {
+        // q(t) · k(p), averaged over layers and reasoning steps to wash out
+        // the random-dictionary crosstalk: the active position scores above
+        // a freshly emitted milestone, which scores above a long-faded one.
+        let b = backend();
+        let spec = b.spec().clone();
+        let hd = spec.head_dim;
+        let h = b.embed_tok(1).unwrap();
+        let (mut fresh, mut stale, mut active) = (0.0f32, 0.0f32, 0.0f32);
+        let mut n = 0.0f32;
+        for layer in 0..spec.n_layers {
+            for s in [10usize, 12, 14, 16] {
+                // mid-step position: the step-(s-1) milestone is 5 tokens
+                // back — outside the recency window, inside the waterfall
+                let t = s * STEP_PERIOD + 3;
+                let q = b.layer_qkv(layer, &h, t).unwrap().q;
+                let score = |p: usize| -> f32 {
+                    let k = b.layer_qkv(layer, &h, p).unwrap().k;
+                    (0..hd).map(|c| q[c] * k[c]).sum()
+                };
+                fresh += score((s - 1) * STEP_PERIOD + MILESTONE_OFFSET);
+                stale += score(2 * STEP_PERIOD + MILESTONE_OFFSET);
+                active += score(t);
+                n += 1.0;
+            }
+        }
+        let (fresh, stale, active) = (fresh / n, stale / n, active / n);
+        assert!(active > fresh + 0.3, "active {active} vs fresh milestone {fresh}");
+        assert!(fresh > stale + 0.3, "fresh {fresh} vs stale milestone {stale}");
+    }
+
+    #[test]
+    fn attention_responds_to_values() {
+        // Two different gathered value sets must yield different hiddens —
+        // eviction has end-to-end consequences.
+        let b = backend();
+        let s = b.spec().clone();
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        let h = b.embed_tok(2).unwrap();
+        let qkv = b.layer_qkv(0, &h, 4).unwrap();
+        let cap = 4;
+        let mut k_sel = vec![0.0f32; cap * kv_dim];
+        let mut v1 = vec![0.0f32; cap * kv_dim];
+        let mut v2 = vec![0.0f32; cap * kv_dim];
+        let valid = vec![1.0f32, 1.0, 0.0, 0.0];
+        k_sel[..kv_dim].copy_from_slice(&qkv.k);
+        v1[..kv_dim].copy_from_slice(&qkv.v);
+        for (i, x) in v2.iter_mut().enumerate().take(kv_dim) {
+            *x = (i as f32 * 0.1).sin();
+        }
+        let h1 = b.layer_attn_mlp(0, cap, &h, &qkv.q, &k_sel, &v1, &valid).unwrap();
+        let h2 = b.layer_attn_mlp(0, cap, &h, &qkv.q, &k_sel, &v2, &valid).unwrap();
+        assert_ne!(h1, h2);
+        let n2: f32 = h1.iter().map(|x| x * x).sum();
+        assert!((n2 - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn prefill_matches_decode_keys() {
+        // Keys are purely positional: prefill and a hypothetical decode of
+        // the same position agree, so RepBounds stay consistent.
+        let b = backend();
+        let toks = [1u32, 3, 4, 5, 9];
+        let out = b.prefill(&toks).unwrap();
+        let spec = b.spec().clone();
+        let h = b.embed_tok(toks[2]).unwrap();
+        let qkv = b.layer_qkv(1, &h, 2).unwrap();
+        let (k, _) = out.kv_at(&spec, 1, 2);
+        assert_eq!(k, &qkv.k[..]);
+        assert_eq!(out.padded, 5);
+        assert_eq!(out.logits.len(), spec.vocab);
+    }
+
+    #[test]
+    fn capacity_ladder_and_fallback() {
+        let b = backend();
+        let caps = b.capacities();
+        assert!(!caps.is_empty());
+        assert_eq!(b.capacity_for(1).unwrap(), caps[0]);
+        // beyond the ladder: padded fallback instead of an error
+        let huge = caps.last().unwrap() + 1;
+        assert!(b.capacity_for(huge).unwrap() >= huge);
+    }
+}

@@ -1,0 +1,227 @@
+//! Serving-layer integration over the `SimBackend`: continuous batcher +
+//! `EngineBackend` + RaaS under pool pressure — `milestone_lifecycle` at the
+//! serving layer.  Admits N sequences, forces long decodes, and asserts that
+//! RaaS evicts the oldest-stamp unpinned pages while pinned prefill pages
+//! stay resident and per-layer residency respects the budget.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::Result;
+use raas::config::{EngineConfig, PolicyKind};
+use raas::coordinator::batcher::{Batcher, BatcherConfig, StepBackend};
+use raas::coordinator::request::{Request, Response};
+use raas::coordinator::server::EngineBackend;
+use raas::engine::Engine;
+use raas::kvcache::page::PageMeta;
+use raas::kvcache::SeqCache;
+use raas::util::rng::Rng;
+use raas::workload::Problem;
+
+/// Wraps the real `EngineBackend` and checks layer-0 page-table invariants
+/// around every decode step.
+struct Instrumented {
+    inner: EngineBackend,
+    budget: usize,
+    page_size: usize,
+    /// When true, assert strict oldest-stamp (FIFO-under-frozen-stamps)
+    /// eviction order — sound only when alpha > 1 freezes non-active stamps.
+    strict_order: bool,
+    evictions: usize,
+    max_resident_l0: usize,
+}
+
+impl Instrumented {
+    fn new(engine: Engine, pages_per_seq_estimate: usize, strict_order: bool) -> Self {
+        let budget = engine.cfg.budget;
+        let page_size = engine.meta.page_size;
+        Instrumented {
+            inner: EngineBackend { engine, pages_per_seq_estimate },
+            budget,
+            page_size,
+            strict_order,
+            evictions: 0,
+            max_resident_l0: 0,
+        }
+    }
+
+    fn check_step(&mut self, before: &[PageMeta], after: &[PageMeta]) {
+        // 1. pinned prefill pages survive every step
+        for p in before.iter().filter(|p| p.pinned) {
+            assert!(
+                after.iter().any(|q| q.pinned && q.start_pos == p.start_pos),
+                "pinned prefill page @{} was evicted",
+                p.start_pos
+            );
+        }
+        // 2. evicted pages (identified by start_pos: positions are never
+        //    reused) are unpinned and never the active page
+        let active_start = before.last().map(|p| p.start_pos);
+        let evicted: Vec<&PageMeta> = before
+            .iter()
+            .filter(|p| !after.iter().any(|q| q.start_pos == p.start_pos))
+            .collect();
+        for ev in &evicted {
+            assert!(!ev.pinned, "evicted a pinned page @{}", ev.start_pos);
+            assert_ne!(Some(ev.start_pos), active_start, "evicted the active page");
+        }
+        // 3. strict mode: the evicted set must be exactly the oldest-stamp
+        //    (and, by monotonicity, oldest-position) unpinned pages
+        if self.strict_order && !evicted.is_empty() {
+            let min_surviving = after
+                .iter()
+                .filter(|q| !q.pinned)
+                .map(|q| q.start_pos)
+                .min()
+                .unwrap_or(usize::MAX);
+            let min_surviving_stamp = after
+                .iter()
+                .filter(|q| !q.pinned && before.iter().any(|p| p.start_pos == q.start_pos))
+                .map(|q| q.last_stamp)
+                .min()
+                .unwrap_or(u64::MAX);
+            for ev in &evicted {
+                assert!(
+                    ev.start_pos < min_surviving,
+                    "evicted @{} but older unpinned page @{} survived",
+                    ev.start_pos,
+                    min_surviving
+                );
+                assert!(
+                    ev.last_stamp <= min_surviving_stamp,
+                    "evicted stamp {} newer than surviving stamp {}",
+                    ev.last_stamp,
+                    min_surviving_stamp
+                );
+            }
+        }
+        self.evictions += evicted.len();
+        // 4. budget respected (one page of slack for the active page)
+        let resident: usize = after.iter().map(|p| p.len).sum();
+        assert!(
+            resident <= self.budget + self.page_size,
+            "layer-0 resident {resident} exceeds budget {} + page", self.budget
+        );
+        self.max_resident_l0 = self.max_resident_l0.max(resident);
+    }
+}
+
+impl StepBackend for Instrumented {
+    type Seq = SeqCache;
+
+    fn begin(&mut self, prompt: &[u32]) -> Result<(SeqCache, u32)> {
+        self.inner.begin(prompt)
+    }
+
+    fn step(&mut self, seq: &mut SeqCache, token: u32, now: u64) -> Result<u32> {
+        let before: Vec<PageMeta> = seq.layers[0].table.clone();
+        let tok = self.inner.step(seq, token, now)?;
+        let after: Vec<PageMeta> = seq.layers[0].table.clone();
+        self.check_step(&before, &after);
+        Ok(tok)
+    }
+
+    fn finish(&mut self, seq: SeqCache) {
+        self.inner.finish(seq)
+    }
+
+    fn is_eos(&self, _token: u32) -> bool {
+        false // force full-length decodes so pool pressure builds
+    }
+
+    fn has_capacity(&self, active: usize) -> bool {
+        self.inner.has_capacity(active)
+    }
+}
+
+fn mk_engine(alpha: f64, budget: usize, pool_pages: usize) -> Engine {
+    let cfg = EngineConfig {
+        policy: PolicyKind::Raas,
+        alpha,
+        budget,
+        pool_pages,
+        ..Default::default()
+    };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+fn submit_problems(b: &mut Batcher<Instrumented>, n: u64, max_new: usize,
+                   tx: &std::sync::mpsc::Sender<Response>) {
+    let spec = b.backend.inner.engine.meta.corpus.clone();
+    let mut rng = Rng::new(17);
+    for id in 0..n {
+        let p = Problem::sample(&mut rng, &spec, Some(8));
+        b.submit(Request {
+            id,
+            prompt: p.encode_prompt(&spec),
+            max_new,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        });
+    }
+}
+
+#[test]
+fn raas_serving_evicts_oldest_stamp_first() {
+    // alpha > 1 freezes every non-active stamp (estimated probabilities are
+    // <= 1), so eviction order is exactly oldest-stamp == oldest-position;
+    // the strict per-step checks in `Instrumented` verify it.
+    let engine = mk_engine(2.0, 96, 512);
+    let mut b = Batcher::new(
+        Instrumented::new(engine, 16, true),
+        BatcherConfig { max_batch: 1 },
+    );
+    let (tx, rx) = channel::<Response>();
+    submit_problems(&mut b, 1, 160, &tx);
+    b.run_to_completion();
+    drop(tx);
+
+    let resp: Vec<Response> = rx.iter().collect();
+    assert_eq!(resp.len(), 1);
+    assert!(resp[0].error.is_none(), "decode failed: {:?}", resp[0].error);
+    assert_eq!(resp[0].tokens.len(), 160);
+    assert!(
+        b.backend.evictions > 0,
+        "160 decode tokens against a 96-token budget must evict"
+    );
+    // everything returned to the pool once the sequence finished
+    assert_eq!(b.backend.inner.engine.pool().allocated_pages(), 0);
+}
+
+#[test]
+fn pool_pressure_batch_keeps_prefill_resident_and_bounded() {
+    // N concurrent sequences share one pool under the default RaaS alpha:
+    // prefill pages stay pinned+resident, per-layer residency respects the
+    // budget, and the batcher conserves requests.
+    let n_seqs = 4u64;
+    let engine = mk_engine(1e-4, 96, 192); // tight: ~48 pages/seq steady state
+    let mut b = Batcher::new(
+        Instrumented::new(engine, 40, false),
+        BatcherConfig { max_batch: n_seqs as usize },
+    );
+    let (tx, rx) = channel::<Response>();
+    submit_problems(&mut b, n_seqs, 120, &tx);
+    b.run_to_completion();
+    drop(tx);
+
+    let mut resp: Vec<Response> = rx.iter().collect();
+    resp.sort_by_key(|r| r.id);
+    assert_eq!(resp.len(), n_seqs as usize, "all requests answered");
+    for r in &resp {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(r.tokens.len(), 120);
+    }
+    assert!(b.backend.evictions > 0, "pool pressure must force evictions");
+    assert!(
+        b.backend.max_resident_l0 <= 96 + 16,
+        "residency blew the budget: {}",
+        b.backend.max_resident_l0
+    );
+    let pool = b.backend.inner.engine.pool();
+    assert_eq!(pool.allocated_pages(), 0, "sequences must release their pages");
+    assert!(
+        pool.high_water_pages() > 0 && pool.high_water_pages() <= 192,
+        "high water {} outside pool bounds",
+        pool.high_water_pages()
+    );
+}
