@@ -59,6 +59,24 @@ fn main() {
         });
     }
 
+    // queue pressure: deep FIFO drained through 8 slots — admission must
+    // stay O(1) per pop (VecDeque; a Vec::remove(0) queue was O(n²) here)
+    b.bench("batcher/queue_pressure/1024reqs", || {
+        let (tx, _rx) = channel();
+        let mut batcher = Batcher::new(NullBackend, BatcherConfig { max_batch: 8 });
+        for id in 0..1024u64 {
+            batcher.submit(Request {
+                id,
+                prompt: vec![1],
+                max_new: 4,
+                submitted: Instant::now(),
+                reply: tx.clone(),
+            });
+        }
+        batcher.run_to_completion();
+        batcher.completed
+    });
+
     std::fs::create_dir_all("results").ok();
     b.dump_json("results/bench_batcher_router.json").ok();
     println!("\nwrote results/bench_batcher_router.json");

@@ -1,0 +1,174 @@
+//! End-to-end decode throughput: the pre-batching serving loop (one
+//! `Engine::decode_step` per sequence per iteration) vs the batched path
+//! (`Engine::decode_batch`) at batch sizes 1/4/8 on the sim backend.
+//!
+//!     cargo bench --bench decode_throughput              # full run
+//!     cargo bench --bench decode_throughput -- --test    # CI smoke (--quick works too)
+//!
+//! Writes `results/BENCH_decode_throughput.json` (uploaded by CI next to
+//! the policy-overhead artifact).  Acceptance (ISSUE 2): batched batch-8
+//! total tokens/sec must be >= 2x the sequential batch-1 per-sequence
+//! throughput — the phi feature memo plus shared score/softmax dispatch
+//! is what buys the amortization.
+//!
+//! The workload co-schedules same-length, distinct-content prompts (the
+//! continuous batcher admits prefill-first, so co-resident sequences
+//! typically sit at aligned positions): content differs per sequence, so
+//! value aggregation and lm-head stay per-item work; positions align, so
+//! the position-pure score/softmax work is shared.
+
+use std::time::Instant;
+
+use raas::config::{ArtifactMeta, CorpusSpec, EngineConfig, PolicyKind};
+use raas::engine::{BatchEntry, Engine};
+use raas::kvcache::SeqCache;
+use raas::util::json::Json;
+use raas::util::rng::Rng;
+use raas::util::stats::Summary;
+use raas::workload::Problem;
+
+const BUDGET: usize = 192;
+
+fn engine() -> Engine {
+    let cfg = EngineConfig { policy: PolicyKind::Raas, budget: BUDGET, ..Default::default() };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+/// `b` same-length prompts with distinct digit content: co-positioned
+/// (maximal legitimate sharing) but different hidden states per sequence.
+fn make_prompts(b: usize, spec: &CorpusSpec, rng: &mut Rng) -> Vec<Vec<u32>> {
+    let base = Problem::sample(rng, spec, Some(8)).encode_prompt(spec);
+    (0..b)
+        .map(|i| {
+            let mut p = base.clone();
+            let mut k = 0u32;
+            for t in p.iter_mut() {
+                if *t >= spec.dig0 && *t < spec.dig0 + 10 {
+                    *t = spec.dig0 + (*t - spec.dig0 + i as u32 + k) % 10;
+                    k += 1;
+                }
+            }
+            p
+        })
+        .collect()
+}
+
+fn prefill_all(e: &mut Engine, prompts: &[Vec<u32>]) -> (Vec<SeqCache>, Vec<u32>) {
+    let mut seqs = Vec::with_capacity(prompts.len());
+    let mut toks = Vec::with_capacity(prompts.len());
+    for p in prompts {
+        let mut s = e.new_seq();
+        toks.push(e.prefill_seq(&mut s, p).expect("prefill"));
+        seqs.push(s);
+    }
+    (seqs, toks)
+}
+
+/// One timed run: prefill outside the timer, `steps` decode iterations
+/// inside.  Returns decode wall seconds.
+fn run_once(e: &mut Engine, prompts: &[Vec<u32>], steps: usize, batched: bool) -> f64 {
+    let (mut seqs, mut toks) = prefill_all(e, prompts);
+    let t0 = Instant::now();
+    if batched {
+        for step in 1..=steps {
+            let mut entries: Vec<BatchEntry<'_>> = seqs
+                .iter_mut()
+                .enumerate()
+                .map(|(i, seq)| BatchEntry::new(seq, toks[i], step as u64))
+                .collect();
+            let results = e.decode_batch(&mut entries);
+            drop(entries);
+            for (tok, r) in toks.iter_mut().zip(results) {
+                *tok = r.expect("batched decode");
+            }
+        }
+    } else {
+        for step in 1..=steps {
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                toks[i] = e.decode_step(seq, toks[i], step as u64, None).expect("decode");
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    for mut s in seqs {
+        e.release_seq(&mut s);
+    }
+    secs
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    let (steps, iters, warmup) = if quick { (48, 4, 1) } else { (160, 12, 2) };
+    let mut rng = Rng::new(7);
+
+    println!(
+        "{:<26} {:>6} {:>8} {:>12} {:>14}",
+        "benchmark", "batch", "steps", "mean", "tokens/sec"
+    );
+    println!("{}", "-".repeat(70));
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut rates: Vec<(String, usize, f64)> = Vec::new();
+    for &b in &[1usize, 4, 8] {
+        // both modes measure the exact same prompts (before/after fairness)
+        let spec = ArtifactMeta::sim_default().corpus;
+        let prompts = make_prompts(b, &spec, &mut rng);
+        for &batched in &[false, true] {
+            let mode = if batched { "batched" } else { "sequential" };
+            // fresh engine per series: memo warm-up happens in the warmup
+            // iterations, so both modes measure steady-state throughput
+            let mut e = engine();
+            for _ in 0..warmup {
+                run_once(&mut e, &prompts, steps, batched);
+            }
+            let mut s = Summary::new();
+            for _ in 0..iters {
+                s.add(run_once(&mut e, &prompts, steps, batched));
+            }
+            let tokens = (b * steps) as f64;
+            let toks_per_sec = tokens / s.mean();
+            println!(
+                "{:<26} {:>6} {:>8} {:>9.2} ms {:>14.0}",
+                format!("decode/{mode}/b{b}"),
+                b,
+                steps,
+                s.mean() * 1e3,
+                toks_per_sec
+            );
+            rows.push(Json::obj(vec![
+                ("name", Json::str(format!("decode/{mode}/b{b}"))),
+                ("mode", Json::str(mode)),
+                ("batch", Json::from(b)),
+                ("steps", Json::from(steps)),
+                ("iters", Json::from(s.count())),
+                ("mean_secs", Json::from(s.mean())),
+                ("p50_secs", Json::from(s.percentile(50.0))),
+                ("min_secs", Json::from(s.min())),
+                ("tokens_per_sec", Json::from(toks_per_sec)),
+            ]));
+            rates.push((mode.to_string(), b, toks_per_sec));
+        }
+    }
+
+    let rate = |mode: &str, b: usize| {
+        rates
+            .iter()
+            .find(|(m, bb, _)| m == mode && *bb == b)
+            .map(|&(_, _, r)| r)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup = rate("batched", 8) / rate("sequential", 1);
+    println!("\nbatched-b8 vs sequential-b1 per-sequence throughput: {speedup:.2}x (target >= 2.0)");
+    rows.push(Json::obj(vec![
+        ("name", Json::str("summary")),
+        ("speedup_batched_b8_vs_sequential_b1", Json::from(speedup)),
+        ("speedup_batched_b4_vs_sequential_b1", Json::from(rate("batched", 4) / rate("sequential", 1))),
+        ("speedup_batched_b1_vs_sequential_b1", Json::from(rate("batched", 1) / rate("sequential", 1))),
+        ("target", Json::from(2.0)),
+    ]));
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/BENCH_decode_throughput.json", Json::Arr(rows).to_string())
+        .expect("write results/BENCH_decode_throughput.json");
+    println!("wrote results/BENCH_decode_throughput.json");
+}

@@ -5,11 +5,22 @@
 //! testable without AOT artifacts; the real backend is [`crate::engine::Engine`]
 //! via [`super::server::EngineBackend`].
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use super::request::{Request, Response};
+
+/// One sequence's slot in a batched scheduler iteration
+/// ([`StepBackend::step_batch`]).
+pub struct StepItem<'a, S> {
+    pub seq: &'a mut S,
+    /// The token decoded this iteration (last step's output).
+    pub token: u32,
+    /// Per-sequence step counter.
+    pub now: u64,
+}
 
 /// What the batcher needs from an inference engine.
 pub trait StepBackend {
@@ -18,6 +29,15 @@ pub trait StepBackend {
     fn begin(&mut self, prompt: &[u32]) -> Result<(Self::Seq, u32)>;
     /// One decode step; `now` is the per-sequence step counter.
     fn step(&mut self, seq: &mut Self::Seq, token: u32, now: u64) -> Result<u32>;
+    /// One decode iteration across several sequences; returns one result
+    /// per item, index-aligned.  The default decodes item by item;
+    /// engines with a batched fast path override it
+    /// (`EngineBackend::step_batch` → `Engine::decode_batch`), which is
+    /// how the serving loop amortizes per-iteration dispatch across the
+    /// whole batch.
+    fn step_batch(&mut self, items: &mut [StepItem<'_, Self::Seq>]) -> Vec<Result<u32>> {
+        items.iter_mut().map(|it| self.step(it.seq, it.token, it.now)).collect()
+    }
     /// Release sequence resources.
     fn finish(&mut self, seq: Self::Seq);
     fn is_eos(&self, token: u32) -> bool;
@@ -51,17 +71,20 @@ pub struct Batcher<B: StepBackend> {
     pub backend: B,
     cfg: BatcherConfig,
     active: Vec<Active<B::Seq>>,
-    queue: Vec<Request>,
+    /// FIFO admission queue.  `VecDeque`: admission pops the front every
+    /// iteration, and a `Vec::remove(0)` here is O(n²) under queue
+    /// pressure.
+    queue: VecDeque<Request>,
     pub completed: u64,
 }
 
 impl<B: StepBackend> Batcher<B> {
     pub fn new(backend: B, cfg: BatcherConfig) -> Self {
-        Batcher { backend, cfg, active: Vec::new(), queue: Vec::new(), completed: 0 }
+        Batcher { backend, cfg, active: Vec::new(), queue: VecDeque::new(), completed: 0 }
     }
 
     pub fn submit(&mut self, req: Request) {
-        self.queue.push(req);
+        self.queue.push_back(req);
     }
 
     pub fn pending(&self) -> usize {
@@ -75,7 +98,7 @@ impl<B: StepBackend> Batcher<B> {
             && self.active.len() < self.cfg.max_batch
             && self.backend.has_capacity(self.active.len())
         {
-            let req = self.queue.remove(0);
+            let req = self.queue.pop_front().expect("queue non-empty");
             let t0 = Instant::now();
             match self.backend.begin(&req.prompt) {
                 Ok((seq, token)) => {
@@ -98,11 +121,15 @@ impl<B: StepBackend> Batcher<B> {
         }
     }
 
-    /// One scheduler iteration: admit, then one decode step per active
-    /// sequence (round-robin).  Returns the number of decode steps taken.
+    /// One scheduler iteration: admit, retire finished sequences, then ONE
+    /// batched decode call across every remaining active sequence
+    /// ([`StepBackend::step_batch`] — the engine amortizes per-iteration
+    /// dispatch across the batch).  Returns the number of decode steps
+    /// taken.
     pub fn tick(&mut self) -> usize {
         self.admit();
-        let mut steps = 0;
+        // deliver the tokens produced last iteration; retire sequences
+        // that hit EOS or their length cap so they free their batch slot
         let mut i = 0;
         while i < self.active.len() {
             let a = &mut self.active[i];
@@ -124,14 +151,42 @@ impl<B: StepBackend> Batcher<B> {
                 continue; // i now points at the next sequence
             }
             a.step += 1;
-            match self.backend.step(&mut a.seq, a.token, a.step) {
+            i += 1;
+        }
+        if self.active.is_empty() {
+            return 0;
+        }
+        // one batched iteration over the survivors
+        let mut items: Vec<StepItem<'_, B::Seq>> = self
+            .active
+            .iter_mut()
+            .map(|a| StepItem { seq: &mut a.seq, token: a.token, now: a.step })
+            .collect();
+        let mut results = self.backend.step_batch(&mut items);
+        drop(items);
+        // Hard contract, not a debug_assert: a misbehaving backend must not
+        // panic the replica thread (extra results) or stall sequences on a
+        // stale token forever (missing results).
+        let got = results.len();
+        if got != self.active.len() {
+            results.truncate(self.active.len());
+            while results.len() < self.active.len() {
+                results.push(Err(anyhow::anyhow!(
+                    "step_batch returned {got} results for {} sequences",
+                    self.active.len()
+                )));
+            }
+        }
+        let mut steps = 0;
+        // apply back-to-front so error removals keep earlier indices valid
+        for (idx, r) in results.into_iter().enumerate().rev() {
+            match r {
                 Ok(next) => {
-                    a.token = next;
+                    self.active[idx].token = next;
                     steps += 1;
-                    i += 1;
                 }
                 Err(e) => {
-                    let a = self.active.remove(i);
+                    let a = self.active.remove(idx);
                     let resp =
                         Response::err(a.req.id, a.req.submitted, format!("decode: {e:#}"));
                     self.backend.finish(a.seq);
@@ -257,6 +312,53 @@ mod tests {
         b.tick();
         assert_eq!(b.backend.begun, 2, "only 2 admitted");
         assert_eq!(b.pending(), 5);
+    }
+
+    /// Records admission order; every sequence decodes one token then EOS,
+    /// so slots churn and admission happens in many partial waves.
+    struct OrderBackend {
+        order: Vec<u64>,
+        capacity: usize,
+    }
+
+    impl StepBackend for OrderBackend {
+        type Seq = ();
+        fn begin(&mut self, prompt: &[u32]) -> Result<((), u32)> {
+            self.order.push(prompt[0] as u64);
+            Ok(((), 1))
+        }
+        fn step(&mut self, _seq: &mut (), _token: u32, _now: u64) -> Result<u32> {
+            Ok(0)
+        }
+        fn finish(&mut self, _seq: ()) {}
+        fn is_eos(&self, token: u32) -> bool {
+            token == 0
+        }
+        fn has_capacity(&self, active: usize) -> bool {
+            active < self.capacity
+        }
+    }
+
+    #[test]
+    fn admission_is_fifo_under_repeated_partial_admission() {
+        // 9 requests through 2 slots: ~5 admission waves, each popping the
+        // queue front.  The begin order must equal the submission order
+        // (the VecDeque queue preserves FIFO; a priority or LIFO regression
+        // would reorder here).
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            OrderBackend { order: Vec::new(), capacity: 2 },
+            BatcherConfig { max_batch: 8 },
+        );
+        for id in 0..9u64 {
+            b.submit(mk_req(id, id as u32, 64, &tx));
+        }
+        b.run_to_completion();
+        drop(tx);
+        assert_eq!(b.backend.order, (0..9).collect::<Vec<u64>>(), "admission must be FIFO");
+        let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..9).collect::<Vec<_>>());
     }
 
     #[test]

@@ -8,10 +8,10 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherConfig, StepBackend};
+use super::batcher::{Batcher, BatcherConfig, StepBackend, StepItem};
 use super::request::Request;
 use crate::config::EngineConfig;
-use crate::engine::Engine;
+use crate::engine::{BatchEntry, Engine};
 use crate::kvcache::SeqCache;
 
 /// [`StepBackend`] implementation over the real engine.
@@ -32,6 +32,16 @@ impl StepBackend for EngineBackend {
 
     fn step(&mut self, seq: &mut SeqCache, token: u32, now: u64) -> Result<u32> {
         self.engine.decode_step(seq, token, now, None)
+    }
+
+    /// The batched fast path: one `Engine::decode_batch` iteration per
+    /// scheduler tick instead of one full engine pass per sequence.
+    fn step_batch(&mut self, items: &mut [StepItem<'_, SeqCache>]) -> Vec<Result<u32>> {
+        let mut entries: Vec<BatchEntry<'_>> = items
+            .iter_mut()
+            .map(|it| BatchEntry::new(&mut *it.seq, it.token, it.now))
+            .collect();
+        self.engine.decode_batch(&mut entries)
     }
 
     fn finish(&mut self, mut seq: SeqCache) {

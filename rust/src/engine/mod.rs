@@ -21,7 +21,7 @@ use crate::kvcache::page::page_probs;
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
 use crate::kvcache::{KvPool, SeqCache};
 use crate::metrics::Metrics;
-use crate::runtime::{Backend, SimBackend, Tokenizer};
+use crate::runtime::{AttnBatchItem, Backend, Qkv, QkvBatchItem, SimBackend, Tokenizer};
 
 #[derive(Debug, Clone, Default)]
 pub struct GenOptions {
@@ -48,6 +48,37 @@ pub struct GenOutput {
     pub score_log: Vec<(u64, Vec<(usize, f32)>)>,
 }
 
+/// One sequence's slot in a batched decode iteration (`Engine::decode_batch`).
+pub struct BatchEntry<'a> {
+    pub seq: &'a mut SeqCache,
+    /// The token decoded this iteration (last step's output).
+    pub token: u32,
+    /// Per-sequence step counter (policy timestamp).
+    pub now: u64,
+    /// Optional Figure-3 score log, appended exactly like the sequential
+    /// path's (`decode_step`): layer-0 page probabilities at capture time.
+    pub log: Option<&'a mut Vec<(u64, Vec<(usize, f32)>)>>,
+}
+
+impl<'a> BatchEntry<'a> {
+    pub fn new(seq: &'a mut SeqCache, token: u32, now: u64) -> Self {
+        BatchEntry { seq, token, now, log: None }
+    }
+}
+
+/// Per-item scratch for the batched decode path, reused across layers and
+/// iterations (steady state allocates nothing).
+#[derive(Default)]
+struct BatchSlot {
+    h: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    valid: Vec<f32>,
+    capacity: usize,
+    /// Pending layer-0 score-log entry for the current iteration.
+    log_entry: Option<Vec<(usize, f32)>>,
+}
+
 pub struct Engine {
     pub cfg: EngineConfig,
     pub meta: ArtifactMeta,
@@ -62,6 +93,8 @@ pub struct Engine {
     k_buf: Vec<f32>,
     v_buf: Vec<f32>,
     valid_buf: Vec<f32>,
+    // per-sequence scratch for decode_batch, grown to the batch width
+    batch_scratch: Vec<BatchSlot>,
 }
 
 impl Engine {
@@ -114,6 +147,7 @@ impl Engine {
             k_buf: Vec::new(),
             v_buf: Vec::new(),
             valid_buf: Vec::new(),
+            batch_scratch: Vec::new(),
         })
     }
 
@@ -204,6 +238,21 @@ impl Engine {
             lc.rep_scores(&qkv.q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
                           &mut self.scores);
             page_probs(&self.scores, spec.head_dim, &mut self.probs);
+            // Figure-3 capture: layer-0 page probabilities exactly as
+            // computed this step, paired with the page table *before* any
+            // select/observe/evict runs for this entry — the capture point
+            // the analysis assumes.  (`observe` only mutates stamps and
+            // accumulators, never `probs` or page order, but capturing here
+            // makes that explicit and keeps the batched path identical.)
+            if layer == 0 && score_log.is_some() {
+                log_entry = Some(
+                    lc.table
+                        .iter()
+                        .zip(&self.probs)
+                        .map(|(p, &pr)| (p.start_pos, pr))
+                        .collect(),
+                );
+            }
             let sel = self.policy.select(&lc.table, &self.scores, self.cfg.budget,
                                          self.meta.page_size);
             t_policy += t0.elapsed().as_secs_f64();
@@ -223,16 +272,6 @@ impl Engine {
             let t0 = Instant::now();
             self.policy.observe(&mut seq.layers[layer].table, &self.probs, now);
             t_policy += t0.elapsed().as_secs_f64();
-            if layer == 0 && score_log.is_some() {
-                log_entry = Some(
-                    seq.layers[0]
-                        .table
-                        .iter()
-                        .zip(&self.probs)
-                        .map(|(p, &pr)| (p.start_pos, pr))
-                        .collect(),
-                );
-            }
         }
         // batched eviction after the full iteration (paper Appendix B)
         let t0 = Instant::now();
@@ -251,6 +290,274 @@ impl Engine {
         self.metrics.record_secs("step.policy_secs", t_policy);
         self.metrics.record_secs("step.gather_secs", t_gather);
         Ok(argmax(&logits) as u32)
+    }
+
+    /// Decode one token for every sequence in `entries` — one scheduler
+    /// iteration, layer by layer across the whole batch (DESIGN.md §2,
+    /// batched dataflow).  Returns one result per entry, index-aligned.
+    ///
+    /// Semantics are identical to calling [`Engine::decode_step`] per
+    /// entry — batched and sequential decode produce bit-identical tokens
+    /// (the crate's core invariant; see `rust/tests/batched_decode.rs`) —
+    /// but the backend sees one batched call per phase instead of one call
+    /// per sequence, so it can amortize dispatch and share position-pure
+    /// work between co-scheduled sequences.
+    ///
+    /// Failure isolation: a per-sequence failure (pool exhaustion on
+    /// append, invalid token) fails only that entry; when a batched
+    /// backend call fails, the engine retries that phase item by item so
+    /// only the actually-failing sequences error out — one bad sequence
+    /// never takes down its co-scheduled neighbors.
+    pub fn decode_batch(&mut self, entries: &mut [BatchEntry<'_>]) -> Vec<Result<u32>> {
+        let n = entries.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let spec = self.meta.model.clone();
+        let mut out: Vec<Result<u32>> = (0..n).map(|_| Ok(0u32)).collect();
+        let mut alive = vec![true; n];
+        let mut t_exec = 0.0f64;
+        let mut t_policy = 0.0f64;
+        let mut t_gather = 0.0f64;
+        if self.batch_scratch.len() < n {
+            self.batch_scratch.resize_with(n, BatchSlot::default);
+        }
+        for slot in &mut self.batch_scratch[..n] {
+            slot.log_entry = None;
+        }
+
+        // embed (per-item fallback isolates an out-of-vocab token)
+        let t0 = Instant::now();
+        let tokens: Vec<u32> = entries.iter().map(|e| e.token).collect();
+        match self.model.embed_tok_batch(&tokens) {
+            Ok(hs) => {
+                for (i, h) in hs.into_iter().enumerate() {
+                    self.batch_scratch[i].h = h;
+                }
+            }
+            Err(_) => {
+                for i in 0..n {
+                    match self.model.embed_tok(tokens[i]) {
+                        Ok(h) => self.batch_scratch[i].h = h,
+                        Err(e) => {
+                            alive[i] = false;
+                            out[i] = Err(e);
+                        }
+                    }
+                }
+            }
+        }
+        t_exec += t0.elapsed().as_secs_f64();
+
+        for layer in 0..spec.n_layers {
+            let idxs: Vec<usize> = (0..n).filter(|&i| alive[i]).collect();
+            if idxs.is_empty() {
+                break;
+            }
+            // qkv for the whole batch
+            let t0 = Instant::now();
+            let qkv_in: Vec<QkvBatchItem<'_>> = idxs
+                .iter()
+                .map(|&i| QkvBatchItem {
+                    h: &self.batch_scratch[i].h,
+                    pos: entries[i].seq.n_tokens,
+                })
+                .collect();
+            let qkvs = match self.model.layer_qkv_batch(layer, &qkv_in) {
+                Ok(v) => v,
+                Err(_) => {
+                    // per-item fallback: isolate the failing sequence(s);
+                    // dead items get an empty placeholder (skipped below)
+                    let mut v = Vec::with_capacity(idxs.len());
+                    for &i in &idxs {
+                        match self.model.layer_qkv(layer, &self.batch_scratch[i].h,
+                                                   entries[i].seq.n_tokens) {
+                            Ok(q) => v.push(q),
+                            Err(err) => {
+                                alive[i] = false;
+                                out[i] = Err(err.context(format!("qkv (layer {layer})")));
+                                v.push(Qkv { q: Vec::new(), k: Vec::new(), v: Vec::new() });
+                            }
+                        }
+                    }
+                    v
+                }
+            };
+            t_exec += t0.elapsed().as_secs_f64();
+
+            // append + rep-score + select + gather + observe, per sequence
+            for (j, &i) in idxs.iter().enumerate() {
+                if !alive[i] {
+                    continue;
+                }
+                let e = &mut entries[i];
+                let pos = e.seq.n_tokens;
+                // append first so the token attends to itself
+                if let Err(err) =
+                    e.seq.append(layer, &mut self.pool, pos, &qkvs[j].k, &qkvs[j].v, false, e.now)
+                {
+                    alive[i] = false;
+                    out[i] = Err(err);
+                    continue;
+                }
+                let t0 = Instant::now();
+                let lc = &e.seq.layers[layer];
+                lc.rep_scores(&qkvs[j].q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
+                              &mut self.scores);
+                page_probs(&self.scores, spec.head_dim, &mut self.probs);
+                // Figure-3 capture: same point as the sequential path —
+                // layer-0 probs as computed, before select/observe/evict
+                if layer == 0 && e.log.is_some() {
+                    self.batch_scratch[i].log_entry = Some(
+                        lc.table
+                            .iter()
+                            .zip(&self.probs)
+                            .map(|(p, &pr)| (p.start_pos, pr))
+                            .collect(),
+                    );
+                }
+                let sel = self.policy.select(&lc.table, &self.scores, self.cfg.budget,
+                                             self.meta.page_size);
+                t_policy += t0.elapsed().as_secs_f64();
+
+                let n_slots: usize = sel.iter().map(|&s| lc.table[s].len).sum();
+                let capacity = match self.model.capacity_for(n_slots) {
+                    Ok(c) => c,
+                    Err(err) => {
+                        alive[i] = false;
+                        out[i] = Err(err);
+                        continue;
+                    }
+                };
+                let t0 = Instant::now();
+                let slot = &mut self.batch_scratch[i];
+                let used = e.seq.gather(layer, &self.pool, &sel, capacity, &mut slot.k,
+                                        &mut slot.v, &mut slot.valid);
+                debug_assert_eq!(used, n_slots);
+                slot.capacity = capacity;
+                t_gather += t0.elapsed().as_secs_f64();
+                // per-layer observation (stamps, accumulators) — moved
+                // before the attention call relative to the sequential
+                // path; the policies consume only this layer's probs, so
+                // the observable behavior is identical
+                let t0 = Instant::now();
+                self.policy.observe(&mut e.seq.layers[layer].table, &self.probs, e.now);
+                t_policy += t0.elapsed().as_secs_f64();
+            }
+
+            // attention + MLP for the whole batch
+            let t0 = Instant::now();
+            let mut attn_in: Vec<AttnBatchItem<'_>> = Vec::with_capacity(idxs.len());
+            let mut live: Vec<usize> = Vec::with_capacity(idxs.len());
+            for (j, &i) in idxs.iter().enumerate() {
+                if !alive[i] {
+                    continue;
+                }
+                let slot = &self.batch_scratch[i];
+                attn_in.push(AttnBatchItem {
+                    capacity: slot.capacity,
+                    h: &slot.h,
+                    q: &qkvs[j].q,
+                    k_sel: &slot.k,
+                    v_sel: &slot.v,
+                    valid: &slot.valid,
+                });
+                live.push(i);
+            }
+            match self.model.layer_attn_mlp_batch(layer, &attn_in) {
+                Ok(hs) => {
+                    drop(attn_in);
+                    for (&i, h) in live.iter().zip(hs) {
+                        self.batch_scratch[i].h = h;
+                    }
+                }
+                Err(_) => {
+                    // per-item fallback: isolate the failing sequence(s)
+                    let per_item: Vec<Result<Vec<f32>>> = attn_in
+                        .iter()
+                        .map(|it| {
+                            self.model.layer_attn_mlp(layer, it.capacity, it.h, it.q,
+                                                      it.k_sel, it.v_sel, it.valid)
+                        })
+                        .collect();
+                    drop(attn_in);
+                    for (&i, r) in live.iter().zip(per_item) {
+                        match r {
+                            Ok(h) => self.batch_scratch[i].h = h,
+                            Err(err) => {
+                                alive[i] = false;
+                                out[i] = Err(err.context(format!("attention (layer {layer})")));
+                            }
+                        }
+                    }
+                }
+            }
+            t_exec += t0.elapsed().as_secs_f64();
+        }
+
+        // batched eviction after the full iteration (paper Appendix B)
+        let t0 = Instant::now();
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            for layer in 0..spec.n_layers {
+                self.enforce_budget(entries[i].seq, layer);
+            }
+        }
+        t_policy += t0.elapsed().as_secs_f64();
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            let e = &mut entries[i];
+            e.seq.n_tokens += 1;
+            if let (Some(log), Some(entry)) =
+                (e.log.as_deref_mut(), self.batch_scratch[i].log_entry.take())
+            {
+                log.push((e.now, entry));
+            }
+        }
+
+        // lm head + greedy sample for the whole batch
+        let t0 = Instant::now();
+        let mut hs: Vec<&[f32]> = Vec::with_capacity(n);
+        let mut live: Vec<usize> = Vec::with_capacity(n);
+        for (i, slot) in self.batch_scratch[..n].iter().enumerate() {
+            if alive[i] {
+                hs.push(&slot.h);
+                live.push(i);
+            }
+        }
+        if !hs.is_empty() {
+            match self.model.lm_head_batch(&hs) {
+                Ok(all_logits) => {
+                    for (&i, logits) in live.iter().zip(&all_logits) {
+                        out[i] = Ok(argmax(logits) as u32);
+                    }
+                }
+                Err(_) => {
+                    // per-item fallback: isolate the failing sequence(s)
+                    for (&i, h) in live.iter().zip(&hs) {
+                        out[i] = self
+                            .model
+                            .lm_head(h)
+                            .map(|logits| argmax(&logits) as u32)
+                            .map_err(|err| err.context("lm_head"));
+                    }
+                }
+            }
+        }
+        t_exec += t0.elapsed().as_secs_f64();
+        // Record per-sequence shares so the step.* timers keep their
+        // "per sequence-step" semantics (decode_step records one sample per
+        // sequence; a raw per-iteration sample here would look n× slower
+        // and corrupt the EXPERIMENTS.md §Perf breakdown).
+        let share = 1.0 / n as f64;
+        self.metrics.record_secs("step.exec_secs", t_exec * share);
+        self.metrics.record_secs("step.policy_secs", t_policy * share);
+        self.metrics.record_secs("step.gather_secs", t_gather * share);
+        out
     }
 
     /// Full request: prefill + decode until EOS/limit.

@@ -44,10 +44,13 @@ impl SparsityPolicy for H2oPolicy {
         let page_size = table.iter().map(|p| p.len).max().unwrap_or(16).max(1);
         let protected = self.recent_pages(page_size).min(table.len() - 1);
         let evictable = &table[..table.len() - protected];
+        // `total_cmp`: accumulators go NaN if a NaN prob was ever observed;
+        // eviction must keep working (NaN orders above +inf, so poisoned
+        // pages are treated as heavy and survive — never a panic).
         evictable
             .iter()
             .enumerate()
-            .min_by(|(_, a), (_, b)| a.acc_score.partial_cmp(&b.acc_score).unwrap())
+            .min_by(|(_, a), (_, b)| a.acc_score.total_cmp(&b.acc_score))
             .map(|(i, _)| i)
     }
 

@@ -21,10 +21,13 @@ impl SparsityPolicy for QuestPolicy {
             return (0..table.len()).collect();
         }
         // Rank by representative score; the active (last) page is always
-        // included, as in Quest's implementation.
+        // included, as in Quest's implementation.  `total_cmp`: a NaN score
+        // (e.g. degenerate rep bounds) must not panic the engine — NaNs
+        // order above +inf and get selected, which is the conservative
+        // failure mode for a *selection* policy.
         let last = table.len() - 1;
         let mut order: Vec<usize> = (0..last).collect();
-        order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
         let mut sel: Vec<usize> = order.into_iter().take(budget_pages - 1).collect();
         sel.push(last);
         sel.sort_unstable();

@@ -43,11 +43,13 @@ impl SparsityPolicy for RaasPolicy {
                 }
             }
         } else {
-            // top-r formulation: stamp the ceil(r * n) highest-probability pages
+            // top-r formulation: stamp the ceil(r * n) highest-probability
+            // pages.  `total_cmp`: a NaN prob must not panic mid-decode;
+            // NaNs rank highest and get stamped, erring towards retention.
             let n = table.len();
             let k = ((self.stamp_fraction * n as f64).ceil() as usize).clamp(1, n);
             let mut order: Vec<usize> = (0..n).collect();
-            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            order.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]));
             for &i in order.iter().take(k) {
                 table[i].last_stamp = now;
             }

@@ -26,6 +26,34 @@ pub struct Qkv {
     pub v: Vec<f32>,
 }
 
+/// One sequence's inputs to a batched qkv call (DESIGN.md §2, batched
+/// dataflow): the current hidden state and the absolute position of the
+/// token being decoded.
+pub struct QkvBatchItem<'a> {
+    /// hidden `[d_model]`.
+    pub h: &'a [f32],
+    /// Absolute position of the decoded token.
+    pub pos: usize,
+}
+
+/// One sequence's inputs to a batched attention+MLP call.  The slices have
+/// the same shapes as the per-item [`Backend::layer_attn_mlp`] arguments;
+/// `capacity` may differ between items (each sequence pads its gathered
+/// selection to its own ladder capacity).
+pub struct AttnBatchItem<'a> {
+    pub capacity: usize,
+    /// hidden `[d_model]`.
+    pub h: &'a [f32],
+    /// query `[n_heads * head_dim]`.
+    pub q: &'a [f32],
+    /// gathered keys `[capacity * kv_dim]`.
+    pub k_sel: &'a [f32],
+    /// gathered values `[capacity * kv_dim]`.
+    pub v_sel: &'a [f32],
+    /// slot validity `[capacity]` (1.0 = real slot, 0.0 = padding).
+    pub valid: &'a [f32],
+}
+
 /// Output of a dense prefill call.
 pub struct PrefillOut {
     /// `[n_layers][padded][kv_dim]` post-RoPE keys.
@@ -86,6 +114,46 @@ pub trait Backend: std::fmt::Debug {
     /// Dense prefill of `tokens`; returns per-layer post-RoPE KV for the
     /// first `tokens.len()` positions plus next-token logits.
     fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut>;
+
+    // ------------------------------------------------------------------
+    // Batched entry points (DESIGN.md §2, batched dataflow).
+    //
+    // One call covers one scheduler iteration across all active sequences,
+    // so a backend can amortize dispatch and share work between items.
+    // The defaults loop over the per-item methods — `ModelRuntime` behind
+    // `backend-xla` keeps working unchanged — while `SimBackend` overrides
+    // them natively.  Semantics are all-or-nothing: an error fails the
+    // whole call, and callers that need per-item isolation fall back to
+    // the per-item methods (see `Engine::decode_batch`).  Every override
+    // MUST stay bit-identical to the per-item loop: batched and sequential
+    // decode producing the same tokens is the crate's core invariant.
+    // ------------------------------------------------------------------
+
+    /// Batched [`Backend::embed_tok`]: one hidden `[d_model]` per token.
+    fn embed_tok_batch(&self, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+        tokens.iter().map(|&t| self.embed_tok(t)).collect()
+    }
+
+    /// Batched [`Backend::layer_qkv`]: one [`Qkv`] per item.
+    fn layer_qkv_batch(&self, layer: usize, items: &[QkvBatchItem<'_>]) -> Result<Vec<Qkv>> {
+        items.iter().map(|it| self.layer_qkv(layer, it.h, it.pos)).collect()
+    }
+
+    /// Batched [`Backend::layer_attn_mlp`]: one hidden' `[d_model]` per item.
+    fn layer_attn_mlp_batch(&self, layer: usize, items: &[AttnBatchItem<'_>])
+                            -> Result<Vec<Vec<f32>>> {
+        items
+            .iter()
+            .map(|it| {
+                self.layer_attn_mlp(layer, it.capacity, it.h, it.q, it.k_sel, it.v_sel, it.valid)
+            })
+            .collect()
+    }
+
+    /// Batched [`Backend::lm_head`]: one logits `[vocab]` per hidden state.
+    fn lm_head_batch(&self, hs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        hs.iter().map(|h| self.lm_head(h)).collect()
+    }
 }
 
 #[cfg(test)]

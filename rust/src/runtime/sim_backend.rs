@@ -19,10 +19,23 @@
 //!
 //! All functions are pure in `(seed, inputs)`: greedy decoding is
 //! bit-deterministic, which the integration suite relies on.
+//!
+//! Because every feature family is pure in `(layer, pos)`, the backend
+//! memoizes them (`phi`, the structured query direction, the raw value
+//! feature) behind a `RefCell` — decode used to recompute identical
+//! hash-derived features every step.  The memo also powers the native
+//! batched entry points: sequences decoding at the same positions share
+//! the cached features, and [`SimBackend::layer_attn_mlp_batch`] reuses
+//! softmax weights across batch items whose inputs are bit-identical
+//! (keys and queries are position-pure here, so co-scheduled sequences at
+//! the same positions qualify).  All sharing is bitwise-exact: batched and
+//! sequential decode produce identical tokens.
+
+use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
-use super::backend::{Backend, PrefillOut, Qkv};
+use super::backend::{AttnBatchItem, Backend, PrefillOut, Qkv};
 use crate::config::{ArtifactMeta, ModelSpec};
 use crate::sim::profiles::{ModelProfile, MODELS};
 
@@ -36,6 +49,11 @@ const MILESTONE_HORIZON: usize = 40;
 /// Key feature scale: spreads pre-softmax page scores enough that the
 /// waterfall survives `page_probs`' 1/sqrt(head_dim) temperature.
 const KEY_SCALE: f32 = 4.0;
+/// Positions per layer the feature memo retains; later positions are
+/// recomputed on the fly.  Worst-case footprint (filled lazily, DESIGN.md
+/// §2): `n_layers * MEMO_MAX_POS * (2 * head_dim + kv_dim) * 4` bytes —
+/// about 25 MB for the sim-default spec.
+const MEMO_MAX_POS: usize = 16384;
 
 fn splitmix64(x: &mut u64) -> u64 {
     *x = x.wrapping_add(0x9e3779b97f4a7c15);
@@ -53,6 +71,17 @@ const TAG_OUT: u64 = 0xe4;
 const TAG_MIX: u64 = 0xe5;
 const TAG_NOISE: u64 = 0xe6;
 
+/// Lazily filled per-layer feature memo (all families pure in `(layer, pos)`).
+#[derive(Default)]
+struct LayerMemo {
+    /// `phi(layer, pos)` positional dictionary entries, each `[head_dim]`.
+    phi: Vec<Option<Box<[f32]>>>,
+    /// Structured query directions `query_dir(layer, pos)`, each `[head_dim]`.
+    qdir: Vec<Option<Box<[f32]>>>,
+    /// Raw value features `feat(TAG_VAL, layer, pos)`, each `[kv_dim]`.
+    val: Vec<Option<Box<[f32]>>>,
+}
+
 pub struct SimBackend {
     spec: ModelSpec,
     capacities: Vec<usize>,
@@ -61,6 +90,14 @@ pub struct SimBackend {
     /// Precomputed lm-head dictionary, `[vocab * d_model]` (hot path:
     /// rebuilding it per decoded token is pure waste).
     out_dirs: Vec<f32>,
+    /// Precomputed embedding dictionary, `[vocab * d_model]`.
+    embed_dirs: Vec<f32>,
+    /// Precomputed per-layer mixing bias, `[n_layers * d_model]`.
+    mix_bias: Vec<f32>,
+    /// Positional feature memo, one entry per layer.  Interior-mutable:
+    /// the backend trait takes `&self` on the hot path.  `RefCell` (not a
+    /// lock) — backends live on one replica thread.
+    memo: RefCell<Vec<LayerMemo>>,
 }
 
 impl SimBackend {
@@ -78,18 +115,30 @@ impl SimBackend {
         let mut capacities: Vec<usize> = caps.to_vec();
         capacities.sort_unstable();
         capacities.dedup();
+        let n_layers = meta.model.n_layers;
         let mut b = SimBackend {
             spec: meta.model.clone(),
             capacities,
             seed,
             profile: MODELS[1],
             out_dirs: Vec::new(),
+            embed_dirs: Vec::new(),
+            mix_bias: Vec::new(),
+            memo: RefCell::new((0..n_layers).map(|_| LayerMemo::default()).collect()),
         };
-        let mut dirs = Vec::with_capacity(b.spec.vocab * b.spec.d_model);
+        let mut out_dirs = Vec::with_capacity(b.spec.vocab * b.spec.d_model);
+        let mut embed_dirs = Vec::with_capacity(b.spec.vocab * b.spec.d_model);
         for t in 0..b.spec.vocab {
-            dirs.extend(b.feat(TAG_OUT, 0, t as u64, b.spec.d_model));
+            out_dirs.extend(b.feat(TAG_OUT, 0, t as u64, b.spec.d_model));
+            embed_dirs.extend(b.feat(TAG_EMBED, 0, t as u64, b.spec.d_model));
         }
-        b.out_dirs = dirs;
+        b.out_dirs = out_dirs;
+        b.embed_dirs = embed_dirs;
+        let mut bias = Vec::with_capacity(n_layers * b.spec.d_model);
+        for layer in 0..n_layers {
+            bias.extend(b.feat(TAG_MIX, layer as u64, 0, b.spec.d_model));
+        }
+        b.mix_bias = bias;
         b
     }
 
@@ -117,14 +166,68 @@ impl SimBackend {
         v
     }
 
-    /// Positional key/query dictionary entry `phi(layer, pos)` (head_dim).
-    fn phi(&self, layer: usize, pos: usize) -> Vec<f32> {
+    /// Positional key/query dictionary entry `phi(layer, pos)` (head_dim),
+    /// computed from scratch (memo miss / beyond the memo horizon).
+    fn phi_uncached(&self, layer: usize, pos: usize) -> Vec<f32> {
         self.feat(TAG_POS, layer as u64, pos as u64, self.spec.head_dim)
+    }
+
+    /// Get-or-compute one memoized feature vector, then run `f` over it.
+    ///
+    /// Memo discipline: `compute` runs with no `memo` borrow held, so it
+    /// may re-enter another accessor (`query_dir_uncached` re-enters
+    /// `with_phi`); the closure `f` runs under a borrow and must NOT
+    /// re-enter any.
+    fn with_feat_memo<R>(
+        &self,
+        layer: usize,
+        pos: usize,
+        family: fn(&mut LayerMemo) -> &mut Vec<Option<Box<[f32]>>>,
+        compute: impl FnOnce() -> Vec<f32>,
+        f: impl FnOnce(&[f32]) -> R,
+    ) -> R {
+        if pos >= MEMO_MAX_POS {
+            return f(&compute());
+        }
+        {
+            let mut memo = self.memo.borrow_mut();
+            if let Some(Some(v)) = family(&mut memo[layer]).get(pos) {
+                return f(&v[..]);
+            }
+        }
+        let computed = compute().into_boxed_slice();
+        let mut memo = self.memo.borrow_mut();
+        let fam = family(&mut memo[layer]);
+        if fam.len() <= pos {
+            fam.resize_with(pos + 1, || None);
+        }
+        if fam[pos].is_none() {
+            fam[pos] = Some(computed);
+        }
+        f(fam[pos].as_deref().unwrap())
+    }
+
+    /// Run `f` over the memoized `phi(layer, pos)`.
+    fn with_phi<R>(&self, layer: usize, pos: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        self.with_feat_memo(layer, pos, |m| &mut m.phi, || self.phi_uncached(layer, pos), f)
+    }
+
+    /// Run `f` over the memoized `query_dir(layer, pos)`.
+    fn with_qdir<R>(&self, layer: usize, pos: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        self.with_feat_memo(layer, pos, |m| &mut m.qdir,
+                            || self.query_dir_uncached(layer, pos), f)
+    }
+
+    /// Run `f` over the memoized raw value feature at `(layer, pos)`.
+    fn with_val<R>(&self, layer: usize, pos: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        let kv_dim = self.spec.n_kv_heads * self.spec.head_dim;
+        self.with_feat_memo(layer, pos, |m| &mut m.val,
+                            || self.feat(TAG_VAL, layer as u64, pos as u64, kv_dim), f)
     }
 
     /// The query direction at `(layer, pos)`: weighted sum of dictionary
     /// entries reproducing recency + sink + waterfall + phoenix structure.
-    fn query_dir(&self, layer: usize, pos: usize) -> Vec<f32> {
+    fn query_dir_uncached(&self, layer: usize, pos: usize) -> Vec<f32> {
         let hd = self.spec.head_dim;
         let mp = &self.profile;
         let mut q = vec![0.0f32; hd];
@@ -136,10 +239,10 @@ impl SimBackend {
         // recency window: the active page stays hot
         for a in 0..4usize {
             let Some(p) = pos.checked_sub(a) else { break };
-            add(&self.phi(layer, p), 0.6f32.powi(a as i32), &mut q);
+            self.with_phi(layer, p, |phi| add(phi, 0.6f32.powi(a as i32), &mut q));
         }
         // sink mass on the first positions
-        add(&self.phi(layer, 0), 0.35, &mut q);
+        self.with_phi(layer, 0, |phi| add(phi, 0.35, &mut q));
         // waterfall: decaying attention to previously emitted milestones
         if pos >= STEP_PERIOD {
             let cur_step = pos / STEP_PERIOD;
@@ -152,7 +255,7 @@ impl SimBackend {
                 let age = (pos - mpos) as f64;
                 let w = mp.milestone_hot * mp.decay.powf(age / 8.0);
                 if w > 1e-3 {
-                    add(&self.phi(layer, mpos), w as f32 * 2.0, &mut q);
+                    self.with_phi(layer, mpos, |phi| add(phi, w as f32 * 2.0, &mut q));
                 }
             }
             // phoenix: mid-step, re-light an early (prompt-region) operand
@@ -160,7 +263,9 @@ impl SimBackend {
             if in_step == STEP_PERIOD / 2 || in_step == STEP_PERIOD / 2 + 1 {
                 let ppos = 6 + 4 * (cur_step % 12);
                 if ppos < pos {
-                    add(&self.phi(layer, ppos), (mp.phoenix_hot * 2.0) as f32, &mut q);
+                    self.with_phi(layer, ppos, |phi| {
+                        add(phi, (mp.phoenix_hot * 2.0) as f32, &mut q)
+                    });
                 }
             }
         }
@@ -175,7 +280,7 @@ impl SimBackend {
     /// then renormalise.
     fn mix_hidden(&self, layer: usize, h: &[f32], contrib: &[f32]) -> Vec<f32> {
         let d = self.spec.d_model;
-        let bias = self.feat(TAG_MIX, layer as u64, 0, d);
+        let bias = &self.mix_bias[layer * d..(layer + 1) * d];
         let clen = contrib.len();
         let mut out = Vec::with_capacity(d);
         let mut norm2 = 0.0f32;
@@ -191,6 +296,117 @@ impl SimBackend {
         }
         out
     }
+
+    /// Softmax weights for one (query-head slice, kv group `g`) pair over an
+    /// item's gathered slots, written into `dst` (`[capacity]`).
+    ///
+    /// INVARIANT (do not edit one side alone): this must stay bit-identical
+    /// to the corresponding per-head pass inside `layer_attn_mlp` — same
+    /// ops in the same order, including the invalid-slot, all-invalid and
+    /// NaN handling.  `layer_attn_mlp` is the naive reference
+    /// implementation; this is the optimized batch-path twin.  Divergence
+    /// is caught by `tests::batched_attn_matches_per_item_bitwise` and the
+    /// end-to-end suite in `rust/tests/batched_decode.rs`.
+    fn softmax_weights(&self, it: &AttnBatchItem<'_>, qh: &[f32], g: usize, dst: &mut [f32]) {
+        let hd = self.spec.head_dim;
+        let kv_dim = self.spec.n_kv_heads * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut max = f32::NEG_INFINITY;
+        for slot in 0..it.capacity {
+            if it.valid[slot] < 0.5 {
+                dst[slot] = f32::NEG_INFINITY;
+                continue;
+            }
+            let ks = &it.k_sel[slot * kv_dim + g * hd..slot * kv_dim + (g + 1) * hd];
+            let mut dot = 0.0f32;
+            for c in 0..hd {
+                dot += qh[c] * ks[c];
+            }
+            let sc = dot * scale;
+            dst[slot] = sc;
+            if sc > max {
+                max = sc;
+            }
+        }
+        if max == f32::NEG_INFINITY {
+            // nothing valid: zero weights, attention contributes nothing
+            for w in dst.iter_mut() {
+                *w = 0.0;
+            }
+            return;
+        }
+        let mut denom = 0.0f32;
+        for sc in dst.iter_mut() {
+            if *sc > f32::NEG_INFINITY {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            } else {
+                *sc = 0.0;
+            }
+        }
+        for w in dst.iter_mut() {
+            *w /= denom;
+        }
+    }
+
+    /// Per-head softmax weights `[n_heads * capacity]` for one item.
+    ///
+    /// The surrogate repeats the query direction across heads and `phi`
+    /// across kv heads, so the per-head score/softmax work usually
+    /// collapses: detected bitwise, computed once per distinct
+    /// (query, kv group) pair and broadcast.  Returns whether all heads in
+    /// each kv group carry identical rows (callers may then share value
+    /// aggregation within a group).
+    fn attn_weights(&self, it: &AttnBatchItem<'_>, weights: &mut Vec<f32>) -> bool {
+        let s = &self.spec;
+        let hd = s.head_dim;
+        let kv_dim = s.n_kv_heads * hd;
+        let group = s.n_heads / s.n_kv_heads;
+        let cap = it.capacity;
+        weights.clear();
+        weights.resize(s.n_heads * cap, 0.0);
+        let q0 = &it.q[..hd];
+        let q_uniform = (1..s.n_heads).all(|h| bits_eq(&it.q[h * hd..(h + 1) * hd], q0));
+        if !q_uniform {
+            for head in 0..s.n_heads {
+                let g = head / group;
+                let qh = &it.q[head * hd..(head + 1) * hd];
+                self.softmax_weights(it, qh, g, &mut weights[head * cap..(head + 1) * cap]);
+            }
+            return false;
+        }
+        let k_uniform = (0..cap).all(|slot| {
+            let base = slot * kv_dim;
+            (1..s.n_kv_heads).all(|g| {
+                bits_eq(&it.k_sel[base + g * hd..base + (g + 1) * hd],
+                        &it.k_sel[base..base + hd])
+            })
+        });
+        let distinct = if k_uniform { 1 } else { s.n_kv_heads };
+        for g in 0..distinct {
+            let head0 = g * group;
+            self.softmax_weights(it, q0, g, &mut weights[head0 * cap..(head0 + 1) * cap]);
+        }
+        // broadcast the computed rows to the remaining heads
+        for head in 0..s.n_heads {
+            let g = head / group;
+            let src = if k_uniform { 0 } else { g * group };
+            if head == src {
+                continue;
+            }
+            let (lo, hi) = weights.split_at_mut(head * cap);
+            hi[..cap].copy_from_slice(&lo[src * cap..src * cap + cap]);
+        }
+        true
+    }
+}
+
+/// Bitwise slice equality — the reuse predicate for shared attention
+/// weights.  Stricter than `==` (distinguishes -0.0, never equates NaN),
+/// which is exactly what makes reuse sound: bit-identical inputs give
+/// bit-identical outputs.
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 impl Backend for SimBackend {
@@ -218,7 +434,9 @@ impl Backend for SimBackend {
         if (token as usize) >= self.spec.vocab {
             bail!("token {token} out of vocab {}", self.spec.vocab);
         }
-        Ok(self.feat(TAG_EMBED, 0, token as u64, self.spec.d_model))
+        let d = self.spec.d_model;
+        let t = token as usize;
+        Ok(self.embed_dirs[t * d..(t + 1) * d].to_vec())
     }
 
     fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
@@ -226,27 +444,34 @@ impl Backend for SimBackend {
         let hd = s.head_dim;
         let kv_dim = s.n_kv_heads * hd;
         // keys: the positional dictionary entry, shared across kv heads
-        let phi = self.phi(layer, pos);
         let mut k = Vec::with_capacity(kv_dim);
-        for _ in 0..s.n_kv_heads {
-            k.extend(phi.iter().map(|&c| c * KEY_SCALE));
-        }
+        self.with_phi(layer, pos, |phi| {
+            for _ in 0..s.n_kv_heads {
+                k.extend(phi.iter().map(|&c| c * KEY_SCALE));
+            }
+        });
         // queries: structured direction, shared across query heads
-        let qdir = self.query_dir(layer, pos);
         let mut q = Vec::with_capacity(s.n_heads * hd);
-        for _ in 0..s.n_heads {
-            q.extend_from_slice(&qdir);
-        }
+        self.with_qdir(layer, pos, |qdir| {
+            for _ in 0..s.n_heads {
+                q.extend_from_slice(qdir);
+            }
+        });
         // values: positional feature tinted by the current hidden state, so
         // attended history influences downstream computation
-        let val = self.feat(TAG_VAL, layer as u64, pos as u64, kv_dim);
         let mut v = Vec::with_capacity(kv_dim);
-        for (i, &b) in val.iter().enumerate() {
-            v.push(0.8 * b + 0.2 * h[i % h.len()]);
-        }
+        self.with_val(layer, pos, |val| {
+            for (i, &b) in val.iter().enumerate() {
+                v.push(0.8 * b + 0.2 * h[i % h.len()]);
+            }
+        });
         Ok(Qkv { q, k, v })
     }
 
+    // Reference implementation of attention semantics: the optimized
+    // batched twin (`softmax_weights`/`attn_weights` +
+    // `layer_attn_mlp_batch`) must reproduce this bitwise — see the
+    // INVARIANT note on `softmax_weights` and the pinning tests.
     fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
                       k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
         let s = &self.spec;
@@ -347,6 +572,108 @@ impl Backend for SimBackend {
         }
         Ok(PrefillOut { k, v, logits, padded: n })
     }
+
+    // -- batched entry points (native implementations) --------------------
+    //
+    // `embed_tok_batch` and `layer_qkv_batch` deliberately stay on the
+    // trait defaults (per-item loops): embeddings are one dictionary copy
+    // per token, and qkv's cross-item sharing happens inside the feature
+    // memo — items at the same `(layer, pos)` hit the same cached
+    // `phi`/`query_dir`/value entries, so the per-item marginal cost is
+    // the owned copies the `Qkv` contract requires either way.
+
+    /// One scheduler iteration's attention for all sequences.  Keys and
+    /// queries are position-pure in the surrogate, so co-scheduled
+    /// sequences at the same positions present bit-identical
+    /// `(q, k_sel, valid)` inputs: the score + softmax pass is computed
+    /// once per distinct item and reused (detected bitwise — reuse is
+    /// exactly as sound as recomputation).  Value aggregation stays
+    /// per-item (values carry each sequence's hidden-state tint).
+    fn layer_attn_mlp_batch(&self, layer: usize, items: &[AttnBatchItem<'_>])
+                            -> Result<Vec<Vec<f32>>> {
+        let s = &self.spec;
+        let hd = s.head_dim;
+        let kv_dim = s.n_kv_heads * hd;
+        let group = s.n_heads / s.n_kv_heads;
+        let mut outs = Vec::with_capacity(items.len());
+        // weights of the most recent distinct item, `[n_heads * capacity]`
+        let mut weights: Vec<f32> = Vec::new();
+        let mut grouped = false;
+        let mut owner: Option<usize> = None;
+        for (idx, it) in items.iter().enumerate() {
+            let reuse = owner.is_some_and(|p| {
+                let pv = &items[p];
+                pv.capacity == it.capacity
+                    && bits_eq(pv.q, it.q)
+                    && bits_eq(pv.valid, it.valid)
+                    && bits_eq(pv.k_sel, it.k_sel)
+            });
+            if !reuse {
+                grouped = self.attn_weights(it, &mut weights);
+                owner = Some(idx);
+            }
+            let mut attn = vec![0.0f32; s.n_heads * hd];
+            if grouped {
+                // identical weight rows within each kv group: aggregate once
+                // per group, copy to the group's heads (same bits as the
+                // per-head loop — same ops, same slot order, per head)
+                let mut out_g = vec![0.0f32; hd];
+                for g in 0..s.n_kv_heads {
+                    let head0 = g * group;
+                    let w = &weights[head0 * it.capacity..(head0 + 1) * it.capacity];
+                    out_g.fill(0.0);
+                    for slot in 0..it.capacity {
+                        let wv = w[slot];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let vs = &it.v_sel[slot * kv_dim + g * hd..slot * kv_dim + (g + 1) * hd];
+                        for c in 0..hd {
+                            out_g[c] += wv * vs[c];
+                        }
+                    }
+                    for head in head0..head0 + group {
+                        attn[head * hd..(head + 1) * hd].copy_from_slice(&out_g);
+                    }
+                }
+            } else {
+                for head in 0..s.n_heads {
+                    let g = head / group;
+                    let w = &weights[head * it.capacity..(head + 1) * it.capacity];
+                    let out = &mut attn[head * hd..(head + 1) * hd];
+                    for slot in 0..it.capacity {
+                        let wv = w[slot];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        let vs = &it.v_sel[slot * kv_dim + g * hd..slot * kv_dim + (g + 1) * hd];
+                        for c in 0..hd {
+                            out[c] += wv * vs[c];
+                        }
+                    }
+                }
+            }
+            outs.push(self.mix_hidden(layer, it.h, &attn));
+        }
+        Ok(outs)
+    }
+
+    /// Per-item projection with bitwise dedup of identical hidden states
+    /// (co-scheduled duplicate requests — compared against every prior
+    /// item in the batch, duplicates need not be adjacent).
+    fn lm_head_batch(&self, hs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(hs.len());
+        for (i, h) in hs.iter().enumerate() {
+            match (0..i).find(|&j| bits_eq(hs[j], h)) {
+                Some(j) => {
+                    let prev = outs[j].clone();
+                    outs.push(prev);
+                }
+                None => outs.push(self.lm_head(h)?),
+            }
+        }
+        Ok(outs)
+    }
 }
 
 impl std::fmt::Debug for SimBackend {
@@ -361,6 +688,7 @@ impl std::fmt::Debug for SimBackend {
 
 #[cfg(test)]
 mod tests {
+    use super::super::backend::QkvBatchItem;
     use super::*;
 
     fn backend() -> SimBackend {
@@ -469,6 +797,103 @@ mod tests {
         assert_eq!(k, &qkv.k[..]);
         assert_eq!(out.padded, 5);
         assert_eq!(out.logits.len(), spec.vocab);
+    }
+
+    #[test]
+    fn memoized_features_match_uncached() {
+        let b = backend();
+        for layer in 0..b.spec().n_layers {
+            for pos in [0usize, 1, 7, 40, 123] {
+                let cold = b.phi_uncached(layer, pos);
+                b.with_phi(layer, pos, |warm| assert_eq!(warm, &cold[..]));
+                // second hit reads the cache; must be the same bits
+                b.with_phi(layer, pos, |warm| assert_eq!(warm, &cold[..]));
+                let qcold = b.query_dir_uncached(layer, pos);
+                b.with_qdir(layer, pos, |warm| assert_eq!(warm, &qcold[..]));
+            }
+        }
+        // full qkv is stable across repeated (memo-hitting) calls
+        let h = b.embed_tok(3).unwrap();
+        let a = b.layer_qkv(2, &h, 57).unwrap();
+        let c = b.layer_qkv(2, &h, 57).unwrap();
+        assert_eq!(a.q, c.q);
+        assert_eq!(a.k, c.k);
+        assert_eq!(a.v, c.v);
+    }
+
+    #[test]
+    fn batched_attn_matches_per_item_bitwise() {
+        // three items: 0 and 1 share bit-identical (q, k_sel, valid) —
+        // exercising the weight-reuse path — item 2 differs
+        let b = backend();
+        let s = b.spec().clone();
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        let cap = 8;
+        let h1 = b.embed_tok(1).unwrap();
+        let h2 = b.embed_tok(2).unwrap();
+        let qkv1 = b.layer_qkv(0, &h1, 5).unwrap();
+        let qkv2 = b.layer_qkv(0, &h2, 9).unwrap();
+        let mut k1 = vec![0.0f32; cap * kv_dim];
+        let mut v1 = vec![0.0f32; cap * kv_dim];
+        let mut v1b = vec![0.0f32; cap * kv_dim];
+        let mut k2 = vec![0.0f32; cap * kv_dim];
+        let mut v2 = vec![0.0f32; cap * kv_dim];
+        k1[..kv_dim].copy_from_slice(&qkv1.k);
+        v1[..kv_dim].copy_from_slice(&qkv1.v);
+        for (i, x) in v1b.iter_mut().enumerate().take(kv_dim) {
+            *x = (i as f32 * 0.3).cos();
+        }
+        k2[..kv_dim].copy_from_slice(&qkv2.k);
+        v2[..kv_dim].copy_from_slice(&qkv2.v);
+        let valid = {
+            let mut v = vec![0.0f32; cap];
+            v[0] = 1.0;
+            v
+        };
+        let items = vec![
+            AttnBatchItem { capacity: cap, h: &h1, q: &qkv1.q, k_sel: &k1, v_sel: &v1,
+                            valid: &valid },
+            AttnBatchItem { capacity: cap, h: &h2, q: &qkv1.q, k_sel: &k1, v_sel: &v1b,
+                            valid: &valid },
+            AttnBatchItem { capacity: cap, h: &h2, q: &qkv2.q, k_sel: &k2, v_sel: &v2,
+                            valid: &valid },
+        ];
+        let batched = b.layer_attn_mlp_batch(0, &items).unwrap();
+        for (it, out) in items.iter().zip(&batched) {
+            let solo = b
+                .layer_attn_mlp(0, it.capacity, it.h, it.q, it.k_sel, it.v_sel, it.valid)
+                .unwrap();
+            assert_eq!(&solo, out, "batched attention must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn batched_qkv_embed_lm_head_match_per_item() {
+        let b = backend();
+        let toks = [1u32, 5, 1, 9];
+        let embeds = b.embed_tok_batch(&toks).unwrap();
+        for (&t, e) in toks.iter().zip(&embeds) {
+            assert_eq!(e, &b.embed_tok(t).unwrap());
+        }
+        let items: Vec<QkvBatchItem<'_>> = embeds
+            .iter()
+            .enumerate()
+            .map(|(i, h)| QkvBatchItem { h, pos: 4 + (i % 2) })
+            .collect();
+        let batched = b.layer_qkv_batch(1, &items).unwrap();
+        for (it, qkv) in items.iter().zip(&batched) {
+            let solo = b.layer_qkv(1, it.h, it.pos).unwrap();
+            assert_eq!(solo.q, qkv.q);
+            assert_eq!(solo.k, qkv.k);
+            assert_eq!(solo.v, qkv.v);
+        }
+        let hs: Vec<&[f32]> = embeds.iter().map(|e| &e[..]).collect();
+        let logits = b.lm_head_batch(&hs).unwrap();
+        for (h, l) in hs.iter().zip(&logits) {
+            assert_eq!(l, &b.lm_head(h).unwrap());
+        }
+        // items 0 and 2 are the same token: the dedup path must still agree
+        assert_eq!(logits[0], logits[2]);
     }
 
     #[test]

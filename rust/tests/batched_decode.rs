@@ -1,0 +1,195 @@
+//! Batched-decode equivalence suite (DESIGN.md §2, batched dataflow).
+//!
+//! The crate's core invariant: a batch of N prompts decoded through
+//! `Engine::decode_batch` produces bit-identical tokens (and Figure-3
+//! score logs) to N sequential `Engine::generate` calls on the sim
+//! backend.  Every sharing shortcut in the batched path (feature memo,
+//! attention-weight reuse, lm-head dedup) is only admissible because this
+//! suite pins it.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::coordinator::batcher::{Batcher, BatcherConfig};
+use raas::coordinator::request::{Request, Response};
+use raas::coordinator::server::EngineBackend;
+use raas::engine::{BatchEntry, Engine, GenOptions};
+use raas::kvcache::SeqCache;
+use raas::util::rng::Rng;
+use raas::workload::Problem;
+
+fn engine(policy: PolicyKind, budget: usize) -> Engine {
+    let cfg = EngineConfig { policy, budget, ..Default::default() };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+/// Mixed workload: different lengths, plus an exact duplicate of prompt 0
+/// (exercising the duplicate-request sharing paths).
+fn prompts(seed: u64) -> Vec<Vec<u32>> {
+    let spec = engine(PolicyKind::Raas, 128).meta.corpus.clone();
+    let mut rng = Rng::new(seed);
+    let mut ps: Vec<Vec<u32>> = [4usize, 6, 8]
+        .iter()
+        .map(|&steps| Problem::sample(&mut rng, &spec, Some(steps)).encode_prompt(&spec))
+        .collect();
+    ps.push(ps[0].clone());
+    ps
+}
+
+/// Drive `decode_batch` for `steps` iterations, mirroring `generate`'s
+/// token bookkeeping (per-seq step counter as the policy timestamp).
+fn decode_batched(e: &mut Engine, prompts: &[Vec<u32>], steps: usize)
+                  -> (Vec<Vec<u32>>, Vec<Vec<(u64, Vec<(usize, f32)>)>>) {
+    let n = prompts.len();
+    let mut seqs: Vec<SeqCache> = Vec::with_capacity(n);
+    let mut tokens: Vec<u32> = Vec::with_capacity(n);
+    for p in prompts {
+        let mut seq = e.new_seq();
+        tokens.push(e.prefill_seq(&mut seq, p).expect("prefill"));
+        seqs.push(seq);
+    }
+    let mut produced: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut logs: Vec<Vec<(u64, Vec<(usize, f32)>)>> = vec![Vec::new(); n];
+    for step in 1..=steps {
+        for (out, &tok) in produced.iter_mut().zip(&tokens) {
+            out.push(tok);
+        }
+        let mut entries: Vec<BatchEntry<'_>> = seqs
+            .iter_mut()
+            .zip(logs.iter_mut())
+            .enumerate()
+            .map(|(i, (seq, log))| BatchEntry {
+                seq,
+                token: tokens[i],
+                now: step as u64,
+                log: Some(log),
+            })
+            .collect();
+        let results = e.decode_batch(&mut entries);
+        drop(entries);
+        for (tok, r) in tokens.iter_mut().zip(results) {
+            *tok = r.expect("batched decode step");
+        }
+    }
+    for mut seq in seqs {
+        e.release_seq(&mut seq);
+    }
+    (produced, logs)
+}
+
+#[test]
+fn decode_batch_matches_sequential_generate_bitwise() {
+    let steps = 96;
+    for policy in PolicyKind::all() {
+        let ps = prompts(11);
+        // sequential reference: one generate() per prompt
+        let mut seq_engine = engine(policy, 128);
+        let opts = GenOptions {
+            max_new: steps,
+            force_len: Some(steps),
+            log_scores: true,
+            ..Default::default()
+        };
+        let reference: Vec<_> = ps
+            .iter()
+            .map(|p| seq_engine.generate(p, &opts).expect("sequential generate"))
+            .collect();
+        // batched: same config, one decode_batch iteration per step
+        let mut batch_engine = engine(policy, 128);
+        let (tokens, logs) = decode_batched(&mut batch_engine, &ps, steps);
+        for (i, r) in reference.iter().enumerate() {
+            assert_eq!(
+                r.tokens, tokens[i],
+                "{policy:?} prompt {i}: batched tokens diverged from sequential"
+            );
+            assert_eq!(
+                r.score_log, logs[i],
+                "{policy:?} prompt {i}: batched score log diverged from sequential"
+            );
+        }
+        // the duplicate prompt pair must agree with itself, too
+        assert_eq!(tokens[0], tokens[3], "duplicate prompts must decode identically");
+    }
+}
+
+#[test]
+fn score_log_is_pinned_per_step_and_page_ordered() {
+    // Figure-3 contract: one layer-0 entry per decode step, stamped with
+    // the step counter, pages in strictly increasing start_pos order, and
+    // probabilities forming a distribution at capture time.
+    let steps = 48;
+    let mut e = engine(PolicyKind::Raas, 128);
+    let ps = prompts(23);
+    let opts = GenOptions {
+        max_new: steps,
+        force_len: Some(steps),
+        log_scores: true,
+        ..Default::default()
+    };
+    let out = e.generate(&ps[1], &opts).expect("generate");
+    assert_eq!(out.score_log.len(), steps, "one log entry per decode step");
+    for (i, (now, entry)) in out.score_log.iter().enumerate() {
+        assert_eq!(*now, (i + 1) as u64, "entries stamped with the step counter");
+        assert!(!entry.is_empty());
+        for w in entry.windows(2) {
+            assert!(
+                w[0].0 < w[1].0,
+                "pages must be ordered by start_pos: {} !< {}",
+                w[0].0,
+                w[1].0
+            );
+        }
+        let sum: f32 = entry.iter().map(|&(_, p)| p).sum();
+        assert!((sum - 1.0).abs() < 1e-3, "layer-0 probs must sum to ~1, got {sum}");
+    }
+    // the batched path pins the identical contract (checked entry-by-entry
+    // against the sequential log in the equivalence test above; here we
+    // re-assert the shape directly)
+    let mut be = engine(PolicyKind::Raas, 128);
+    let (_, logs) = decode_batched(&mut be, &ps[1..2], steps);
+    assert_eq!(logs[0].len(), steps);
+    assert_eq!(logs[0], out.score_log);
+}
+
+#[test]
+fn batched_serving_path_matches_sequential_generate() {
+    // End to end through the coordinator: Batcher -> EngineBackend ->
+    // step_batch -> decode_batch must answer exactly what per-request
+    // generate() answers.
+    let max_new = 72;
+    let ps = prompts(31);
+    let mut ref_engine = engine(PolicyKind::Raas, 96);
+    let opts = GenOptions { max_new, ..Default::default() };
+    let expect: Vec<Vec<u32>> = ps
+        .iter()
+        .map(|p| ref_engine.generate(p, &opts).expect("reference").tokens)
+        .collect();
+
+    let backend = EngineBackend { engine: engine(PolicyKind::Raas, 96), pages_per_seq_estimate: 16 };
+    let mut b = Batcher::new(backend, BatcherConfig { max_batch: ps.len() });
+    let (tx, rx) = channel::<Response>();
+    for (id, p) in ps.iter().enumerate() {
+        b.submit(Request {
+            id: id as u64,
+            prompt: p.clone(),
+            max_new,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        });
+    }
+    b.run_to_completion();
+    drop(tx);
+    let mut resp: Vec<Response> = rx.iter().collect();
+    resp.sort_by_key(|r| r.id);
+    assert_eq!(resp.len(), ps.len());
+    for r in &resp {
+        assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+        assert_eq!(
+            r.tokens, expect[r.id as usize],
+            "served tokens diverged from sequential generate for request {}",
+            r.id
+        );
+    }
+    assert_eq!(b.backend.engine.pool().allocated_pages(), 0, "pool must drain");
+}

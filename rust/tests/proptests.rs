@@ -258,6 +258,62 @@ fn prop_quest_selection_is_top_k_by_score() {
 }
 
 #[test]
+fn prop_policies_tolerate_non_finite_scores() {
+    // Regression: Quest/RaaS/H2O sorted with `partial_cmp().unwrap()`, so a
+    // single NaN score panicked the whole engine mid-decode.  Every policy
+    // must now survive NaN/±inf scores and probs through the full
+    // observe → select → evict_candidate cycle, with its invariants intact.
+    forall("non_finite_scores", |rng| {
+        let (table, mut scores, mut probs) = random_table(rng);
+        for _ in 0..rng.range(1, 6) {
+            let i = rng.range(0, scores.len());
+            let bad = match rng.range(0, 3) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                _ => f32::NEG_INFINITY,
+            };
+            scores[i] = bad;
+            probs[i] = bad;
+        }
+        for kind in PolicyKind::all() {
+            let budget = rng.range(16, 512);
+            let cfg = EngineConfig { policy: kind, budget, ..Default::default() };
+            let policy = make_policy(&cfg);
+            // several observes so H2O accumulators go NaN and stay NaN
+            let mut t = table.clone();
+            for now in 1..=3 {
+                policy.observe(&mut t, &probs, now);
+            }
+            let sel = policy.select(&t, &scores, budget, 16);
+            assert!(!sel.is_empty(), "{kind:?} empty selection under NaN");
+            let mut seen = std::collections::BTreeSet::new();
+            for &i in &sel {
+                assert!(i < t.len(), "{kind:?} selected out of range under NaN");
+                assert!(seen.insert(i), "{kind:?} duplicate selection under NaN");
+            }
+            assert!(sel.contains(&(t.len() - 1)), "{kind:?} dropped active page under NaN");
+            if let Some(victim) = policy.evict_candidate(&t) {
+                assert!(victim < t.len() - 1, "{kind:?} evicted active page under NaN");
+                if kind == PolicyKind::Raas {
+                    assert!(!t[victim].pinned, "raas evicted pinned prefill under NaN");
+                }
+            }
+        }
+        // the RaaS top-r formulation sorts probs directly; exercise it too
+        let cfg = EngineConfig {
+            policy: PolicyKind::Raas,
+            alpha: 0.0,
+            stamp_fraction: 0.5,
+            ..Default::default()
+        };
+        let policy = make_policy(&cfg);
+        let mut t = table.clone();
+        policy.observe(&mut t, &probs, 9);
+        assert_eq!(t.last().unwrap().last_stamp, 9, "active page must still be stamped");
+    });
+}
+
+#[test]
 fn prop_rep_bounds_dominate_member_keys() {
     forall("rep_bounds", |rng| {
         let kv_dim = 8; // 2 kv heads × hd 4
