@@ -1,31 +1,46 @@
 //! End-to-end decode throughput: the pre-batching serving loop (one
 //! `Engine::decode_step` per sequence per iteration) vs the batched path
-//! (`Engine::decode_batch`) at batch sizes 1/4/8 on the sim backend.
+//! (`Engine::decode_batch`) at batch sizes 1/4/8 on the sim backend, plus
+//! the zero-copy paged attention route vs the classic gather route at
+//! growing context lengths.
 //!
 //!     cargo bench --bench decode_throughput              # full run
 //!     cargo bench --bench decode_throughput -- --test    # CI smoke (--quick works too)
 //!
-//! Writes `results/BENCH_decode_throughput.json` (uploaded by CI next to
-//! the policy-overhead artifact).  Acceptance (ISSUE 2): batched batch-8
+//! Writes `results/BENCH_decode_throughput.json` and
+//! `results/BENCH_paged_attention.json` (both uploaded by CI next to the
+//! policy-overhead artifact).  Acceptance (ISSUE 2): batched batch-8
 //! total tokens/sec must be >= 2x the sequential batch-1 per-sequence
-//! throughput — the phi feature memo plus shared score/softmax dispatch
-//! is what buys the amortization.
+//! throughput.  Acceptance (ISSUE 3): the paged route must be at or above
+//! the gathered route's tokens/sec at every measured context length, with
+//! the gap widening as resident tokens grow — the gather route pays an
+//! O(resident) memcpy plus capacity-padding zero-fill per layer per step
+//! that the paged route deletes outright.
 //!
-//! The workload co-schedules same-length, distinct-content prompts (the
-//! continuous batcher admits prefill-first, so co-resident sequences
-//! typically sit at aligned positions): content differs per sequence, so
-//! value aggregation and lm-head stay per-item work; positions align, so
-//! the position-pure score/softmax work is shared.
+//! The batching workload co-schedules same-length, distinct-content
+//! prompts (the continuous batcher admits prefill-first, so co-resident
+//! sequences typically sit at aligned positions): content differs per
+//! sequence, so value aggregation and lm-head stay per-item work;
+//! positions align, so the position-pure score/softmax work is shared.
+//! The paged-vs-gathered workload decodes a single sequence under the
+//! Dense policy (everything resident and selected — `force_len`-style
+//! fixed decode length), so the per-layer copy cost scales with context
+//! and dominates the step.
 
 use std::time::Instant;
 
 use raas::config::{ArtifactMeta, CorpusSpec, EngineConfig, PolicyKind};
 use raas::engine::{BatchEntry, Engine};
 use raas::kvcache::SeqCache;
+use raas::runtime::SimBackend;
 use raas::util::json::Json;
 use raas::util::rng::Rng;
 use raas::util::stats::Summary;
 use raas::workload::Problem;
+
+#[path = "../tests/support/gathered_sim.rs"]
+mod gathered_sim;
+use gathered_sim::GatheredSim;
 
 const BUDGET: usize = 192;
 
@@ -93,6 +108,42 @@ fn run_once(e: &mut Engine, prompts: &[Vec<u32>], steps: usize, batched: bool) -
     for mut s in seqs {
         e.release_seq(&mut s);
     }
+    secs
+}
+
+/// Engine for the paged-vs-gathered comparison: Dense policy (everything
+/// resident and attended, so copy cost scales with context).
+fn ctx_engine(ctx: usize, paged: bool) -> Engine {
+    let cfg = EngineConfig { policy: PolicyKind::Dense, budget: ctx * 2, ..Default::default() };
+    if paged {
+        Engine::new(cfg).expect("sim engine")
+    } else {
+        let meta = ArtifactMeta::sim_default();
+        let model = Box::new(GatheredSim(SimBackend::new(&meta, cfg.seed)));
+        Engine::with_backend(cfg, meta, model).expect("gathered engine")
+    }
+}
+
+/// A `ctx`-token prompt of plain digit/index tokens (content is irrelevant
+/// here: only the resident-set size matters).
+fn ctx_prompt(ctx: usize, spec: &CorpusSpec) -> Vec<u32> {
+    (0..ctx).map(|i| spec.dig0 + (i % 10) as u32).collect()
+}
+
+/// One timed run at a fixed context: prefill `ctx` tokens outside the
+/// timer, then `steps` batched decode iterations (batch 1) inside.
+fn run_ctx_once(e: &mut Engine, prompt: &[u32], steps: usize) -> f64 {
+    let mut seq = e.new_seq();
+    let mut tok = e.prefill_seq(&mut seq, prompt).expect("prefill");
+    let t0 = Instant::now();
+    for step in 1..=steps {
+        let mut entries = vec![BatchEntry::new(&mut seq, tok, step as u64)];
+        let results = e.decode_batch(&mut entries);
+        drop(entries);
+        tok = results.into_iter().next().unwrap().expect("decode");
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    e.release_seq(&mut seq);
     secs
 }
 
@@ -171,4 +222,75 @@ fn main() {
     std::fs::write("results/BENCH_decode_throughput.json", Json::Arr(rows).to_string())
         .expect("write results/BENCH_decode_throughput.json");
     println!("wrote results/BENCH_decode_throughput.json");
+
+    // ------------------------------------------------------------------
+    // Paged vs gathered attention route at growing context lengths.
+    // ------------------------------------------------------------------
+    let ctxs: &[usize] = if quick { &[256, 1024] } else { &[256, 1024, 4096] };
+    let (ctx_steps, ctx_iters, ctx_warmup) = if quick { (24, 3, 1) } else { (96, 8, 2) };
+    println!(
+        "\n{:<30} {:>8} {:>8} {:>12} {:>14}",
+        "benchmark", "context", "steps", "mean", "tokens/sec"
+    );
+    println!("{}", "-".repeat(76));
+    let mut paged_rows: Vec<Json> = Vec::new();
+    let mut ctx_rates: Vec<(usize, bool, f64)> = Vec::new();
+    let spec = ArtifactMeta::sim_default().corpus;
+    for &ctx in ctxs {
+        let prompt = ctx_prompt(ctx, &spec);
+        for &paged in &[false, true] {
+            let mode = if paged { "paged" } else { "gathered" };
+            let mut e = ctx_engine(ctx, paged);
+            for _ in 0..ctx_warmup {
+                run_ctx_once(&mut e, &prompt, ctx_steps);
+            }
+            let mut s = Summary::new();
+            for _ in 0..ctx_iters {
+                s.add(run_ctx_once(&mut e, &prompt, ctx_steps));
+            }
+            let toks_per_sec = ctx_steps as f64 / s.mean();
+            println!(
+                "{:<30} {:>8} {:>8} {:>9.2} ms {:>14.0}",
+                format!("decode/{mode}/ctx{ctx}"),
+                ctx,
+                ctx_steps,
+                s.mean() * 1e3,
+                toks_per_sec
+            );
+            paged_rows.push(Json::obj(vec![
+                ("name", Json::str(format!("decode/{mode}/ctx{ctx}"))),
+                ("mode", Json::str(mode)),
+                ("context", Json::from(ctx)),
+                ("resident_tokens", Json::from(ctx + ctx_steps)),
+                ("steps", Json::from(ctx_steps)),
+                ("iters", Json::from(s.count())),
+                ("mean_secs", Json::from(s.mean())),
+                ("p50_secs", Json::from(s.percentile(50.0))),
+                ("min_secs", Json::from(s.min())),
+                ("tokens_per_sec", Json::from(toks_per_sec)),
+            ]));
+            ctx_rates.push((ctx, paged, toks_per_sec));
+        }
+    }
+    let ctx_rate = |ctx: usize, paged: bool| {
+        ctx_rates
+            .iter()
+            .find(|&&(c, p, _)| c == ctx && p == paged)
+            .map(|&(_, _, r)| r)
+            .unwrap_or(f64::NAN)
+    };
+    println!();
+    for &ctx in ctxs {
+        let speedup = ctx_rate(ctx, true) / ctx_rate(ctx, false);
+        println!("paged vs gathered @ ctx {ctx}: {speedup:.2}x (target >= 1.0, widening)");
+        paged_rows.push(Json::obj(vec![
+            ("name", Json::str(format!("summary/ctx{ctx}"))),
+            ("context", Json::from(ctx)),
+            ("speedup_paged_vs_gathered", Json::from(speedup)),
+            ("target", Json::from(1.0)),
+        ]));
+    }
+    std::fs::write("results/BENCH_paged_attention.json", Json::Arr(paged_rows).to_string())
+        .expect("write results/BENCH_paged_attention.json");
+    println!("wrote results/BENCH_paged_attention.json");
 }

@@ -6,8 +6,12 @@
 //!
 //! Per decode token, per layer:
 //!   backend qkv → append (k,v) to the paged pool → rep-score resident pages
-//!   (rust, O(pages)) → policy.select → gather selected slots O(L) →
-//!   backend attn_mlp (Pallas kernel on the xla path) → next layer.
+//!   (rust, O(pages)) → policy.select_into → attention → next layer.
+//! Attention takes the zero-copy paged route (in-place pool-slab views,
+//! `Backend::layer_attn_mlp_paged`) when the backend supports it, else the
+//! gather route (copy selected slots into capacity-padded scratch,
+//! `Backend::layer_attn_mlp` — the Pallas kernel on the xla path).  The two
+//! routes decode bit-identically (DESIGN.md §2).
 //! After all layers: lm_head exec → greedy sample → policy.observe +
 //! budget-bounded eviction (timestamps/eviction are batched per iteration,
 //! as in the paper's implementation, Appendix B).
@@ -21,7 +25,8 @@ use crate::kvcache::page::page_probs;
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
 use crate::kvcache::{KvPool, SeqCache};
 use crate::metrics::Metrics;
-use crate::runtime::{AttnBatchItem, Backend, Qkv, QkvBatchItem, SimBackend, Tokenizer};
+use crate::runtime::{AttnBatchItem, Backend, PagedAttnInput, Qkv, QkvBatchItem, SimBackend,
+                     Tokenizer};
 
 #[derive(Debug, Clone, Default)]
 pub struct GenOptions {
@@ -75,6 +80,8 @@ struct BatchSlot {
     v: Vec<f32>,
     valid: Vec<f32>,
     capacity: usize,
+    /// This layer's page selection (reusable `select_into` scratch).
+    sel: Vec<usize>,
     /// Pending layer-0 score-log entry for the current iteration.
     log_entry: Option<Vec<(usize, f32)>>,
 }
@@ -90,6 +97,7 @@ pub struct Engine {
     // scratch buffers reused across steps (no allocation in the hot loop)
     scores: Vec<f32>,
     probs: Vec<f32>,
+    sel_buf: Vec<usize>,
     k_buf: Vec<f32>,
     v_buf: Vec<f32>,
     valid_buf: Vec<f32>,
@@ -144,6 +152,7 @@ impl Engine {
             meta,
             scores: Vec::new(),
             probs: Vec::new(),
+            sel_buf: Vec::new(),
             k_buf: Vec::new(),
             v_buf: Vec::new(),
             valid_buf: Vec::new(),
@@ -208,14 +217,22 @@ impl Engine {
 
     /// Decode one token: returns the next token id.
     ///
+    /// Attention routes through the backend's zero-copy paged entry point
+    /// when [`Backend::supports_paged`] is true (in-place slab views, no
+    /// copy, no capacity padding); otherwise through the classic gather
+    /// path.  Both routes are bit-identical end to end (tokens and score
+    /// logs — pinned by `rust/tests/paged_attention.rs`).
+    ///
     /// Per-phase wall time is accumulated into the metrics registry
     /// (`step.exec_secs` = PJRT executions, `step.policy_secs` = rep scoring
-    /// + selection + stamps + eviction, `step.gather_secs` = page gather) —
-    /// the basis of the EXPERIMENTS.md §Perf breakdown.
+    /// + selection + stamps + eviction, `step.gather_secs` = page gather, or
+    /// page-view assembly on the paged route) — the basis of the
+    /// EXPERIMENTS.md §Perf breakdown.
     pub fn decode_step(&mut self, seq: &mut SeqCache, token: u32, now: u64,
                        score_log: Option<&mut Vec<(u64, Vec<(usize, f32)>)>>)
                        -> Result<u32> {
         let spec = self.meta.model.clone();
+        let paged = self.model.supports_paged();
         let pos = seq.n_tokens;
         let mut t_exec = 0.0f64;
         let mut t_policy = 0.0f64;
@@ -253,21 +270,38 @@ impl Engine {
                         .collect(),
                 );
             }
-            let sel = self.policy.select(&lc.table, &self.scores, self.cfg.budget,
-                                         self.meta.page_size);
+            self.policy.select_into(&lc.table, &self.scores, self.cfg.budget,
+                                    self.meta.page_size, &mut self.sel_buf);
             t_policy += t0.elapsed().as_secs_f64();
 
-            let n_slots: usize = sel.iter().map(|&i| lc.table[i].len).sum();
-            let capacity = self.model.capacity_for(n_slots)?;
-            let t0 = Instant::now();
-            let used = seq.gather(layer, &self.pool, &sel, capacity, &mut self.k_buf,
-                                  &mut self.v_buf, &mut self.valid_buf);
-            t_gather += t0.elapsed().as_secs_f64();
-            debug_assert_eq!(used, n_slots);
-            let t0 = Instant::now();
-            h = self.model.layer_attn_mlp(layer, capacity, &h, &qkv.q, &self.k_buf,
-                                          &self.v_buf, &self.valid_buf)?;
-            t_exec += t0.elapsed().as_secs_f64();
+            if paged {
+                // zero-copy route: hand the backend in-place views of the
+                // selected pages.  View assembly is timed under
+                // `step.gather_secs` so the perf breakdown shows the copy
+                // collapse directly.  (The view Vec is per-layer: the
+                // slices borrow the pool, so it cannot outlive the next
+                // append — a few tuples vs the old slot memcpy.)
+                let t0 = Instant::now();
+                let mut pages = Vec::with_capacity(self.sel_buf.len());
+                seq.page_views(layer, &self.pool, &self.sel_buf, &mut pages);
+                t_gather += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let inp = PagedAttnInput { h: &h, q: &qkv.q, pages: &pages };
+                h = self.model.layer_attn_mlp_paged(layer, &inp)?;
+                t_exec += t0.elapsed().as_secs_f64();
+            } else {
+                let n_slots: usize = self.sel_buf.iter().map(|&i| lc.table[i].len).sum();
+                let capacity = self.model.capacity_for(n_slots)?;
+                let t0 = Instant::now();
+                let used = seq.gather(layer, &self.pool, &self.sel_buf, capacity,
+                                      &mut self.k_buf, &mut self.v_buf, &mut self.valid_buf);
+                t_gather += t0.elapsed().as_secs_f64();
+                debug_assert_eq!(used, n_slots);
+                let t0 = Instant::now();
+                h = self.model.layer_attn_mlp(layer, capacity, &h, &qkv.q, &self.k_buf,
+                                              &self.v_buf, &self.valid_buf)?;
+                t_exec += t0.elapsed().as_secs_f64();
+            }
             // per-layer observation (stamps, accumulators)
             let t0 = Instant::now();
             self.policy.observe(&mut seq.layers[layer].table, &self.probs, now);
@@ -314,6 +348,7 @@ impl Engine {
             return Vec::new();
         }
         let spec = self.meta.model.clone();
+        let paged = self.model.supports_paged();
         let mut out: Vec<Result<u32>> = (0..n).map(|_| Ok(0u32)).collect();
         let mut alive = vec![true; n];
         let mut t_exec = 0.0f64;
@@ -416,26 +451,32 @@ impl Engine {
                             .collect(),
                     );
                 }
-                let sel = self.policy.select(&lc.table, &self.scores, self.cfg.budget,
-                                             self.meta.page_size);
+                self.policy.select_into(&lc.table, &self.scores, self.cfg.budget,
+                                        self.meta.page_size,
+                                        &mut self.batch_scratch[i].sel);
                 t_policy += t0.elapsed().as_secs_f64();
 
-                let n_slots: usize = sel.iter().map(|&s| lc.table[s].len).sum();
-                let capacity = match self.model.capacity_for(n_slots) {
-                    Ok(c) => c,
-                    Err(err) => {
-                        alive[i] = false;
-                        out[i] = Err(err);
-                        continue;
-                    }
-                };
-                let t0 = Instant::now();
-                let slot = &mut self.batch_scratch[i];
-                let used = e.seq.gather(layer, &self.pool, &sel, capacity, &mut slot.k,
-                                        &mut slot.v, &mut slot.valid);
-                debug_assert_eq!(used, n_slots);
-                slot.capacity = capacity;
-                t_gather += t0.elapsed().as_secs_f64();
+                // the paged route defers to one batched zero-copy call
+                // after every append is done (views borrow the pool, so
+                // they cannot be captured while neighbors still append)
+                if !paged {
+                    let slot = &mut self.batch_scratch[i];
+                    let n_slots: usize = slot.sel.iter().map(|&s| lc.table[s].len).sum();
+                    let capacity = match self.model.capacity_for(n_slots) {
+                        Ok(c) => c,
+                        Err(err) => {
+                            alive[i] = false;
+                            out[i] = Err(err);
+                            continue;
+                        }
+                    };
+                    let t0 = Instant::now();
+                    let used = e.seq.gather(layer, &self.pool, &slot.sel, capacity,
+                                            &mut slot.k, &mut slot.v, &mut slot.valid);
+                    debug_assert_eq!(used, n_slots);
+                    slot.capacity = capacity;
+                    t_gather += t0.elapsed().as_secs_f64();
+                }
                 // per-layer observation (stamps, accumulators) — moved
                 // before the attention call relative to the sequential
                 // path; the policies consume only this layer's probs, so
@@ -446,53 +487,81 @@ impl Engine {
             }
 
             // attention + MLP for the whole batch
-            let t0 = Instant::now();
-            let mut attn_in: Vec<AttnBatchItem<'_>> = Vec::with_capacity(idxs.len());
-            let mut live: Vec<usize> = Vec::with_capacity(idxs.len());
-            for (j, &i) in idxs.iter().enumerate() {
-                if !alive[i] {
-                    continue;
-                }
-                let slot = &self.batch_scratch[i];
-                attn_in.push(AttnBatchItem {
-                    capacity: slot.capacity,
-                    h: &slot.h,
-                    q: &qkvs[j].q,
-                    k_sel: &slot.k,
-                    v_sel: &slot.v,
-                    valid: &slot.valid,
-                });
-                live.push(i);
-            }
-            match self.model.layer_attn_mlp_batch(layer, &attn_in) {
-                Ok(hs) => {
-                    drop(attn_in);
-                    for (&i, h) in live.iter().zip(hs) {
-                        self.batch_scratch[i].h = h;
+            if paged {
+                // zero-copy route: flatten in-place slab views for every
+                // live item (all appends for this layer are done, so the
+                // pool is stable), then ONE batched paged call.  View
+                // assembly is timed as the gather phase it replaces.
+                let t0 = Instant::now();
+                let mut flat: Vec<(&[f32], &[f32], usize)> = Vec::new();
+                // (entry index, qkvs index, flat range) per live item
+                let mut spans: Vec<(usize, usize, usize, usize)> = Vec::with_capacity(idxs.len());
+                for (j, &i) in idxs.iter().enumerate() {
+                    if !alive[i] {
+                        continue;
                     }
-                }
-                Err(_) => {
-                    // per-item fallback: isolate the failing sequence(s)
-                    let per_item: Vec<Result<Vec<f32>>> = attn_in
-                        .iter()
-                        .map(|it| {
-                            self.model.layer_attn_mlp(layer, it.capacity, it.h, it.q,
-                                                      it.k_sel, it.v_sel, it.valid)
-                        })
-                        .collect();
-                    drop(attn_in);
-                    for (&i, r) in live.iter().zip(per_item) {
-                        match r {
-                            Ok(h) => self.batch_scratch[i].h = h,
-                            Err(err) => {
-                                alive[i] = false;
-                                out[i] = Err(err.context(format!("attention (layer {layer})")));
-                            }
-                        }
+                    let start = flat.len();
+                    let lc = &entries[i].seq.layers[layer];
+                    for &s in &self.batch_scratch[i].sel {
+                        let p = &lc.table[s];
+                        flat.push((self.pool.page_k(p.pool_id, p.len),
+                                   self.pool.page_v(p.pool_id, p.len), p.len));
                     }
+                    spans.push((i, j, start, flat.len()));
                 }
+                t_gather += t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let mut attn_in: Vec<PagedAttnInput<'_>> = Vec::with_capacity(spans.len());
+                let mut live: Vec<usize> = Vec::with_capacity(spans.len());
+                for &(i, j, start, end) in &spans {
+                    attn_in.push(PagedAttnInput {
+                        h: &self.batch_scratch[i].h,
+                        q: &qkvs[j].q,
+                        pages: &flat[start..end],
+                    });
+                    live.push(i);
+                }
+                let results = batch_then_per_item(
+                    self.model.layer_attn_mlp_paged_batch(layer, &attn_in),
+                    &attn_in,
+                    |it| self.model.layer_attn_mlp_paged(layer, it),
+                );
+                drop(attn_in);
+                commit_attn_results(layer, &live, results, &mut self.batch_scratch,
+                                    &mut alive, &mut out);
+                t_exec += t0.elapsed().as_secs_f64();
+            } else {
+                let t0 = Instant::now();
+                let mut attn_in: Vec<AttnBatchItem<'_>> = Vec::with_capacity(idxs.len());
+                let mut live: Vec<usize> = Vec::with_capacity(idxs.len());
+                for (j, &i) in idxs.iter().enumerate() {
+                    if !alive[i] {
+                        continue;
+                    }
+                    let slot = &self.batch_scratch[i];
+                    attn_in.push(AttnBatchItem {
+                        capacity: slot.capacity,
+                        h: &slot.h,
+                        q: &qkvs[j].q,
+                        k_sel: &slot.k,
+                        v_sel: &slot.v,
+                        valid: &slot.valid,
+                    });
+                    live.push(i);
+                }
+                let results = batch_then_per_item(
+                    self.model.layer_attn_mlp_batch(layer, &attn_in),
+                    &attn_in,
+                    |it| {
+                        self.model.layer_attn_mlp(layer, it.capacity, it.h, it.q, it.k_sel,
+                                                  it.v_sel, it.valid)
+                    },
+                );
+                drop(attn_in);
+                commit_attn_results(layer, &live, results, &mut self.batch_scratch,
+                                    &mut alive, &mut out);
+                t_exec += t0.elapsed().as_secs_f64();
             }
-            t_exec += t0.elapsed().as_secs_f64();
         }
 
         // batched eviction after the full iteration (paper Appendix B)
@@ -596,6 +665,36 @@ impl Engine {
         self.metrics.gauge_max("pool_high_water_bytes", self.pool.high_water_bytes() as f64);
         seq.release_all(&mut self.pool);
         Ok(out)
+    }
+}
+
+/// All-or-nothing batched backend call with per-item fallback: when the
+/// batched call fails, retry item by item so only the actually-failing
+/// items carry an error (shared by the paged and gathered attention
+/// phases of [`Engine::decode_batch`]).
+fn batch_then_per_item<I>(batched: Result<Vec<Vec<f32>>>, items: &[I],
+                          per_item: impl Fn(&I) -> Result<Vec<f32>>)
+                          -> Vec<Result<Vec<f32>>> {
+    match batched {
+        Ok(hs) => hs.into_iter().map(Ok).collect(),
+        Err(_) => items.iter().map(per_item).collect(),
+    }
+}
+
+/// Write per-item attention results back into the batch scratch, marking
+/// failed items dead with a layer-tagged error (the shared isolation
+/// bookkeeping of both attention routes).
+fn commit_attn_results(layer: usize, live: &[usize], results: Vec<Result<Vec<f32>>>,
+                       scratch: &mut [BatchSlot], alive: &mut [bool],
+                       out: &mut [Result<u32>]) {
+    for (&i, r) in live.iter().zip(results) {
+        match r {
+            Ok(h) => scratch[i].h = h,
+            Err(err) => {
+                alive[i] = false;
+                out[i] = Err(err.context(format!("attention (layer {layer})")));
+            }
+        }
     }
 }
 

@@ -1,6 +1,8 @@
 //! Page metadata: what the sparsity policies reason about.
 
-/// Index into the pool's page slab.
+/// Index into the pool's contiguous K/V slabs: page `id` owns slab range
+/// `[id * page_size * kv_dim .. (id+1) * page_size * kv_dim]`
+/// (`KvPool::page_k`/`page_v` hand out that range as a zero-copy view).
 pub type PageId = u32;
 
 /// Per-page bookkeeping.  One `PageMeta` per (sequence, layer, page).

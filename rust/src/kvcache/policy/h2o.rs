@@ -32,9 +32,10 @@ impl SparsityPolicy for H2oPolicy {
         }
     }
 
-    fn select(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
-              _page_size: usize) -> Vec<usize> {
-        (0..table.len()).collect()
+    fn select_into(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+                   _page_size: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(0..table.len());
     }
 
     fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize> {

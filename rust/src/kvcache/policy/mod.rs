@@ -36,12 +36,25 @@ pub trait SparsityPolicy: Send {
     /// are known.  `now` is the decode-step counter.
     fn observe(&self, table: &mut [PageMeta], probs: &[f32], now: u64);
 
-    /// Indices (into `table`) of pages to attend this step.  `scores` are
-    /// the raw representative upper bounds (pre-softmax), aligned with
-    /// `table`.  Must always include the final page (the one receiving new
-    /// tokens) when the table is non-empty.
+    /// Indices (into `table`) of pages to attend this step, written into
+    /// `out` (cleared first).  `scores` are the raw representative upper
+    /// bounds (pre-softmax), aligned with `table`.  Must always include the
+    /// final page (the one receiving new tokens) when the table is
+    /// non-empty.  The out-param form is the hot-path entry point: the
+    /// engine hands in per-sequence scratch so steady-state decode
+    /// allocates nothing (one fresh `Vec` per layer per step adds up).
+    fn select_into(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
+                   page_size: usize, out: &mut Vec<usize>);
+
+    /// Allocating convenience wrapper around
+    /// [`SparsityPolicy::select_into`] (tests, the trace simulator, and
+    /// benches that don't carry scratch).
     fn select(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
-              page_size: usize) -> Vec<usize>;
+              page_size: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.select_into(table, scores, budget_tokens, page_size, &mut out);
+        out
+    }
 
     /// Page to evict while the resident set exceeds the budget.  `None`
     /// means nothing is evictable (Dense/Quest always; RaaS when only

@@ -14,24 +14,36 @@ impl SparsityPolicy for QuestPolicy {
 
     fn observe(&self, _table: &mut [PageMeta], _probs: &[f32], _now: u64) {}
 
-    fn select(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
-              page_size: usize) -> Vec<usize> {
+    fn select_into(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
+                   page_size: usize, out: &mut Vec<usize>) {
+        out.clear();
         let budget_pages = (budget_tokens / page_size.max(1)).max(1);
         if table.len() <= budget_pages {
-            return (0..table.len()).collect();
+            out.extend(0..table.len());
+            return;
         }
         // Rank by representative score; the active (last) page is always
         // included, as in Quest's implementation.  `total_cmp`: a NaN score
         // (e.g. degenerate rep bounds) must not panic the engine — NaNs
         // order above +inf and get selected, which is the conservative
         // failure mode for a *selection* policy.
+        //
+        // Partial selection (O(n) expected vs the old full-sort O(n log n),
+        // per layer per step): only the top-k set is needed, not its
+        // internal order.  The index tie-break makes the comparator a total
+        // order, so the selected *set* is exactly what the old stable
+        // descending sort produced on tied scores (earlier pages win).
         let last = table.len() - 1;
-        let mut order: Vec<usize> = (0..last).collect();
-        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
-        let mut sel: Vec<usize> = order.into_iter().take(budget_pages - 1).collect();
-        sel.push(last);
-        sel.sort_unstable();
-        sel
+        let k = budget_pages - 1;
+        out.extend(0..last);
+        if k < out.len() {
+            out.select_nth_unstable_by(k, |&a, &b| {
+                scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+            });
+            out.truncate(k);
+        }
+        out.push(last);
+        out.sort_unstable();
     }
 
     fn evict_candidate(&self, _table: &[PageMeta]) -> Option<usize> {
@@ -62,6 +74,21 @@ mod tests {
         let p = QuestPolicy;
         let t = mk_table(&[(16, false), (8, false)]);
         assert_eq!(p.select(&t, &[0.0, 0.0], 1024, 16), vec![0, 1]);
+    }
+
+    #[test]
+    fn tied_scores_select_earlier_pages() {
+        // The partial selection must reproduce the old stable sort's
+        // deterministic tie handling: equal scores resolve to the earlier
+        // page index.
+        let p = QuestPolicy;
+        let t = mk_table(&[(16, false); 6]);
+        // pages 0,2,3 tie at 0.5; budget 3 pages -> two tied picks + active
+        let sel = p.select(&t, &[0.5, 0.1, 0.5, 0.5, 0.2, 0.0], 48, 16);
+        assert_eq!(sel, vec![0, 2, 5]);
+        // one-page budget degenerates to the active page alone
+        let sel = p.select(&t, &[0.9, 0.9, 0.9, 0.9, 0.9, 0.0], 16, 16);
+        assert_eq!(sel, vec![5]);
     }
 
     #[test]

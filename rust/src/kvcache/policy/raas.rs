@@ -61,11 +61,12 @@ impl SparsityPolicy for RaasPolicy {
         }
     }
 
-    fn select(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
-              _page_size: usize) -> Vec<usize> {
+    fn select_into(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+                   _page_size: usize, out: &mut Vec<usize>) {
         // RaaS attends the full (budget-bounded) resident set; sparsity comes
         // from eviction, which is what keeps memory at O(L).
-        (0..table.len()).collect()
+        out.clear();
+        out.extend(0..table.len());
     }
 
     fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize> {

@@ -23,11 +23,12 @@ impl SparsityPolicy for SinkPolicy {
 
     fn observe(&self, _table: &mut [PageMeta], _probs: &[f32], _now: u64) {}
 
-    fn select(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
-              _page_size: usize) -> Vec<usize> {
+    fn select_into(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+                   _page_size: usize, out: &mut Vec<usize>) {
         // Attend the whole resident set: eviction already enforces the
         // sink+window structure.
-        (0..table.len()).collect()
+        out.clear();
+        out.extend(0..table.len());
     }
 
     fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize> {

@@ -1,25 +1,31 @@
-//! The physical page pool: a slab of fixed-size KV pages with a free list
-//! and byte-accurate accounting (drives the Figure-7 memory axis and the
-//! coordinator's admission control).
+//! The physical page pool: two contiguous K/V slabs carved into fixed-size
+//! pages, with a free list and byte-accurate accounting (drives the
+//! Figure-7 memory axis and the coordinator's admission control).
+//!
+//! Slab layout (the zero-copy paged-attention substrate, DESIGN.md §2):
+//! page `id` owns `[id * page_size * kv_dim .. (id+1) * page_size * kv_dim]`
+//! of both slabs, so a resident page's K/V is a plain `&[f32]` slice
+//! ([`KvPool::page_k`] / [`KvPool::page_v`]) that backends read in place —
+//! no per-page allocations, no gather copy, real cache locality.
 
 use anyhow::{bail, Result};
 
 use super::page::PageId;
 
-/// KV data for one page of one layer: `page_size` slots of post-RoPE keys
-/// and raw values, each `kv_dim = n_kv_heads * head_dim` floats.
-#[derive(Debug)]
-struct PageData {
-    k: Vec<f32>, // [page_size * kv_dim]
-    v: Vec<f32>,
-}
-
 #[derive(Debug)]
 pub struct KvPool {
     page_size: usize,
     kv_dim: usize,
-    pages: Vec<PageData>,
+    /// Contiguous key slab, `[capacity_pages * page_size * kv_dim]`; each
+    /// slot holds `kv_dim = n_kv_heads * head_dim` post-RoPE key floats.
+    k: Vec<f32>,
+    /// Contiguous value slab, same geometry as `k`.
+    v: Vec<f32>,
+    capacity_pages: usize,
     free: Vec<PageId>,
+    /// Bit `id` set ⇔ page `id` is on the free list — O(1) double-free
+    /// detection (the old `free.contains` scan was O(free) per release).
+    free_bits: Vec<u64>,
     allocated: usize,
     high_water: usize,
 }
@@ -28,14 +34,18 @@ impl KvPool {
     /// `capacity_pages` pages of `page_size` tokens, `kv_dim` floats per
     /// token for K and V each.
     pub fn new(capacity_pages: usize, page_size: usize, kv_dim: usize) -> Self {
-        let pages = (0..capacity_pages)
-            .map(|_| PageData {
-                k: vec![0.0; page_size * kv_dim],
-                v: vec![0.0; page_size * kv_dim],
-            })
-            .collect();
-        let free = (0..capacity_pages as u32).rev().collect();
-        KvPool { page_size, kv_dim, pages, free, allocated: 0, high_water: 0 }
+        let stride = page_size * kv_dim;
+        KvPool {
+            page_size,
+            kv_dim,
+            k: vec![0.0; capacity_pages * stride],
+            v: vec![0.0; capacity_pages * stride],
+            capacity_pages,
+            free: (0..capacity_pages as u32).rev().collect(),
+            free_bits: vec![u64::MAX; (capacity_pages + 63) / 64],
+            allocated: 0,
+            high_water: 0,
+        }
     }
 
     pub fn page_size(&self) -> usize {
@@ -45,7 +55,7 @@ impl KvPool {
         self.kv_dim
     }
     pub fn capacity_pages(&self) -> usize {
-        self.pages.len()
+        self.capacity_pages
     }
     pub fn allocated_pages(&self) -> usize {
         self.allocated
@@ -69,18 +79,38 @@ impl KvPool {
         self.high_water = self.allocated;
     }
 
+    /// Slab offset of page `id`'s first float.
+    fn page_off(&self, id: PageId) -> usize {
+        id as usize * self.page_size * self.kv_dim
+    }
+
+    fn is_free(&self, id: PageId) -> bool {
+        (self.free_bits[id as usize / 64] >> (id as usize % 64)) & 1 == 1
+    }
+
+    fn set_free(&mut self, id: PageId, free: bool) {
+        let (word, bit) = (id as usize / 64, id as usize % 64);
+        if free {
+            self.free_bits[word] |= 1u64 << bit;
+        } else {
+            self.free_bits[word] &= !(1u64 << bit);
+        }
+    }
+
     pub fn alloc(&mut self) -> Result<PageId> {
         let Some(id) = self.free.pop() else {
-            bail!("kv pool exhausted ({} pages)", self.pages.len());
+            bail!("kv pool exhausted ({} pages)", self.capacity_pages);
         };
+        self.set_free(id, false);
         self.allocated += 1;
         self.high_water = self.high_water.max(self.allocated);
         Ok(id)
     }
 
     pub fn release(&mut self, id: PageId) {
-        debug_assert!((id as usize) < self.pages.len());
-        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        assert!((id as usize) < self.capacity_pages, "release of invalid page {id}");
+        assert!(!self.is_free(id), "double free of page {id}");
+        self.set_free(id, true);
         self.allocated -= 1;
         self.free.push(id);
     }
@@ -89,28 +119,43 @@ impl KvPool {
     pub fn write_slot(&mut self, id: PageId, slot: usize, k: &[f32], v: &[f32]) {
         debug_assert!(slot < self.page_size);
         debug_assert_eq!(k.len(), self.kv_dim);
-        let off = slot * self.kv_dim;
-        let page = &mut self.pages[id as usize];
-        page.k[off..off + self.kv_dim].copy_from_slice(k);
-        page.v[off..off + self.kv_dim].copy_from_slice(v);
+        debug_assert!(!self.is_free(id), "write to free page {id}");
+        let off = self.page_off(id) + slot * self.kv_dim;
+        self.k[off..off + self.kv_dim].copy_from_slice(k);
+        self.v[off..off + self.kv_dim].copy_from_slice(v);
     }
 
     /// Copy `len` slots of page `id` into the destination slices (gather).
     pub fn read_page(&self, id: PageId, len: usize, dst_k: &mut [f32], dst_v: &mut [f32]) {
         debug_assert!(len <= self.page_size);
         let n = len * self.kv_dim;
-        let page = &self.pages[id as usize];
-        dst_k[..n].copy_from_slice(&page.k[..n]);
-        dst_v[..n].copy_from_slice(&page.v[..n]);
+        let off = self.page_off(id);
+        dst_k[..n].copy_from_slice(&self.k[off..off + n]);
+        dst_v[..n].copy_from_slice(&self.v[off..off + n]);
+    }
+
+    /// Zero-copy view of the first `len` slots of page `id`'s keys,
+    /// `[len * kv_dim]` — what the paged attention path reads in place.
+    pub fn page_k(&self, id: PageId, len: usize) -> &[f32] {
+        debug_assert!(len <= self.page_size);
+        let off = self.page_off(id);
+        &self.k[off..off + len * self.kv_dim]
+    }
+
+    /// Zero-copy view of the first `len` slots of page `id`'s values.
+    pub fn page_v(&self, id: PageId, len: usize) -> &[f32] {
+        debug_assert!(len <= self.page_size);
+        let off = self.page_off(id);
+        &self.v[off..off + len * self.kv_dim]
     }
 
     pub fn slot_k(&self, id: PageId, slot: usize) -> &[f32] {
-        let off = slot * self.kv_dim;
-        &self.pages[id as usize].k[off..off + self.kv_dim]
+        let off = self.page_off(id) + slot * self.kv_dim;
+        &self.k[off..off + self.kv_dim]
     }
     pub fn slot_v(&self, id: PageId, slot: usize) -> &[f32] {
-        let off = slot * self.kv_dim;
-        &self.pages[id as usize].v[off..off + self.kv_dim]
+        let off = self.page_off(id) + slot * self.kv_dim;
+        &self.v[off..off + self.kv_dim]
     }
 }
 
@@ -138,6 +183,19 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "double free of page")]
+    fn double_free_panics() {
+        // Regression for the O(free)->O(1) free_bits check: releasing the
+        // same page twice must still be caught (and now always, not only
+        // with debug assertions).
+        let mut pool = KvPool::new(4, 16, 8);
+        let a = pool.alloc().unwrap();
+        let _b = pool.alloc().unwrap();
+        pool.release(a);
+        pool.release(a);
+    }
+
+    #[test]
     fn write_read_roundtrip() {
         let mut pool = KvPool::new(1, 4, 3);
         let id = pool.alloc().unwrap();
@@ -150,6 +208,25 @@ mod tests {
         assert_eq!(&k[6..9], &[7.0, 8.0, 9.0]);
         assert_eq!(&v[6..9], &[10.0, 11.0, 12.0]);
         assert_eq!(pool.slot_k(id, 2), &[7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn page_views_alias_slab_contents() {
+        let mut pool = KvPool::new(3, 4, 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        pool.write_slot(a, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        pool.write_slot(a, 1, &[5.0, 6.0], &[7.0, 8.0]);
+        pool.write_slot(b, 0, &[-1.0, -2.0], &[-3.0, -4.0]);
+        assert_eq!(pool.page_k(a, 2), &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(pool.page_v(a, 2), &[3.0, 4.0, 7.0, 8.0]);
+        assert_eq!(pool.page_k(b, 1), &[-1.0, -2.0]);
+        // views match the gather copy exactly
+        let mut k = vec![0.0; 2 * 2];
+        let mut v = vec![0.0; 2 * 2];
+        pool.read_page(a, 2, &mut k, &mut v);
+        assert_eq!(pool.page_k(a, 2), &k[..]);
+        assert_eq!(pool.page_v(a, 2), &v[..]);
     }
 
     #[test]

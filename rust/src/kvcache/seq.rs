@@ -122,6 +122,21 @@ impl SeqCache {
         used
     }
 
+    /// Zero-copy twin of [`SeqCache::gather`]: collect `(k, v, len)` slab
+    /// views of the selected pages, in selection order, into `out` — no
+    /// copy, no capacity padding, no `valid` mask.  The views alias the
+    /// pool slabs, so the pool cannot be mutated while they live.
+    pub fn page_views<'p>(&self, layer: usize, pool: &'p KvPool, sel: &[usize],
+                          out: &mut Vec<(&'p [f32], &'p [f32], usize)>) {
+        out.clear();
+        let lc = &self.layers[layer];
+        for &i in sel {
+            let page = &lc.table[i];
+            out.push((pool.page_k(page.pool_id, page.len), pool.page_v(page.pool_id, page.len),
+                      page.len));
+        }
+    }
+
     pub fn resident_tokens(&self, layer: usize) -> usize {
         self.layers[layer].resident_tokens()
     }
@@ -174,6 +189,28 @@ mod tests {
         assert_eq!(sc.layers[0].table.len(), 2);
         assert!(sc.layers[0].table[0].pinned);
         assert!(!sc.layers[0].table[1].pinned);
+    }
+
+    #[test]
+    fn page_views_match_gather() {
+        let (mut sc, mut pool) = mk();
+        for pos in 0..7 {
+            sc.append(0, &mut pool, pos, &[pos as f32; 3], &[20.0 + pos as f32; 3], false, 0)
+                .unwrap();
+        }
+        // pages: [0..4), [4..7); select both
+        let sel = [0usize, 1];
+        let (mut k, mut v, mut valid) = (Vec::new(), Vec::new(), Vec::new());
+        let used = sc.gather(0, &pool, &sel, 8, &mut k, &mut v, &mut valid);
+        let mut views = Vec::new();
+        sc.page_views(0, &pool, &sel, &mut views);
+        assert_eq!(views.len(), 2);
+        assert_eq!(views[0].2, 4);
+        assert_eq!(views[1].2, 3);
+        let flat_k: Vec<f32> = views.iter().flat_map(|&(k, _, _)| k.iter().copied()).collect();
+        let flat_v: Vec<f32> = views.iter().flat_map(|&(_, v, _)| v.iter().copied()).collect();
+        assert_eq!(flat_k, k[..used * 3]);
+        assert_eq!(flat_v, v[..used * 3]);
     }
 
     #[test]

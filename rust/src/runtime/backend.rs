@@ -54,6 +54,26 @@ pub struct AttnBatchItem<'a> {
     pub valid: &'a [f32],
 }
 
+/// Zero-copy input to the paged attention entry points (DESIGN.md §2,
+/// paged route): the selected pages' K/V viewed *in place* in the pool
+/// slabs — no gather copy, no capacity padding, no `valid` mask.
+pub struct PagedAttnInput<'a> {
+    /// hidden `[d_model]`.
+    pub h: &'a [f32],
+    /// query `[n_heads * head_dim]`.
+    pub q: &'a [f32],
+    /// Selected pages in selection order: `(k, v, len)` with `k`/`v` of
+    /// `[len * kv_dim]` — `len` live slots, nothing padded.
+    pub pages: &'a [(&'a [f32], &'a [f32], usize)],
+}
+
+impl PagedAttnInput<'_> {
+    /// Total live slots across the selected pages.
+    pub fn n_slots(&self) -> usize {
+        self.pages.iter().map(|&(_, _, len)| len).sum()
+    }
+}
+
 /// Output of a dense prefill call.
 pub struct PrefillOut {
     /// `[n_layers][padded][kv_dim]` post-RoPE keys.
@@ -79,8 +99,10 @@ impl PrefillOut {
 /// A model execution backend.
 ///
 /// The engine drives it per decode token, per layer:
-/// `embed_tok` → `layer_qkv` → (policy select + gather) → `layer_attn_mlp`
-/// → … → `lm_head`; prompts go through `prefill` in one call.
+/// `embed_tok` → `layer_qkv` → (policy select) → attention — the zero-copy
+/// `layer_attn_mlp_paged` when `supports_paged()`, else gather +
+/// `layer_attn_mlp` → … → `lm_head`; prompts go through `prefill` in one
+/// call.
 pub trait Backend: std::fmt::Debug {
     /// Short backend identifier (`"sim"`, `"xla"`).
     fn name(&self) -> &'static str;
@@ -153,6 +175,59 @@ pub trait Backend: std::fmt::Debug {
     /// Batched [`Backend::lm_head`]: one logits `[vocab]` per hidden state.
     fn lm_head_batch(&self, hs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         hs.iter().map(|h| self.lm_head(h)).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Paged (zero-copy) entry points (DESIGN.md §2, paged route).
+    //
+    // The engine routes attention through these when `supports_paged()` is
+    // true, handing the backend in-place slab views of the selected pages
+    // instead of gathering them into capacity-padded scratch — deleting
+    // the dominant per-layer memcpy and the zero-fill of padding slots.
+    // The defaults gather-and-delegate, so `ModelRuntime` behind
+    // `backend-xla` keeps working unchanged (its compiled kernels want the
+    // fixed-capacity layout); `SimBackend` overrides them natively.  Every
+    // override MUST stay bit-identical to the gathered route — paged and
+    // gathered decode producing the same tokens is pinned by
+    // `rust/tests/paged_attention.rs`.
+    // ------------------------------------------------------------------
+
+    /// Whether this backend attends paged K/V in place.  When false the
+    /// engine stays on the gather route and never calls the paged entry
+    /// points.
+    fn supports_paged(&self) -> bool {
+        false
+    }
+
+    /// Attention over in-place page views + MLP; returns hidden'
+    /// `[d_model]`.  Default: gather into scratch and delegate to
+    /// [`Backend::layer_attn_mlp`] (reference semantics for backends
+    /// without a native paged kernel).
+    fn layer_attn_mlp_paged(&self, layer: usize, input: &PagedAttnInput<'_>)
+                            -> Result<Vec<f32>> {
+        let spec = self.spec();
+        let kv_dim = spec.n_kv_heads * spec.head_dim;
+        let n_slots = input.n_slots();
+        let capacity = self.capacity_for(n_slots)?;
+        let mut k_sel = vec![0.0f32; capacity * kv_dim];
+        let mut v_sel = vec![0.0f32; capacity * kv_dim];
+        let mut valid = vec![0.0f32; capacity];
+        let mut used = 0usize;
+        for &(k, v, len) in input.pages {
+            k_sel[used * kv_dim..(used + len) * kv_dim].copy_from_slice(k);
+            v_sel[used * kv_dim..(used + len) * kv_dim].copy_from_slice(v);
+            for s in 0..len {
+                valid[used + s] = 1.0;
+            }
+            used += len;
+        }
+        self.layer_attn_mlp(layer, capacity, input.h, input.q, &k_sel, &v_sel, &valid)
+    }
+
+    /// Batched [`Backend::layer_attn_mlp_paged`]: one hidden' per item.
+    fn layer_attn_mlp_paged_batch(&self, layer: usize, items: &[PagedAttnInput<'_>])
+                                  -> Result<Vec<Vec<f32>>> {
+        items.iter().map(|it| self.layer_attn_mlp_paged(layer, it)).collect()
     }
 }
 

@@ -30,12 +30,19 @@
 //! (keys and queries are position-pure here, so co-scheduled sequences at
 //! the same positions qualify).  All sharing is bitwise-exact: batched and
 //! sequential decode produce identical tokens.
+//!
+//! The backend also implements the zero-copy paged entry points natively
+//! (`supports_paged` is true): [`SimBackend::layer_attn_mlp_paged`] reads
+//! the selected pages' K/V in place — no gather copy, no capacity
+//! padding — while reproducing the gathered reference bit for bit, and
+//! its batch sibling carries the same cross-item weight reuse
+//! (DESIGN.md §2, paged route; pinned by `rust/tests/paged_attention.rs`).
 
 use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
-use super::backend::{AttnBatchItem, Backend, PrefillOut, Qkv};
+use super::backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillOut, Qkv};
 use crate::config::{ArtifactMeta, ModelSpec};
 use crate::sim::profiles::{ModelProfile, MODELS};
 
@@ -399,6 +406,112 @@ impl SimBackend {
         }
         true
     }
+
+    /// Paged twin of [`SimBackend::softmax_weights`]: softmax weights for
+    /// one (query-head slice, kv group `g`) pair over an item's live slots,
+    /// read in place page by page, written into `dst` (`[n_slots]`).
+    ///
+    /// INVARIANT (do not edit one side alone): this must stay bit-identical
+    /// to the corresponding per-head pass of both `layer_attn_mlp_paged`
+    /// and the gathered reference `layer_attn_mlp` — same ops over the live
+    /// slots in the same (selection, slot) order, including the
+    /// non-finite-score handling.  Gathered padding slots contribute
+    /// nothing to max/denom there, so skipping them entirely here yields
+    /// the same bits.  Divergence is caught by
+    /// `tests::paged_attn_matches_gathered_bitwise` and
+    /// `rust/tests/paged_attention.rs`.
+    fn paged_softmax_weights(&self, inp: &PagedAttnInput<'_>, qh: &[f32], g: usize,
+                             dst: &mut [f32]) {
+        let hd = self.spec.head_dim;
+        let kv_dim = self.spec.n_kv_heads * hd;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut max = f32::NEG_INFINITY;
+        let mut slot = 0usize;
+        for &(pk, _, len) in inp.pages {
+            for t in 0..len {
+                let ks = &pk[t * kv_dim + g * hd..t * kv_dim + (g + 1) * hd];
+                let mut dot = 0.0f32;
+                for c in 0..hd {
+                    dot += qh[c] * ks[c];
+                }
+                let sc = dot * scale;
+                dst[slot] = sc;
+                if sc > max {
+                    max = sc;
+                }
+                slot += 1;
+            }
+        }
+        if max == f32::NEG_INFINITY {
+            // no slots, or nothing finite: attention contributes nothing
+            for w in dst.iter_mut() {
+                *w = 0.0;
+            }
+            return;
+        }
+        let mut denom = 0.0f32;
+        for sc in dst.iter_mut() {
+            if *sc > f32::NEG_INFINITY {
+                *sc = (*sc - max).exp();
+                denom += *sc;
+            } else {
+                *sc = 0.0;
+            }
+        }
+        for w in dst.iter_mut() {
+            *w /= denom;
+        }
+    }
+
+    /// Paged twin of [`SimBackend::attn_weights`]: per-head softmax weights
+    /// `[n_heads * n_slots]` for one item, with the same bitwise-detected
+    /// head/kv-group collapse.  Returns whether all heads in each kv group
+    /// carry identical rows.
+    fn paged_attn_weights(&self, inp: &PagedAttnInput<'_>, n_slots: usize,
+                          weights: &mut Vec<f32>) -> bool {
+        let s = &self.spec;
+        let hd = s.head_dim;
+        let kv_dim = s.n_kv_heads * hd;
+        let group = s.n_heads / s.n_kv_heads;
+        weights.clear();
+        weights.resize(s.n_heads * n_slots, 0.0);
+        let q0 = &inp.q[..hd];
+        let q_uniform = (1..s.n_heads).all(|h| bits_eq(&inp.q[h * hd..(h + 1) * hd], q0));
+        if !q_uniform {
+            for head in 0..s.n_heads {
+                let g = head / group;
+                let qh = &inp.q[head * hd..(head + 1) * hd];
+                self.paged_softmax_weights(inp, qh, g,
+                                           &mut weights[head * n_slots..(head + 1) * n_slots]);
+            }
+            return false;
+        }
+        let k_uniform = inp.pages.iter().all(|&(pk, _, len)| {
+            (0..len).all(|t| {
+                let base = t * kv_dim;
+                (1..s.n_kv_heads).all(|g| {
+                    bits_eq(&pk[base + g * hd..base + (g + 1) * hd], &pk[base..base + hd])
+                })
+            })
+        });
+        let distinct = if k_uniform { 1 } else { s.n_kv_heads };
+        for g in 0..distinct {
+            let head0 = g * group;
+            self.paged_softmax_weights(inp, q0, g,
+                                       &mut weights[head0 * n_slots..(head0 + 1) * n_slots]);
+        }
+        // broadcast the computed rows to the remaining heads
+        for head in 0..s.n_heads {
+            let g = head / group;
+            let src = if k_uniform { 0 } else { g * group };
+            if head == src {
+                continue;
+            }
+            let (lo, hi) = weights.split_at_mut(head * n_slots);
+            hi[..n_slots].copy_from_slice(&lo[src * n_slots..src * n_slots + n_slots]);
+        }
+        true
+    }
 }
 
 /// Bitwise slice equality — the reuse predicate for shared attention
@@ -407,6 +520,16 @@ impl SimBackend {
 /// bit-identical outputs.
 fn bits_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Bitwise page-list equality on the weight-relevant parts (key slices and
+/// live-slot structure) — the paged-path reuse predicate.  Values are
+/// deliberately not compared: weights don't depend on them.
+fn pages_eq(a: &[(&[f32], &[f32], usize)], b: &[(&[f32], &[f32], usize)]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(&(ak, _, alen), &(bk, _, blen))| alen == blen && bits_eq(ak, bk))
 }
 
 impl Backend for SimBackend {
@@ -658,6 +781,161 @@ impl Backend for SimBackend {
         Ok(outs)
     }
 
+    // -- paged (zero-copy) entry points (native implementations) ----------
+
+    fn supports_paged(&self) -> bool {
+        true
+    }
+
+    /// Attention over in-place page views: the reference paged
+    /// implementation, mirroring `layer_attn_mlp` op for op over the live
+    /// slots in (selection, slot) order.  Gathered padding slots carry
+    /// `-inf` scores there and contribute nothing to max/denom/output, so
+    /// iterating only the live slots here produces the same bits — the
+    /// invariant `rust/tests/paged_attention.rs` pins end to end.
+    fn layer_attn_mlp_paged(&self, layer: usize, inp: &PagedAttnInput<'_>)
+                            -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let hd = s.head_dim;
+        let kv_dim = s.n_kv_heads * hd;
+        let group = s.n_heads / s.n_kv_heads;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let n_slots = inp.n_slots();
+        let mut attn = vec![0.0f32; s.n_heads * hd];
+        let mut scores = vec![0.0f32; n_slots];
+        for head in 0..s.n_heads {
+            let g = head / group;
+            let qh = &inp.q[head * hd..(head + 1) * hd];
+            let mut max = f32::NEG_INFINITY;
+            let mut slot = 0usize;
+            for &(pk, _, len) in inp.pages {
+                for t in 0..len {
+                    let ks = &pk[t * kv_dim + g * hd..t * kv_dim + (g + 1) * hd];
+                    let mut dot = 0.0f32;
+                    for c in 0..hd {
+                        dot += qh[c] * ks[c];
+                    }
+                    let sc = dot * scale;
+                    scores[slot] = sc;
+                    if sc > max {
+                        max = sc;
+                    }
+                    slot += 1;
+                }
+            }
+            if max == f32::NEG_INFINITY {
+                continue; // no slots / nothing finite: contributes nothing
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                if *sc > f32::NEG_INFINITY {
+                    *sc = (*sc - max).exp();
+                    denom += *sc;
+                } else {
+                    *sc = 0.0;
+                }
+            }
+            let out = &mut attn[head * hd..(head + 1) * hd];
+            let mut slot = 0usize;
+            for &(_, pv, len) in inp.pages {
+                for t in 0..len {
+                    let w = scores[slot] / denom;
+                    slot += 1;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vs = &pv[t * kv_dim + g * hd..t * kv_dim + (g + 1) * hd];
+                    for c in 0..hd {
+                        out[c] += w * vs[c];
+                    }
+                }
+            }
+        }
+        Ok(self.mix_hidden(layer, inp.h, &attn))
+    }
+
+    /// One scheduler iteration's paged attention for all sequences, with
+    /// the same cross-item sharing as the gathered batch path: the
+    /// score+softmax pass is computed once per distinct `(q, pages)` item
+    /// (detected bitwise via `pages_eq`) and reused; per-head work
+    /// collapses across the head/kv-group repetition.  Value aggregation
+    /// stays per-item.
+    fn layer_attn_mlp_paged_batch(&self, layer: usize, items: &[PagedAttnInput<'_>])
+                                  -> Result<Vec<Vec<f32>>> {
+        let s = &self.spec;
+        let hd = s.head_dim;
+        let kv_dim = s.n_kv_heads * hd;
+        let group = s.n_heads / s.n_kv_heads;
+        let mut outs = Vec::with_capacity(items.len());
+        // weights of the most recent distinct item, `[n_heads * n_slots]`
+        let mut weights: Vec<f32> = Vec::new();
+        let mut grouped = false;
+        let mut n_slots = 0usize;
+        let mut owner: Option<usize> = None;
+        for (idx, it) in items.iter().enumerate() {
+            let reuse = owner.is_some_and(|p| {
+                let pv = &items[p];
+                bits_eq(pv.q, it.q) && pages_eq(pv.pages, it.pages)
+            });
+            if !reuse {
+                n_slots = it.n_slots();
+                grouped = self.paged_attn_weights(it, n_slots, &mut weights);
+                owner = Some(idx);
+            }
+            let mut attn = vec![0.0f32; s.n_heads * hd];
+            if grouped {
+                // identical weight rows within each kv group: aggregate once
+                // per group, copy to the group's heads (same bits as the
+                // per-head loop — same ops, same slot order, per head)
+                let mut out_g = vec![0.0f32; hd];
+                for g in 0..s.n_kv_heads {
+                    let head0 = g * group;
+                    let w = &weights[head0 * n_slots..(head0 + 1) * n_slots];
+                    out_g.fill(0.0);
+                    let mut slot = 0usize;
+                    for &(_, pv, len) in it.pages {
+                        for t in 0..len {
+                            let wv = w[slot];
+                            slot += 1;
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            let vs = &pv[t * kv_dim + g * hd..t * kv_dim + (g + 1) * hd];
+                            for c in 0..hd {
+                                out_g[c] += wv * vs[c];
+                            }
+                        }
+                    }
+                    for head in head0..head0 + group {
+                        attn[head * hd..(head + 1) * hd].copy_from_slice(&out_g);
+                    }
+                }
+            } else {
+                for head in 0..s.n_heads {
+                    let g = head / group;
+                    let w = &weights[head * n_slots..(head + 1) * n_slots];
+                    let out = &mut attn[head * hd..(head + 1) * hd];
+                    let mut slot = 0usize;
+                    for &(_, pv, len) in it.pages {
+                        for t in 0..len {
+                            let wv = w[slot];
+                            slot += 1;
+                            if wv == 0.0 {
+                                continue;
+                            }
+                            let vs = &pv[t * kv_dim + g * hd..t * kv_dim + (g + 1) * hd];
+                            for c in 0..hd {
+                                out[c] += wv * vs[c];
+                            }
+                        }
+                    }
+                }
+            }
+            outs.push(self.mix_hidden(layer, it.h, &attn));
+        }
+        Ok(outs)
+    }
+
     /// Per-item projection with bitwise dedup of identical hidden states
     /// (co-scheduled duplicate requests — compared against every prior
     /// item in the batch, duplicates need not be adjacent).
@@ -864,6 +1142,104 @@ mod tests {
                 .layer_attn_mlp(0, it.capacity, it.h, it.q, it.k_sel, it.v_sel, it.valid)
                 .unwrap();
             assert_eq!(&solo, out, "batched attention must be bit-identical");
+        }
+    }
+
+    /// Build `n_pages` pages of KV from real (layer, pos) features, with
+    /// varying live lengths, returning owned page buffers.
+    fn make_pages(b: &SimBackend, layer: usize, lens: &[usize])
+                  -> Vec<(Vec<f32>, Vec<f32>, usize)> {
+        let s = b.spec().clone();
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        let h = b.embed_tok(1).unwrap();
+        let mut pages = Vec::new();
+        let mut pos = 0usize;
+        for &len in lens {
+            let mut k = Vec::with_capacity(len * kv_dim);
+            let mut v = Vec::with_capacity(len * kv_dim);
+            for _ in 0..len {
+                let qkv = b.layer_qkv(layer, &h, pos).unwrap();
+                k.extend_from_slice(&qkv.k);
+                v.extend_from_slice(&qkv.v);
+                pos += 1;
+            }
+            pages.push((k, v, len));
+        }
+        pages
+    }
+
+    /// Gather owned pages into the capacity-padded layout the gathered
+    /// entry point expects.
+    fn gather_pages(pages: &[(Vec<f32>, Vec<f32>, usize)], kv_dim: usize, capacity: usize)
+                    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut k_sel = vec![0.0f32; capacity * kv_dim];
+        let mut v_sel = vec![0.0f32; capacity * kv_dim];
+        let mut valid = vec![0.0f32; capacity];
+        let mut used = 0usize;
+        for (k, v, len) in pages {
+            k_sel[used * kv_dim..(used + len) * kv_dim].copy_from_slice(k);
+            v_sel[used * kv_dim..(used + len) * kv_dim].copy_from_slice(v);
+            for s in 0..*len {
+                valid[used + s] = 1.0;
+            }
+            used += len;
+        }
+        (k_sel, v_sel, valid)
+    }
+
+    #[test]
+    fn paged_attn_matches_gathered_bitwise() {
+        // The paged route must reproduce the gathered reference exactly,
+        // including partially filled pages and capacity padding headroom.
+        let b = backend();
+        let s = b.spec().clone();
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        let h = b.embed_tok(2).unwrap();
+        for (layer, lens) in [(0usize, vec![4usize, 4, 2]), (1, vec![1]), (2, vec![3, 1, 1, 5])] {
+            let owned = make_pages(&b, layer, &lens);
+            let n_slots: usize = lens.iter().sum();
+            let qkv = b.layer_qkv(layer, &h, n_slots).unwrap();
+            let views: Vec<(&[f32], &[f32], usize)> =
+                owned.iter().map(|(k, v, len)| (&k[..], &v[..], *len)).collect();
+            let inp = PagedAttnInput { h: &h, q: &qkv.q, pages: &views };
+            let paged = b.layer_attn_mlp_paged(layer, &inp).unwrap();
+            for capacity in [n_slots, n_slots + 7, 2 * n_slots + 64] {
+                let (k_sel, v_sel, valid) = gather_pages(&owned, kv_dim, capacity);
+                let gathered = b
+                    .layer_attn_mlp(layer, capacity, &h, &qkv.q, &k_sel, &v_sel, &valid)
+                    .unwrap();
+                assert_eq!(paged, gathered,
+                           "paged attention diverged (layer {layer}, capacity {capacity})");
+            }
+        }
+    }
+
+    #[test]
+    fn paged_batch_matches_per_item_bitwise() {
+        // items 0 and 1 share bit-identical (q, pages) — exercising the
+        // weight-reuse path — item 2 differs in pages, item 3 in q
+        let b = backend();
+        let h1 = b.embed_tok(1).unwrap();
+        let h2 = b.embed_tok(2).unwrap();
+        let pages_a = make_pages(&b, 0, &[4, 3]);
+        let pages_b = make_pages(&b, 0, &[2, 2, 2]);
+        let q_a = b.layer_qkv(0, &h1, 7).unwrap().q;
+        let q_b = b.layer_qkv(0, &h2, 11).unwrap().q;
+        let va: Vec<(&[f32], &[f32], usize)> =
+            pages_a.iter().map(|(k, v, len)| (&k[..], &v[..], *len)).collect();
+        let vb: Vec<(&[f32], &[f32], usize)> =
+            pages_b.iter().map(|(k, v, len)| (&k[..], &v[..], *len)).collect();
+        let items = vec![
+            PagedAttnInput { h: &h1, q: &q_a, pages: &va },
+            PagedAttnInput { h: &h2, q: &q_a, pages: &va },
+            PagedAttnInput { h: &h2, q: &q_a, pages: &vb },
+            PagedAttnInput { h: &h1, q: &q_b, pages: &vb },
+        ];
+        let batched = b.layer_attn_mlp_paged_batch(0, &items).unwrap();
+        assert_eq!(batched.len(), items.len());
+        for (it, out) in items.iter().zip(&batched) {
+            let solo = b.layer_attn_mlp_paged(0, it).unwrap();
+            assert_eq!(&solo, out, "batched paged attention must be bit-identical");
         }
     }
 

@@ -1,0 +1,178 @@
+//! Paged-vs-gathered equivalence suite (DESIGN.md §2, paged route).
+//!
+//! The zero-copy paged attention path (in-place pool-slab views through
+//! `Backend::layer_attn_mlp_paged`) must decode bit-identically to the
+//! classic gather path (copy selected slots into capacity-padded scratch):
+//! same tokens, same Figure-3 score logs, across every policy, on both the
+//! sequential (`decode_step`) and batched (`decode_batch`) engine paths.
+//! The gathered reference engine is the same `SimBackend` with its paged
+//! entry points masked off, so the only difference under test is the route.
+
+use raas::config::{ArtifactMeta, EngineConfig, PolicyKind};
+use raas::engine::{BatchEntry, Engine, GenOptions};
+use raas::kvcache::{KvPool, SeqCache};
+use raas::runtime::{Backend, SimBackend};
+use raas::util::rng::Rng;
+use raas::workload::Problem;
+
+#[path = "support/gathered_sim.rs"]
+mod gathered_sim;
+use gathered_sim::GatheredSim;
+
+const CAPS: [usize; 4] = [64, 128, 256, 512];
+
+fn paged_engine(policy: PolicyKind, budget: usize) -> Engine {
+    let cfg = EngineConfig { policy, budget, ..Default::default() };
+    Engine::new_with_capacities(cfg, &CAPS).expect("sim engine")
+}
+
+fn gathered_engine(policy: PolicyKind, budget: usize) -> Engine {
+    let cfg = EngineConfig { policy, budget, ..Default::default() };
+    let meta = ArtifactMeta::sim_default();
+    let model = Box::new(GatheredSim(SimBackend::with_capacities(&meta, cfg.seed, &CAPS)));
+    Engine::with_backend(cfg, meta, model).expect("gathered engine")
+}
+
+/// Mixed workload: different lengths, plus an exact duplicate of prompt 0.
+fn prompts(seed: u64) -> Vec<Vec<u32>> {
+    let spec = ArtifactMeta::sim_default().corpus;
+    let mut rng = Rng::new(seed);
+    let mut ps: Vec<Vec<u32>> = [4usize, 6, 8]
+        .iter()
+        .map(|&steps| Problem::sample(&mut rng, &spec, Some(steps)).encode_prompt(&spec))
+        .collect();
+    ps.push(ps[0].clone());
+    ps
+}
+
+/// Drive `decode_batch` for `steps` iterations (same bookkeeping as
+/// `rust/tests/batched_decode.rs`).
+fn decode_batched(e: &mut Engine, prompts: &[Vec<u32>], steps: usize)
+                  -> (Vec<Vec<u32>>, Vec<Vec<(u64, Vec<(usize, f32)>)>>) {
+    let n = prompts.len();
+    let mut seqs: Vec<SeqCache> = Vec::with_capacity(n);
+    let mut tokens: Vec<u32> = Vec::with_capacity(n);
+    for p in prompts {
+        let mut seq = e.new_seq();
+        tokens.push(e.prefill_seq(&mut seq, p).expect("prefill"));
+        seqs.push(seq);
+    }
+    let mut produced: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut logs: Vec<Vec<(u64, Vec<(usize, f32)>)>> = vec![Vec::new(); n];
+    for step in 1..=steps {
+        for (out, &tok) in produced.iter_mut().zip(&tokens) {
+            out.push(tok);
+        }
+        let mut entries: Vec<BatchEntry<'_>> = seqs
+            .iter_mut()
+            .zip(logs.iter_mut())
+            .enumerate()
+            .map(|(i, (seq, log))| BatchEntry {
+                seq,
+                token: tokens[i],
+                now: step as u64,
+                log: Some(log),
+            })
+            .collect();
+        let results = e.decode_batch(&mut entries);
+        drop(entries);
+        for (tok, r) in tokens.iter_mut().zip(results) {
+            *tok = r.expect("batched decode step");
+        }
+    }
+    for mut seq in seqs {
+        e.release_seq(&mut seq);
+    }
+    (produced, logs)
+}
+
+#[test]
+fn engine_routes_paged_on_sim_and_gathered_on_wrapper() {
+    let e = paged_engine(PolicyKind::Raas, 128);
+    assert!(e.model().supports_paged(), "sim backend must advertise the paged route");
+    let g = gathered_engine(PolicyKind::Raas, 128);
+    assert!(!g.model().supports_paged(), "wrapper must stay on the gather route");
+}
+
+#[test]
+fn paged_and_gathered_decode_step_bitwise_identical() {
+    // Sequential path (`generate` -> `decode_step`), all five policies:
+    // tokens and Figure-3 score logs must match bit for bit.
+    let steps = 72;
+    for policy in PolicyKind::all() {
+        let ps = prompts(17);
+        let opts = GenOptions {
+            max_new: steps,
+            force_len: Some(steps),
+            log_scores: true,
+            ..Default::default()
+        };
+        let mut pe = paged_engine(policy, 128);
+        let mut ge = gathered_engine(policy, 128);
+        for (i, p) in ps.iter().enumerate() {
+            let a = pe.generate(p, &opts).expect("paged generate");
+            let b = ge.generate(p, &opts).expect("gathered generate");
+            assert_eq!(a.tokens, b.tokens,
+                       "{policy:?} prompt {i}: paged tokens diverged from gathered");
+            assert_eq!(a.score_log, b.score_log,
+                       "{policy:?} prompt {i}: paged score log diverged from gathered");
+            assert_eq!(a.tokens.len(), steps);
+        }
+        assert_eq!(pe.pool().allocated_pages(), 0, "paged pool must drain");
+        assert_eq!(ge.pool().allocated_pages(), 0, "gathered pool must drain");
+    }
+}
+
+#[test]
+fn paged_and_gathered_decode_batch_bitwise_identical() {
+    // Batched path (`decode_batch`), all five policies — covers the
+    // flattened-view assembly and `layer_attn_mlp_paged_batch`'s
+    // cross-item weight reuse (the duplicate prompt pair).
+    let steps = 72;
+    for policy in PolicyKind::all() {
+        let ps = prompts(29);
+        let mut pe = paged_engine(policy, 128);
+        let mut ge = gathered_engine(policy, 128);
+        let (pt, pl) = decode_batched(&mut pe, &ps, steps);
+        let (gt, gl) = decode_batched(&mut ge, &ps, steps);
+        for i in 0..ps.len() {
+            assert_eq!(pt[i], gt[i],
+                       "{policy:?} prompt {i}: batched paged tokens diverged from gathered");
+            assert_eq!(pl[i], gl[i],
+                       "{policy:?} prompt {i}: batched paged score log diverged from gathered");
+        }
+        assert_eq!(pt[0], pt[3], "duplicate prompts must decode identically");
+    }
+}
+
+#[test]
+fn prop_page_views_match_read_page() {
+    // Property: for random pool geometries and write patterns, the
+    // zero-copy `page_k`/`page_v` views read exactly what `read_page`
+    // gathers, at every prefix length.
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed * 7919 + 13);
+        let page_size = rng.range(1, 9);
+        let kv_dim = rng.range(1, 9);
+        let cap = rng.range(1, 17);
+        let mut pool = KvPool::new(cap, page_size, kv_dim);
+        let n_pages = rng.range(1, cap + 1);
+        let ids: Vec<_> = (0..n_pages).map(|_| pool.alloc().unwrap()).collect();
+        for _ in 0..rng.range(1, 120) {
+            let id = ids[rng.range(0, ids.len())];
+            let slot = rng.range(0, page_size);
+            let k: Vec<f32> = (0..kv_dim).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..kv_dim).map(|_| rng.normal() as f32).collect();
+            pool.write_slot(id, slot, &k, &v);
+        }
+        for &id in &ids {
+            for len in 0..=page_size {
+                let mut k = vec![0.0f32; len * kv_dim];
+                let mut v = vec![0.0f32; len * kv_dim];
+                pool.read_page(id, len, &mut k, &mut v);
+                assert_eq!(pool.page_k(id, len), &k[..], "seed {seed}: page_k mismatch");
+                assert_eq!(pool.page_v(id, len), &v[..], "seed {seed}: page_v mismatch");
+            }
+        }
+    }
+}

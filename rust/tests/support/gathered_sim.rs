@@ -1,0 +1,62 @@
+//! Shared test/bench support: `SimBackend` with the paged entry points
+//! masked off (`supports_paged` stays at the trait default, false), so the
+//! engine falls back to the gather route — the reference side of every
+//! paged-vs-gathered comparison.  Everything else, including the native
+//! batched gathered implementations, delegates, keeping the comparison
+//! route-for-route on otherwise identical code.
+//!
+//! Included via `#[path]` from `rust/tests/paged_attention.rs` and
+//! `rust/benches/decode_throughput.rs` (files in `tests/` subdirectories
+//! are not compiled as standalone test targets), so there is exactly one
+//! copy to keep in sync with the `Backend` trait.
+
+use anyhow::Result;
+use raas::config::ModelSpec;
+use raas::runtime::{AttnBatchItem, Backend, PrefillOut, Qkv, QkvBatchItem, SimBackend};
+
+#[derive(Debug)]
+pub struct GatheredSim(pub SimBackend);
+
+impl Backend for GatheredSim {
+    fn name(&self) -> &'static str {
+        "sim-gathered"
+    }
+    fn spec(&self) -> &ModelSpec {
+        self.0.spec()
+    }
+    fn capacities(&self) -> Vec<usize> {
+        self.0.capacities()
+    }
+    fn capacity_for(&self, n_slots: usize) -> Result<usize> {
+        self.0.capacity_for(n_slots)
+    }
+    fn embed_tok(&self, token: u32) -> Result<Vec<f32>> {
+        self.0.embed_tok(token)
+    }
+    fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
+        self.0.layer_qkv(layer, h, pos)
+    }
+    fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
+                      k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.0.layer_attn_mlp(layer, capacity, h, q, k_sel, v_sel, valid)
+    }
+    fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
+        self.0.lm_head(h)
+    }
+    fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+        self.0.prefill(tokens)
+    }
+    fn embed_tok_batch(&self, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+        self.0.embed_tok_batch(tokens)
+    }
+    fn layer_qkv_batch(&self, layer: usize, items: &[QkvBatchItem<'_>]) -> Result<Vec<Qkv>> {
+        self.0.layer_qkv_batch(layer, items)
+    }
+    fn layer_attn_mlp_batch(&self, layer: usize, items: &[AttnBatchItem<'_>])
+                            -> Result<Vec<Vec<f32>>> {
+        self.0.layer_attn_mlp_batch(layer, items)
+    }
+    fn lm_head_batch(&self, hs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.0.lm_head_batch(hs)
+    }
+}
