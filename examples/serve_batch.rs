@@ -36,7 +36,7 @@ fn main() -> Result<()> {
             EngineServer::spawn(
                 format!("r{i}"),
                 cfg.clone(),
-                BatcherConfig { max_batch },
+                BatcherConfig { max_batch, ..Default::default() },
                 Some(vec![64, 128, 256, 512]),
             )
         })

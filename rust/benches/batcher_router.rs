@@ -40,7 +40,7 @@ fn main() {
         b.bench(&format!("batcher/tick/{batch}seqs"), || {
             let (tx, _rx) = channel();
             let mut batcher =
-                Batcher::new(NullBackend, BatcherConfig { max_batch: batch });
+                Batcher::new(NullBackend, BatcherConfig { max_batch: batch, ..Default::default() });
             for id in 0..batch as u64 {
                 batcher.submit(Request {
                     id,
@@ -63,7 +63,7 @@ fn main() {
     // stay O(1) per pop (VecDeque; a Vec::remove(0) queue was O(n²) here)
     b.bench("batcher/queue_pressure/1024reqs", || {
         let (tx, _rx) = channel();
-        let mut batcher = Batcher::new(NullBackend, BatcherConfig { max_batch: 8 });
+        let mut batcher = Batcher::new(NullBackend, BatcherConfig { max_batch: 8, ..Default::default() });
         for id in 0..1024u64 {
             batcher.submit(Request {
                 id,

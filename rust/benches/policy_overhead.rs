@@ -48,9 +48,12 @@ fn main() {
         for kind in PolicyKind::all() {
             let cfg = EngineConfig { policy: kind, budget: n_pages * 16 / 2, ..Default::default() };
             let policy = make_policy(&cfg);
+            // reusable scratch, like the engine's decode paths — the bench
+            // measures policy work, not the allocator
+            let mut sel: Vec<usize> = Vec::new();
             b.bench(&format!("{}/observe+select+evict/{n_pages}p", kind.name()), || {
                 policy.observe(&mut table, &probs, 1);
-                let sel = policy.select(&table, &scores, cfg.budget, 16);
+                policy.select_into(&table, &scores, cfg.budget, 16, &mut sel);
                 let ev = policy.evict_candidate(&table);
                 (sel.len(), ev)
             });

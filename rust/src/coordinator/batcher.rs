@@ -1,5 +1,11 @@
 //! Continuous batching: interleaves decode steps of all admitted sequences
-//! (Orca-style iteration-level scheduling, prefill-first admission).
+//! (Orca-style iteration-level scheduling).  Admission is either
+//! prefill-first (whole prompts, the legacy default) or — with
+//! [`BatcherConfig::prefill_token_budget`] set — Sarathi-style chunked:
+//! each tick spends at most the budget in prompt tokens, holding a
+//! partially-prefilled sequence in an admission state so a long prompt
+//! interleaves with the decode sweep instead of stalling every
+//! co-scheduled decoder (DESIGN.md §5).
 //!
 //! The batcher is generic over a [`StepBackend`] so the scheduling logic is
 //! testable without AOT artifacts; the real backend is [`crate::engine::Engine`]
@@ -22,11 +28,42 @@ pub struct StepItem<'a, S> {
     pub now: u64,
 }
 
+/// Progress of one streaming-prefill chunk ([`StepBackend::prefill_chunk`]).
+pub struct PrefillProgress {
+    /// Prompt tokens consumed by this chunk (>= 1).
+    pub consumed: usize,
+    /// The first decoded token — present exactly when prefill completed.
+    pub first_token: Option<u32>,
+}
+
 /// What the batcher needs from an inference engine.
 pub trait StepBackend {
     type Seq;
     /// Prefill: build sequence state, return the first decoded token.
     fn begin(&mut self, prompt: &[u32]) -> Result<(Self::Seq, u32)>;
+    /// Start a streaming admission: an empty sequence that
+    /// [`StepBackend::prefill_chunk`] fills chunk by chunk.  `None` (the
+    /// default) means this backend admits whole prompts only — under a
+    /// token budget the batcher then falls back to [`StepBackend::begin`],
+    /// still budget-paced but at whole-prompt granularity.
+    fn begin_chunked(&mut self) -> Option<Self::Seq> {
+        None
+    }
+    /// Consume up to `max_tokens` more prompt tokens into `seq` (`done`
+    /// already consumed), returning the progress — with `first_token` set
+    /// once the prompt completes.  Only called when
+    /// [`StepBackend::begin_chunked`] returned `Some`; implementers
+    /// override the two together (the default errors).
+    fn prefill_chunk(&mut self, _seq: &mut Self::Seq, _prompt: &[u32], _done: usize,
+                     _max_tokens: usize) -> Result<PrefillProgress> {
+        anyhow::bail!("backend does not stream prefill chunks")
+    }
+    /// Record one request's total prefill wall seconds — called exactly
+    /// once per successfully admitted request, when its prefill completes
+    /// (summed across chunks under budgeted admission).  Default: no-op;
+    /// `EngineBackend` feeds the engine metrics registry
+    /// (`admit.prefill_secs`).
+    fn record_prefill_secs(&mut self, _secs: f64) {}
     /// One decode step; `now` is the per-sequence step counter.
     fn step(&mut self, seq: &mut Self::Seq, token: u32, now: u64) -> Result<u32>;
     /// One decode iteration across several sequences; returns one result
@@ -49,11 +86,18 @@ pub trait StepBackend {
 pub struct BatcherConfig {
     /// Hard cap on concurrently decoding sequences.
     pub max_batch: usize,
+    /// Per-tick prefill token budget (Sarathi-style chunked admission):
+    /// each tick consumes at most this many prompt tokens before the
+    /// decode sweep, holding a partially-prefilled sequence in an
+    /// admission state between ticks, so a long prompt no longer stalls
+    /// co-scheduled decoders.  `None` = legacy prefill-first whole-prompt
+    /// admission.  Admission stays FIFO either way.
+    pub prefill_token_budget: Option<usize>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8 }
+        BatcherConfig { max_batch: 8, prefill_token_budget: None }
     }
 }
 
@@ -66,11 +110,26 @@ struct Active<S> {
     ttft_secs: f64,
 }
 
+/// A partially-prefilled sequence (budgeted admission): the front of the
+/// FIFO queue, held here between ticks while its prompt streams in.
+struct Prefilling<S> {
+    req: Request,
+    seq: S,
+    /// Prompt tokens consumed so far.
+    done: usize,
+    /// Prefill wall seconds accumulated across chunks.
+    prefill_secs: f64,
+}
+
 /// Iteration-level scheduler over a [`StepBackend`].
 pub struct Batcher<B: StepBackend> {
     pub backend: B,
     cfg: BatcherConfig,
     active: Vec<Active<B::Seq>>,
+    /// At most one sequence mid-prefill (budgeted admission only).  One at
+    /// a time keeps activation order trivially FIFO: the front of the
+    /// queue absorbs the whole budget until it completes.
+    prefilling: Option<Prefilling<B::Seq>>,
     /// FIFO admission queue.  `VecDeque`: admission pops the front every
     /// iteration, and a `Vec::remove(0)` here is O(n²) under queue
     /// pressure.
@@ -80,7 +139,14 @@ pub struct Batcher<B: StepBackend> {
 
 impl<B: StepBackend> Batcher<B> {
     pub fn new(backend: B, cfg: BatcherConfig) -> Self {
-        Batcher { backend, cfg, active: Vec::new(), queue: VecDeque::new(), completed: 0 }
+        Batcher {
+            backend,
+            cfg,
+            active: Vec::new(),
+            prefilling: None,
+            queue: VecDeque::new(),
+            completed: 0,
+        }
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -88,34 +154,110 @@ impl<B: StepBackend> Batcher<B> {
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len()
+        self.queue.len() + self.prefilling.is_some() as usize + self.active.len()
     }
 
-    /// Admit queued requests while capacity allows (prefill-first policy:
-    /// admission runs before the decode sweep each iteration).
+    /// Sequences holding a batch slot: decoding or mid-prefill.
+    fn in_flight(&self) -> usize {
+        self.active.len() + self.prefilling.is_some() as usize
+    }
+
+    fn slot_available(&self) -> bool {
+        self.in_flight() < self.cfg.max_batch && self.backend.has_capacity(self.in_flight())
+    }
+
+    /// Admit queued requests (runs before the decode sweep each
+    /// iteration): prefill-first whole prompts, or budget-paced chunks
+    /// when [`BatcherConfig::prefill_token_budget`] is set.
     fn admit(&mut self) {
-        while !self.queue.is_empty()
-            && self.active.len() < self.cfg.max_batch
-            && self.backend.has_capacity(self.active.len())
-        {
+        match self.cfg.prefill_token_budget {
+            None => self.admit_prefill_first(),
+            // a zero budget would make no progress and livelock the
+            // serving loop; clamp to one token per tick
+            Some(b) => self.admit_budgeted(b.max(1)),
+        }
+    }
+
+    /// Legacy admission: whole prompts, while capacity allows.
+    fn admit_prefill_first(&mut self) {
+        while !self.queue.is_empty() && self.slot_available() {
             let req = self.queue.pop_front().expect("queue non-empty");
+            self.begin_whole(req);
+        }
+    }
+
+    /// Move a fully-prefilled sequence into the decode batch — the shared
+    /// tail of whole-prompt and budgeted admission (metrics, TTFT stamp,
+    /// batch slot).
+    fn activate(&mut self, req: Request, seq: B::Seq, token: u32, prefill_secs: f64) {
+        self.backend.record_prefill_secs(prefill_secs);
+        let ttft = req.submitted.elapsed().as_secs_f64();
+        self.active.push(Active { req, seq, token, produced: Vec::new(), step: 0, ttft_secs: ttft });
+    }
+
+    /// Whole-prompt admission of one request; returns true when admitted.
+    fn begin_whole(&mut self, req: Request) -> bool {
+        let t0 = Instant::now();
+        match self.backend.begin(&req.prompt) {
+            Ok((seq, token)) => {
+                self.activate(req, seq, token, t0.elapsed().as_secs_f64());
+                true
+            }
+            Err(e) => {
+                let resp = Response::err(req.id, req.submitted, format!("prefill: {e:#}"));
+                let _ = req.reply.send(resp);
+                false
+            }
+        }
+    }
+
+    /// Sarathi-style budgeted admission: spend at most `budget` prompt
+    /// tokens this tick.  The partially-prefilled front absorbs budget
+    /// until its prompt completes (FIFO by construction); remaining budget
+    /// flows to the next queued request.  Backends without streaming
+    /// prefill (`begin_chunked` = `None`) admit whole prompts, each
+    /// charged against the budget, so pacing survives the fallback.
+    fn admit_budgeted(&mut self, budget: usize) {
+        let mut left = budget;
+        while left > 0 {
+            if self.prefilling.is_none() {
+                if self.queue.is_empty() || !self.slot_available() {
+                    break;
+                }
+                let req = self.queue.pop_front().expect("queue non-empty");
+                match self.backend.begin_chunked() {
+                    Some(seq) => {
+                        self.prefilling =
+                            Some(Prefilling { req, seq, done: 0, prefill_secs: 0.0 });
+                    }
+                    None => {
+                        let cost = req.prompt.len().max(1);
+                        self.begin_whole(req);
+                        left = left.saturating_sub(cost);
+                        continue;
+                    }
+                }
+            }
+            let p = self.prefilling.as_mut().expect("prefilling non-empty");
             let t0 = Instant::now();
-            match self.backend.begin(&req.prompt) {
-                Ok((seq, token)) => {
-                    let ttft = req.submitted.elapsed().as_secs_f64();
-                    let _ = t0;
-                    self.active.push(Active {
-                        req,
-                        seq,
-                        token,
-                        produced: Vec::new(),
-                        step: 0,
-                        ttft_secs: ttft,
-                    });
+            match self.backend.prefill_chunk(&mut p.seq, &p.req.prompt, p.done, left) {
+                Ok(prog) => {
+                    p.done += prog.consumed;
+                    p.prefill_secs += t0.elapsed().as_secs_f64();
+                    // a zero-consumption chunk must still drain the budget,
+                    // or a misbehaving backend livelocks the tick
+                    left = left.saturating_sub(prog.consumed.max(1));
+                    if let Some(first) = prog.first_token {
+                        let p = self.prefilling.take().expect("prefilling non-empty");
+                        self.activate(p.req, p.seq, first, p.prefill_secs);
+                    }
                 }
                 Err(e) => {
-                    let resp = Response::err(req.id, req.submitted, format!("prefill: {e:#}"));
-                    let _ = req.reply.send(resp);
+                    let p = self.prefilling.take().expect("prefilling non-empty");
+                    let resp =
+                        Response::err(p.req.id, p.req.submitted, format!("prefill: {e:#}"));
+                    self.backend.finish(p.seq);
+                    let _ = p.req.reply.send(resp);
                 }
             }
         }
@@ -256,7 +398,7 @@ mod tests {
         let (tx, rx) = channel();
         let mut b = Batcher::new(
             MockBackend { capacity: 3, begun: 0, finished: 0 },
-            BatcherConfig { max_batch: 3 },
+            BatcherConfig { max_batch: 3, ..Default::default() },
         );
         for id in 0..10 {
             b.submit(mk_req(id, (id % 4) as u32 + 1, 64, &tx));
@@ -304,7 +446,7 @@ mod tests {
         let (tx, _rx) = channel();
         let mut b = Batcher::new(
             MockBackend { capacity: 2, begun: 0, finished: 0 },
-            BatcherConfig { max_batch: 8 },
+            BatcherConfig { max_batch: 8, ..Default::default() },
         );
         for id in 0..5 {
             b.submit(mk_req(id, 30, 64, &tx));
@@ -348,7 +490,7 @@ mod tests {
         let (tx, rx) = channel();
         let mut b = Batcher::new(
             OrderBackend { order: Vec::new(), capacity: 2 },
-            BatcherConfig { max_batch: 8 },
+            BatcherConfig { max_batch: 8, ..Default::default() },
         );
         for id in 0..9u64 {
             b.submit(mk_req(id, id as u32, 64, &tx));
@@ -376,5 +518,209 @@ mod tests {
         resps.sort_by_key(|r| r.id);
         assert!(resps[0].error.is_some());
         assert!(resps[1].error.is_none());
+    }
+
+    // -- chunked (prefill-token-budgeted) admission -----------------------
+
+    #[derive(Debug, Clone, PartialEq, Eq)]
+    enum Ev {
+        /// (request tag, tokens consumed) — one streamed prefill chunk.
+        Chunk(u64, usize),
+        /// Request tag activated (prefill complete, joins the decode batch).
+        Activate(u64),
+        /// Request tag took one decode step.
+        Step(u64),
+    }
+
+    /// Scripted streaming backend: logs the interleaving of prefill chunks
+    /// and decode steps; never emits EOS (max_new caps every sequence).
+    struct ChunkedMock {
+        events: Vec<Ev>,
+        capacity: usize,
+        finished: usize,
+        /// Tag whose prefill errors on its second chunk.
+        fail_second_chunk_of: Option<u64>,
+    }
+
+    impl ChunkedMock {
+        fn new(capacity: usize) -> Self {
+            ChunkedMock { events: Vec::new(), capacity, finished: 0, fail_second_chunk_of: None }
+        }
+    }
+
+    impl StepBackend for ChunkedMock {
+        /// (request tag = prompt[0], prompt tokens consumed)
+        type Seq = (u64, usize);
+        fn begin(&mut self, prompt: &[u32]) -> Result<((u64, usize), u32)> {
+            let id = prompt[0] as u64;
+            self.events.push(Ev::Chunk(id, prompt.len()));
+            self.events.push(Ev::Activate(id));
+            Ok(((id, prompt.len()), 1))
+        }
+        fn begin_chunked(&mut self) -> Option<(u64, usize)> {
+            Some((u64::MAX, 0))
+        }
+        fn prefill_chunk(&mut self, seq: &mut (u64, usize), prompt: &[u32], done: usize,
+                         max_tokens: usize) -> Result<PrefillProgress> {
+            let id = prompt[0] as u64;
+            if seq.0 == u64::MAX {
+                seq.0 = id;
+            }
+            if self.fail_second_chunk_of == Some(id) && done > 0 {
+                anyhow::bail!("injected prefill failure");
+            }
+            let take = max_tokens.min(prompt.len() - done);
+            seq.1 = done + take;
+            self.events.push(Ev::Chunk(id, take));
+            let first_token = if seq.1 == prompt.len() {
+                self.events.push(Ev::Activate(id));
+                Some(1)
+            } else {
+                None
+            };
+            Ok(PrefillProgress { consumed: take, first_token })
+        }
+        fn step(&mut self, seq: &mut (u64, usize), _token: u32, _now: u64) -> Result<u32> {
+            self.events.push(Ev::Step(seq.0));
+            Ok(1)
+        }
+        fn finish(&mut self, _seq: (u64, usize)) {
+            self.finished += 1;
+        }
+        fn is_eos(&self, _token: u32) -> bool {
+            false
+        }
+        fn has_capacity(&self, active: usize) -> bool {
+            active < self.capacity
+        }
+    }
+
+    fn mk_long_req(id: u64, prompt_len: usize, max_new: usize,
+                   tx: &std::sync::mpsc::Sender<Response>) -> Request {
+        Request {
+            id,
+            prompt: vec![id as u32; prompt_len.max(1)],
+            max_new,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        }
+    }
+
+    #[test]
+    fn decoder_progresses_while_long_prompt_admits_chunked() {
+        // A 40-token prompt under a 4-token/tick budget takes ~10 ticks to
+        // admit; the co-scheduled decoder must take a decode step on every
+        // one of those ticks instead of stalling behind the prefill — the
+        // head-of-line-blocking fix the budget exists for.
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            ChunkedMock::new(8),
+            BatcherConfig { max_batch: 8, prefill_token_budget: Some(4) },
+        );
+        b.submit(mk_long_req(1, 1, 30, &tx)); // decoder: activates tick 1
+        b.submit(mk_long_req(2, 40, 2, &tx)); // long prompt: ~10 ticks
+        b.run_to_completion();
+        drop(tx);
+        let mut resps: Vec<Response> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 2);
+        assert!(resps.iter().all(|r| r.error.is_none()));
+
+        let ev = &b.backend.events;
+        let first_chunk = ev.iter().position(|e| matches!(e, Ev::Chunk(2, _))).unwrap();
+        let activated = ev.iter().position(|e| *e == Ev::Activate(2)).unwrap();
+        assert!(activated > first_chunk + 8, "long prompt admitted in too few chunks");
+        let steps_between = ev[first_chunk..activated]
+            .iter()
+            .filter(|e| **e == Ev::Step(1))
+            .count();
+        assert!(
+            steps_between >= 8,
+            "decoder stalled during chunked admission: {steps_between} steps interleaved"
+        );
+        // chunk sizes respect the budget
+        for e in ev {
+            if let Ev::Chunk(_, n) = e {
+                assert!(*n <= 4, "chunk of {n} tokens exceeded the 4-token budget");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_admission_stays_fifo_under_partial_admission() {
+        // 7 multi-chunk prompts through 2 slots: activation order must equal
+        // submission order even though every prompt needs several ticks and
+        // slots churn continuously.
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            ChunkedMock::new(2),
+            BatcherConfig { max_batch: 2, prefill_token_budget: Some(5) },
+        );
+        for id in 0..7u64 {
+            b.submit(mk_long_req(id, 12, 2, &tx));
+        }
+        b.run_to_completion();
+        drop(tx);
+        let activations: Vec<u64> = b
+            .backend
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Activate(id) => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(activations, (0..7).collect::<Vec<u64>>(), "activation must stay FIFO");
+        let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+        assert_eq!(b.backend.finished, 7, "all sequences released");
+    }
+
+    #[test]
+    fn budgeted_admission_falls_back_to_whole_prompts() {
+        // A backend without streaming prefill (`begin_chunked` = None) still
+        // serves correctly under a token budget: whole-prompt admissions,
+        // each charged against the tick budget.
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 8, begun: 0, finished: 0 },
+            BatcherConfig { max_batch: 8, prefill_token_budget: Some(2) },
+        );
+        for id in 0..6 {
+            b.submit(mk_req(id, (id % 3) as u32 + 1, 16, &tx));
+        }
+        // one tick admits at most 2 whole one-token prompts
+        b.tick();
+        assert_eq!(b.backend.begun, 2, "budget must pace whole-prompt admissions");
+        b.run_to_completion();
+        drop(tx);
+        let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        assert_eq!(b.backend.finished, 6);
+    }
+
+    #[test]
+    fn chunked_prefill_error_releases_the_sequence() {
+        let (tx, rx) = channel();
+        let mut backend = ChunkedMock::new(8);
+        backend.fail_second_chunk_of = Some(3);
+        let mut b = Batcher::new(
+            backend,
+            BatcherConfig { max_batch: 8, prefill_token_budget: Some(4) },
+        );
+        b.submit(mk_long_req(3, 12, 4, &tx)); // fails on its second chunk
+        b.submit(mk_long_req(4, 3, 2, &tx));
+        b.run_to_completion();
+        drop(tx);
+        let mut resps: Vec<Response> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 2);
+        assert!(resps[0].error.as_deref().unwrap_or("").contains("prefill"));
+        assert!(resps[1].error.is_none());
+        // the failed partial sequence AND the finished one were released
+        assert_eq!(b.backend.finished, 2);
+        assert_eq!(b.pending(), 0);
     }
 }

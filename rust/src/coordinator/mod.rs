@@ -7,7 +7,7 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, StepBackend, StepItem};
+pub use batcher::{Batcher, BatcherConfig, PrefillProgress, StepBackend, StepItem};
 pub use request::{Request, RequestId, Response};
 pub use router::{Router, RoutePolicy};
 pub use server::EngineServer;

@@ -8,7 +8,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherConfig, StepBackend, StepItem};
+use super::batcher::{Batcher, BatcherConfig, PrefillProgress, StepBackend, StepItem};
 use super::request::Request;
 use crate::config::EngineConfig;
 use crate::engine::{BatchEntry, Engine};
@@ -26,8 +26,40 @@ impl StepBackend for EngineBackend {
 
     fn begin(&mut self, prompt: &[u32]) -> Result<(SeqCache, u32)> {
         let mut seq = self.engine.new_seq();
-        let tok = self.engine.prefill_seq(&mut seq, prompt)?;
-        Ok((seq, tok))
+        match self.engine.prefill_seq(&mut seq, prompt) {
+            Ok(tok) => Ok((seq, tok)),
+            Err(e) => {
+                // a failed prefill (e.g. pool exhaustion mid-prompt) must
+                // not leak its partially-appended pages
+                self.engine.release_seq(&mut seq);
+                Err(e)
+            }
+        }
+    }
+
+    /// Streaming admission: the engine's chunked prefill drives
+    /// budget-paced admission (`BatcherConfig::prefill_token_budget`) —
+    /// but only when the backend prefills chunks natively.  Otherwise the
+    /// trait-default `Backend::prefill_chunk` re-runs the whole prefix per
+    /// chunk (O(N²/C) for the AOT `ModelRuntime`), so we return `None` and
+    /// the batcher's budget-paced whole-prompt fallback takes over.
+    fn begin_chunked(&mut self) -> Option<SeqCache> {
+        if self.engine.model().supports_chunked_prefill() {
+            Some(self.engine.new_seq())
+        } else {
+            None
+        }
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut SeqCache, prompt: &[u32], done: usize,
+                     max_tokens: usize) -> Result<PrefillProgress> {
+        debug_assert_eq!(seq.n_tokens, done, "prefill progress out of sync");
+        let first_token = self.engine.prefill_seq_partial(seq, prompt, max_tokens)?;
+        Ok(PrefillProgress { consumed: seq.n_tokens - done, first_token })
+    }
+
+    fn record_prefill_secs(&mut self, secs: f64) {
+        self.engine.metrics.record_secs("admit.prefill_secs", secs);
     }
 
     fn step(&mut self, seq: &mut SeqCache, token: u32, now: u64) -> Result<u32> {

@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ArtifactMeta, BackendKind, EngineConfig, PolicyKind};
 use crate::kvcache::page::page_probs;
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
-use crate::kvcache::{KvPool, SeqCache};
+use crate::kvcache::{KvPool, PageViewBuf, SeqCache};
 use crate::metrics::Metrics;
 use crate::runtime::{AttnBatchItem, Backend, PagedAttnInput, Qkv, QkvBatchItem, SimBackend,
                      Tokenizer};
@@ -182,20 +182,82 @@ impl Engine {
     }
 
     /// Run prefill for `prompt`, filling `seq` (pinned pages) and returning
-    /// the first decoded token.
+    /// the first decoded token.  One whole-prompt chunk of the streaming
+    /// path below — the monolithic route IS the degenerate chunked route.
     pub fn prefill_seq(&mut self, seq: &mut SeqCache, prompt: &[u32]) -> Result<u32> {
+        match self.prefill_seq_partial(seq, prompt, prompt.len().max(1))? {
+            Some(tok) => Ok(tok),
+            None => unreachable!("whole-prompt chunk must complete the prefill"),
+        }
+    }
+
+    /// Streaming chunked prefill (DESIGN.md §2, prefill dataflow): advance
+    /// `seq` — which tracks its own progress in `seq.n_tokens` — by up to
+    /// `max_tokens` more prompt tokens in ONE backend `prefill_chunk` call,
+    /// writing the chunk's K/V pool-direct via the bulk page-granular
+    /// `SeqCache::append_slots`.  Returns the first decoded token once the
+    /// prompt completes, `None` while prefill is still partial (the
+    /// batcher's budgeted-admission state).
+    ///
+    /// Appends run page-run-major (per page-aligned run, per layer), so
+    /// the pool's page-allocation order is `(page, layer)` lexicographic —
+    /// invariant to chunk boundaries, even mid-page ones.  That is what
+    /// makes chunked and monolithic prefill bit-identical end to end:
+    /// same first token, same slab bytes, same page tables (pool ids
+    /// included), same RepBounds, for every chunk size
+    /// (`rust/tests/chunked_prefill.rs`).  Budget enforcement runs once,
+    /// at prompt completion, exactly like the monolithic path.
+    ///
+    /// On `Err` (pool exhaustion mid-chunk) the sequence is left with a
+    /// partially-appended chunk and MUST be released (`release_all`), not
+    /// retried — a retry fails cleanly on the append contiguity check
+    /// rather than corrupting the cache.
+    pub fn prefill_seq_partial(&mut self, seq: &mut SeqCache, prompt: &[u32],
+                               max_tokens: usize) -> Result<Option<u32>> {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
-        let out = self.model.prefill(prompt).context("prefill")?;
-        let n_layers = self.meta.model.n_layers;
-        for layer in 0..n_layers {
-            for pos in 0..prompt.len() {
-                let (k, v) = out.kv_at(&self.meta.model, layer, pos);
-                seq.append(layer, &mut self.pool, pos, k, v, self.cfg.pin_prefill, 0)?;
-            }
+        let start = seq.n_tokens;
+        if start >= prompt.len() {
+            bail!("sequence already holds {start} tokens of a {}-token prompt", prompt.len());
         }
-        seq.n_tokens = prompt.len();
+        // saturating: callers may pass usize::MAX as "finish the rest"
+        let end = prompt.len().min(start.saturating_add(max_tokens.max(1)));
+        // KV source for this chunk: the streaming entry point when the
+        // backend has one; otherwise a monolithic prefill of the prefix,
+        // sliced in place — no PrefillChunkOut staging copy, so the
+        // whole-prompt call on the AOT path costs exactly what the old
+        // monolithic route did.
+        enum KvSrc {
+            Streamed(crate::runtime::PrefillChunkOut),
+            Monolithic(crate::runtime::PrefillOut),
+        }
+        let src = if self.model.supports_chunked_prefill() {
+            KvSrc::Streamed(self.model.prefill_chunk(prompt, start, end)
+                                .context("prefill chunk")?)
+        } else {
+            KvSrc::Monolithic(self.model.prefill(&prompt[..end]).context("prefill")?)
+        };
+        let n_layers = self.meta.model.n_layers;
+        let page = self.meta.page_size;
+        let mut pos = start;
+        while pos < end {
+            let run_end = end.min((pos / page + 1) * page);
+            let len = run_end - pos;
+            for layer in 0..n_layers {
+                let (k, v) = match &src {
+                    KvSrc::Streamed(c) => c.kv_run(&self.meta.model, layer, pos - start, len),
+                    KvSrc::Monolithic(m) => m.kv_run(&self.meta.model, layer, pos, len),
+                };
+                seq.append_slots(layer, &mut self.pool, pos, len, k, v,
+                                 self.cfg.pin_prefill, 0)?;
+            }
+            pos = run_end;
+        }
+        seq.n_tokens = end;
+        if end < prompt.len() {
+            return Ok(None);
+        }
         seq.prompt_len = prompt.len();
         // budget enforcement after prefill (Sink/H2O trim immediately; RaaS
         // pins prefill so nothing is evictable — paper §4.2's small-budget
@@ -203,7 +265,11 @@ impl Engine {
         for layer in 0..n_layers {
             self.enforce_budget(seq, layer);
         }
-        Ok(argmax(&out.logits) as u32)
+        let logits = match &src {
+            KvSrc::Streamed(c) => &c.logits,
+            KvSrc::Monolithic(m) => &m.logits,
+        };
+        Ok(Some(argmax(logits) as u32))
     }
 
     fn enforce_budget(&mut self, seq: &mut SeqCache, layer: usize) {
@@ -278,15 +344,18 @@ impl Engine {
                 // zero-copy route: hand the backend in-place views of the
                 // selected pages.  View assembly is timed under
                 // `step.gather_secs` so the perf breakdown shows the copy
-                // collapse directly.  (The view Vec is per-layer: the
-                // slices borrow the pool, so it cannot outlive the next
-                // append — a few tuples vs the old slot memcpy.)
+                // collapse directly.  (The buffer is a per-layer stack
+                // inline `PageViewBuf` — no heap allocation for
+                // budget-bounded selections; full-table selections spill
+                // to a Vec like before.  It must stay layer-local because
+                // the views borrow the pool and cannot outlive the next
+                // append.)
                 let t0 = Instant::now();
-                let mut pages = Vec::with_capacity(self.sel_buf.len());
-                seq.page_views(layer, &self.pool, &self.sel_buf, &mut pages);
+                let mut pages = PageViewBuf::new();
+                seq.page_views_into(layer, &self.pool, &self.sel_buf, &mut pages);
                 t_gather += t0.elapsed().as_secs_f64();
                 let t0 = Instant::now();
-                let inp = PagedAttnInput { h: &h, q: &qkv.q, pages: &pages };
+                let inp = PagedAttnInput { h: &h, q: &qkv.q, pages: pages.views() };
                 h = self.model.layer_attn_mlp_paged(layer, &inp)?;
                 t_exec += t0.elapsed().as_secs_f64();
             } else {
@@ -501,12 +570,8 @@ impl Engine {
                         continue;
                     }
                     let start = flat.len();
-                    let lc = &entries[i].seq.layers[layer];
-                    for &s in &self.batch_scratch[i].sel {
-                        let p = &lc.table[s];
-                        flat.push((self.pool.page_k(p.pool_id, p.len),
-                                   self.pool.page_v(p.pool_id, p.len), p.len));
-                    }
+                    flat.extend(entries[i].seq.page_view_iter(layer, &self.pool,
+                                                              &self.batch_scratch[i].sel));
                     spans.push((i, j, start, flat.len()));
                 }
                 t_gather += t0.elapsed().as_secs_f64();
@@ -747,6 +812,35 @@ mod tests {
         assert_eq!(a.tokens, b.tokens, "sim backend must be bit-deterministic");
         assert_eq!(a.tokens.len(), 24);
         assert!(a.tokens.iter().all(|&t| (t as usize) < e.meta.model.vocab));
+    }
+
+    #[test]
+    fn partial_prefill_streams_to_the_same_first_token() {
+        // Streaming the prompt in 3-token chunks and in one whole-prompt
+        // chunk must agree on progress tracking and the first decoded token
+        // (full bit-identicality is pinned by rust/tests/chunked_prefill.rs).
+        let prompt: Vec<u32> = (0..13u32).map(|i| 1 + i % 40).collect();
+        let cfg = EngineConfig { budget: 128, ..Default::default() };
+        let mut mono = Engine::new(cfg.clone()).unwrap();
+        let mut seq_m = mono.new_seq();
+        let tok_m = mono.prefill_seq(&mut seq_m, &prompt).unwrap();
+
+        let mut chunked = Engine::new(cfg).unwrap();
+        let mut seq_c = chunked.new_seq();
+        let mut done = 0usize;
+        let mut first = None;
+        while first.is_none() {
+            first = chunked.prefill_seq_partial(&mut seq_c, &prompt, 3).unwrap();
+            assert_eq!(seq_c.n_tokens, (done + 3).min(prompt.len()));
+            done = seq_c.n_tokens;
+        }
+        assert_eq!(done, prompt.len());
+        assert_eq!(seq_c.prompt_len, prompt.len());
+        assert_eq!(first, Some(tok_m));
+        // resuming past the prompt is a caller bug, reported not ignored
+        assert!(chunked.prefill_seq_partial(&mut seq_c, &prompt, 3).is_err());
+        mono.release_seq(&mut seq_m);
+        chunked.release_seq(&mut seq_c);
     }
 
     #[test]

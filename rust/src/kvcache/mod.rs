@@ -12,4 +12,4 @@ pub mod seq;
 
 pub use page::{PageId, PageMeta, RepBounds};
 pub use pool::KvPool;
-pub use seq::SeqCache;
+pub use seq::{PageViewBuf, SeqCache, PAGE_VIEW_INLINE};

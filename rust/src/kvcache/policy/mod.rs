@@ -47,8 +47,9 @@ pub trait SparsityPolicy: Send {
                    page_size: usize, out: &mut Vec<usize>);
 
     /// Allocating convenience wrapper around
-    /// [`SparsityPolicy::select_into`] (tests, the trace simulator, and
-    /// benches that don't carry scratch).
+    /// [`SparsityPolicy::select_into`] (tests only — every production
+    /// caller, including the trace simulator and the benches, carries
+    /// reusable scratch through `select_into`).
     fn select(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
               page_size: usize) -> Vec<usize> {
         let mut out = Vec::new();
@@ -75,10 +76,7 @@ pub fn make_policy(cfg: &EngineConfig) -> Box<dyn SparsityPolicy> {
             budget_tokens: cfg.budget,
         }),
         PolicyKind::Quest => Box::new(QuestPolicy),
-        PolicyKind::Raas => Box::new(RaasPolicy {
-            alpha: cfg.alpha,
-            stamp_fraction: cfg.stamp_fraction,
-        }),
+        PolicyKind::Raas => Box::new(RaasPolicy::new(cfg.alpha, cfg.stamp_fraction)),
     }
 }
 

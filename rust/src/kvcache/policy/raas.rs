@@ -17,6 +17,8 @@
 //!
 //! Result: O(L) time **and** O(L) memory at Quest-level accuracy.
 
+use std::cell::RefCell;
+
 use super::{PageMeta, SparsityPolicy};
 use crate::config::PolicyKind;
 
@@ -25,6 +27,17 @@ pub struct RaasPolicy {
     pub alpha: f64,
     /// Used instead when `alpha <= 0`: stamp the top fraction each step.
     pub stamp_fraction: f64,
+    /// Reusable index scratch for the top-r formulation (`observe` takes
+    /// `&self`, hence the cell); steady-state observation allocates
+    /// nothing.  `RefCell`, not a lock: policies live on one replica
+    /// thread, like the backend feature memo.
+    topr_scratch: RefCell<Vec<usize>>,
+}
+
+impl RaasPolicy {
+    pub fn new(alpha: f64, stamp_fraction: f64) -> Self {
+        RaasPolicy { alpha, stamp_fraction, topr_scratch: RefCell::new(Vec::new()) }
+    }
 }
 
 impl SparsityPolicy for RaasPolicy {
@@ -46,11 +59,25 @@ impl SparsityPolicy for RaasPolicy {
             // top-r formulation: stamp the ceil(r * n) highest-probability
             // pages.  `total_cmp`: a NaN prob must not panic mid-decode;
             // NaNs rank highest and get stamped, erring towards retention.
+            //
+            // Partial selection (O(n) expected vs the old full-sort
+            // O(n log n), per layer per step): only the top-k *set* is
+            // stamped, never its internal order.  The index tie-break makes
+            // the comparator a total order, so the stamped set is exactly
+            // what the old stable descending sort produced on tied probs
+            // (earlier pages win) — mirroring Quest's `select_into`.
             let n = table.len();
             let k = ((self.stamp_fraction * n as f64).ceil() as usize).clamp(1, n);
-            let mut order: Vec<usize> = (0..n).collect();
-            order.sort_by(|&a, &b| probs[b].total_cmp(&probs[a]));
-            for &i in order.iter().take(k) {
+            let mut order = self.topr_scratch.borrow_mut();
+            order.clear();
+            order.extend(0..n);
+            if k < n {
+                order.select_nth_unstable_by(k, |&a, &b| {
+                    probs[b].total_cmp(&probs[a]).then(a.cmp(&b))
+                });
+                order.truncate(k);
+            }
+            for &i in order.iter() {
                 table[i].last_stamp = now;
             }
         }
@@ -96,7 +123,7 @@ mod tests {
     use super::*;
 
     fn policy() -> RaasPolicy {
-        RaasPolicy { alpha: 0.01, stamp_fraction: 0.5 }
+        RaasPolicy::new(0.01, 0.5)
     }
 
     #[test]
@@ -119,13 +146,35 @@ mod tests {
 
     #[test]
     fn top_r_formulation() {
-        let p = RaasPolicy { alpha: 0.0, stamp_fraction: 0.5 };
+        let p = RaasPolicy::new(0.0, 0.5);
         let mut t = mk_table(&[(16, false), (16, false), (16, false), (16, false)]);
         p.observe(&mut t, &[0.4, 0.1, 0.45, 0.05], 9);
         assert_eq!(t[0].last_stamp, 9);
         assert_eq!(t[2].last_stamp, 9);
         assert_eq!(t[1].last_stamp, 0);
         assert_eq!(t[3].last_stamp, 9, "active page stamped regardless");
+    }
+
+    #[test]
+    fn top_r_tied_probs_stamp_earlier_pages() {
+        // The partial selection must reproduce the old stable descending
+        // sort's deterministic tie handling: probs tied across the k
+        // boundary resolve to the earlier page indices.
+        let p = RaasPolicy::new(0.0, 0.4);
+        let mut t = mk_table(&[(16, false); 6]);
+        // k = ceil(0.4 * 6) = 3; pages 0,2,3,4 tie at 0.2 — only the two
+        // earliest tied pages join top scorer 1
+        p.observe(&mut t, &[0.2, 0.9, 0.2, 0.2, 0.2, 0.0], 5);
+        assert_eq!(t[0].last_stamp, 5, "earliest tied page stamped");
+        assert_eq!(t[1].last_stamp, 5, "top page stamped");
+        assert_eq!(t[2].last_stamp, 5, "second tied page stamped");
+        assert_eq!(t[3].last_stamp, 0, "tie past the boundary not stamped");
+        assert_eq!(t[4].last_stamp, 0);
+        assert_eq!(t[5].last_stamp, 5, "active page stamped regardless");
+        // repeated observation reuses the scratch and stays deterministic
+        p.observe(&mut t, &[0.2, 0.9, 0.2, 0.2, 0.2, 0.0], 6);
+        assert_eq!(t[3].last_stamp, 0);
+        assert_eq!(t[0].last_stamp, 6);
     }
 
     #[test]

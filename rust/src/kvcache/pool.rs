@@ -117,12 +117,21 @@ impl KvPool {
 
     /// Write one token's K and V into `slot` of page `id`.
     pub fn write_slot(&mut self, id: PageId, slot: usize, k: &[f32], v: &[f32]) {
-        debug_assert!(slot < self.page_size);
-        debug_assert_eq!(k.len(), self.kv_dim);
+        self.write_slots(id, slot, 1, k, v);
+    }
+
+    /// Bulk write `n` consecutive tokens' K/V (`k`/`v` of `[n * kv_dim]`)
+    /// into slots `slot..slot+n` of page `id` — one slab memcpy for K and
+    /// one for V, the pool-direct prefill path (vs one `write_slot` call
+    /// per token).
+    pub fn write_slots(&mut self, id: PageId, slot: usize, n: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(slot + n <= self.page_size);
+        debug_assert_eq!(k.len(), n * self.kv_dim);
+        debug_assert_eq!(v.len(), n * self.kv_dim);
         debug_assert!(!self.is_free(id), "write to free page {id}");
         let off = self.page_off(id) + slot * self.kv_dim;
-        self.k[off..off + self.kv_dim].copy_from_slice(k);
-        self.v[off..off + self.kv_dim].copy_from_slice(v);
+        self.k[off..off + n * self.kv_dim].copy_from_slice(k);
+        self.v[off..off + n * self.kv_dim].copy_from_slice(v);
     }
 
     /// Copy `len` slots of page `id` into the destination slices (gather).
@@ -227,6 +236,23 @@ mod tests {
         pool.read_page(a, 2, &mut k, &mut v);
         assert_eq!(pool.page_k(a, 2), &k[..]);
         assert_eq!(pool.page_v(a, 2), &v[..]);
+    }
+
+    #[test]
+    fn write_slots_matches_per_slot_writes() {
+        let mut a = KvPool::new(1, 4, 3);
+        let mut b = KvPool::new(1, 4, 3);
+        let ia = a.alloc().unwrap();
+        let ib = b.alloc().unwrap();
+        let k: Vec<f32> = (0..9).map(|x| x as f32).collect();
+        let v: Vec<f32> = (0..9).map(|x| 100.0 + x as f32).collect();
+        a.write_slots(ia, 1, 3, &k, &v);
+        for s in 0..3 {
+            b.write_slot(ib, 1 + s, &k[s * 3..(s + 1) * 3], &v[s * 3..(s + 1) * 3]);
+        }
+        assert_eq!(a.page_k(ia, 4), b.page_k(ib, 4));
+        assert_eq!(a.page_v(ia, 4), b.page_v(ib, 4));
+        assert_eq!(a.slot_k(ia, 2), &[3.0, 4.0, 5.0]);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Per-sequence cache state: one page table (+ representative bounds) per
 //! layer, backed by the shared pool.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::page::{page_probs, PageMeta, RepBounds};
 use super::pool::KvPool;
@@ -64,22 +64,54 @@ impl SeqCache {
     /// prefill/decode boundary (so pinning stays page-aligned).
     pub fn append(&mut self, layer: usize, pool: &mut KvPool, pos: usize,
                   k: &[f32], v: &[f32], pinned: bool, now: u64) -> Result<()> {
-        debug_assert_eq!(k.len(), self.kv_dim);
-        let lc = &mut self.layers[layer];
-        let need_new = match lc.table.last() {
-            None => true,
-            Some(p) => p.len >= self.page_size || p.pinned != pinned,
-        };
-        if need_new {
-            let id = pool.alloc()?;
-            lc.table.push(PageMeta::new(id, pos, pinned, now));
-            lc.reps.push(RepBounds::empty(self.kv_dim));
+        self.append_slots(layer, pool, pos, 1, k, v, pinned, now)
+    }
+
+    /// Bulk append of `n` contiguous tokens' K/V (`k`/`v` of
+    /// `[n * kv_dim]`, absolute positions `pos..pos+n`) to `layer` —
+    /// page-granular: one pool slab copy, one `RepBounds` fold pass and
+    /// one page-meta touch per page run instead of per token (the
+    /// pool-direct prefill path, DESIGN.md §2).  Bit-identical to `n`
+    /// sequential [`SeqCache::append`] calls for any run split — page
+    /// opening, pinning boundaries and the min/max rep fold all follow the
+    /// same per-slot order (pinned by `prop_append_slots_matches_appends`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn append_slots(&mut self, layer: usize, pool: &mut KvPool, pos: usize, n: usize,
+                        k: &[f32], v: &[f32], pinned: bool, now: u64) -> Result<()> {
+        debug_assert_eq!(k.len(), n * self.kv_dim);
+        debug_assert_eq!(v.len(), n * self.kv_dim);
+        let kv = self.kv_dim;
+        let mut done = 0usize;
+        while done < n {
+            let lc = &mut self.layers[layer];
+            let need_new = match lc.table.last() {
+                None => true,
+                Some(p) => p.len >= self.page_size || p.pinned != pinned,
+            };
+            if need_new {
+                let id = pool.alloc()?;
+                lc.table.push(PageMeta::new(id, pos + done, pinned, now));
+                lc.reps.push(RepBounds::empty(kv));
+            }
+            let page = lc.table.last_mut().unwrap();
+            // Hard check, not a debug_assert: retrying after a mid-chunk
+            // append failure (or any position desync) must error cleanly
+            // in release builds too, never write misaligned slots — one
+            // predictable branch per page run.
+            if page.end_pos() != pos + done {
+                bail!("non-contiguous append at layer {layer}: active page ends at {}, \
+                       appending position {}", page.end_pos(), pos + done);
+            }
+            let take = (self.page_size - page.len).min(n - done);
+            pool.write_slots(page.pool_id, page.len, take, &k[done * kv..(done + take) * kv],
+                             &v[done * kv..(done + take) * kv]);
+            page.len += take;
+            let reps = lc.reps.last_mut().unwrap();
+            for t in done..done + take {
+                reps.update(&k[t * kv..(t + 1) * kv]);
+            }
+            done += take;
         }
-        let page = lc.table.last_mut().unwrap();
-        debug_assert_eq!(page.end_pos(), pos, "non-contiguous append");
-        pool.write_slot(page.pool_id, page.len, k, v);
-        page.len += 1;
-        lc.reps.last_mut().unwrap().update(k);
         Ok(())
     }
 
@@ -122,18 +154,39 @@ impl SeqCache {
         used
     }
 
+    /// Iterate `(k, v, len)` slab views of the selected pages, in
+    /// selection order — the shared core of [`SeqCache::page_views`],
+    /// [`SeqCache::page_views_into`] and the batched flat-view assembly in
+    /// `Engine::decode_batch`.  The views alias the pool slabs, so the
+    /// pool cannot be mutated while they live.
+    pub fn page_view_iter<'s, 'p: 's>(&'s self, layer: usize, pool: &'p KvPool,
+                                      sel: &'s [usize])
+                                      -> impl Iterator<Item = (&'p [f32], &'p [f32], usize)> + 's {
+        let lc = &self.layers[layer];
+        sel.iter().map(move |&i| {
+            let page = &lc.table[i];
+            (pool.page_k(page.pool_id, page.len), pool.page_v(page.pool_id, page.len), page.len)
+        })
+    }
+
     /// Zero-copy twin of [`SeqCache::gather`]: collect `(k, v, len)` slab
     /// views of the selected pages, in selection order, into `out` — no
-    /// copy, no capacity padding, no `valid` mask.  The views alias the
-    /// pool slabs, so the pool cannot be mutated while they live.
+    /// copy, no capacity padding, no `valid` mask.
     pub fn page_views<'p>(&self, layer: usize, pool: &'p KvPool, sel: &[usize],
                           out: &mut Vec<(&'p [f32], &'p [f32], usize)>) {
         out.clear();
-        let lc = &self.layers[layer];
-        for &i in sel {
-            let page = &lc.table[i];
-            out.push((pool.page_k(page.pool_id, page.len), pool.page_v(page.pool_id, page.len),
-                      page.len));
+        out.extend(self.page_view_iter(layer, pool, sel));
+    }
+
+    /// [`SeqCache::page_views`] into an inline [`PageViewBuf`]: the decode
+    /// hot path's variant — selections up to [`PAGE_VIEW_INLINE`] pages
+    /// (any realistic budget/page_size ratio) stay entirely on the stack,
+    /// deleting the per-layer view-`Vec` allocation.
+    pub fn page_views_into<'p>(&self, layer: usize, pool: &'p KvPool, sel: &[usize],
+                               out: &mut PageViewBuf<'p>) {
+        out.clear();
+        for view in self.page_view_iter(layer, pool, sel) {
+            out.push(view);
         }
     }
 
@@ -161,6 +214,77 @@ impl SeqCache {
     }
 }
 
+/// Inline capacity of [`PageViewBuf`]: selections of at most this many
+/// pages assemble their views with zero heap allocation.  32 pages covers
+/// budget-bounded selections at the in-tree defaults (budget/page_size
+/// ≤ 16 for the 96–256-token budgets); selections over the full resident
+/// table (Dense at long context, a pinned long prompt under RaaS) exceed
+/// it and spill to a heap `Vec` transparently — matching the old
+/// always-allocate behavior, never worse.
+pub const PAGE_VIEW_INLINE: usize = 32;
+
+/// Smallvec-style buffer of page views for the paged attention route: the
+/// per-layer view list lives on the stack up to [`PAGE_VIEW_INLINE`]
+/// entries and spills to a `Vec` beyond.  The views borrow the pool slabs,
+/// so a buffer cannot outlive the next pool mutation — which is exactly
+/// why the engine re-fills a fresh stack-local per layer instead of
+/// holding engine-lifetime scratch.
+pub struct PageViewBuf<'p> {
+    len: usize,
+    inline: [(&'p [f32], &'p [f32], usize); PAGE_VIEW_INLINE],
+    spill: Vec<(&'p [f32], &'p [f32], usize)>,
+}
+
+impl<'p> PageViewBuf<'p> {
+    pub fn new() -> Self {
+        const EMPTY: &[f32] = &[];
+        PageViewBuf { len: 0, inline: [(EMPTY, EMPTY, 0); PAGE_VIEW_INLINE], spill: Vec::new() }
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.spill.clear();
+    }
+
+    pub fn push(&mut self, view: (&'p [f32], &'p [f32], usize)) {
+        if self.spill.is_empty() && self.len < PAGE_VIEW_INLINE {
+            self.inline[self.len] = view;
+        } else {
+            if self.spill.is_empty() {
+                // first spill: move the inline prefix so views() stays one
+                // contiguous slice
+                self.spill.reserve(self.len + 1);
+                self.spill.extend_from_slice(&self.inline[..self.len]);
+            }
+            self.spill.push(view);
+        }
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The collected views as one contiguous slice, in push order.
+    pub fn views(&self) -> &[(&'p [f32], &'p [f32], usize)] {
+        if self.spill.is_empty() {
+            &self.inline[..self.len]
+        } else {
+            &self.spill
+        }
+    }
+}
+
+impl Default for PageViewBuf<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,6 +303,96 @@ mod tests {
         assert_eq!(sc.layers[0].table[0].len, 4);
         assert_eq!(sc.layers[0].table[1].len, 2);
         assert_eq!(sc.resident_tokens(0), 6);
+    }
+
+    #[test]
+    fn append_slots_matches_sequential_appends() {
+        // 11 tokens in one bulk run vs 11 appends: identical tables, reps,
+        // and slab bytes (multi-page run, partial tail page).
+        let (mut sa, mut pa) = mk();
+        let (mut sb, mut pb) = mk();
+        let n = 11usize;
+        let k: Vec<f32> = (0..n * 3).map(|x| x as f32 * 0.5 - 2.0).collect();
+        let v: Vec<f32> = (0..n * 3).map(|x| 30.0 - x as f32).collect();
+        sa.append_slots(0, &mut pa, 0, n, &k, &v, false, 3).unwrap();
+        for pos in 0..n {
+            sb.append(0, &mut pb, pos, &k[pos * 3..(pos + 1) * 3], &v[pos * 3..(pos + 1) * 3],
+                      false, 3)
+                .unwrap();
+        }
+        assert_eq!(sa.layers[0].table.len(), sb.layers[0].table.len());
+        for (a, b) in sa.layers[0].table.iter().zip(&sb.layers[0].table) {
+            assert_eq!((a.pool_id, a.start_pos, a.len, a.pinned, a.last_stamp),
+                       (b.pool_id, b.start_pos, b.len, b.pinned, b.last_stamp));
+            assert_eq!(pa.page_k(a.pool_id, a.len), pb.page_k(b.pool_id, b.len));
+            assert_eq!(pa.page_v(a.pool_id, a.len), pb.page_v(b.pool_id, b.len));
+        }
+        for (ra, rb) in sa.layers[0].reps.iter().zip(&sb.layers[0].reps) {
+            assert_eq!(ra.kmin, rb.kmin);
+            assert_eq!(ra.kmax, rb.kmax);
+        }
+    }
+
+    #[test]
+    fn non_contiguous_append_is_a_clean_error() {
+        // Position desync (e.g. a retry after a failed chunk) must error in
+        // release builds, never write misaligned slots.
+        let (mut sc, mut pool) = mk();
+        sc.append(0, &mut pool, 0, &[0.0; 3], &[0.0; 3], false, 0).unwrap();
+        assert!(sc.append(0, &mut pool, 2, &[0.0; 3], &[0.0; 3], false, 0).is_err());
+        // the failed call must not have grown the page
+        assert_eq!(sc.resident_tokens(0), 1);
+    }
+
+    #[test]
+    fn append_slots_respects_pinned_boundary() {
+        // A bulk unpinned run after a pinned prefix must open a new page at
+        // the boundary even mid-page, exactly like `append`.
+        let (mut sc, mut pool) = mk();
+        let k = [0.25f32; 6];
+        sc.append_slots(0, &mut pool, 0, 2, &k, &k, true, 0).unwrap();
+        sc.append_slots(0, &mut pool, 2, 2, &k, &k, false, 1).unwrap();
+        assert_eq!(sc.layers[0].table.len(), 2);
+        assert!(sc.layers[0].table[0].pinned);
+        assert_eq!(sc.layers[0].table[0].len, 2);
+        assert!(!sc.layers[0].table[1].pinned);
+        assert_eq!(sc.layers[0].table[1].start_pos, 2);
+    }
+
+    #[test]
+    fn page_view_buf_inline_and_spill() {
+        let backing: Vec<f32> = (0..4).map(|x| x as f32).collect();
+        let mut buf = PageViewBuf::new();
+        assert!(buf.is_empty());
+        for i in 0..PAGE_VIEW_INLINE {
+            buf.push((&backing[..2], &backing[2..], i));
+        }
+        assert_eq!(buf.len(), PAGE_VIEW_INLINE);
+        assert_eq!(buf.views().len(), PAGE_VIEW_INLINE);
+        // one past the inline capacity: spills, stays contiguous, keeps order
+        buf.push((&backing[..1], &backing[..1], 99));
+        assert_eq!(buf.len(), PAGE_VIEW_INLINE + 1);
+        let views = buf.views();
+        assert_eq!(views.len(), PAGE_VIEW_INLINE + 1);
+        assert_eq!(views[0].2, 0);
+        assert_eq!(views[PAGE_VIEW_INLINE].2, 99);
+        buf.clear();
+        assert!(buf.is_empty());
+        assert!(buf.views().is_empty());
+    }
+
+    #[test]
+    fn page_views_into_matches_page_views() {
+        let (mut sc, mut pool) = mk();
+        for pos in 0..7 {
+            sc.append(0, &mut pool, pos, &[pos as f32; 3], &[9.0; 3], false, 0).unwrap();
+        }
+        let sel = [0usize, 1];
+        let mut vec_views = Vec::new();
+        sc.page_views(0, &pool, &sel, &mut vec_views);
+        let mut buf = PageViewBuf::new();
+        sc.page_views_into(0, &pool, &sel, &mut buf);
+        assert_eq!(buf.views(), &vec_views[..]);
     }
 
     #[test]

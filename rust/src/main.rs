@@ -73,7 +73,8 @@ fn print_help() {
            inspect     show model metadata (backend, capacities, corpus)\n\
            run         decode one sampled problem (--policy, --budget, --steps)\n\
            sweep       model accuracy sweep (--policies, --budgets, --problems)\n\
-           serve       multi-replica serving demo (--replicas, --requests, --rate)\n\
+           serve       multi-replica serving demo (--replicas, --requests, --rate,\n\
+                       --prefill-budget N for chunked admission)\n\
            fig1..fig9  regenerate the paper's figures (writes results/*.csv)\n\
          \n\
          common flags: --backend sim|xla  --artifacts DIR\n\
@@ -214,15 +215,16 @@ fn serve(args: &Args) -> Result<()> {
     let rate = args.f64_or("rate", 0.0); // 0 = offline batch
     let route = RoutePolicy::parse(&args.str_or("route", "least"))?;
     let max_batch = args.usize_or("max-batch", 4);
+    // Sarathi-style chunked admission: at most this many prompt tokens per
+    // scheduler tick (absent = legacy prefill-first whole-prompt admission).
+    let prefill_budget = args.usize_opt("prefill-budget");
     let cfg = EngineConfig::from_args(args)?;
     let caps: Option<Vec<usize>> = Some(args.usize_list_or("capacities", &[64, 128, 256, 512]));
 
     println!("spawning {replicas} replica(s) (policy={}, budget={})…", cfg.policy, cfg.budget);
+    let bcfg = BatcherConfig { max_batch, prefill_token_budget: prefill_budget };
     let servers: Vec<EngineServer> = (0..replicas)
-        .map(|i| {
-            EngineServer::spawn(format!("r{i}"), cfg.clone(),
-                                BatcherConfig { max_batch }, caps.clone())
-        })
+        .map(|i| EngineServer::spawn(format!("r{i}"), cfg.clone(), bcfg.clone(), caps.clone()))
         .collect::<Result<_>>()?;
     let meta = cfg.resolve_meta()?;
     let spec = meta.corpus.clone();

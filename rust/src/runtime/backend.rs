@@ -12,7 +12,7 @@
 //! The engine is written against this trait only; backends are selected at
 //! runtime through [`crate::config::BackendKind`].
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::ModelSpec;
 
@@ -89,10 +89,46 @@ pub struct PrefillOut {
 impl PrefillOut {
     /// Slice one (layer, position) KV vector out of the prefill buffers.
     pub fn kv_at(&self, spec: &ModelSpec, layer: usize, pos: usize) -> (&[f32], &[f32]) {
+        self.kv_run(spec, layer, pos, 1)
+    }
+
+    /// Contiguous run of `len` positions of one layer's K/V starting at
+    /// absolute position `pos` (positions are contiguous within a layer,
+    /// padding notwithstanding) — lets the engine append straight from a
+    /// monolithic prefill with no staging copy.
+    pub fn kv_run(&self, spec: &ModelSpec, layer: usize, pos: usize, len: usize)
+                  -> (&[f32], &[f32]) {
         let kv_dim = spec.n_kv_heads * spec.head_dim;
-        let stride_layer = self.padded * kv_dim;
-        let off = layer * stride_layer + pos * kv_dim;
-        (&self.k[off..off + kv_dim], &self.v[off..off + kv_dim])
+        let off = (layer * self.padded + pos) * kv_dim;
+        (&self.k[off..off + len * kv_dim], &self.v[off..off + len * kv_dim])
+    }
+}
+
+/// Output of one streaming-prefill chunk ([`Backend::prefill_chunk`]): the
+/// chunk's per-layer post-RoPE K/V only — O(chunk), never O(prompt) — plus
+/// next-token logits when the chunk completes the prompt (DESIGN.md §2,
+/// prefill dataflow).
+pub struct PrefillChunkOut {
+    /// `[n_layers][chunk_len][kv_dim]` post-RoPE keys for the chunk.
+    pub k: Vec<f32>,
+    /// `[n_layers][chunk_len][kv_dim]` values.
+    pub v: Vec<f32>,
+    /// Next-token logits `[vocab]` — non-empty exactly when this chunk's
+    /// `end` reached the prompt length.
+    pub logits: Vec<f32>,
+    /// Number of chunk positions held in `k`/`v`.
+    pub chunk_len: usize,
+}
+
+impl PrefillChunkOut {
+    /// Contiguous run of `len` positions of one layer's K/V, starting at
+    /// chunk-relative `offset` — what the engine hands to the bulk
+    /// page-granular `SeqCache::append_slots`.
+    pub fn kv_run(&self, spec: &ModelSpec, layer: usize, offset: usize, len: usize)
+                  -> (&[f32], &[f32]) {
+        let kv_dim = spec.n_kv_heads * spec.head_dim;
+        let off = (layer * self.chunk_len + offset) * kv_dim;
+        (&self.k[off..off + len * kv_dim], &self.v[off..off + len * kv_dim])
     }
 }
 
@@ -101,8 +137,9 @@ impl PrefillOut {
 /// The engine drives it per decode token, per layer:
 /// `embed_tok` → `layer_qkv` → (policy select) → attention — the zero-copy
 /// `layer_attn_mlp_paged` when `supports_paged()`, else gather +
-/// `layer_attn_mlp` → … → `lm_head`; prompts go through `prefill` in one
-/// call.
+/// `layer_attn_mlp` → … → `lm_head`; prompts stream through
+/// `prefill_chunk` (a single whole-prompt chunk unless admission is
+/// token-budgeted).
 pub trait Backend: std::fmt::Debug {
     /// Short backend identifier (`"sim"`, `"xla"`).
     fn name(&self) -> &'static str;
@@ -136,6 +173,55 @@ pub trait Backend: std::fmt::Debug {
     /// Dense prefill of `tokens`; returns per-layer post-RoPE KV for the
     /// first `tokens.len()` positions plus next-token logits.
     fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut>;
+
+    // ------------------------------------------------------------------
+    // Streaming chunked prefill (DESIGN.md §2, prefill dataflow).
+    //
+    // The engine prefills prompts chunk by chunk through `prefill_chunk`,
+    // so the backend only ever materializes O(chunk) KV — the basis of
+    // prefill-token-budgeted admission (`coordinator::Batcher`), where a
+    // long prompt's chunks interleave with the decode sweep instead of
+    // stalling it.  Chunked and monolithic prefill are bit-identical end
+    // to end (first token, KV slabs, page tables, RepBounds) — pinned by
+    // `rust/tests/chunked_prefill.rs`.
+    // ------------------------------------------------------------------
+
+    /// Whether [`Backend::prefill_chunk`] streams natively (cost
+    /// O(chunk)).  When false the default adapts the monolithic
+    /// [`Backend::prefill`] — still correct, but each chunk re-runs the
+    /// whole prefix, so schedulers should prefer whole-prompt chunks for
+    /// such backends unless admission latency matters more than prefill
+    /// throughput.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Prefill chunk `start..end` of the full prompt `tokens`, returning
+    /// the chunk's per-layer KV and — when `end == tokens.len()` —
+    /// next-token logits.  Default: run the monolithic [`Backend::prefill`]
+    /// over `tokens[..end]` and copy the chunk's rows out, so the AOT
+    /// `ModelRuntime` (whose prefill executables are compiled whole-prompt)
+    /// keeps working unchanged; for a single whole-prompt chunk this is
+    /// exactly the old path plus one copy.
+    fn prefill_chunk(&self, tokens: &[u32], start: usize, end: usize)
+                     -> Result<PrefillChunkOut> {
+        if start >= end || end > tokens.len() {
+            bail!("invalid prefill chunk {start}..{end} of {} tokens", tokens.len());
+        }
+        let spec = self.spec();
+        let kv_dim = spec.n_kv_heads * spec.head_dim;
+        let out = self.prefill(&tokens[..end])?;
+        let chunk_len = end - start;
+        let mut k = Vec::with_capacity(spec.n_layers * chunk_len * kv_dim);
+        let mut v = Vec::with_capacity(spec.n_layers * chunk_len * kv_dim);
+        for layer in 0..spec.n_layers {
+            let (ks, vs) = out.kv_run(spec, layer, start, chunk_len);
+            k.extend_from_slice(ks);
+            v.extend_from_slice(vs);
+        }
+        let logits = if end == tokens.len() { out.logits } else { Vec::new() };
+        Ok(PrefillChunkOut { k, v, logits, chunk_len })
+    }
 
     // ------------------------------------------------------------------
     // Batched entry points (DESIGN.md §2, batched dataflow).
@@ -263,5 +349,38 @@ mod tests {
         assert_eq!(vs, &[120.0, 121.0]);
         let (ks, _) = out.kv_at(&spec, 0, 0);
         assert_eq!(ks, &[0.0, 1.0]);
+        // run slicing spans contiguous positions within a layer
+        let (ks, _) = out.kv_run(&spec, 1, 1, 2);
+        assert_eq!(ks, &[110.0, 111.0, 120.0, 121.0]);
+    }
+
+    #[test]
+    fn prefill_chunk_kv_run_slicing() {
+        let spec = ModelSpec {
+            vocab: 8,
+            d_model: 4,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 1,
+            head_dim: 2,
+            d_ff: 8,
+        };
+        let kv_dim = 2;
+        let chunk_len = 3;
+        // k[layer][i][c] = 100*layer + 10*i + c
+        let mut k = Vec::new();
+        for layer in 0..2 {
+            for i in 0..chunk_len {
+                for c in 0..kv_dim {
+                    k.push((100 * layer + 10 * i + c) as f32);
+                }
+            }
+        }
+        let out = PrefillChunkOut { k: k.clone(), v: k, logits: vec![], chunk_len };
+        let (ks, _) = out.kv_run(&spec, 1, 1, 2);
+        assert_eq!(ks, &[110.0, 111.0, 120.0, 121.0]);
+        let (ks, vs) = out.kv_run(&spec, 0, 0, 1);
+        assert_eq!(ks, &[0.0, 1.0]);
+        assert_eq!(vs, &[0.0, 1.0]);
     }
 }

@@ -18,7 +18,8 @@ pub mod executable;
 #[cfg(feature = "backend-xla")]
 pub mod model;
 
-pub use backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillOut, Qkv, QkvBatchItem};
+pub use backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkOut, PrefillOut, Qkv,
+                  QkvBatchItem};
 pub use sim_backend::SimBackend;
 pub use tokenizer::Tokenizer;
 

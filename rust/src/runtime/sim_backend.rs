@@ -42,7 +42,7 @@ use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
-use super::backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillOut, Qkv};
+use super::backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkOut, PrefillOut, Qkv};
 use crate::config::{ArtifactMeta, ModelSpec};
 use crate::sim::profiles::{ModelProfile, MODELS};
 
@@ -668,32 +668,56 @@ impl Backend for SimBackend {
         Ok(logits)
     }
 
+    /// Monolithic prefill = one whole-prompt chunk of the native streaming
+    /// path below (the layouts coincide when `chunk_len == n`), so the two
+    /// entry points cannot drift apart.
     fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+        let c = self.prefill_chunk(tokens, 0, tokens.len())?;
+        Ok(PrefillOut { k: c.k, v: c.v, logits: c.logits, padded: c.chunk_len })
+    }
+
+    // -- streaming chunked prefill (native implementation) ----------------
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    /// Native streaming chunk: every surrogate prefill feature is pure in
+    /// `(token, pos)` — the per-token hidden stream starts from the token's
+    /// own embedding, never from its neighbors — so a chunk needs no prefix
+    /// recomputation and only O(chunk) buffers, and any chunking produces
+    /// the monolithic path's bits exactly (`rust/tests/chunked_prefill.rs`).
+    fn prefill_chunk(&self, tokens: &[u32], start: usize, end: usize)
+                     -> Result<PrefillChunkOut> {
         if tokens.is_empty() {
             bail!("empty prompt");
         }
+        if start >= end || end > tokens.len() {
+            bail!("invalid prefill chunk {start}..{end} of {} tokens", tokens.len());
+        }
         let s = &self.spec;
-        let n = tokens.len();
+        let n = end - start;
         let kv_dim = s.n_kv_heads * s.head_dim;
         let mut k = vec![0.0f32; s.n_layers * n * kv_dim];
         let mut v = vec![0.0f32; s.n_layers * n * kv_dim];
         let mut logits = Vec::new();
-        for (pos, &tok) in tokens.iter().enumerate() {
+        for (i, &tok) in tokens[start..end].iter().enumerate() {
+            let pos = start + i;
             let mut h = self.embed_tok(tok)?;
             for layer in 0..s.n_layers {
                 let qkv = self.layer_qkv(layer, &h, pos)?;
-                let off = layer * n * kv_dim + pos * kv_dim;
+                let off = layer * n * kv_dim + i * kv_dim;
                 k[off..off + kv_dim].copy_from_slice(&qkv.k);
                 v[off..off + kv_dim].copy_from_slice(&qkv.v);
                 // attention-free hidden update: prefill hiddens only shape
                 // the first decoded token, decode re-derives h per token
                 h = self.mix_hidden(layer, &h, &qkv.v);
             }
-            if pos == n - 1 {
+            if pos == tokens.len() - 1 {
                 logits = self.lm_head(&h)?;
             }
         }
-        Ok(PrefillOut { k, v, logits, padded: n })
+        Ok(PrefillChunkOut { k, v, logits, chunk_len: n })
     }
 
     // -- batched entry points (native implementations) --------------------
@@ -1097,6 +1121,42 @@ mod tests {
         assert_eq!(a.q, c.q);
         assert_eq!(a.k, c.k);
         assert_eq!(a.v, c.v);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_bitwise() {
+        // Any chunking of the prompt must reproduce the monolithic
+        // prefill's KV and final logits bit for bit (per-token purity).
+        let b = backend();
+        let spec = b.spec().clone();
+        let kv_dim = spec.n_kv_heads * spec.head_dim;
+        let toks: Vec<u32> = (0..23u32).map(|i| 1 + i % 40).collect();
+        let mono = b.prefill(&toks).unwrap();
+        for splits in [vec![23], vec![1, 22], vec![7, 7, 7, 2], vec![16, 7]] {
+            let mut start = 0usize;
+            let mut logits = Vec::new();
+            for len in splits {
+                let end = start + len;
+                let c = b.prefill_chunk(&toks, start, end).unwrap();
+                assert_eq!(c.chunk_len, len);
+                for layer in 0..spec.n_layers {
+                    for i in 0..len {
+                        let (ck, cv) = c.kv_run(&spec, layer, i, 1);
+                        let (mk, mv) = mono.kv_at(&spec, layer, start + i);
+                        assert_eq!(ck, mk, "key diverged at layer {layer} pos {}", start + i);
+                        assert_eq!(cv, mv, "value diverged at layer {layer} pos {}", start + i);
+                        assert_eq!(ck.len(), kv_dim);
+                    }
+                }
+                if end == toks.len() {
+                    logits = c.logits;
+                } else {
+                    assert!(c.logits.is_empty(), "mid-prompt chunk must not emit logits");
+                }
+                start = end;
+            }
+            assert_eq!(logits, mono.logits, "final-chunk logits diverged");
+        }
     }
 
     #[test]

@@ -207,6 +207,9 @@ pub fn run_trial(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProf
     let mut pos = prompt_len;
     let mut now: u64 = 0;
     let mut probs: Vec<f32> = Vec::new();
+    // reusable selection scratch, matching the engine's decode paths
+    // (`select_into` instead of the allocating `select` wrapper)
+    let mut sel: Vec<usize> = Vec::new();
     let mut pending: Vec<usize> = (1..=k).collect(); // chain steps left
     let mut emitted_ok = vec![false; k + 1];
     emitted_ok[0] = true; // v_0 comes from the prompt
@@ -241,7 +244,8 @@ pub fn run_trial(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProf
                 .iter()
                 .map(|&p| p * ((mp.est_noise * rng.normal()).exp() as f32))
                 .collect();
-            let sel = policy.select(&cache.table, &est, params.budget_tokens, params.page_size);
+            policy.select_into(&cache.table, &est, params.budget_tokens, params.page_size,
+                               &mut sel);
 
             if t == consume_at {
                 // milestone of step r needed (unless it comes from the prompt)

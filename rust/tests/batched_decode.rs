@@ -167,7 +167,7 @@ fn batched_serving_path_matches_sequential_generate() {
         .collect();
 
     let backend = EngineBackend { engine: engine(PolicyKind::Raas, 96), pages_per_seq_estimate: 16 };
-    let mut b = Batcher::new(backend, BatcherConfig { max_batch: ps.len() });
+    let mut b = Batcher::new(backend, BatcherConfig { max_batch: ps.len(), ..Default::default() });
     let (tx, rx) = channel::<Response>();
     for (id, p) in ps.iter().enumerate() {
         b.submit(Request {

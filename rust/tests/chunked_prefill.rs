@@ -1,0 +1,177 @@
+//! Streaming chunked prefill vs monolithic prefill: bit-identical end to
+//! end (ISSUE 4 acceptance).  For every policy and a spread of chunk sizes
+//! — including chunk >= prompt (the degenerate whole-prompt case) and
+//! chunk boundaries that fall mid-page — the chunked route must reproduce
+//! the monolithic route exactly:
+//!
+//!  * the first decoded token,
+//!  * the KV slab contents of every resident page,
+//!  * the page tables (pool ids included — the page-run-major append order
+//!    makes pool allocation chunking-invariant),
+//!  * the Quest-style RepBounds,
+//!  * and the decode continuation (tokens + Figure-3 score logs).
+//!
+//! Plus the RaaS pinned-prefill/page-alignment boundary: pinning stays
+//! page-aligned across chunk boundaries, and the prefill→decode boundary
+//! opens exactly one unpinned page.
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::engine::Engine;
+use raas::kvcache::SeqCache;
+
+const PAGE: usize = 16; // sim-default page size
+
+fn mk_engine(kind: PolicyKind) -> Engine {
+    let cfg = EngineConfig { policy: kind, budget: 96, ..Default::default() };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+fn mk_prompt(len: usize) -> Vec<u32> {
+    // digit/index tokens, vocab-safe, varied content
+    (0..len).map(|i| 1 + (i % 40) as u32).collect()
+}
+
+/// Bit patterns of a float slice (strict equality: distinguishes -0.0,
+/// never equates NaN — "bit-identical" taken literally).
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Everything observable about one resident page after prefill.
+#[derive(Debug, PartialEq, Eq)]
+struct PageSnap {
+    pool_id: u32,
+    start_pos: usize,
+    len: usize,
+    pinned: bool,
+    last_stamp: u64,
+    k: Vec<u32>,
+    v: Vec<u32>,
+    kmin: Vec<u32>,
+    kmax: Vec<u32>,
+}
+
+fn snapshot(e: &Engine, seq: &SeqCache) -> Vec<Vec<PageSnap>> {
+    let pool = e.pool();
+    seq.layers
+        .iter()
+        .map(|lc| {
+            lc.table
+                .iter()
+                .zip(&lc.reps)
+                .map(|(p, r)| PageSnap {
+                    pool_id: p.pool_id,
+                    start_pos: p.start_pos,
+                    len: p.len,
+                    pinned: p.pinned,
+                    last_stamp: p.last_stamp,
+                    k: bits(pool.page_k(p.pool_id, p.len)),
+                    v: bits(pool.page_v(p.pool_id, p.len)),
+                    kmin: bits(&r.kmin),
+                    kmax: bits(&r.kmax),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Prefill (monolithic when `chunk` is None, streamed otherwise), snapshot,
+/// then decode 8 steps with score logging.
+#[allow(clippy::type_complexity)]
+fn run(kind: PolicyKind, prompt: &[u32], chunk: Option<usize>)
+       -> (u32, Vec<Vec<PageSnap>>, Vec<u32>, Vec<(u64, Vec<(usize, u32)>)>) {
+    let mut e = mk_engine(kind);
+    let mut seq = e.new_seq();
+    let first = match chunk {
+        None => e.prefill_seq(&mut seq, prompt).expect("monolithic prefill"),
+        Some(c) => {
+            let mut first = None;
+            let mut chunks = 0usize;
+            while first.is_none() {
+                first = e.prefill_seq_partial(&mut seq, prompt, c).expect("chunked prefill");
+                chunks += 1;
+                assert!(chunks <= prompt.len(), "chunked prefill failed to make progress");
+            }
+            assert_eq!(chunks, prompt.len().div_ceil(c), "unexpected chunk count");
+            first.unwrap()
+        }
+    };
+    assert_eq!(seq.n_tokens, prompt.len());
+    assert_eq!(seq.prompt_len, prompt.len());
+    let snap = snapshot(&e, &seq);
+    let mut log = Vec::new();
+    let mut tokens = vec![first];
+    let mut tok = first;
+    for step in 1..=8u64 {
+        tok = e.decode_step(&mut seq, tok, step, Some(&mut log)).expect("decode");
+        tokens.push(tok);
+    }
+    let log_bits: Vec<(u64, Vec<(usize, u32)>)> = log
+        .into_iter()
+        .map(|(now, entry)| (now, entry.into_iter().map(|(p, pr)| (p, pr.to_bits())).collect()))
+        .collect();
+    e.release_seq(&mut seq);
+    (first, snap, tokens, log_bits)
+}
+
+#[test]
+fn chunked_prefill_is_bit_identical_across_policies_and_chunk_sizes() {
+    // prompt 70: non-page-multiple tail; prompt 120: exceeds the 96-token
+    // budget so post-prefill enforcement (Sink/H2O trims) runs too.
+    // chunks: 1 (every boundary mid-page), 5 (mid-page), 16 (page-aligned),
+    // 37 (mid-page, multi-page runs), 200 (>= prompt — degenerates to the
+    // monolithic path by construction).
+    for kind in PolicyKind::all() {
+        for &plen in &[70usize, 120] {
+            let prompt = mk_prompt(plen);
+            let (ref_first, ref_snap, ref_tokens, ref_log) = run(kind, &prompt, None);
+            for &chunk in &[1usize, 5, 16, 37, 200] {
+                let (first, snap, tokens, log) = run(kind, &prompt, Some(chunk));
+                assert_eq!(first, ref_first,
+                           "{kind:?}/p{plen}/c{chunk}: first token diverged");
+                assert_eq!(snap, ref_snap,
+                           "{kind:?}/p{plen}/c{chunk}: page tables / KV slabs / RepBounds \
+                            diverged");
+                assert_eq!(tokens, ref_tokens,
+                           "{kind:?}/p{plen}/c{chunk}: decode continuation diverged");
+                assert_eq!(log, ref_log,
+                           "{kind:?}/p{plen}/c{chunk}: Figure-3 score log diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_boundaries_respect_pinned_prefill_page_alignment() {
+    // RaaS pins prefill pages; a 37-token chunk puts boundaries mid-page
+    // (37, 70 % 16 != 0).  Pinning must stay page-aligned — chunk
+    // boundaries never open a page — and the prefill→decode boundary must
+    // open exactly one new unpinned page at prompt_len.
+    let prompt = mk_prompt(70);
+    let mut e = mk_engine(PolicyKind::Raas);
+    assert!(e.cfg.pin_prefill, "default config pins prefill");
+    let mut seq = e.new_seq();
+    let mut first = None;
+    while first.is_none() {
+        first = e.prefill_seq_partial(&mut seq, &prompt, 37).expect("chunked prefill");
+    }
+    for (layer, lc) in seq.layers.iter().enumerate() {
+        assert_eq!(lc.table.len(), 70usize.div_ceil(PAGE), "layer {layer} page count");
+        for (i, p) in lc.table.iter().enumerate() {
+            assert!(p.pinned, "layer {layer} prefill page {i} must be pinned");
+            assert_eq!(p.start_pos, i * PAGE, "pages open only at page-aligned positions");
+        }
+        assert_eq!(lc.table.last().unwrap().len, 70 % PAGE, "partial tail page");
+    }
+    // one decode step: the unpinned boundary page opens at prompt_len
+    let tok = first.unwrap();
+    e.decode_step(&mut seq, tok, 1, None).expect("decode");
+    for (layer, lc) in seq.layers.iter().enumerate() {
+        let last = lc.table.last().unwrap();
+        assert!(!last.pinned, "layer {layer} decode page must be unpinned");
+        assert_eq!(last.start_pos, 70, "decode page opens at the prompt boundary");
+        assert_eq!(last.len, 1);
+        assert!(lc.table[lc.table.len() - 2].pinned, "prefill tail stays pinned");
+    }
+    e.release_seq(&mut seq);
+}

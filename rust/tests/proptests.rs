@@ -91,6 +91,69 @@ fn prop_seq_resident_accounting() {
 }
 
 #[test]
+fn prop_append_slots_matches_appends() {
+    // Bulk page-granular `append_slots` must be bit-identical to N
+    // sequential `append` calls — same page tables (pool ids included),
+    // same slab bytes, same RepBounds — across random page sizes, kv dims,
+    // run splits, and the pinned→unpinned prefill boundary.
+    forall("append_slots", |rng| {
+        let page_size = rng.range(2, 9);
+        let kv_dim = rng.range(1, 5);
+        let n = rng.range(1, 60);
+        let pinned_prefix = rng.range(0, n + 1);
+        let k: Vec<f32> = (0..n * kv_dim).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..n * kv_dim).map(|_| rng.normal() as f32).collect();
+
+        // reference: token-by-token appends
+        let mut pb = KvPool::new(64, page_size, kv_dim);
+        let mut sb = SeqCache::new(1, page_size, kv_dim);
+        for pos in 0..n {
+            sb.append(0, &mut pb, pos, &k[pos * kv_dim..(pos + 1) * kv_dim],
+                      &v[pos * kv_dim..(pos + 1) * kv_dim], pos < pinned_prefix, 7)
+                .unwrap();
+        }
+
+        // bulk: random-length runs, split at the pinned boundary exactly
+        // like the engine's prefill→decode transition
+        let mut pa = KvPool::new(64, page_size, kv_dim);
+        let mut sa = SeqCache::new(1, page_size, kv_dim);
+        let mut pos = 0usize;
+        while pos < n {
+            let pinned = pos < pinned_prefix;
+            let limit = if pinned { pinned_prefix } else { n };
+            let run = rng.range(1, (limit - pos).min(13) + 1);
+            sa.append_slots(0, &mut pa, pos, run, &k[pos * kv_dim..(pos + run) * kv_dim],
+                            &v[pos * kv_dim..(pos + run) * kv_dim], pinned, 7)
+                .unwrap();
+            pos += run;
+        }
+
+        let (ta, tb) = (&sa.layers[0].table, &sb.layers[0].table);
+        assert_eq!(ta.len(), tb.len(), "page counts diverged");
+        for (a, b) in ta.iter().zip(tb.iter()) {
+            assert_eq!((a.pool_id, a.start_pos, a.len, a.pinned, a.last_stamp),
+                       (b.pool_id, b.start_pos, b.len, b.pinned, b.last_stamp));
+            let eq_bits = |x: &[f32], y: &[f32]| {
+                x.len() == y.len()
+                    && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+            };
+            assert!(eq_bits(pa.page_k(a.pool_id, a.len), pb.page_k(b.pool_id, b.len)),
+                    "key slab bytes diverged");
+            assert!(eq_bits(pa.page_v(a.pool_id, a.len), pb.page_v(b.pool_id, b.len)),
+                    "value slab bytes diverged");
+        }
+        for (ra, rb) in sa.layers[0].reps.iter().zip(&sb.layers[0].reps) {
+            assert_eq!(ra.kmin, rb.kmin, "rep kmin diverged");
+            assert_eq!(ra.kmax, rb.kmax, "rep kmax diverged");
+        }
+        sa.release_all(&mut pa);
+        sb.release_all(&mut pb);
+        assert_eq!(pa.allocated_pages(), 0);
+        assert_eq!(pb.allocated_pages(), 0);
+    });
+}
+
+#[test]
 fn prop_gather_valid_matches_selection() {
     forall("gather", |rng| {
         let page_size = 4;
@@ -394,7 +457,7 @@ fn prop_batcher_conserves_requests_and_capacity() {
         let (tx, rx) = std::sync::mpsc::channel();
         let mut b = Batcher::new(
             CountBackend { live: 0, peak: 0, cap },
-            BatcherConfig { max_batch: rng.range(1, 8) },
+            BatcherConfig { max_batch: rng.range(1, 8), ..Default::default() },
         );
         for id in 0..n as u64 {
             b.submit(Request {

@@ -169,7 +169,7 @@ fn raas_serving_evicts_oldest_stamp_first() {
     let engine = mk_engine(2.0, 96, 512);
     let mut b = Batcher::new(
         Instrumented::new(engine, 16, true),
-        BatcherConfig { max_batch: 1 },
+        BatcherConfig { max_batch: 1, ..Default::default() },
     );
     let (tx, rx) = channel::<Response>();
     submit_problems(&mut b, 1, 160, &tx);
@@ -197,7 +197,7 @@ fn pool_pressure_batch_keeps_prefill_resident_and_bounded() {
     let engine = mk_engine(1e-4, 96, 192); // tight: ~48 pages/seq steady state
     let mut b = Batcher::new(
         Instrumented::new(engine, 40, false),
-        BatcherConfig { max_batch: n_seqs as usize },
+        BatcherConfig { max_batch: n_seqs as usize, ..Default::default() },
     );
     let (tx, rx) = channel::<Response>();
     submit_problems(&mut b, n_seqs, 120, &tx);
@@ -224,4 +224,61 @@ fn pool_pressure_batch_keeps_prefill_resident_and_bounded() {
         "high water {} outside pool bounds",
         pool.high_water_pages()
     );
+}
+
+#[test]
+fn chunked_admission_matches_monolithic_and_records_prefill_metrics() {
+    // The same requests under prefill-first and prefill-token-budgeted
+    // admission must decode identical token streams (chunked prefill is
+    // bit-identical; batch composition never changes per-sequence decode),
+    // and every admitted request must leave exactly one
+    // `admit.prefill_secs` sample in the engine metrics registry.
+    let n_reqs = 4u64;
+    let run = |budget: Option<usize>| -> (Vec<Vec<u32>>, usize) {
+        let engine = mk_engine(1e-4, 96, 512);
+        let mut b = Batcher::new(
+            EngineBackend { engine, pages_per_seq_estimate: 40 },
+            BatcherConfig { max_batch: 2, prefill_token_budget: budget },
+        );
+        let (tx, rx) = channel::<Response>();
+        let spec = b.backend.engine.meta.corpus.clone();
+        let mut rng = Rng::new(23);
+        for id in 0..n_reqs {
+            let p = Problem::sample(&mut rng, &spec, Some(8));
+            b.submit(Request {
+                id,
+                prompt: p.encode_prompt(&spec),
+                max_new: 48,
+                submitted: Instant::now(),
+                reply: tx.clone(),
+            });
+        }
+        b.run_to_completion();
+        drop(tx);
+        let mut resp: Vec<Response> = rx.iter().collect();
+        resp.sort_by_key(|r| r.id);
+        assert_eq!(resp.len(), n_reqs as usize, "all requests answered");
+        for r in &resp {
+            assert!(r.error.is_none(), "request {} failed: {:?}", r.id, r.error);
+            assert!(r.ttft_secs >= 0.0);
+        }
+        assert_eq!(b.backend.engine.pool().allocated_pages(), 0, "pool drained");
+        let samples = b
+            .backend
+            .engine
+            .metrics
+            .timer("admit.prefill_secs")
+            .map(|t| t.count())
+            .unwrap_or(0);
+        (resp.into_iter().map(|r| r.tokens).collect(), samples)
+    };
+
+    let (mono_tokens, mono_samples) = run(None);
+    let (chunked_tokens, chunked_samples) = run(Some(8));
+    assert_eq!(mono_tokens, chunked_tokens,
+               "budgeted admission must not change decoded tokens");
+    assert_eq!(mono_samples, n_reqs as usize,
+               "one admit.prefill_secs sample per request (prefill-first)");
+    assert_eq!(chunked_samples, n_reqs as usize,
+               "one admit.prefill_secs sample per request (chunked)");
 }
