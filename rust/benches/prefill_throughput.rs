@@ -1,8 +1,13 @@
-//! Prefill/TTFT benchmark (ISSUE 4): monolithic vs streaming chunked
-//! prefill at prompt lengths 64/512/2048, plus the serving-level
+//! Prefill/TTFT benchmark (ISSUE 4 + ISSUE 5): monolithic vs streaming
+//! chunked prefill at prompt lengths 64/512/2048, the serving-level
 //! decode-stall comparison — what a co-scheduled decoder experiences while
 //! a long prompt admits prefill-first (whole prompt, head-of-line
-//! blocking) vs prefill-token-budgeted (Sarathi-style chunks).
+//! blocking) vs prefill-token-budgeted (Sarathi-style chunks) — plus the
+//! concurrent-admission rows: TTFT with 2/4 co-admitted prompts under
+//! sequential (one admission slot) vs concurrent (one slot per prompt)
+//! chunked admission, and decode-stall percentiles under 4-way concurrent
+//! prefill (the DESIGN.md §5 fairness claim: the per-tick token budget
+//! caps prefill work regardless of how many prompts share it).
 //!
 //!     cargo bench --bench prefill_throughput              # full run
 //!     cargo bench --bench prefill_throughput -- --test    # CI smoke
@@ -63,14 +68,21 @@ fn prefill_once(e: &mut Engine, prompt: &[u32], chunk: Option<usize>) -> f64 {
     secs
 }
 
-/// Serving-level stall measurement: two decoders are mid-decode when a
-/// `long_len`-token prompt arrives.  Returns (per-tick wall times from
-/// submission to the long prompt's activation, its TTFT).
-fn stall_run(budget: Option<usize>, long_len: usize, spec: &CorpusSpec) -> (Vec<f64>, f64) {
+/// Serving-level stall measurement: two decoders are mid-decode when
+/// `n_long` `long_len`-token prompts arrive at once; admission uses
+/// `concurrency` streaming slots.  Returns (per-tick wall times from
+/// submission until every long prompt activated, time to the last
+/// activation).
+fn stall_run(budget: Option<usize>, concurrency: usize, n_long: usize, long_len: usize,
+             spec: &CorpusSpec) -> (Vec<f64>, f64) {
     let engine = mk_engine();
     let mut b = Batcher::new(
         EngineBackend { engine, pages_per_seq_estimate: 64 },
-        BatcherConfig { max_batch: 4, prefill_token_budget: budget },
+        BatcherConfig {
+            max_batch: 2 + n_long,
+            prefill_token_budget: budget,
+            prefill_concurrency: concurrency,
+        },
     );
     let (tx, _rx) = channel::<Response>();
     for id in 0..2u64 {
@@ -87,13 +99,15 @@ fn stall_run(budget: Option<usize>, long_len: usize, spec: &CorpusSpec) -> (Vec<
         b.tick();
     }
     let t_submit = Instant::now();
-    b.submit(Request {
-        id: 99,
-        prompt: prompt_of(long_len, spec),
-        max_new: 2,
-        submitted: Instant::now(),
-        reply: tx.clone(),
-    });
+    for i in 0..n_long as u64 {
+        b.submit(Request {
+            id: 99 + i,
+            prompt: prompt_of(long_len, spec),
+            max_new: 2,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        });
+    }
     let mut ticks = Vec::new();
     loop {
         let t0 = Instant::now();
@@ -106,11 +120,51 @@ fn stall_run(budget: Option<usize>, long_len: usize, spec: &CorpusSpec) -> (Vec<
             .timer("admit.prefill_secs")
             .map(|t| t.count())
             .unwrap_or(0);
-        if admitted >= 3 {
+        if admitted >= 2 + n_long {
             return (ticks, t_submit.elapsed().as_secs_f64());
         }
-        assert!(ticks.len() <= long_len + 16, "long prompt never admitted");
+        assert!(ticks.len() <= n_long * long_len + 16, "long prompts never admitted");
     }
+}
+
+/// Co-admission TTFT: one prompt per `lens` entry, submitted at once (in
+/// order) under budgeted chunked admission with `concurrency` slots;
+/// max_new 1, so each response's TTFT is (essentially) its JCT.  Returns
+/// the per-request TTFTs (index-aligned with `lens`) and the makespan to
+/// the last first-token.
+fn coadmit_run(concurrency: usize, lens: &[usize], spec: &CorpusSpec) -> (Vec<f64>, f64) {
+    let engine = mk_engine();
+    let mut b = Batcher::new(
+        EngineBackend { engine, pages_per_seq_estimate: 64 },
+        BatcherConfig {
+            max_batch: lens.len(),
+            prefill_token_budget: Some(CHUNK),
+            prefill_concurrency: concurrency,
+        },
+    );
+    let (tx, rx) = channel::<Response>();
+    let t0 = Instant::now();
+    for (id, &len) in lens.iter().enumerate() {
+        b.submit(Request {
+            id: id as u64,
+            prompt: prompt_of(len, spec),
+            max_new: 1,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        });
+    }
+    b.run_to_completion();
+    let makespan = t0.elapsed().as_secs_f64();
+    drop(tx);
+    let mut ttfts = vec![0.0f64; lens.len()];
+    let mut got = 0usize;
+    for r in rx.iter() {
+        assert!(r.error.is_none(), "co-admitted request failed");
+        ttfts[r.id as usize] = r.ttft_secs;
+        got += 1;
+    }
+    assert_eq!(got, lens.len());
+    (ttfts, makespan)
 }
 
 fn main() {
@@ -217,7 +271,7 @@ fn main() {
             let mut max_stall = Summary::new();
             let mut ttfts = Summary::new();
             for _ in 0..stall_iters {
-                let (ticks, ttft) = stall_run(budget, plen, &spec);
+                let (ticks, ttft) = stall_run(budget, 1, 1, plen, &spec);
                 let worst = ticks.iter().cloned().fold(0.0f64, f64::max);
                 max_stall.add(worst);
                 all_ticks.extend(ticks);
@@ -262,6 +316,134 @@ fn main() {
             ("name", Json::str(format!("stall_summary/p{plen}"))),
             ("prompt", Json::from(plen)),
             ("stall_reduction_budgeted", Json::from(ratio)),
+        ]));
+    }
+
+    // ------------------------------------------------------------------
+    // Co-admitted prompts (ISSUE 5): one 512-token prompt submitted ahead
+    // of (n-1) 64-token prompts, sequential (one admission slot) vs
+    // concurrent (one slot per prompt) chunked admission.  Expected: the
+    // short prompts' TTFT collapses under concurrency (they no longer
+    // serialize behind the whole long prompt — the head-of-line blocking
+    // the multi-slot Prefilling state removes), at a bounded TTFT cost
+    // for the long prompt (it shares the per-tick budget), with makespan
+    // — total budgeted prefill work — ~unchanged.
+    // ------------------------------------------------------------------
+    let co_iters: usize = if quick { 2 } else { 6 };
+    println!(
+        "\n{:<34} {:>8} {:>12} {:>12} {:>12}",
+        "benchmark", "n", "short ttft", "long ttft", "makespan"
+    );
+    println!("{}", "-".repeat(84));
+    let mut co_summary: Vec<(usize, bool, f64)> = Vec::new();
+    for &n_co in &[2usize, 4] {
+        let mut lens = vec![512usize];
+        lens.extend(std::iter::repeat(64).take(n_co - 1));
+        for &concurrent in &[false, true] {
+            let mode = if concurrent { "concurrent" } else { "sequential" };
+            let slots = if concurrent { n_co } else { 1 };
+            let mut ttft_short = Summary::new();
+            let mut ttft_long = Summary::new();
+            let mut makespans = Summary::new();
+            for _ in 0..co_iters {
+                let (ttfts, makespan) = coadmit_run(slots, &lens, &spec);
+                ttft_long.add(ttfts[0]);
+                ttft_short.extend(ttfts[1..].to_vec());
+                makespans.add(makespan);
+            }
+            println!(
+                "{:<34} {:>8} {:>9.2} ms {:>9.2} ms {:>9.2} ms",
+                format!("coadmit/{mode}/n{n_co}/long512_short64"),
+                n_co,
+                ttft_short.mean() * 1e3,
+                ttft_long.mean() * 1e3,
+                makespans.mean() * 1e3
+            );
+            rows.push(Json::obj(vec![
+                ("name", Json::str(format!("coadmit/{mode}/n{n_co}/long512_short64"))),
+                ("mode", Json::str(mode)),
+                ("co_admitted", Json::from(n_co)),
+                ("prefill_concurrency", Json::from(slots)),
+                ("long_prompt", Json::from(512usize)),
+                ("short_prompt", Json::from(64usize)),
+                ("iters", Json::from(co_iters)),
+                ("ttft_short_mean_secs", Json::from(ttft_short.mean())),
+                ("ttft_long_mean_secs", Json::from(ttft_long.mean())),
+                ("makespan_secs", Json::from(makespans.mean())),
+            ]));
+            co_summary.push((n_co, concurrent, ttft_short.mean()));
+        }
+    }
+    let co = |n: usize, concurrent: bool| {
+        co_summary
+            .iter()
+            .find(|&&(c, m, _)| c == n && m == concurrent)
+            .map(|&(_, _, t)| t)
+            .unwrap_or(f64::NAN)
+    };
+    println!();
+    for &n_co in &[2usize, 4] {
+        let ratio = co(n_co, false) / co(n_co, true);
+        println!("short-prompt TTFT sequential vs concurrent @ n{n_co}: {ratio:.2}x");
+        rows.push(Json::obj(vec![
+            ("name", Json::str(format!("coadmit_summary/n{n_co}"))),
+            ("co_admitted", Json::from(n_co)),
+            ("short_ttft_reduction_concurrent", Json::from(ratio)),
+        ]));
+    }
+
+    // ------------------------------------------------------------------
+    // Admission fairness: decode-stall percentiles while FOUR long
+    // prompts admit concurrently (DESIGN.md §5 fairness claim: the
+    // per-tick token budget caps prefill work no matter how many prompts
+    // share it, so 4-way concurrent admission stalls decoders no worse
+    // than 1-way).
+    // ------------------------------------------------------------------
+    println!(
+        "\n{:<34} {:>8} {:>12} {:>12} {:>12}",
+        "benchmark", "slots", "max stall", "p99 stall", "last ttft"
+    );
+    println!("{}", "-".repeat(84));
+    let mut fair_summary: Vec<(usize, f64)> = Vec::new();
+    for &slots in &[1usize, 4] {
+        let mut all_ticks = Summary::new();
+        let mut max_stall = Summary::new();
+        let mut ttfts = Summary::new();
+        for _ in 0..stall_iters {
+            let (ticks, ttft) = stall_run(Some(CHUNK), slots, 4, 512, &spec);
+            max_stall.add(ticks.iter().cloned().fold(0.0f64, f64::max));
+            all_ticks.extend(ticks);
+            ttfts.add(ttft);
+        }
+        println!(
+            "{:<34} {:>8} {:>9.2} ms {:>9.2} ms {:>9.2} ms",
+            format!("stall4/conc{slots}/p512"),
+            slots,
+            max_stall.mean() * 1e3,
+            all_ticks.percentile(99.0) * 1e3,
+            ttfts.mean() * 1e3
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::str(format!("stall4/conc{slots}/p512"))),
+            ("prefill_concurrency", Json::from(slots)),
+            ("co_admitted", Json::from(4usize)),
+            ("prompt", Json::from(512usize)),
+            ("iters", Json::from(stall_iters)),
+            // per-tick decode stall seen by the two co-scheduled decoders
+            // while all four long prompts admit
+            ("decode_stall_max_secs", Json::from(max_stall.mean())),
+            ("decode_stall_p50_secs", Json::from(all_ticks.percentile(50.0))),
+            ("decode_stall_p99_secs", Json::from(all_ticks.percentile(99.0))),
+            ("last_ttft_secs", Json::from(ttfts.mean())),
+        ]));
+        fair_summary.push((slots, all_ticks.percentile(99.0)));
+    }
+    if let (Some(&(_, s1)), Some(&(_, s4))) = (fair_summary.first(), fair_summary.last()) {
+        let ratio = s4 / s1;
+        println!("\np99 decode-stall 4-way concurrent vs sequential: {ratio:.2}x");
+        rows.push(Json::obj(vec![
+            ("name", Json::str("stall4_summary/p512")),
+            ("p99_stall_concurrent_vs_sequential", Json::from(ratio)),
         ]));
     }
 

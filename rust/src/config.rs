@@ -12,23 +12,33 @@ use crate::util::json::Json;
 /// Architecture of the AOT-compiled model (mirrors python ModelConfig).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
+    /// Vocabulary size (token ids are `0..vocab`).
     pub vocab: usize,
+    /// Hidden width of the residual stream.
     pub d_model: usize,
+    /// Transformer layer count.
     pub n_layers: usize,
+    /// Query heads per layer.
     pub n_heads: usize,
+    /// KV heads per layer (GQA: `n_heads` must be a multiple).
     pub n_kv_heads: usize,
+    /// Per-head channel count.
     pub head_dim: usize,
+    /// MLP hidden width.
     pub d_ff: usize,
 }
 
 impl ModelSpec {
+    /// KV-cache bytes one token occupies in one layer (K + V, f32).
     pub fn kv_bytes_per_token_layer(&self) -> usize {
         // K + V, f32
         2 * self.n_kv_heads * self.head_dim * 4
     }
+    /// KV-cache bytes one token occupies across all layers.
     pub fn kv_bytes_per_token(&self) -> usize {
         self.kv_bytes_per_token_layer() * self.n_layers
     }
+    /// Query heads per KV head (the GQA group width).
     pub fn group(&self) -> usize {
         self.n_heads / self.n_kv_heads
     }
@@ -37,36 +47,60 @@ impl ModelSpec {
 /// Everything the runtime needs to load and drive the artifacts.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Artifact directory (display-only `(built-in)` for the sim backend).
     pub dir: PathBuf,
+    /// Architecture of the served model.
     pub model: ModelSpec,
+    /// Whether the artifacts carry trained weights (sim: always false).
     pub trained: bool,
+    /// Slot-capacity ladder of the compiled attention kernels.
     pub capacities: Vec<usize>,
+    /// Prompt paddings of the compiled prefill executables.
     pub prefill_sizes: Vec<usize>,
+    /// KV-cache page size in tokens.
     pub page_size: usize,
+    /// Synthetic-corpus framing (token ids, step bounds).
     pub corpus: CorpusSpec,
 }
 
 /// Mirror of python CorpusConfig + token ids (kept in sync via meta.json).
 #[derive(Debug, Clone)]
 pub struct CorpusSpec {
+    /// Minimum reasoning-chain length in steps.
     pub min_steps: usize,
+    /// Maximum reasoning-chain length in steps.
     pub max_steps: usize,
+    /// Maximum lookback distance (in steps) of operand references.
     pub max_lookback: usize,
+    /// Padding token id.
     pub pad: u32,
+    /// Beginning-of-sequence token id.
     pub bos: u32,
+    /// End-of-sequence token id.
     pub eos: u32,
+    /// Question-marker token id.
     pub q: u32,
+    /// Equals-sign token id.
     pub eq: u32,
+    /// Separator token id.
     pub sep: u32,
+    /// Step-marker token id.
     pub step: u32,
+    /// Answer-marker token id.
     pub ans: u32,
+    /// Terminator (full-stop) token id.
     pub dot: u32,
+    /// `+` operator token id.
     pub plus: u32,
+    /// `-` operator token id.
     pub minus: u32,
+    /// Multiplication operator token id.
     pub times: u32,
+    /// First of the ten digit tokens DIG_0..DIG_9.
     pub dig0: u32,
     /// First of the dedicated step-index tokens IDX_0..IDX_{n_idx-1}.
     pub idx0: u32,
+    /// Number of step-index tokens.
     pub n_idx: u32,
 }
 
@@ -122,6 +156,7 @@ impl ArtifactMeta {
         }
     }
 
+    /// Load `meta.json` from an artifact directory (the AOT path).
     pub fn load(dir: &Path) -> Result<ArtifactMeta> {
         let meta_path = dir.join("meta.json");
         let text = std::fs::read_to_string(&meta_path)
@@ -130,6 +165,7 @@ impl ArtifactMeta {
         Self::from_json(dir, &j)
     }
 
+    /// Parse artifact metadata from an already-loaded `meta.json` value.
     pub fn from_json(dir: &Path, j: &Json) -> Result<ArtifactMeta> {
         let need = |path: &str| -> Result<&Json> {
             j.path(path).ok_or_else(|| anyhow!("meta.json missing '{path}'"))
@@ -203,6 +239,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse a CLI backend name (`sim`/`surrogate`, `xla`/`pjrt`).
     pub fn parse(s: &str) -> Result<BackendKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "sim" | "surrogate" => BackendKind::Sim,
@@ -210,6 +247,7 @@ impl BackendKind {
             other => bail!("unknown backend '{other}' (sim|xla)"),
         })
     }
+    /// Canonical lowercase name (`sim`, `xla`).
     pub fn name(&self) -> &'static str {
         match self {
             BackendKind::Sim => "sim",
@@ -240,6 +278,7 @@ pub enum PolicyKind {
 }
 
 impl PolicyKind {
+    /// Parse a CLI policy name (`dense`, `sink`, `h2o`, `quest`, `raas`).
     pub fn parse(s: &str) -> Result<PolicyKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "dense" | "full" => PolicyKind::Dense,
@@ -250,6 +289,7 @@ impl PolicyKind {
             other => bail!("unknown policy '{other}' (dense|sink|h2o|quest|raas)"),
         })
     }
+    /// Canonical lowercase name (matches [`PolicyKind::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             PolicyKind::Dense => "dense",
@@ -259,6 +299,7 @@ impl PolicyKind {
             PolicyKind::Raas => "raas",
         }
     }
+    /// Every policy, in the paper's Figure-2 column order.
     pub fn all() -> [PolicyKind; 5] {
         [PolicyKind::Dense, PolicyKind::Sink, PolicyKind::H2o, PolicyKind::Quest, PolicyKind::Raas]
     }
@@ -275,7 +316,9 @@ impl std::fmt::Display for PolicyKind {
 pub struct EngineConfig {
     /// Execution backend serving the model.
     pub backend: BackendKind,
+    /// Where the AOT artifacts live (xla backend only).
     pub artifacts_dir: PathBuf,
+    /// Sparsity policy driving the KV cache.
     pub policy: PolicyKind,
     /// Cache budget in tokens (the paper's L).
     pub budget: usize,
@@ -295,6 +338,7 @@ pub struct EngineConfig {
     pub max_decode: usize,
     /// Total KV pool size in pages (across sequences).
     pub pool_pages: usize,
+    /// Seed for the sim backend's feature dictionaries.
     pub seed: u64,
 }
 

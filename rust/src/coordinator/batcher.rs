@@ -2,10 +2,12 @@
 //! (Orca-style iteration-level scheduling).  Admission is either
 //! prefill-first (whole prompts, the legacy default) or — with
 //! [`BatcherConfig::prefill_token_budget`] set — Sarathi-style chunked:
-//! each tick spends at most the budget in prompt tokens, holding a
-//! partially-prefilled sequence in an admission state so a long prompt
-//! interleaves with the decode sweep instead of stalling every
-//! co-scheduled decoder (DESIGN.md §5).
+//! each tick spends at most the budget in prompt tokens, holding up to
+//! [`BatcherConfig::prefill_concurrency`] partially-prefilled sequences in
+//! an admission state and packing their next chunks into one batched
+//! backend call, so long prompts interleave with the decode sweep (and
+//! with each other) instead of stalling every co-scheduled decoder
+//! (DESIGN.md §5, the Queued → Prefilling{n} → Active state machine).
 //!
 //! The batcher is generic over a [`StepBackend`] so the scheduling logic is
 //! testable without AOT artifacts; the real backend is [`crate::engine::Engine`]
@@ -21,6 +23,7 @@ use super::request::{Request, Response};
 /// One sequence's slot in a batched scheduler iteration
 /// ([`StepBackend::step_batch`]).
 pub struct StepItem<'a, S> {
+    /// The decoding sequence.
     pub seq: &'a mut S,
     /// The token decoded this iteration (last step's output).
     pub token: u32,
@@ -36,8 +39,23 @@ pub struct PrefillProgress {
     pub first_token: Option<u32>,
 }
 
+/// One prompt's slot in a batched admission tick
+/// ([`StepBackend::prefill_chunk_batch`]): the same arguments
+/// [`StepBackend::prefill_chunk`] takes, one entry per co-admitted prompt.
+pub struct PrefillBatchItem<'a, S> {
+    /// The sequence being prefilled.
+    pub seq: &'a mut S,
+    /// The full prompt.
+    pub prompt: &'a [u32],
+    /// Prompt tokens already consumed.
+    pub done: usize,
+    /// Consume at most this many more prompt tokens (>= 1).
+    pub max_tokens: usize,
+}
+
 /// What the batcher needs from an inference engine.
 pub trait StepBackend {
+    /// Per-sequence state the backend threads through the scheduler.
     type Seq;
     /// Prefill: build sequence state, return the first decoded token.
     fn begin(&mut self, prompt: &[u32]) -> Result<(Self::Seq, u32)>;
@@ -58,6 +76,23 @@ pub trait StepBackend {
                      _max_tokens: usize) -> Result<PrefillProgress> {
         anyhow::bail!("backend does not stream prefill chunks")
     }
+    /// One admission tick's prefill chunks across every co-admitted
+    /// prompt; returns one progress per item, index-aligned.  The default
+    /// streams item by item through [`StepBackend::prefill_chunk`]
+    /// (mock/test backends need nothing extra); engines with a batched
+    /// fast path override it (`EngineBackend::prefill_chunk_batch` →
+    /// `Engine::prefill_batch`).  Overrides MUST stay bit-identical to
+    /// the per-item loop — the scheduler-level face of the concurrent
+    /// chunked-prefill invariant (`rust/tests/concurrent_prefill.rs`).
+    /// Only called for sequences that came from
+    /// [`StepBackend::begin_chunked`].
+    fn prefill_chunk_batch(&mut self, items: &mut [PrefillBatchItem<'_, Self::Seq>])
+                           -> Vec<Result<PrefillProgress>> {
+        items
+            .iter_mut()
+            .map(|it| self.prefill_chunk(it.seq, it.prompt, it.done, it.max_tokens))
+            .collect()
+    }
     /// Record one request's total prefill wall seconds — called exactly
     /// once per successfully admitted request, when its prefill completes
     /// (summed across chunks under budgeted admission).  Default: no-op;
@@ -77,27 +112,35 @@ pub trait StepBackend {
     }
     /// Release sequence resources.
     fn finish(&mut self, seq: Self::Seq);
+    /// Whether `token` terminates its sequence.
     fn is_eos(&self, token: u32) -> bool;
     /// True when another sequence can be admitted (pool headroom).
     fn has_capacity(&self, active: usize) -> bool;
 }
 
+/// Admission/scheduling knobs of the continuous batcher (DESIGN.md §5).
 #[derive(Debug, Clone)]
 pub struct BatcherConfig {
     /// Hard cap on concurrently decoding sequences.
     pub max_batch: usize,
     /// Per-tick prefill token budget (Sarathi-style chunked admission):
     /// each tick consumes at most this many prompt tokens before the
-    /// decode sweep, holding a partially-prefilled sequence in an
+    /// decode sweep, holding partially-prefilled sequences in an
     /// admission state between ticks, so a long prompt no longer stalls
     /// co-scheduled decoders.  `None` = legacy prefill-first whole-prompt
     /// admission.  Admission stays FIFO either way.
     pub prefill_token_budget: Option<usize>,
+    /// Streaming-admission slots: how many prompts may prefill
+    /// concurrently under budgeted admission, their per-tick chunks
+    /// packed into ONE batched [`StepBackend::prefill_chunk_batch`] call
+    /// (DESIGN.md §5).  1 (the default) reproduces the one-at-a-time
+    /// PR-4 state machine; ignored unless `prefill_token_budget` is set.
+    pub prefill_concurrency: usize,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, prefill_token_budget: None }
+        BatcherConfig { max_batch: 8, prefill_token_budget: None, prefill_concurrency: 1 }
     }
 }
 
@@ -110,8 +153,9 @@ struct Active<S> {
     ttft_secs: f64,
 }
 
-/// A partially-prefilled sequence (budgeted admission): the front of the
-/// FIFO queue, held here between ticks while its prompt streams in.
+/// A partially-prefilled sequence (budgeted admission): popped from the
+/// FIFO queue into an admission slot, held between ticks while its prompt
+/// streams in.
 struct Prefilling<S> {
     req: Request,
     seq: S,
@@ -123,43 +167,51 @@ struct Prefilling<S> {
 
 /// Iteration-level scheduler over a [`StepBackend`].
 pub struct Batcher<B: StepBackend> {
+    /// The inference engine being scheduled (public for tests/benches).
     pub backend: B,
     cfg: BatcherConfig,
     active: Vec<Active<B::Seq>>,
-    /// At most one sequence mid-prefill (budgeted admission only).  One at
-    /// a time keeps activation order trivially FIFO: the front of the
-    /// queue absorbs the whole budget until it completes.
-    prefilling: Option<Prefilling<B::Seq>>,
+    /// Sequences mid-prefill (budgeted admission only), in FIFO admission
+    /// order — at most [`BatcherConfig::prefill_concurrency`] at a time.
+    /// Completions activate in slot order, so equal-progress prompts keep
+    /// the submission order; a shorter later prompt may legitimately
+    /// finish before a longer front (chunked admission exists precisely
+    /// to remove that head-of-line blocking).
+    prefilling: Vec<Prefilling<B::Seq>>,
     /// FIFO admission queue.  `VecDeque`: admission pops the front every
     /// iteration, and a `Vec::remove(0)` here is O(n²) under queue
     /// pressure.
     queue: VecDeque<Request>,
+    /// Requests answered so far (successes and failures).
     pub completed: u64,
 }
 
 impl<B: StepBackend> Batcher<B> {
+    /// Scheduler over `backend` with the given admission config.
     pub fn new(backend: B, cfg: BatcherConfig) -> Self {
         Batcher {
             backend,
             cfg,
             active: Vec::new(),
-            prefilling: None,
+            prefilling: Vec::new(),
             queue: VecDeque::new(),
             completed: 0,
         }
     }
 
+    /// Enqueue a request (FIFO; admission happens on the next tick).
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(req);
     }
 
+    /// Requests not yet answered: queued, mid-prefill, or decoding.
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.prefilling.is_some() as usize + self.active.len()
+        self.queue.len() + self.prefilling.len() + self.active.len()
     }
 
     /// Sequences holding a batch slot: decoding or mid-prefill.
     fn in_flight(&self) -> usize {
-        self.active.len() + self.prefilling.is_some() as usize
+        self.active.len() + self.prefilling.len()
     }
 
     fn slot_available(&self) -> bool {
@@ -212,55 +264,144 @@ impl<B: StepBackend> Batcher<B> {
     }
 
     /// Sarathi-style budgeted admission: spend at most `budget` prompt
-    /// tokens this tick.  The partially-prefilled front absorbs budget
-    /// until its prompt completes (FIFO by construction); remaining budget
-    /// flows to the next queued request.  Backends without streaming
-    /// prefill (`begin_chunked` = `None`) admit whole prompts, each
-    /// charged against the budget, so pacing survives the fallback.
+    /// tokens this tick, across up to
+    /// [`BatcherConfig::prefill_concurrency`] in-flight prompts.  Each
+    /// round fills free admission slots from the queue front (FIFO), then
+    /// packs every in-flight prompt's next chunk into ONE batched
+    /// [`StepBackend::prefill_chunk_batch`] call ([`Batcher::prefill_round`]).
+    /// Backends without streaming prefill (`begin_chunked` = `None`)
+    /// admit whole prompts, each charged against the budget, so pacing
+    /// survives the fallback.
     fn admit_budgeted(&mut self, budget: usize) {
+        let concurrency = self.cfg.prefill_concurrency.max(1);
         let mut left = budget;
-        while left > 0 {
-            if self.prefilling.is_none() {
-                if self.queue.is_empty() || !self.slot_available() {
-                    break;
-                }
+        loop {
+            // fill free admission slots from the queue front
+            while left > 0
+                && self.prefilling.len() < concurrency
+                && !self.queue.is_empty()
+                && self.slot_available()
+            {
                 let req = self.queue.pop_front().expect("queue non-empty");
                 match self.backend.begin_chunked() {
-                    Some(seq) => {
-                        self.prefilling =
-                            Some(Prefilling { req, seq, done: 0, prefill_secs: 0.0 });
-                    }
+                    Some(seq) => self
+                        .prefilling
+                        .push(Prefilling { req, seq, done: 0, prefill_secs: 0.0 }),
                     None => {
                         let cost = req.prompt.len().max(1);
                         self.begin_whole(req);
                         left = left.saturating_sub(cost);
-                        continue;
                     }
                 }
             }
-            let p = self.prefilling.as_mut().expect("prefilling non-empty");
-            let t0 = Instant::now();
-            match self.backend.prefill_chunk(&mut p.seq, &p.req.prompt, p.done, left) {
+            if left == 0 || self.prefilling.is_empty() {
+                break;
+            }
+            left = self.prefill_round(left);
+        }
+    }
+
+    /// One batched prefill round over the in-flight admission slots:
+    /// split `budget` front-biased (the FIFO front gets
+    /// `ceil(left / slots_left)`, so concurrency 1 degenerates to the
+    /// PR-4 whole-budget front and equal-length prompts still activate in
+    /// submission order), issue ONE batched chunk call, apply per-prompt
+    /// progress, activate completions in slot order and report failures.
+    /// Returns the budget left — always strictly less than `budget` when
+    /// any prompt participated (each drains at least one token), so the
+    /// admission loop cannot livelock.
+    fn prefill_round(&mut self, budget: usize) -> usize {
+        let n = self.prefilling.len();
+        let mut shares = Vec::with_capacity(n);
+        {
+            let mut left = budget;
+            for i in 0..n {
+                let share = left.div_ceil(n - i);
+                shares.push(share);
+                left -= share;
+            }
+        }
+        let mut idxs: Vec<usize> = Vec::with_capacity(n);
+        let mut items: Vec<PrefillBatchItem<'_, B::Seq>> = Vec::with_capacity(n);
+        for (i, p) in self.prefilling.iter_mut().enumerate() {
+            if shares[i] == 0 {
+                continue; // budget < live prompts: the tail waits its turn
+            }
+            idxs.push(i);
+            items.push(PrefillBatchItem {
+                seq: &mut p.seq,
+                prompt: &p.req.prompt,
+                done: p.done,
+                max_tokens: shares[i],
+            });
+        }
+        let t0 = Instant::now();
+        let mut results = self.backend.prefill_chunk_batch(&mut items);
+        let call_secs = t0.elapsed().as_secs_f64();
+        drop(items);
+        // Hard contract, like step_batch: a misbehaving backend returning
+        // the wrong result count must not panic the replica thread or
+        // stall prompts mid-prefill forever.
+        let got = results.len();
+        if got != idxs.len() {
+            results.truncate(idxs.len());
+            while results.len() < idxs.len() {
+                results.push(Err(anyhow::anyhow!(
+                    "prefill_chunk_batch returned {got} results for {} prompts",
+                    idxs.len()
+                )));
+            }
+        }
+        enum Outcome {
+            Pending,
+            Done(u32),
+            Failed(String),
+        }
+        let mut outcomes: Vec<Outcome> = (0..n).map(|_| Outcome::Pending).collect();
+        let consumed_total: usize = results
+            .iter()
+            .filter_map(|r| r.as_ref().ok().map(|p| p.consumed))
+            .sum();
+        let mut spent = 0usize;
+        for (&i, r) in idxs.iter().zip(results.into_iter()) {
+            match r {
                 Ok(prog) => {
+                    let p = &mut self.prefilling[i];
                     p.done += prog.consumed;
-                    p.prefill_secs += t0.elapsed().as_secs_f64();
+                    // the batched call's wall time is attributed
+                    // proportionally to tokens consumed (prefill cost is
+                    // ~linear in tokens), keeping the per-request
+                    // `admit.prefill_secs` semantics of PR 4
+                    p.prefill_secs += if consumed_total > 0 {
+                        call_secs * prog.consumed as f64 / consumed_total as f64
+                    } else {
+                        call_secs / idxs.len().max(1) as f64
+                    };
                     // a zero-consumption chunk must still drain the budget,
                     // or a misbehaving backend livelocks the tick
-                    left = left.saturating_sub(prog.consumed.max(1));
+                    spent += prog.consumed.max(1);
                     if let Some(first) = prog.first_token {
-                        let p = self.prefilling.take().expect("prefilling non-empty");
-                        self.activate(p.req, p.seq, first, p.prefill_secs);
+                        outcomes[i] = Outcome::Done(first);
                     }
                 }
-                Err(e) => {
-                    let p = self.prefilling.take().expect("prefilling non-empty");
-                    let resp =
-                        Response::err(p.req.id, p.req.submitted, format!("prefill: {e:#}"));
+                Err(e) => outcomes[i] = Outcome::Failed(format!("prefill: {e:#}")),
+            }
+        }
+        // apply front to back so completions activate in FIFO slot order
+        // and survivors keep their order
+        let old = std::mem::take(&mut self.prefilling);
+        for (p, oc) in old.into_iter().zip(outcomes) {
+            match oc {
+                Outcome::Pending => self.prefilling.push(p),
+                Outcome::Done(first) => self.activate(p.req, p.seq, first, p.prefill_secs),
+                Outcome::Failed(msg) => {
+                    let resp = Response::err(p.req.id, p.req.submitted, msg);
                     self.backend.finish(p.seq);
                     let _ = p.req.reply.send(resp);
                 }
             }
         }
+        budget.saturating_sub(spent)
     }
 
     /// One scheduler iteration: admit, retire finished sequences, then ONE
@@ -526,6 +667,8 @@ mod tests {
     enum Ev {
         /// (request tag, tokens consumed) — one streamed prefill chunk.
         Chunk(u64, usize),
+        /// One batched prefill call covering this many co-admitted prompts.
+        Batch(usize),
         /// Request tag activated (prefill complete, joins the decode batch).
         Activate(u64),
         /// Request tag took one decode step.
@@ -580,6 +723,15 @@ mod tests {
             };
             Ok(PrefillProgress { consumed: take, first_token })
         }
+        fn prefill_chunk_batch(&mut self, items: &mut [PrefillBatchItem<'_, (u64, usize)>])
+                               -> Vec<Result<PrefillProgress>> {
+            // log the batch width, then stream per item like the default
+            self.events.push(Ev::Batch(items.len()));
+            items
+                .iter_mut()
+                .map(|it| self.prefill_chunk(it.seq, it.prompt, it.done, it.max_tokens))
+                .collect()
+        }
         fn step(&mut self, seq: &mut (u64, usize), _token: u32, _now: u64) -> Result<u32> {
             self.events.push(Ev::Step(seq.0));
             Ok(1)
@@ -615,7 +767,7 @@ mod tests {
         let (tx, rx) = channel();
         let mut b = Batcher::new(
             ChunkedMock::new(8),
-            BatcherConfig { max_batch: 8, prefill_token_budget: Some(4) },
+            BatcherConfig { max_batch: 8, prefill_token_budget: Some(4), ..Default::default() },
         );
         b.submit(mk_long_req(1, 1, 30, &tx)); // decoder: activates tick 1
         b.submit(mk_long_req(2, 40, 2, &tx)); // long prompt: ~10 ticks
@@ -654,7 +806,7 @@ mod tests {
         let (tx, rx) = channel();
         let mut b = Batcher::new(
             ChunkedMock::new(2),
-            BatcherConfig { max_batch: 2, prefill_token_budget: Some(5) },
+            BatcherConfig { max_batch: 2, prefill_token_budget: Some(5), ..Default::default() },
         );
         for id in 0..7u64 {
             b.submit(mk_long_req(id, 12, 2, &tx));
@@ -685,7 +837,7 @@ mod tests {
         let (tx, rx) = channel();
         let mut b = Batcher::new(
             MockBackend { capacity: 8, begun: 0, finished: 0 },
-            BatcherConfig { max_batch: 8, prefill_token_budget: Some(2) },
+            BatcherConfig { max_batch: 8, prefill_token_budget: Some(2), ..Default::default() },
         );
         for id in 0..6 {
             b.submit(mk_req(id, (id % 3) as u32 + 1, 16, &tx));
@@ -701,6 +853,152 @@ mod tests {
         assert_eq!(b.backend.finished, 6);
     }
 
+    // -- concurrent (multi-slot) chunked admission ------------------------
+
+    #[test]
+    fn concurrent_prefill_packs_chunks_into_one_batched_call() {
+        // Two co-admitted 12-token prompts under a 6-token budget and 2
+        // admission slots: every round issues ONE batched call covering
+        // both prompts (width-2 Batch events), both progress every tick
+        // (front-biased shares 3/3), and activation stays FIFO.
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            ChunkedMock::new(8),
+            BatcherConfig {
+                max_batch: 8,
+                prefill_token_budget: Some(6),
+                prefill_concurrency: 2,
+            },
+        );
+        b.submit(mk_long_req(1, 12, 2, &tx));
+        b.submit(mk_long_req(2, 12, 2, &tx));
+        b.run_to_completion();
+        drop(tx);
+        assert_eq!(rx.iter().filter(|r| r.error.is_none()).count(), 2);
+
+        let ev = &b.backend.events;
+        let widths: Vec<usize> = ev
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Batch(n) => Some(*n),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(widths, vec![2, 2, 2, 2], "both prompts pack into every round");
+        // front-biased even split: 3 tokens each per round
+        for e in ev {
+            if let Ev::Chunk(_, n) = e {
+                assert_eq!(*n, 3, "6-token budget splits 3/3 across 2 prompts");
+            }
+        }
+        let activations: Vec<u64> = ev
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Activate(id) => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(activations, vec![1, 2], "equal-length prompts activate FIFO");
+    }
+
+    #[test]
+    fn concurrent_prefill_removes_prefill_head_of_line_blocking() {
+        // A 40-token prompt ahead of a 4-token prompt: with one admission
+        // slot the short prompt waits ~10 ticks behind the long one; with
+        // two slots it co-prefills and activates long before — the
+        // head-of-line-blocking fix concurrency exists for.
+        let order_with = |concurrency: usize| -> Vec<u64> {
+            let (tx, _rx) = channel();
+            let mut b = Batcher::new(
+                ChunkedMock::new(8),
+                BatcherConfig {
+                    max_batch: 8,
+                    prefill_token_budget: Some(4),
+                    prefill_concurrency: concurrency,
+                },
+            );
+            b.submit(mk_long_req(1, 40, 1, &tx));
+            b.submit(mk_long_req(2, 4, 1, &tx));
+            b.run_to_completion();
+            b.backend
+                .events
+                .iter()
+                .filter_map(|e| match e {
+                    Ev::Activate(id) => Some(*id),
+                    _ => None,
+                })
+                .collect()
+        };
+        assert_eq!(order_with(1), vec![1, 2], "one slot: short prompt blocked");
+        assert_eq!(order_with(2), vec![2, 1], "two slots: short prompt overtakes");
+    }
+
+    #[test]
+    fn concurrent_prefill_preserves_fifo_for_equal_prompts() {
+        // 6 equal 10-token prompts through 3 admission slots: activation
+        // order must equal submission order (front-biased shares mean the
+        // front never falls behind a later slot), and every request is
+        // answered and released.
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            ChunkedMock::new(8),
+            BatcherConfig {
+                max_batch: 8,
+                prefill_token_budget: Some(6),
+                prefill_concurrency: 3,
+            },
+        );
+        for id in 0..6u64 {
+            b.submit(mk_long_req(id, 10, 2, &tx));
+        }
+        b.run_to_completion();
+        drop(tx);
+        let activations: Vec<u64> = b
+            .backend
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Activate(id) => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(activations, (0..6).collect::<Vec<u64>>(), "activation must stay FIFO");
+        let mut ids: Vec<u64> = rx.iter().map(|r| r.id).collect();
+        ids.sort();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>());
+        assert_eq!(b.backend.finished, 6, "all sequences released");
+    }
+
+    #[test]
+    fn concurrent_prefill_error_is_isolated_to_the_failing_prompt() {
+        // Two co-prefilling prompts, one of which errors on its second
+        // chunk: the failure must be reported for that request only, its
+        // sequence released, and its neighbor must keep streaming to
+        // completion.
+        let (tx, rx) = channel();
+        let mut backend = ChunkedMock::new(8);
+        backend.fail_second_chunk_of = Some(3);
+        let mut b = Batcher::new(
+            backend,
+            BatcherConfig {
+                max_batch: 8,
+                prefill_token_budget: Some(8),
+                prefill_concurrency: 2,
+            },
+        );
+        b.submit(mk_long_req(3, 12, 2, &tx)); // fails on its second chunk
+        b.submit(mk_long_req(4, 12, 2, &tx));
+        b.run_to_completion();
+        drop(tx);
+        let mut resps: Vec<Response> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 2);
+        assert!(resps[0].error.as_deref().unwrap_or("").contains("prefill"));
+        assert!(resps[1].error.is_none());
+        assert_eq!(b.backend.finished, 2, "failed partial + finished neighbor released");
+        assert_eq!(b.pending(), 0);
+    }
+
     #[test]
     fn chunked_prefill_error_releases_the_sequence() {
         let (tx, rx) = channel();
@@ -708,7 +1006,7 @@ mod tests {
         backend.fail_second_chunk_of = Some(3);
         let mut b = Batcher::new(
             backend,
-            BatcherConfig { max_batch: 8, prefill_token_budget: Some(4) },
+            BatcherConfig { max_batch: 8, prefill_token_budget: Some(4), ..Default::default() },
         );
         b.submit(mk_long_req(3, 12, 4, &tx)); // fails on its second chunk
         b.submit(mk_long_req(4, 3, 2, &tx));

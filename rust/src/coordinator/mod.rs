@@ -7,7 +7,8 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, PrefillProgress, StepBackend, StepItem};
+pub use batcher::{Batcher, BatcherConfig, PrefillBatchItem, PrefillProgress, StepBackend,
+                  StepItem};
 pub use request::{Request, RequestId, Response};
 pub use router::{Router, RoutePolicy};
 pub use server::EngineServer;

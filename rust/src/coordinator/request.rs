@@ -3,13 +3,18 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+/// Coordinator-wide request identifier.
 pub type RequestId = u64;
 
 /// A generation request submitted to the coordinator.
 pub struct Request {
+    /// Caller-chosen identifier, echoed in the [`Response`].
     pub id: RequestId,
+    /// Prompt tokens.
     pub prompt: Vec<u32>,
+    /// Decode-length cap (EOS may stop earlier).
     pub max_new: usize,
+    /// Submission instant (the JCT/TTFT clock origin).
     pub submitted: Instant,
     /// Where the response is delivered.
     pub reply: Sender<Response>,
@@ -18,16 +23,20 @@ pub struct Request {
 /// The completed response.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The request this answers.
     pub id: RequestId,
+    /// Decoded tokens (empty on error).
     pub tokens: Vec<u32>,
     /// Job completion time (paper metric): submission → full response.
     pub jct_secs: f64,
     /// Time to first token.
     pub ttft_secs: f64,
+    /// Failure diagnostic; `None` on success.
     pub error: Option<String>,
 }
 
 impl Response {
+    /// Failure response carrying the elapsed time as its JCT.
     pub fn err(id: RequestId, submitted: Instant, msg: String) -> Self {
         Response {
             id,

@@ -6,9 +6,12 @@ use anyhow::Result;
 
 use super::request::Request;
 
+/// How the router picks a replica for each request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
+    /// Cycle through replicas in order.
     RoundRobin,
+    /// Pick the replica with the fewest pending requests.
     LeastLoaded,
     /// Hash the prompt prefix (session affinity: same session hits the same
     /// replica, maximising KV-cache locality in prefix-caching setups).
@@ -16,6 +19,7 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
+    /// Parse a CLI route-policy name (`rr`, `least`, `affinity`).
     pub fn parse(s: &str) -> Result<RoutePolicy> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "rr" | "roundrobin" | "round-robin" => RoutePolicy::RoundRobin,
@@ -29,7 +33,9 @@ impl RoutePolicy {
 /// What the router needs from a replica (implemented by `EngineServer`;
 /// mocked in tests).
 pub trait Replica {
+    /// Hand one request to this replica's mailbox.
     fn submit(&self, req: Request) -> Result<()>;
+    /// Requests this replica has accepted but not yet answered.
     fn pending(&self) -> usize;
 }
 
@@ -46,23 +52,28 @@ impl Replica for super::server::EngineServer {
 
 use super::server::EngineServer;
 
+/// Dispatches requests across engine replicas (DESIGN.md §5).
 pub struct Router<R: Replica> {
     replicas: Vec<R>,
     policy: RoutePolicy,
     next_rr: usize,
+    /// Requests routed so far.
     pub routed: u64,
 }
 
 impl<R: Replica> Router<R> {
+    /// Router over at least one replica.
     pub fn new(replicas: Vec<R>, policy: RoutePolicy) -> Self {
         assert!(!replicas.is_empty());
         Router { replicas, policy, next_rr: 0, routed: 0 }
     }
 
+    /// The replica set, in submission-index order.
     pub fn replicas(&self) -> &[R] {
         &self.replicas
     }
 
+    /// Consume the router, returning its replicas (for shutdown).
     pub fn into_replicas(self) -> Vec<R> {
         self.replicas
     }
@@ -97,6 +108,7 @@ impl<R: Replica> Router<R> {
         }
     }
 
+    /// Route one request; returns the chosen replica index.
     pub fn route(&mut self, req: Request) -> Result<usize> {
         let i = self.pick(&req);
         self.replicas[i].submit(req)?;

@@ -8,14 +8,16 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherConfig, PrefillProgress, StepBackend, StepItem};
+use super::batcher::{Batcher, BatcherConfig, PrefillBatchItem, PrefillProgress, StepBackend,
+                     StepItem};
 use super::request::Request;
 use crate::config::EngineConfig;
-use crate::engine::{BatchEntry, Engine};
+use crate::engine::{BatchEntry, Engine, PrefillEntry};
 use crate::kvcache::SeqCache;
 
 /// [`StepBackend`] implementation over the real engine.
 pub struct EngineBackend {
+    /// The engine this replica schedules onto.
     pub engine: Engine,
     /// Reserve this many free pool pages per admitted sequence.
     pub pages_per_seq_estimate: usize,
@@ -58,6 +60,33 @@ impl StepBackend for EngineBackend {
         Ok(PrefillProgress { consumed: seq.n_tokens - done, first_token })
     }
 
+    /// The batched admission fast path: one `Engine::prefill_batch` call
+    /// per round covering every co-admitted prompt, instead of one
+    /// streaming call per prompt — bit-identical to the per-item loop
+    /// (the engine pins that invariant end to end).
+    fn prefill_chunk_batch(&mut self, items: &mut [PrefillBatchItem<'_, SeqCache>])
+                           -> Vec<Result<PrefillProgress>> {
+        let dones: Vec<usize> = items.iter().map(|it| it.done).collect();
+        let mut entries: Vec<PrefillEntry<'_>> = items
+            .iter_mut()
+            .map(|it| {
+                debug_assert_eq!(it.seq.n_tokens, it.done, "prefill progress out of sync");
+                PrefillEntry { seq: &mut *it.seq, prompt: it.prompt, max_tokens: it.max_tokens }
+            })
+            .collect();
+        let results = self.engine.prefill_batch(&mut entries);
+        drop(entries);
+        results
+            .into_iter()
+            .zip(items.iter())
+            .zip(dones)
+            .map(|((r, it), done)| {
+                r.map(|first| PrefillProgress { consumed: it.seq.n_tokens - done,
+                                                first_token: first })
+            })
+            .collect()
+    }
+
     fn record_prefill_secs(&mut self, secs: f64) {
         self.engine.metrics.record_secs("admit.prefill_secs", secs);
     }
@@ -97,8 +126,10 @@ enum Msg {
 /// Handle to a replica thread.
 pub struct EngineServer {
     tx: Sender<Msg>,
+    /// Pending-request gauge the router's least-loaded policy reads.
     pub load: Arc<AtomicUsize>,
     handle: Option<JoinHandle<()>>,
+    /// Replica name (thread name suffix, log prefix).
     pub name: String,
 }
 
@@ -169,6 +200,7 @@ impl EngineServer {
         Ok(EngineServer { tx, load, handle: Some(handle), name: thread_name })
     }
 
+    /// Enqueue one request into the replica mailbox.
     pub fn submit(&self, req: Request) -> Result<()> {
         self.load.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.tx
@@ -176,10 +208,12 @@ impl EngineServer {
             .map_err(|_| anyhow::anyhow!("replica {} is down", self.name))
     }
 
+    /// Requests accepted but not yet answered.
     pub fn pending(&self) -> usize {
         self.load.load(Ordering::Relaxed)
     }
 
+    /// Drain remaining work, then stop and join the replica thread.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(h) = self.handle.take() {

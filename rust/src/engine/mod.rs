@@ -25,11 +25,13 @@ use crate::kvcache::page::page_probs;
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
 use crate::kvcache::{KvPool, PageViewBuf, SeqCache};
 use crate::metrics::Metrics;
-use crate::runtime::{AttnBatchItem, Backend, PagedAttnInput, Qkv, QkvBatchItem, SimBackend,
-                     Tokenizer};
+use crate::runtime::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, Qkv,
+                     QkvBatchItem, SimBackend, Tokenizer};
 
+/// Generation controls for [`Engine::generate`].
 #[derive(Debug, Clone, Default)]
 pub struct GenOptions {
+    /// Stop after this many decoded tokens (EOS may stop earlier).
     pub max_new: usize,
     /// Decode exactly this many tokens, ignoring EOS (Figure-7 workloads).
     pub force_len: Option<usize>,
@@ -40,12 +42,18 @@ pub struct GenOptions {
     pub log_series: bool,
 }
 
+/// Everything [`Engine::generate`] measures for one request.
 #[derive(Debug, Default)]
 pub struct GenOutput {
+    /// Decoded tokens (the first is the prefill's next-token sample).
     pub tokens: Vec<u32>,
+    /// Prefill wall seconds (TTFT).
     pub prefill_secs: f64,
+    /// Decode-loop wall seconds.
     pub decode_secs: f64,
+    /// High-water resident KV bytes (the Figure-7 memory axis).
     pub peak_resident_bytes: usize,
+    /// High-water layer-0 resident tokens.
     pub peak_resident_tokens_l0: usize,
     /// (step, cumulative decode secs, resident bytes) — when log_series.
     pub series: Vec<(usize, f64, usize)>,
@@ -55,6 +63,7 @@ pub struct GenOutput {
 
 /// One sequence's slot in a batched decode iteration (`Engine::decode_batch`).
 pub struct BatchEntry<'a> {
+    /// The decoding sequence.
     pub seq: &'a mut SeqCache,
     /// The token decoded this iteration (last step's output).
     pub token: u32,
@@ -66,9 +75,24 @@ pub struct BatchEntry<'a> {
 }
 
 impl<'a> BatchEntry<'a> {
+    /// Entry without a score log (the serving path's shape).
     pub fn new(seq: &'a mut SeqCache, token: u32, now: u64) -> Self {
         BatchEntry { seq, token, now, log: None }
     }
+}
+
+/// One sequence's slot in a batched prefill tick
+/// ([`Engine::prefill_batch`]): a co-admitted prompt and how much of it to
+/// admit this tick.
+pub struct PrefillEntry<'a> {
+    /// The sequence being prefilled; tracks its own progress in
+    /// `n_tokens` (like [`Engine::prefill_seq_partial`]).
+    pub seq: &'a mut SeqCache,
+    /// The full prompt (positions are absolute prompt offsets).
+    pub prompt: &'a [u32],
+    /// Admit at most this many more prompt tokens this tick (clamped to
+    /// at least 1 so every entry makes progress).
+    pub max_tokens: usize,
 }
 
 /// Per-item scratch for the batched decode path, reused across layers and
@@ -86,10 +110,35 @@ struct BatchSlot {
     log_entry: Option<Vec<(usize, f32)>>,
 }
 
+/// The backend-agnostic inference engine: one model, one KV pool, one
+/// sparsity policy, and the prefill/decode drivers that connect them.
+///
+/// # Example — one-sequence decode under RaaS
+///
+/// The default config serves the hermetic sim backend under the RaaS
+/// policy; `generate` runs prefill + decode end to end (this example runs
+/// under `cargo test` as a doctest):
+///
+/// ```
+/// use raas::config::EngineConfig;
+/// use raas::engine::{Engine, GenOptions};
+///
+/// let mut engine = Engine::new(EngineConfig::default()).unwrap();
+/// let prompt = [1u32, 3, 13, 4];
+/// let opts = GenOptions { max_new: 8, ..Default::default() };
+/// let out = engine.generate(&prompt, &opts).unwrap();
+/// assert!(!out.tokens.is_empty() && out.tokens.len() <= 8);
+/// // bit-deterministic: the same prompt decodes the same tokens
+/// assert_eq!(engine.generate(&prompt, &opts).unwrap().tokens, out.tokens);
+/// ```
 pub struct Engine {
+    /// Engine/policy configuration this engine was built from.
     pub cfg: EngineConfig,
+    /// Artifact metadata (model architecture, page size, corpus framing).
     pub meta: ArtifactMeta,
+    /// Detokenizer/framing helper over the corpus vocabulary.
     pub tokenizer: Tokenizer,
+    /// Wall-time and counter registry (`step.*`, `admit.*`, pool gauges).
     pub metrics: Metrics,
     model: Box<dyn Backend>,
     pool: KvPool,
@@ -137,6 +186,8 @@ impl Engine {
         Self::with_backend(cfg, meta, model)
     }
 
+    /// Build over an explicit backend instance (tests wrap/mask backends
+    /// this way; `Engine::new` is the config-driven front door).
     pub fn with_backend(cfg: EngineConfig, meta: ArtifactMeta, model: Box<dyn Backend>)
                         -> Result<Self> {
         let kv_dim = meta.model.n_kv_heads * meta.model.head_dim;
@@ -160,12 +211,15 @@ impl Engine {
         })
     }
 
+    /// The execution backend this engine drives.
     pub fn model(&self) -> &dyn Backend {
         self.model.as_ref()
     }
+    /// The shared physical KV page pool.
     pub fn pool(&self) -> &KvPool {
         &self.pool
     }
+    /// Which sparsity policy drives the cache.
     pub fn policy_kind(&self) -> PolicyKind {
         self.cfg.policy
     }
@@ -238,38 +292,128 @@ impl Engine {
         } else {
             KvSrc::Monolithic(self.model.prefill(&prompt[..end]).context("prefill")?)
         };
-        let n_layers = self.meta.model.n_layers;
-        let page = self.meta.page_size;
-        let mut pos = start;
-        while pos < end {
-            let run_end = end.min((pos / page + 1) * page);
-            let len = run_end - pos;
-            for layer in 0..n_layers {
-                let (k, v) = match &src {
-                    KvSrc::Streamed(c) => c.kv_run(&self.meta.model, layer, pos - start, len),
-                    KvSrc::Monolithic(m) => m.kv_run(&self.meta.model, layer, pos, len),
-                };
-                seq.append_slots(layer, &mut self.pool, pos, len, k, v,
-                                 self.cfg.pin_prefill, 0)?;
-            }
-            pos = run_end;
-        }
+        let spec = &self.meta.model;
+        seq.append_prefill_runs(&mut self.pool, start, end, self.cfg.pin_prefill,
+                                |layer, pos, len| match &src {
+                                    KvSrc::Streamed(c) => c.kv_run(spec, layer, pos - start, len),
+                                    KvSrc::Monolithic(m) => m.kv_run(spec, layer, pos, len),
+                                })?;
         seq.n_tokens = end;
         if end < prompt.len() {
             return Ok(None);
-        }
-        seq.prompt_len = prompt.len();
-        // budget enforcement after prefill (Sink/H2O trim immediately; RaaS
-        // pins prefill so nothing is evictable — paper §4.2's small-budget
-        // pathology reproduces here)
-        for layer in 0..n_layers {
-            self.enforce_budget(seq, layer);
         }
         let logits = match &src {
             KvSrc::Streamed(c) => &c.logits,
             KvSrc::Monolithic(m) => &m.logits,
         };
-        Ok(Some(argmax(logits) as u32))
+        Ok(Some(self.finish_prefill(seq, prompt.len(), logits)))
+    }
+
+    /// Shared tail of every prefill driver once a sequence's prompt
+    /// completes: stamp `prompt_len`, run post-prefill budget enforcement
+    /// (Sink/H2O trim immediately; RaaS pins prefill so nothing is
+    /// evictable — paper §4.2's small-budget pathology reproduces here),
+    /// then greedy-sample the first token from the final-chunk logits.
+    fn finish_prefill(&mut self, seq: &mut SeqCache, prompt_len: usize, logits: &[f32]) -> u32 {
+        seq.prompt_len = prompt_len;
+        for layer in 0..self.meta.model.n_layers {
+            self.enforce_budget(seq, layer);
+        }
+        argmax(logits) as u32
+    }
+
+    /// One co-admitted prefill tick (DESIGN.md §5, concurrent chunked
+    /// admission): advance every entry's sequence by up to its
+    /// `max_tokens` more prompt tokens through ONE batched
+    /// [`Backend::prefill_chunk_batch`] call, then run the page-run-major
+    /// appends per sequence in entry order.  Returns one result per entry,
+    /// index-aligned: `Ok(Some(first_token))` when that prompt completed,
+    /// `Ok(None)` while its prefill is still partial.
+    ///
+    /// Bit-identity contract (pinned by `rust/tests/concurrent_prefill.rs`):
+    /// this is bit-identical to calling [`Engine::prefill_seq_partial`]
+    /// per entry in order — same KV slabs, same page tables including
+    /// pool ids, same RepBounds, same first tokens — because backend
+    /// calls never touch the pool, and the per-sequence appends (plus any
+    /// post-completion eviction) run in the same entry order as the
+    /// sequential loop.
+    ///
+    /// Failure isolation: entry validation errors fail only that entry;
+    /// when the batched backend call fails, the engine retries on the
+    /// sequential per-entry path so only the actually-failing prompts
+    /// error out.  Backends without native streaming
+    /// ([`Backend::supports_chunked_prefill`] false) take the sequential
+    /// path directly — their whole-prompt prefill cannot be batched.
+    pub fn prefill_batch(&mut self, entries: &mut [PrefillEntry<'_>]) -> Vec<Result<Option<u32>>> {
+        let n = entries.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if !self.model.supports_chunked_prefill() {
+            return self.prefill_sequential(entries);
+        }
+        let mut out: Vec<Result<Option<u32>>> = (0..n).map(|_| Ok(None)).collect();
+        // plan: (entry index, start, end) for every valid entry
+        let mut plan: Vec<(usize, usize, usize)> = Vec::with_capacity(n);
+        for (i, e) in entries.iter().enumerate() {
+            if e.prompt.is_empty() {
+                out[i] = Err(anyhow::anyhow!("empty prompt"));
+                continue;
+            }
+            let start = e.seq.n_tokens;
+            if start >= e.prompt.len() {
+                out[i] = Err(anyhow::anyhow!(
+                    "sequence already holds {start} tokens of a {}-token prompt",
+                    e.prompt.len()
+                ));
+                continue;
+            }
+            // saturating: callers may pass usize::MAX as "finish the rest"
+            let end = e.prompt.len().min(start.saturating_add(e.max_tokens.max(1)));
+            plan.push((i, start, end));
+        }
+        let items: Vec<PrefillChunkItem<'_>> = plan
+            .iter()
+            .map(|&(i, start, end)| PrefillChunkItem { tokens: entries[i].prompt, start, end })
+            .collect();
+        let chunks = match self.model.prefill_chunk_batch(&items) {
+            // hard contract: a misbehaving backend returning the wrong
+            // item count must not panic or desync entries — retry per item
+            Ok(c) if c.len() == items.len() => c,
+            _ => return self.prefill_sequential(entries),
+        };
+        let spec = self.meta.model.clone();
+        for (&(i, start, end), chunk) in plan.iter().zip(&chunks) {
+            let e = &mut entries[i];
+            let appended = e.seq.append_prefill_runs(
+                &mut self.pool, start, end, self.cfg.pin_prefill,
+                |layer, pos, len| chunk.kv_run(&spec, layer, pos - start, len),
+            );
+            if let Err(err) = appended {
+                // the sequence holds a partial chunk: the caller must
+                // release it, exactly like a failed sequential chunk
+                out[i] = Err(err.context("prefill chunk append"));
+                continue;
+            }
+            e.seq.n_tokens = end;
+            if end == e.prompt.len() {
+                let prompt_len = e.prompt.len();
+                let seq = &mut *e.seq;
+                out[i] = Ok(Some(self.finish_prefill(seq, prompt_len, &chunk.logits)));
+            }
+        }
+        out
+    }
+
+    /// Per-entry sequential prefill — the isolation fallback and the
+    /// non-streaming-backend path of [`Engine::prefill_batch`]: exactly
+    /// one [`Engine::prefill_seq_partial`] call per entry, in entry order.
+    fn prefill_sequential(&mut self, entries: &mut [PrefillEntry<'_>])
+                          -> Vec<Result<Option<u32>>> {
+        entries
+            .iter_mut()
+            .map(|e| self.prefill_seq_partial(e.seq, e.prompt, e.max_tokens))
+            .collect()
     }
 
     fn enforce_budget(&mut self, seq: &mut SeqCache, layer: usize) {
@@ -780,6 +924,7 @@ fn load_xla_backend(_meta: &ArtifactMeta, _caps: Option<&[usize]>) -> Result<Box
     bail!("{NO_XLA_BACKEND}")
 }
 
+/// Greedy sampling: index of the largest logit, ties breaking low.
 pub fn argmax(xs: &[f32]) -> usize {
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate() {
@@ -841,6 +986,74 @@ mod tests {
         assert!(chunked.prefill_seq_partial(&mut seq_c, &prompt, 3).is_err());
         mono.release_seq(&mut seq_m);
         chunked.release_seq(&mut seq_c);
+    }
+
+    #[test]
+    fn prefill_batch_matches_sequential_entries() {
+        // Two co-admitted prompts driven through `prefill_batch` must
+        // reach the same first tokens as per-entry `prefill_seq_partial`
+        // calls (full bit-identity incl. slabs/page tables is pinned by
+        // rust/tests/concurrent_prefill.rs); validation errors must stay
+        // per-entry.
+        let pa: Vec<u32> = (0..17u32).map(|i| 1 + i % 40).collect();
+        let pb: Vec<u32> = (0..9u32).map(|i| 2 + i % 31).collect();
+        let cfg = EngineConfig { budget: 128, ..Default::default() };
+
+        let mut seqd = Engine::new(cfg.clone()).unwrap();
+        let mut sa = seqd.new_seq();
+        let mut sb = seqd.new_seq();
+        let mut ref_first = [None, None];
+        while ref_first.iter().any(Option::is_none) {
+            if ref_first[0].is_none() {
+                ref_first[0] = seqd.prefill_seq_partial(&mut sa, &pa, 4).unwrap();
+            }
+            if ref_first[1].is_none() {
+                ref_first[1] = seqd.prefill_seq_partial(&mut sb, &pb, 4).unwrap();
+            }
+        }
+
+        let mut conc = Engine::new(cfg).unwrap();
+        let mut ca = conc.new_seq();
+        let mut cb = conc.new_seq();
+        let mut got = [None, None];
+        while got.iter().any(Option::is_none) {
+            let mut idx = Vec::new();
+            let mut entries = Vec::new();
+            if got[0].is_none() {
+                idx.push(0);
+                entries.push(PrefillEntry { seq: &mut ca, prompt: &pa, max_tokens: 4 });
+            }
+            if got[1].is_none() {
+                idx.push(1);
+                entries.push(PrefillEntry { seq: &mut cb, prompt: &pb, max_tokens: 4 });
+            }
+            for (j, r) in conc.prefill_batch(&mut entries).into_iter().enumerate() {
+                if let Some(t) = r.unwrap() {
+                    got[idx[j]] = Some(t);
+                }
+            }
+        }
+        assert_eq!(got, ref_first);
+        assert_eq!(ca.n_tokens, pa.len());
+        assert_eq!(cb.prompt_len, pb.len());
+
+        // a completed entry in the batch is a per-entry error, not a panic
+        // and not a poisoned batch: the co-scheduled fresh entry proceeds
+        let mut fresh = conc.new_seq();
+        let mut entries = vec![
+            PrefillEntry { seq: &mut ca, prompt: &pa, max_tokens: 4 },
+            PrefillEntry { seq: &mut fresh, prompt: &pb, max_tokens: 4 },
+        ];
+        let res = conc.prefill_batch(&mut entries);
+        assert!(res[0].is_err(), "re-prefilling a complete sequence must error");
+        assert_eq!(*res[1].as_ref().unwrap(), None, "fresh entry keeps streaming");
+        assert_eq!(fresh.n_tokens, 4);
+
+        seqd.release_seq(&mut sa);
+        seqd.release_seq(&mut sb);
+        conc.release_seq(&mut ca);
+        conc.release_seq(&mut cb);
+        conc.release_seq(&mut fresh);
     }
 
     #[test]

@@ -24,12 +24,15 @@ pub struct PageMeta {
     pub acc_score: f64,
 }
 
+/// Sentinel pool id for simulator-only pages that hold no real KV bytes.
 pub const NO_POOL: PageId = u32::MAX;
 
 impl PageMeta {
+    /// Fresh empty page starting at `start_pos`, stamped `now`.
     pub fn new(pool_id: PageId, start_pos: usize, pinned: bool, now: u64) -> Self {
         PageMeta { pool_id, start_pos, len: 0, pinned, last_stamp: now, acc_score: 0.0 }
     }
+    /// One past the absolute position of the last filled slot.
     pub fn end_pos(&self) -> usize {
         self.start_pos + self.len
     }
@@ -39,12 +42,14 @@ impl PageMeta {
 /// channelwise min/max over the page's post-RoPE keys, per kv head.
 #[derive(Debug, Clone)]
 pub struct RepBounds {
-    /// [n_kv_heads * head_dim]
+    /// Channelwise minimum, `[n_kv_heads * head_dim]`.
     pub kmin: Vec<f32>,
+    /// Channelwise maximum, `[n_kv_heads * head_dim]`.
     pub kmax: Vec<f32>,
 }
 
 impl RepBounds {
+    /// Bounds over zero keys (+inf/-inf, so the first fold wins).
     pub fn empty(kv_dim: usize) -> Self {
         RepBounds { kmin: vec![f32::INFINITY; kv_dim], kmax: vec![f32::NEG_INFINITY; kv_dim] }
     }

@@ -4,6 +4,7 @@
 use super::{PageMeta, SparsityPolicy};
 use crate::config::PolicyKind;
 
+/// Dense attention: select every resident page, evict none.
 pub struct DensePolicy;
 
 impl SparsityPolicy for DensePolicy {

@@ -7,9 +7,11 @@
 use super::{PageMeta, SparsityPolicy};
 use crate::config::PolicyKind;
 
+/// H2O: evict the page with the least accumulated attention mass.
 pub struct H2oPolicy {
     /// Fraction of the budget protected as a recent window.
     pub recent_fraction: f64,
+    /// Cache budget in tokens (sizes the recent window).
     pub budget_tokens: usize,
 }
 

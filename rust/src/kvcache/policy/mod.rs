@@ -29,7 +29,14 @@ pub use sink::SinkPolicy;
 use super::page::PageMeta;
 use crate::config::{EngineConfig, PolicyKind};
 
+/// A KV-cache sparsity algorithm (one of the paper's five).
+///
+/// Policies are driven per decode step, per layer, with the resident page
+/// table and per-page estimated attention probabilities; the same
+/// implementations serve the engine and the trace simulator, so the
+/// accuracy grids exercise exactly the serving-path code.
 pub trait SparsityPolicy: Send {
+    /// Which of the five algorithms this is.
     fn kind(&self) -> PolicyKind;
 
     /// Update per-page statistics after this step's estimated probabilities

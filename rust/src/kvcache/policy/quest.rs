@@ -5,6 +5,7 @@
 use super::{PageMeta, SparsityPolicy};
 use crate::config::PolicyKind;
 
+/// Quest: query-aware top-L page selection over a fully resident cache.
 pub struct QuestPolicy;
 
 impl SparsityPolicy for QuestPolicy {

@@ -22,6 +22,7 @@ use std::cell::RefCell;
 use super::{PageMeta, SparsityPolicy};
 use crate::config::PolicyKind;
 
+/// RaaS: milestone timestamps + pinned prefill (the paper's policy).
 pub struct RaasPolicy {
     /// Timestamp-refresh threshold on estimated attention probability.
     pub alpha: f64,
@@ -35,6 +36,8 @@ pub struct RaasPolicy {
 }
 
 impl RaasPolicy {
+    /// Policy with refresh threshold `alpha` (`<= 0` selects the
+    /// top-`stamp_fraction` formulation instead).
     pub fn new(alpha: f64, stamp_fraction: f64) -> Self {
         RaasPolicy { alpha, stamp_fraction, topr_scratch: RefCell::new(Vec::new()) }
     }

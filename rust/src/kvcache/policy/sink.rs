@@ -6,7 +6,9 @@
 use super::{PageMeta, SparsityPolicy};
 use crate::config::PolicyKind;
 
+/// StreamingLLM-style sink + recent-window retention.
 pub struct SinkPolicy {
+    /// Tokens at the sequence start that are never evicted.
     pub sink_tokens: usize,
 }
 

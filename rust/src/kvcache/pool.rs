@@ -12,6 +12,29 @@ use anyhow::{bail, Result};
 
 use super::page::PageId;
 
+/// The shared physical KV page pool (one per engine).
+///
+/// # Example — alloc → bulk write → zero-copy view
+///
+/// The paged-attention dataflow in miniature: allocate a page, write two
+/// tokens' K/V in one bulk call, read them back as in-place slab views
+/// (what [`crate::runtime::Backend::layer_attn_mlp_paged`] consumes):
+///
+/// ```
+/// use raas::kvcache::KvPool;
+///
+/// // 4 pages × 4 slots, kv_dim 2 (floats per slot for K and for V)
+/// let mut pool = KvPool::new(4, 4, 2);
+/// let page = pool.alloc().unwrap();
+/// let k = [1.0f32, 2.0, 3.0, 4.0]; // two slots of keys
+/// let v = [5.0f32, 6.0, 7.0, 8.0]; // two slots of values
+/// pool.write_slots(page, 0, 2, &k, &v);
+/// assert_eq!(pool.page_k(page, 2), &k[..]); // zero-copy slab view
+/// assert_eq!(pool.page_v(page, 2), &v[..]);
+/// assert_eq!(pool.allocated_pages(), 1);
+/// pool.release(page);
+/// assert_eq!(pool.allocated_pages(), 0);
+/// ```
 #[derive(Debug)]
 pub struct KvPool {
     page_size: usize,
@@ -48,33 +71,43 @@ impl KvPool {
         }
     }
 
+    /// Slots per page, in tokens.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
+    /// Floats per slot for K (and, separately, for V).
     pub fn kv_dim(&self) -> usize {
         self.kv_dim
     }
+    /// Total pages the slabs were sized for.
     pub fn capacity_pages(&self) -> usize {
         self.capacity_pages
     }
+    /// Pages currently allocated.
     pub fn allocated_pages(&self) -> usize {
         self.allocated
     }
+    /// Pages on the free list (the admission-control headroom signal).
     pub fn free_pages(&self) -> usize {
         self.free.len()
     }
+    /// Highest simultaneous allocation seen since the last reset.
     pub fn high_water_pages(&self) -> usize {
         self.high_water
     }
+    /// Bytes one page occupies (K + V slab shares, f32).
     pub fn bytes_per_page(&self) -> usize {
         2 * self.page_size * self.kv_dim * 4
     }
+    /// Bytes currently allocated.
     pub fn allocated_bytes(&self) -> usize {
         self.allocated * self.bytes_per_page()
     }
+    /// High-water allocation in bytes (the Figure-7 memory axis).
     pub fn high_water_bytes(&self) -> usize {
         self.high_water * self.bytes_per_page()
     }
+    /// Restart high-water tracking from the current allocation.
     pub fn reset_high_water(&mut self) {
         self.high_water = self.allocated;
     }
@@ -97,6 +130,8 @@ impl KvPool {
         }
     }
 
+    /// Allocate one page off the free list; errors when the pool is
+    /// exhausted (the serving layer's backpressure signal).
     pub fn alloc(&mut self) -> Result<PageId> {
         let Some(id) = self.free.pop() else {
             bail!("kv pool exhausted ({} pages)", self.capacity_pages);
@@ -107,6 +142,9 @@ impl KvPool {
         Ok(id)
     }
 
+    /// Return a page to the free list.  Double frees are a hard panic
+    /// (O(1) `free_bits` check): a freed-but-aliased page would silently
+    /// corrupt another sequence's zero-copy views.
     pub fn release(&mut self, id: PageId) {
         assert!((id as usize) < self.capacity_pages, "release of invalid page {id}");
         assert!(!self.is_free(id), "double free of page {id}");
@@ -158,10 +196,12 @@ impl KvPool {
         &self.v[off..off + len * self.kv_dim]
     }
 
+    /// Zero-copy view of one slot's key vector, `[kv_dim]`.
     pub fn slot_k(&self, id: PageId, slot: usize) -> &[f32] {
         let off = self.page_off(id) + slot * self.kv_dim;
         &self.k[off..off + self.kv_dim]
     }
+    /// Zero-copy view of one slot's value vector, `[kv_dim]`.
     pub fn slot_v(&self, id: PageId, slot: usize) -> &[f32] {
         let off = self.page_off(id) + slot * self.kv_dim;
         &self.v[off..off + self.kv_dim]

@@ -16,6 +16,7 @@ pub struct LayerCache {
 }
 
 impl LayerCache {
+    /// Tokens held across this layer's resident pages.
     pub fn resident_tokens(&self) -> usize {
         self.table.iter().map(|p| p.len).sum()
     }
@@ -36,15 +37,18 @@ impl LayerCache {
 /// All layers of one sequence.
 #[derive(Debug)]
 pub struct SeqCache {
+    /// One page table (+ rep bounds) per layer, position order.
     pub layers: Vec<LayerCache>,
     /// Tokens appended so far (= next absolute position).
     pub n_tokens: usize,
+    /// Prompt length, stamped when prefill completes (0 before).
     pub prompt_len: usize,
     page_size: usize,
     kv_dim: usize,
 }
 
 impl SeqCache {
+    /// Empty cache for an `n_layers` model over `page_size`-token pages.
     pub fn new(n_layers: usize, page_size: usize, kv_dim: usize) -> Self {
         SeqCache {
             layers: (0..n_layers).map(|_| LayerCache::default()).collect(),
@@ -55,6 +59,7 @@ impl SeqCache {
         }
     }
 
+    /// Slots per page, in tokens.
     pub fn page_size(&self) -> usize {
         self.page_size
     }
@@ -111,6 +116,43 @@ impl SeqCache {
                 reps.update(&k[t * kv..(t + 1) * kv]);
             }
             done += take;
+        }
+        Ok(())
+    }
+
+    /// Append one prefill chunk's worth of K/V for absolute positions
+    /// `start..end`, page-run-major: per page-aligned run (outer), per
+    /// layer (inner), one [`SeqCache::append_slots`] call each — so pool
+    /// pages are allocated in `(page, layer)` lexicographic order for ANY
+    /// chunk boundaries, mid-page ones included.  That ordering is what
+    /// makes chunked, monolithic and concurrent-batched prefill
+    /// bit-identical down to the pool ids (DESIGN.md §2, prefill
+    /// dataflow); both the sequential and the batched engine prefill
+    /// drivers route through this single helper so they cannot drift.
+    ///
+    /// `kv(layer, pos, len)` returns the K/V slices (`[len * kv_dim]`
+    /// each) for positions `pos..pos+len` of `layer`.  Prefill appends
+    /// carry stamp 0, matching the engine's monolithic path.
+    ///
+    /// On `Err` (pool exhaustion mid-run) the sequence holds a
+    /// partially-appended chunk and must be released, not retried — the
+    /// contiguity check in [`SeqCache::append_slots`] makes a retry a
+    /// clean error instead of cache corruption.
+    pub fn append_prefill_runs<'a>(
+        &mut self, pool: &mut KvPool, start: usize, end: usize, pinned: bool,
+        kv: impl Fn(usize, usize, usize) -> (&'a [f32], &'a [f32]),
+    ) -> Result<()> {
+        let page = self.page_size;
+        let n_layers = self.layers.len();
+        let mut pos = start;
+        while pos < end {
+            let run_end = end.min((pos / page + 1) * page);
+            let len = run_end - pos;
+            for layer in 0..n_layers {
+                let (k, v) = kv(layer, pos, len);
+                self.append_slots(layer, pool, pos, len, k, v, pinned, 0)?;
+            }
+            pos = run_end;
         }
         Ok(())
     }
@@ -190,14 +232,17 @@ impl SeqCache {
         }
     }
 
+    /// Resident tokens in one layer's table.
     pub fn resident_tokens(&self, layer: usize) -> usize {
         self.layers[layer].resident_tokens()
     }
 
+    /// Resident pages summed across all layers.
     pub fn resident_pages_total(&self) -> usize {
         self.layers.iter().map(|l| l.table.len()).sum()
     }
 
+    /// Resident bytes against the pool (the Figure-7 memory axis).
     pub fn resident_bytes(&self, pool: &KvPool) -> usize {
         self.resident_pages_total() * pool.bytes_per_page()
     }
@@ -236,16 +281,20 @@ pub struct PageViewBuf<'p> {
 }
 
 impl<'p> PageViewBuf<'p> {
+    /// Empty buffer (all-inline until [`PAGE_VIEW_INLINE`] views).
     pub fn new() -> Self {
         const EMPTY: &[f32] = &[];
         PageViewBuf { len: 0, inline: [(EMPTY, EMPTY, 0); PAGE_VIEW_INLINE], spill: Vec::new() }
     }
 
+    /// Drop every view (keeps the spill allocation for reuse).
     pub fn clear(&mut self) {
         self.len = 0;
         self.spill.clear();
     }
 
+    /// Append one `(k, v, len)` page view, spilling to the heap past the
+    /// inline capacity.
     pub fn push(&mut self, view: (&'p [f32], &'p [f32], usize)) {
         if self.spill.is_empty() && self.len < PAGE_VIEW_INLINE {
             self.inline[self.len] = view;
@@ -261,10 +310,12 @@ impl<'p> PageViewBuf<'p> {
         self.len += 1;
     }
 
+    /// Number of collected views.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether no views were collected.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -74,7 +74,8 @@ fn print_help() {
            run         decode one sampled problem (--policy, --budget, --steps)\n\
            sweep       model accuracy sweep (--policies, --budgets, --problems)\n\
            serve       multi-replica serving demo (--replicas, --requests, --rate,\n\
-                       --prefill-budget N for chunked admission)\n\
+                       --prefill-budget N for chunked admission,\n\
+                       --prefill-concurrency K to co-admit K prompts)\n\
            fig1..fig9  regenerate the paper's figures (writes results/*.csv)\n\
          \n\
          common flags: --backend sim|xla  --artifacts DIR\n\
@@ -218,11 +219,15 @@ fn serve(args: &Args) -> Result<()> {
     // Sarathi-style chunked admission: at most this many prompt tokens per
     // scheduler tick (absent = legacy prefill-first whole-prompt admission).
     let prefill_budget = args.usize_opt("prefill-budget");
+    // Concurrent chunked admission: how many prompts may prefill at once,
+    // their chunks packed into one batched call (1 = PR-4 one-at-a-time).
+    let prefill_concurrency = args.usize_or("prefill-concurrency", 1);
     let cfg = EngineConfig::from_args(args)?;
     let caps: Option<Vec<usize>> = Some(args.usize_list_or("capacities", &[64, 128, 256, 512]));
 
     println!("spawning {replicas} replica(s) (policy={}, budget={})…", cfg.policy, cfg.budget);
-    let bcfg = BatcherConfig { max_batch, prefill_token_budget: prefill_budget };
+    let bcfg = BatcherConfig { max_batch, prefill_token_budget: prefill_budget,
+                               prefill_concurrency };
     let servers: Vec<EngineServer> = (0..replicas)
         .map(|i| EngineServer::spawn(format!("r{i}"), cfg.clone(), bcfg.clone(), caps.clone()))
         .collect::<Result<_>>()?;

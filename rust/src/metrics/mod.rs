@@ -16,20 +16,25 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Increment counter `name` by one.
     pub fn inc(&mut self, name: &str) {
         self.add(name, 1);
     }
+    /// Increment counter `name` by `n`.
     pub fn add(&mut self, name: &str, n: u64) {
         *self.counters.entry(name.to_string()).or_insert(0) += n;
     }
+    /// Current value of counter `name` (0 if never touched).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Set gauge `name` to `v`.
     pub fn gauge(&mut self, name: &str, v: f64) {
         self.gauges.insert(name.to_string(), v);
     }
@@ -40,23 +45,28 @@ impl Metrics {
             *e = v;
         }
     }
+    /// Current value of gauge `name`, if ever set.
     pub fn gauge_value(&self, name: &str) -> Option<f64> {
         self.gauges.get(name).copied()
     }
 
+    /// Add one wall-time sample to timer `name`.
     pub fn record_secs(&mut self, name: &str, secs: f64) {
         self.timers.entry(name.to_string()).or_default().add(secs);
     }
+    /// Run `f`, recording its wall time under timer `name`.
     pub fn time<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
         let t0 = Instant::now();
         let r = f();
         self.record_secs(name, t0.elapsed().as_secs_f64());
         r
     }
+    /// Sample summary of timer `name`, if any samples were recorded.
     pub fn timer(&self, name: &str) -> Option<&Summary> {
         self.timers.get(name)
     }
 
+    /// Dump every metric as a flat JSON object.
     pub fn to_json(&self) -> Json {
         let mut obj: BTreeMap<String, Json> = BTreeMap::new();
         for (k, v) in &self.counters {
@@ -83,18 +93,24 @@ impl Metrics {
 /// Per-request latency breakdown (the paper's JCT metric).
 #[derive(Debug, Clone)]
 pub struct RequestTiming {
+    /// When the request entered the system.
     pub arrival: Instant,
+    /// When its prefill completed (first token ready).
     pub prefill_done: Option<Instant>,
+    /// When its full response was delivered.
     pub finished: Option<Instant>,
 }
 
 impl RequestTiming {
+    /// Timing anchored at "now".
     pub fn start() -> Self {
         RequestTiming { arrival: Instant::now(), prefill_done: None, finished: None }
     }
+    /// Time to first token, once prefill completed.
     pub fn ttft(&self) -> Option<Duration> {
         self.prefill_done.map(|t| t - self.arrival)
     }
+    /// Job completion time, once finished.
     pub fn jct(&self) -> Option<Duration> {
         self.finished.map(|t| t - self.arrival)
     }

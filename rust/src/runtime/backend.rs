@@ -41,6 +41,7 @@ pub struct QkvBatchItem<'a> {
 /// `capacity` may differ between items (each sequence pads its gathered
 /// selection to its own ladder capacity).
 pub struct AttnBatchItem<'a> {
+    /// Padded slot capacity of this item's gathered buffers.
     pub capacity: usize,
     /// hidden `[d_model]`.
     pub h: &'a [f32],
@@ -132,6 +133,19 @@ impl PrefillChunkOut {
     }
 }
 
+/// One sequence's chunk in a batched streaming-prefill call
+/// ([`Backend::prefill_chunk_batch`]): the same `(tokens, start, end)`
+/// arguments [`Backend::prefill_chunk`] takes, one entry per co-admitted
+/// prompt.
+pub struct PrefillChunkItem<'a> {
+    /// The full prompt this chunk belongs to (positions are absolute).
+    pub tokens: &'a [u32],
+    /// First prompt position of the chunk (inclusive).
+    pub start: usize,
+    /// One past the last prompt position of the chunk (exclusive).
+    pub end: usize,
+}
+
 /// A model execution backend.
 ///
 /// The engine drives it per decode token, per layer:
@@ -221,6 +235,22 @@ pub trait Backend: std::fmt::Debug {
         }
         let logits = if end == tokens.len() { out.logits } else { Vec::new() };
         Ok(PrefillChunkOut { k, v, logits, chunk_len })
+    }
+
+    /// Batched [`Backend::prefill_chunk`]: one chunk output per item —
+    /// one call covers one admission tick across every co-admitted prompt,
+    /// so a backend can amortize dispatch and share position-pure work
+    /// between prompts (the prefill twin of the decode batch entry
+    /// points).  Default: per-item loop, so the AOT `ModelRuntime` keeps
+    /// working unchanged.  Semantics are all-or-nothing (an error fails
+    /// the whole call; callers needing isolation retry item by item, see
+    /// `Engine::prefill_batch`), and every override MUST stay
+    /// bit-identical to the per-item loop — concurrent and sequential
+    /// chunked prefill producing the same KV is pinned by
+    /// `rust/tests/concurrent_prefill.rs`.
+    fn prefill_chunk_batch(&self, items: &[PrefillChunkItem<'_>])
+                           -> Result<Vec<PrefillChunkOut>> {
+        items.iter().map(|it| self.prefill_chunk(it.tokens, it.start, it.end)).collect()
     }
 
     // ------------------------------------------------------------------

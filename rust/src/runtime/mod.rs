@@ -11,15 +11,22 @@ pub mod backend;
 pub mod sim_backend;
 pub mod tokenizer;
 
+// The PJRT modules predate the crate's missing_docs gate and are only
+// compiled with `--features backend-xla` (which CI never builds); carved
+// out like the harness modules in lib.rs so a feature build isn't broken
+// by the gate.  Documenting them is tracked as a ROADMAP follow-up.
 #[cfg(feature = "backend-xla")]
+#[allow(missing_docs)]
 pub mod client;
 #[cfg(feature = "backend-xla")]
+#[allow(missing_docs)]
 pub mod executable;
 #[cfg(feature = "backend-xla")]
+#[allow(missing_docs)]
 pub mod model;
 
-pub use backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkOut, PrefillOut, Qkv,
-                  QkvBatchItem};
+pub use backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, PrefillChunkOut,
+                  PrefillOut, Qkv, QkvBatchItem};
 pub use sim_backend::SimBackend;
 pub use tokenizer::Tokenizer;
 

@@ -39,10 +39,13 @@
 //! (DESIGN.md §2, paged route; pinned by `rust/tests/paged_attention.rs`).
 
 use std::cell::RefCell;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use super::backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkOut, PrefillOut, Qkv};
+use super::backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, PrefillChunkOut,
+                     PrefillOut, Qkv};
 use crate::config::{ArtifactMeta, ModelSpec};
 use crate::sim::profiles::{ModelProfile, MODELS};
 
@@ -89,6 +92,8 @@ struct LayerMemo {
     val: Vec<Option<Box<[f32]>>>,
 }
 
+/// The deterministic pure-Rust transformer surrogate (see the module
+/// docs for the feature families and sharing machinery).
 pub struct SimBackend {
     spec: ModelSpec,
     capacities: Vec<usize>,
@@ -279,6 +284,37 @@ impl SimBackend {
         // background noise so estimated scores are never exactly tied
         add(&self.feat(TAG_NOISE, layer as u64, pos as u64, hd), mp.noise as f32, &mut q);
         q
+    }
+
+    /// One prompt token's full prefill column: post-RoPE K and V for every
+    /// layer (`[n_layers * kv_dim]` each, layer-major) plus the final
+    /// hidden state after the attention-free prefill update.  Pure in
+    /// `(token, pos)` — the hidden stream starts from the token's own
+    /// embedding, never its neighbors — which is what lets
+    /// [`SimBackend::prefill_chunk_batch`] share columns across
+    /// co-admitted prompts.
+    ///
+    /// INVARIANT (do not edit one side alone): this must stay op-for-op
+    /// identical to the direct-write per-token loop in
+    /// `SimBackend::prefill_chunk` (which skips the column staging on the
+    /// TTFT hot path); f32 copies are exact, so staged and direct produce
+    /// the same bits — pinned by
+    /// `tests::prefill_chunk_batch_matches_per_item_bitwise`.
+    fn prefill_column(&self, tok: u32, pos: usize) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let s = &self.spec;
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        let mut k = Vec::with_capacity(s.n_layers * kv_dim);
+        let mut v = Vec::with_capacity(s.n_layers * kv_dim);
+        let mut h = self.embed_tok(tok)?;
+        for layer in 0..s.n_layers {
+            let qkv = self.layer_qkv(layer, &h, pos)?;
+            k.extend_from_slice(&qkv.k);
+            v.extend_from_slice(&qkv.v);
+            // attention-free hidden update: prefill hiddens only shape the
+            // first decoded token, decode re-derives h per token
+            h = self.mix_hidden(layer, &h, &qkv.v);
+        }
+        Ok((k, v, h))
     }
 
     /// Shared residual mixing: rotate the hidden stream, fold in a
@@ -701,6 +737,12 @@ impl Backend for SimBackend {
         let mut k = vec![0.0f32; s.n_layers * n * kv_dim];
         let mut v = vec![0.0f32; s.n_layers * n * kv_dim];
         let mut logits = Vec::new();
+        // Direct writes into the output slab — no per-column staging on the
+        // TTFT hot path.  INVARIANT (do not edit one side alone): this
+        // per-token loop must stay op-for-op identical to
+        // `SimBackend::prefill_column`, the batch path's staged twin;
+        // divergence is caught by
+        // `tests::prefill_chunk_batch_matches_per_item_bitwise`.
         for (i, &tok) in tokens[start..end].iter().enumerate() {
             let pos = start + i;
             let mut h = self.embed_tok(tok)?;
@@ -718,6 +760,64 @@ impl Backend for SimBackend {
             }
         }
         Ok(PrefillChunkOut { k, v, logits, chunk_len: n })
+    }
+
+    /// One admission tick's prefill chunks for all co-admitted prompts,
+    /// with cross-item work sharing: every prefill feature is pure in
+    /// `(token, pos)`, so prompts that overlap on a (token, position) pair
+    /// — identical co-admitted prompts, shared prefixes at the same
+    /// offsets — compute that column once per call and copy it
+    /// (`SimBackend::prefill_column`).  Copies are bitwise-exact, so the
+    /// sharing is exactly as sound as recomputing: the batch is
+    /// bit-identical to per-item [`SimBackend::prefill_chunk`] calls
+    /// (pinned by `tests::prefill_chunk_batch_matches_per_item_bitwise`
+    /// and `rust/tests/concurrent_prefill.rs`).
+    fn prefill_chunk_batch(&self, items: &[PrefillChunkItem<'_>])
+                           -> Result<Vec<PrefillChunkOut>> {
+        // A lone item has nothing to share: take the direct-write path and
+        // skip the column memo entirely (concurrency-1 admission must cost
+        // exactly what the PR-4 per-item call did).
+        if let [it] = items {
+            return Ok(vec![self.prefill_chunk(it.tokens, it.start, it.end)?]);
+        }
+        let s = &self.spec;
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        // per-call column memo (never engine-lifetime: prompts are
+        // transient, unlike the positional feature memo)
+        let mut cols: HashMap<(u32, usize), (Vec<f32>, Vec<f32>, Vec<f32>)> = HashMap::new();
+        let mut outs = Vec::with_capacity(items.len());
+        for it in items {
+            if it.tokens.is_empty() {
+                bail!("empty prompt");
+            }
+            if it.start >= it.end || it.end > it.tokens.len() {
+                bail!("invalid prefill chunk {}..{} of {} tokens", it.start, it.end,
+                      it.tokens.len());
+            }
+            let n = it.end - it.start;
+            let mut k = vec![0.0f32; s.n_layers * n * kv_dim];
+            let mut v = vec![0.0f32; s.n_layers * n * kv_dim];
+            let mut logits = Vec::new();
+            for (i, &tok) in it.tokens[it.start..it.end].iter().enumerate() {
+                let pos = it.start + i;
+                let (ck, cv, h) = match cols.entry((tok, pos)) {
+                    Entry::Occupied(hit) => &*hit.into_mut(),
+                    Entry::Vacant(slot) => &*slot.insert(self.prefill_column(tok, pos)?),
+                };
+                for layer in 0..s.n_layers {
+                    let off = layer * n * kv_dim + i * kv_dim;
+                    k[off..off + kv_dim]
+                        .copy_from_slice(&ck[layer * kv_dim..(layer + 1) * kv_dim]);
+                    v[off..off + kv_dim]
+                        .copy_from_slice(&cv[layer * kv_dim..(layer + 1) * kv_dim]);
+                }
+                if pos == it.tokens.len() - 1 {
+                    logits = self.lm_head(h)?;
+                }
+            }
+            outs.push(PrefillChunkOut { k, v, logits, chunk_len: n });
+        }
+        Ok(outs)
     }
 
     // -- batched entry points (native implementations) --------------------
@@ -1157,6 +1257,43 @@ mod tests {
             }
             assert_eq!(logits, mono.logits, "final-chunk logits diverged");
         }
+    }
+
+    #[test]
+    fn prefill_chunk_batch_matches_per_item_bitwise() {
+        // Co-admitted chunks — including two items sharing (token, pos)
+        // pairs, which exercises the column-memo path — must reproduce the
+        // per-item prefill_chunk outputs bit for bit.
+        let b = backend();
+        let long: Vec<u32> = (0..23u32).map(|i| 1 + i % 40).collect();
+        let twin = long.clone(); // identical prompt: every column shared
+        let short: Vec<u32> = (0..9u32).map(|i| 2 + i % 17).collect();
+        let items = vec![
+            PrefillChunkItem { tokens: &long, start: 0, end: 7 },
+            PrefillChunkItem { tokens: &twin, start: 0, end: 7 },
+            PrefillChunkItem { tokens: &short, start: 3, end: 9 }, // completes: logits
+            PrefillChunkItem { tokens: &long, start: 7, end: 23 }, // completes: logits
+        ];
+        let batched = b.prefill_chunk_batch(&items).unwrap();
+        assert_eq!(batched.len(), items.len());
+        for (it, out) in items.iter().zip(&batched) {
+            let solo = b.prefill_chunk(it.tokens, it.start, it.end).unwrap();
+            assert_eq!(out.chunk_len, solo.chunk_len);
+            assert_eq!(bits(&out.k), bits(&solo.k), "batched chunk keys diverged");
+            assert_eq!(bits(&out.v), bits(&solo.v), "batched chunk values diverged");
+            assert_eq!(bits(&out.logits), bits(&solo.logits), "batched logits diverged");
+        }
+        // mid-prompt chunks must not emit logits; completing ones must
+        assert!(batched[0].logits.is_empty());
+        assert!(!batched[2].logits.is_empty());
+        assert!(!batched[3].logits.is_empty());
+        // an invalid item fails the whole call (all-or-nothing contract)
+        let bad = vec![PrefillChunkItem { tokens: &short, start: 5, end: 3 }];
+        assert!(b.prefill_chunk_batch(&bad).is_err());
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
     }
 
     #[test]

@@ -4,24 +4,30 @@
 use crate::config::CorpusSpec;
 use crate::workload;
 
+/// Detokenizer/framing helper over the synthetic reasoning vocabulary.
 #[derive(Debug, Clone)]
 pub struct Tokenizer {
+    /// Corpus framing (token ids, step bounds) from the artifact metadata.
     pub spec: CorpusSpec,
 }
 
 impl Tokenizer {
+    /// Tokenizer over a corpus framing.
     pub fn new(spec: CorpusSpec) -> Self {
         Tokenizer { spec }
     }
 
+    /// Render tokens as the corpus' human-readable notation.
     pub fn decode(&self, tokens: &[u32]) -> String {
         workload::detok(&self.spec, tokens)
     }
 
+    /// Whether `t` is the end-of-sequence token.
     pub fn is_eos(&self, t: u32) -> bool {
         t == self.spec.eos
     }
 
+    /// Extract the final answer digit from a decoded stream, if well-formed.
     pub fn parse_answer(&self, decoded: &[u32]) -> Option<u8> {
         workload::parse_answer(&self.spec, decoded)
     }

@@ -5,6 +5,7 @@
 /// How a (simulated) reasoning model attends and derails.
 #[derive(Debug, Clone, Copy)]
 pub struct ModelProfile {
+    /// Persona name (matches the paper's model list).
     pub name: &'static str,
     /// Dense-accuracy ceiling per dataset, indexed by `DatasetProfile.idx`
     /// (gsm8k, math500, aime) — paper Figure 6 top row ≈ these.
@@ -32,7 +33,9 @@ pub struct ModelProfile {
 /// Task shape per dataset.
 #[derive(Debug, Clone, Copy)]
 pub struct DatasetProfile {
+    /// Dataset name (gsm8k, math500, aime).
     pub name: &'static str,
+    /// Index into [`ModelProfile::base_acc`].
     pub idx: usize,
     /// Reasoning chain length (min, max) in steps.
     pub steps: (usize, usize),
@@ -40,9 +43,11 @@ pub struct DatasetProfile {
     pub lookback: usize,
     /// Prompt length = base + per_step * k tokens.
     pub base_prompt: usize,
+    /// Per-step prompt growth (see `base_prompt`).
     pub prompt_per_step: usize,
 }
 
+/// The four simulated model personae (paper Figure 1(b) / Figure 6 rows).
 pub const MODELS: [ModelProfile; 4] = [
     ModelProfile {
         name: "marco-o1",
@@ -94,15 +99,18 @@ pub const MODELS: [ModelProfile; 4] = [
     },
 ];
 
+/// The three simulated benchmark personae (paper Figure 6 columns).
 pub const DATASETS: [DatasetProfile; 3] = [
     DatasetProfile { name: "gsm8k", idx: 0, steps: (4, 10), lookback: 4, base_prompt: 48, prompt_per_step: 2 },
     DatasetProfile { name: "math500", idx: 1, steps: (8, 22), lookback: 6, base_prompt: 64, prompt_per_step: 2 },
     DatasetProfile { name: "aime", idx: 2, steps: (16, 40), lookback: 7, base_prompt: 88, prompt_per_step: 2 },
 ];
 
+/// Look up a model persona by its exact name.
 pub fn model_by_name(name: &str) -> Option<ModelProfile> {
     MODELS.iter().find(|m| m.name == name).copied()
 }
+/// Look up a dataset persona by its exact name.
 pub fn dataset_by_name(name: &str) -> Option<DatasetProfile> {
     DATASETS.iter().find(|d| d.name == name).copied()
 }

@@ -23,10 +23,14 @@ use crate::kvcache::policy::{resident_tokens, SparsityPolicy};
 use crate::sim::profiles::{DatasetProfile, ModelProfile};
 use crate::util::rng::Rng;
 
+/// Simulator knobs shared by every trial (mirrors `EngineConfig`).
 #[derive(Debug, Clone, Copy)]
 pub struct SimParams {
+    /// Cache budget in tokens (the paper's L).
     pub budget_tokens: usize,
+    /// KV page size in tokens.
     pub page_size: usize,
+    /// Hard decode-length cap (paper Figure 8 uses 4k).
     pub max_decode: usize,
     /// Pin prefill pages (RaaS idea #2); the ablation switch.
     pub pin_prefill: bool,
@@ -49,25 +53,39 @@ impl Default for SimParams {
     }
 }
 
+/// What one simulated problem produced.
 #[derive(Debug, Clone, Default)]
 pub struct TrialOutcome {
+    /// Whether the final answer came out right.
     pub correct: bool,
+    /// Decode length in tokens (inflated by derailments).
     pub decode_len: usize,
+    /// Whether decoding looped until the cap (paper Figure 8).
     pub hit_cap: bool,
+    /// Milestone pages invisible at consumption time.
     pub milestone_misses: usize,
+    /// Phoenix (prompt-operand) pages invisible at consumption time.
     pub phoenix_misses: usize,
     /// High-water resident KV in tokens (per-layer equivalent).
     pub peak_resident_tokens: usize,
 }
 
+/// Means over a batch of trials (one Figure-6/8/9 grid cell).
 #[derive(Debug, Clone, Default)]
 pub struct AggregateOutcome {
+    /// Trials aggregated.
     pub trials: usize,
+    /// Fraction of trials answering correctly.
     pub accuracy: f64,
+    /// Mean decode length in tokens.
     pub mean_decode_len: f64,
+    /// Fraction of trials that hit the decode cap.
     pub cap_rate: f64,
+    /// Mean milestone misses per trial.
     pub milestone_miss_rate: f64,
+    /// Mean phoenix misses per trial.
     pub phoenix_miss_rate: f64,
+    /// Mean per-trial peak resident tokens.
     pub mean_peak_resident: f64,
 }
 

@@ -1,0 +1,316 @@
+//! Concurrent multi-sequence chunked prefill vs the sequential chunked
+//! path: bit-identical end to end (ISSUE 5 acceptance).  For every policy,
+//! a spread of chunk sizes and 1/2/4-way prompt interleavings, driving the
+//! SAME admission schedule through `Engine::prefill_batch` (one batched
+//! backend call per round) and through per-entry
+//! `Engine::prefill_seq_partial` calls must produce exactly:
+//!
+//!  * the same first decoded token per prompt,
+//!  * the same KV slab contents of every resident page,
+//!  * the same page tables (pool ids included — backend calls never touch
+//!    the pool, and the batched driver appends per sequence in entry
+//!    order, so allocation order is schedule-invariant),
+//!  * the same Quest-style RepBounds,
+//!  * and the same decode continuation (tokens + Figure-3 score logs).
+//!
+//! Plus: the non-streaming-backend fallback reaches the same state, and
+//! the serving loop produces identical token streams under prefill-first,
+//! sequential-chunked and concurrent-chunked admission.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use raas::config::{ArtifactMeta, EngineConfig, ModelSpec, PolicyKind};
+use raas::coordinator::batcher::{Batcher, BatcherConfig};
+use raas::coordinator::request::{Request, Response};
+use raas::coordinator::server::EngineBackend;
+use raas::engine::{Engine, PrefillEntry};
+use raas::kvcache::SeqCache;
+use raas::runtime::{Backend, PrefillOut, Qkv, SimBackend};
+
+fn mk_engine(kind: PolicyKind) -> Engine {
+    let cfg = EngineConfig { policy: kind, budget: 96, ..Default::default() };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+/// Distinct prompts: varied lengths and contents, vocab-safe.
+fn mk_prompts() -> Vec<Vec<u32>> {
+    [70usize, 45, 120, 33]
+        .iter()
+        .enumerate()
+        .map(|(p, &len)| (0..len).map(|i| 1 + ((i + 3 * p) % 40) as u32).collect())
+        .collect()
+}
+
+/// Bit patterns of a float slice (strict equality: distinguishes -0.0,
+/// never equates NaN — "bit-identical" taken literally).
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Figure-3 score log with probabilities as bit patterns.
+fn log_bits(log: Vec<(u64, Vec<(usize, f32)>)>) -> Vec<(u64, Vec<(usize, u32)>)> {
+    log.into_iter()
+        .map(|(now, e)| (now, e.into_iter().map(|(p, pr)| (p, pr.to_bits())).collect()))
+        .collect()
+}
+
+/// Everything observable about one resident page after prefill.
+#[derive(Debug, PartialEq, Eq)]
+struct PageSnap {
+    pool_id: u32,
+    start_pos: usize,
+    len: usize,
+    pinned: bool,
+    last_stamp: u64,
+    k: Vec<u32>,
+    v: Vec<u32>,
+    kmin: Vec<u32>,
+    kmax: Vec<u32>,
+}
+
+fn snapshot(e: &Engine, seq: &SeqCache) -> Vec<Vec<PageSnap>> {
+    let pool = e.pool();
+    seq.layers
+        .iter()
+        .map(|lc| {
+            lc.table
+                .iter()
+                .zip(&lc.reps)
+                .map(|(p, r)| PageSnap {
+                    pool_id: p.pool_id,
+                    start_pos: p.start_pos,
+                    len: p.len,
+                    pinned: p.pinned,
+                    last_stamp: p.last_stamp,
+                    k: bits(pool.page_k(p.pool_id, p.len)),
+                    v: bits(pool.page_v(p.pool_id, p.len)),
+                    kmin: bits(&r.kmin),
+                    kmax: bits(&r.kmax),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The shared admission schedule: a FIFO co-admission window of `ways`
+/// prompts; each round advances every live window member by one
+/// `chunk`-token step, in window order, a freed slot admitting the next
+/// prompt.  `batched` routes rounds through `Engine::prefill_batch`
+/// (concurrent path); otherwise each round is per-entry
+/// `prefill_seq_partial` calls (the PR-4 sequential path) — the two MUST
+/// see identical schedules for the pool-id comparison to be meaningful.
+fn run_prefills(e: &mut Engine, prompts: &[Vec<u32>], chunk: usize, ways: usize,
+                batched: bool) -> (Vec<SeqCache>, Vec<u32>) {
+    let n = prompts.len();
+    let mut seqs: Vec<SeqCache> = (0..n).map(|_| e.new_seq()).collect();
+    let mut firsts: Vec<Option<u32>> = vec![None; n];
+    let mut live: Vec<usize> = Vec::new();
+    let mut admitted = 0usize;
+    let mut rounds = 0usize;
+    while firsts.iter().any(Option::is_none) {
+        while live.len() < ways && admitted < n {
+            live.push(admitted);
+            admitted += 1;
+        }
+        if batched {
+            // `live` is ascending, so the filter preserves window order
+            let mut entries: Vec<PrefillEntry<'_>> = seqs
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| live.contains(i))
+                .map(|(i, seq)| PrefillEntry { seq, prompt: &prompts[i], max_tokens: chunk })
+                .collect();
+            let results = e.prefill_batch(&mut entries);
+            for (&i, r) in live.iter().zip(results) {
+                firsts[i] = r.expect("batched prefill chunk");
+            }
+        } else {
+            for &i in &live {
+                firsts[i] =
+                    e.prefill_seq_partial(&mut seqs[i], &prompts[i], chunk).expect("chunk");
+            }
+        }
+        live.retain(|&i| firsts[i].is_none());
+        rounds += 1;
+        assert!(rounds <= 1000, "prefill failed to make progress");
+    }
+    (seqs, firsts.into_iter().map(Option::unwrap).collect())
+}
+
+#[test]
+fn concurrent_prefill_is_bit_identical_across_policies_chunks_and_ways() {
+    for kind in PolicyKind::all() {
+        let prompts = mk_prompts();
+        for &chunk in &[5usize, 16, 37] {
+            for &ways in &[1usize, 2, 4] {
+                let mut seq_e = mk_engine(kind);
+                let (mut ref_seqs, ref_firsts) =
+                    run_prefills(&mut seq_e, &prompts, chunk, ways, false);
+                let mut conc_e = mk_engine(kind);
+                let (mut conc_seqs, conc_firsts) =
+                    run_prefills(&mut conc_e, &prompts, chunk, ways, true);
+
+                assert_eq!(conc_firsts, ref_firsts,
+                           "{kind:?}/c{chunk}/w{ways}: first tokens diverged");
+                for (i, (rs, cs)) in ref_seqs.iter().zip(&conc_seqs).enumerate() {
+                    assert_eq!(snapshot(&conc_e, cs), snapshot(&seq_e, rs),
+                               "{kind:?}/c{chunk}/w{ways}/seq{i}: page tables / KV slabs \
+                                / RepBounds diverged");
+                }
+
+                // decode continuation: 6 steps per sequence, same order on
+                // both engines, with Figure-3 score logs
+                for i in 0..prompts.len() {
+                    let mut ref_log = Vec::new();
+                    let mut conc_log = Vec::new();
+                    let mut rt = ref_firsts[i];
+                    let mut ct = conc_firsts[i];
+                    for step in 1..=6u64 {
+                        rt = seq_e
+                            .decode_step(&mut ref_seqs[i], rt, step, Some(&mut ref_log))
+                            .expect("decode");
+                        ct = conc_e
+                            .decode_step(&mut conc_seqs[i], ct, step, Some(&mut conc_log))
+                            .expect("decode");
+                        assert_eq!(ct, rt,
+                                   "{kind:?}/c{chunk}/w{ways}/seq{i}: decode step {step} \
+                                    diverged");
+                    }
+                    assert_eq!(log_bits(conc_log), log_bits(ref_log),
+                               "{kind:?}/c{chunk}/w{ways}/seq{i}: score log diverged");
+                }
+                for s in ref_seqs.iter_mut() {
+                    seq_e.release_seq(s);
+                }
+                for s in conc_seqs.iter_mut() {
+                    conc_e.release_seq(s);
+                }
+            }
+        }
+    }
+}
+
+/// `SimBackend` with its streaming-prefill entry points masked off: forces
+/// `Engine::prefill_batch` onto the sequential monolithic-slicing fallback
+/// (the AOT `ModelRuntime`'s shape).
+#[derive(Debug)]
+struct NoStreamSim(SimBackend);
+
+impl Backend for NoStreamSim {
+    fn name(&self) -> &'static str {
+        "sim-nostream"
+    }
+    fn spec(&self) -> &ModelSpec {
+        self.0.spec()
+    }
+    fn capacities(&self) -> Vec<usize> {
+        self.0.capacities()
+    }
+    fn capacity_for(&self, n_slots: usize) -> Result<usize> {
+        self.0.capacity_for(n_slots)
+    }
+    fn embed_tok(&self, token: u32) -> Result<Vec<f32>> {
+        self.0.embed_tok(token)
+    }
+    fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
+        self.0.layer_qkv(layer, h, pos)
+    }
+    fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
+                      k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.0.layer_attn_mlp(layer, capacity, h, q, k_sel, v_sel, valid)
+    }
+    fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
+        self.0.lm_head(h)
+    }
+    fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+        self.0.prefill(tokens)
+    }
+    // supports_chunked_prefill / prefill_chunk / prefill_chunk_batch stay
+    // on the trait defaults: whole-prompt prefill only.
+}
+
+#[test]
+fn prefill_batch_fallback_matches_streamed_state() {
+    // A backend without native streaming takes prefill_batch's sequential
+    // fallback; the resulting cache state must still match the streamed
+    // concurrent path bit for bit (chunked ≡ monolithic is the PR-4
+    // invariant, concurrent ≡ sequential is this PR's).
+    let prompts = mk_prompts();
+    let cfg = EngineConfig { policy: PolicyKind::Raas, budget: 96, ..Default::default() };
+    let meta = ArtifactMeta::sim_default();
+    let masked = NoStreamSim(SimBackend::new(&meta, cfg.seed));
+    let mut fb_e = Engine::with_backend(cfg.clone(), meta, Box::new(masked)).unwrap();
+    assert!(!fb_e.model().supports_chunked_prefill());
+    let (mut fb_seqs, fb_firsts) = run_prefills(&mut fb_e, &prompts, 16, 2, true);
+
+    let mut st_e = mk_engine(PolicyKind::Raas);
+    let (mut st_seqs, st_firsts) = run_prefills(&mut st_e, &prompts, 16, 2, true);
+
+    assert_eq!(fb_firsts, st_firsts, "fallback first tokens diverged");
+    for (i, (fs, ss)) in fb_seqs.iter().zip(&st_seqs).enumerate() {
+        assert_eq!(snapshot(&fb_e, fs), snapshot(&st_e, ss),
+                   "seq{i}: fallback prefill state diverged from streamed");
+    }
+    for s in fb_seqs.iter_mut() {
+        fb_e.release_seq(s);
+    }
+    for s in st_seqs.iter_mut() {
+        st_e.release_seq(s);
+    }
+}
+
+#[test]
+fn serving_concurrent_admission_matches_sequential_and_prefill_first() {
+    // The same request set under prefill-first, sequential-chunked
+    // (concurrency 1) and concurrent-chunked (concurrency 4) admission
+    // must decode identical per-request token streams: admission mode
+    // reorders work, never changes any sequence's bits.  Every admitted
+    // request must also leave exactly one `admit.prefill_secs` sample.
+    let lens = [40usize, 8, 64, 23, 88, 5];
+    let run = |budget: Option<usize>, concurrency: usize| -> Vec<Vec<u32>> {
+        let engine = mk_engine(PolicyKind::Raas);
+        let mut b = Batcher::new(
+            EngineBackend { engine, pages_per_seq_estimate: 40 },
+            BatcherConfig {
+                max_batch: 4,
+                prefill_token_budget: budget,
+                prefill_concurrency: concurrency,
+            },
+        );
+        let (tx, rx) = channel::<Response>();
+        for (id, &len) in lens.iter().enumerate() {
+            b.submit(Request {
+                id: id as u64,
+                prompt: (0..len).map(|i| 1 + ((i + id) % 40) as u32).collect(),
+                max_new: 24,
+                submitted: Instant::now(),
+                reply: tx.clone(),
+            });
+        }
+        b.run_to_completion();
+        drop(tx);
+        let samples = b
+            .backend
+            .engine
+            .metrics
+            .timer("admit.prefill_secs")
+            .map(|t| t.count())
+            .unwrap_or(0);
+        assert_eq!(samples, lens.len(), "one prefill_secs sample per admitted request");
+        let mut resp: Vec<Response> = rx.iter().collect();
+        assert_eq!(resp.len(), lens.len());
+        assert!(resp.iter().all(|r| r.error.is_none()), "no request may fail");
+        resp.sort_by_key(|r| r.id);
+        resp.into_iter().map(|r| r.tokens).collect()
+    };
+    let prefill_first = run(None, 1);
+    let sequential = run(Some(24), 1);
+    let concurrent = run(Some(24), 4);
+    assert_eq!(sequential, prefill_first,
+               "sequential-chunked admission changed decoded tokens");
+    assert_eq!(concurrent, prefill_first,
+               "concurrent-chunked admission changed decoded tokens");
+}

@@ -238,7 +238,7 @@ fn chunked_admission_matches_monolithic_and_records_prefill_metrics() {
         let engine = mk_engine(1e-4, 96, 512);
         let mut b = Batcher::new(
             EngineBackend { engine, pages_per_seq_estimate: 40 },
-            BatcherConfig { max_batch: 2, prefill_token_budget: budget },
+            BatcherConfig { max_batch: 2, prefill_token_budget: budget, ..Default::default() },
         );
         let (tx, rx) = channel::<Response>();
         let spec = b.backend.engine.meta.corpus.clone();
