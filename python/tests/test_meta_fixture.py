@@ -1,0 +1,59 @@
+"""Cross-language metadata golden: rust/tests/fixtures/meta_sim_default.json
+is the ``meta.json`` the AOT path exports for the sim-default architecture.
+``rust/tests/meta_fixture.rs`` asserts the rust parse equals
+``ArtifactMeta::sim_default()``; this module asserts the same file from the
+exporter's side, so a drift in either language's constants fails one of the
+two CI jobs.
+
+The corpus-level checks are hermetic (``compile.corpus`` needs only numpy);
+the full ``build_meta`` equality additionally needs jax (``compile.model``
+imports it at module scope) and skips itself in hermetic CI like the other
+jax-dependent tests.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import corpus
+
+FIXTURE = os.path.join(
+    os.path.dirname(__file__), "..", "..",
+    "rust", "tests", "fixtures", "meta_sim_default.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def test_golden_corpus_matches_python_constants(golden):
+    ccfg = corpus.CorpusConfig()
+    c = golden["corpus"]
+    assert c["min_steps"] == ccfg.min_steps
+    assert c["max_steps"] == ccfg.max_steps
+    assert c["max_lookback"] == ccfg.max_lookback
+    assert c["specials"] == {
+        "pad": corpus.PAD, "bos": corpus.BOS, "eos": corpus.EOS,
+        "q": corpus.Q, "eq": corpus.EQ, "sep": corpus.SEP,
+        "step": corpus.STEP, "ans": corpus.ANS, "dot": corpus.DOT,
+        "plus": corpus.PLUS, "minus": corpus.MINUS, "times": corpus.TIMES,
+        "dig0": corpus.DIG0, "idx0": corpus.IDX0, "n_idx": corpus.N_IDX,
+    }
+    assert c["vocab_names"] == {str(k): v for k, v in corpus.TOKEN_NAMES.items()}
+    assert golden["model"]["vocab"] == corpus.VOCAB_SIZE
+    assert golden["page_size"] == 16
+    assert golden["trained"] is False
+
+
+def test_golden_equals_build_meta_export(golden):
+    pytest.importorskip("jax", reason="jax not installed (hermetic CI)")
+    from compile.aot import build_meta
+    from compile.model import ModelConfig
+
+    exported = build_meta(
+        ModelConfig(), golden["files"],
+        golden["capacities"], golden["prefill_sizes"], trained=False)
+    assert exported == golden

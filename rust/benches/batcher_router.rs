@@ -63,7 +63,8 @@ fn main() {
     // stay O(1) per pop (VecDeque; a Vec::remove(0) queue was O(n²) here)
     b.bench("batcher/queue_pressure/1024reqs", || {
         let (tx, _rx) = channel();
-        let mut batcher = Batcher::new(NullBackend, BatcherConfig { max_batch: 8, ..Default::default() });
+        let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
+        let mut batcher = Batcher::new(NullBackend, cfg);
         for id in 0..1024u64 {
             batcher.submit(Request {
                 id,

@@ -7,9 +7,12 @@ use std::time::{Duration, Instant};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
 
+/// Iteration counts and time cap for one [`Bencher`] run.
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
+    /// Untimed calls before sampling starts (cache/branch warmup).
     pub warmup_iters: usize,
+    /// Timed samples per benchmark (one call = one sample).
     pub iters: usize,
     /// Hard cap on wall time per benchmark (stops early, keeps samples).
     pub max_time: Duration,
@@ -21,18 +24,27 @@ impl Default for BenchConfig {
     }
 }
 
+/// Timing statistics for one named benchmark (all times nanoseconds).
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark label as printed and dumped.
     pub name: String,
+    /// Samples actually collected (may stop early at `max_time`).
     pub iters: usize,
+    /// Sample mean.
     pub mean_ns: f64,
+    /// Sample standard deviation.
     pub std_ns: f64,
+    /// Median sample.
     pub p50_ns: f64,
+    /// 99th-percentile sample.
     pub p99_ns: f64,
+    /// Fastest sample.
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// This result as one JSON object row (the `BENCH_*.json` record shape).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -46,16 +58,20 @@ impl BenchResult {
     }
 }
 
+/// Bench runner: times closures under a [`BenchConfig`] and accumulates
+/// [`BenchResult`]s for table printing and JSON dump.
 pub struct Bencher {
     cfg: BenchConfig,
     results: Vec<BenchResult>,
 }
 
 impl Bencher {
+    /// A runner with explicit iteration counts.
     pub fn new(cfg: BenchConfig) -> Self {
         Bencher { cfg, results: Vec::new() }
     }
 
+    /// A runner with [`BenchConfig::default`] counts.
     pub fn with_defaults() -> Self {
         Self::new(BenchConfig::default())
     }
@@ -89,10 +105,12 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// All results collected so far, in run order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
 
+    /// Print the aligned column header matching [`Bencher::bench`]'s rows.
     pub fn print_header() {
         println!(
             "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12}",
@@ -101,6 +119,7 @@ impl Bencher {
         println!("{}", "-".repeat(104));
     }
 
+    /// Write every collected result to `path` as a JSON array of rows.
     pub fn dump_json(&self, path: &str) -> std::io::Result<()> {
         let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         std::fs::write(path, arr.to_string())
@@ -119,6 +138,7 @@ fn format_row(r: &BenchResult) -> String {
     )
 }
 
+/// Human-readable duration with auto-scaled unit (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.0} ns")
@@ -143,7 +163,8 @@ mod tests {
 
     #[test]
     fn bench_produces_sane_stats() {
-        let mut b = Bencher::new(BenchConfig { warmup_iters: 1, iters: 10, max_time: Duration::from_secs(5) });
+        let cfg = BenchConfig { warmup_iters: 1, iters: 10, max_time: Duration::from_secs(5) };
+        let mut b = Bencher::new(cfg);
         let r = b.bench("spin", || {
             let mut acc = 0u64;
             for i in 0..1000 {
@@ -165,9 +186,10 @@ mod tests {
     }
 
     #[test]
-    fn dump_json_writes(){
+    fn dump_json_writes() {
         let dir = std::env::temp_dir().join("raas_bench_test.json");
-        let mut b = Bencher::new(BenchConfig { warmup_iters: 0, iters: 3, max_time: Duration::from_secs(1) });
+        let cfg = BenchConfig { warmup_iters: 0, iters: 3, max_time: Duration::from_secs(1) };
+        let mut b = Bencher::new(cfg);
         b.bench("x", || 1 + 1);
         b.dump_json(dir.to_str().unwrap()).unwrap();
         let text = std::fs::read_to_string(&dir).unwrap();

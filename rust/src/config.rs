@@ -63,8 +63,10 @@ pub struct ArtifactMeta {
     pub corpus: CorpusSpec,
 }
 
-/// Mirror of python CorpusConfig + token ids (kept in sync via meta.json).
-#[derive(Debug, Clone)]
+/// Mirror of python CorpusConfig + token ids (kept in sync via meta.json;
+/// the golden fixture `rust/tests/fixtures/meta_sim_default.json` pins the
+/// agreement from both `cargo test` and `pytest python/tests`).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CorpusSpec {
     /// Minimum reasoning-chain length in steps.
     pub min_steps: usize,
@@ -338,6 +340,11 @@ pub struct EngineConfig {
     pub max_decode: usize,
     /// Total KV pool size in pages (across sequences).
     pub pool_pages: usize,
+    /// Share full prompt pages across sequences through the pool-level
+    /// prefix index (refcount + copy-on-write).  Off by default: sharing
+    /// changes pool-id allocation order, and the bit-identity suites pin
+    /// pool ids exactly on the cold path.
+    pub prefix_cache: bool,
     /// Seed for the sim backend's feature dictionaries.
     pub seed: u64,
 }
@@ -356,6 +363,7 @@ impl Default for EngineConfig {
             pin_prefill: true,
             max_decode: 4096,
             pool_pages: 16384,
+            prefix_cache: false,
             seed: 0,
         }
     }
@@ -400,6 +408,9 @@ impl EngineConfig {
         }
         c.max_decode = args.usize_or("max-decode", c.max_decode);
         c.pool_pages = args.usize_or("pool-pages", c.pool_pages);
+        if args.switch("prefix-cache") {
+            c.prefix_cache = true;
+        }
         c.seed = args.u64_or("seed", c.seed);
         Ok(c)
     }
@@ -488,7 +499,7 @@ mod tests {
     #[test]
     fn engine_config_overrides() {
         let args = Args::parse(
-            ["x", "--policy", "quest", "--budget", "512", "--alpha", "0.01"]
+            ["x", "--policy", "quest", "--budget", "512", "--alpha", "0.01", "--prefix-cache"]
                 .iter()
                 .map(|s| s.to_string()),
         )
@@ -497,5 +508,7 @@ mod tests {
         assert_eq!(c.policy, PolicyKind::Quest);
         assert_eq!(c.budget, 512);
         assert_eq!(c.alpha, 0.01);
+        assert!(c.prefix_cache);
+        assert!(!EngineConfig::default().prefix_cache, "prefix cache is opt-in");
     }
 }

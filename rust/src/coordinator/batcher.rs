@@ -35,6 +35,11 @@ pub struct StepItem<'a, S> {
 pub struct PrefillProgress {
     /// Prompt tokens consumed by this chunk (>= 1).
     pub consumed: usize,
+    /// Of `consumed`, tokens satisfied from the pool-level prefix cache
+    /// (attached, not computed).  Admission credits them back against the
+    /// tick's prefill budget — the prefix-cache TTFT win — so only real
+    /// backend work is paced.  0 on cold paths and non-first chunks.
+    pub cached: usize,
     /// The first decoded token — present exactly when prefill completed.
     pub first_token: Option<u32>,
 }
@@ -244,7 +249,14 @@ impl<B: StepBackend> Batcher<B> {
     fn activate(&mut self, req: Request, seq: B::Seq, token: u32, prefill_secs: f64) {
         self.backend.record_prefill_secs(prefill_secs);
         let ttft = req.submitted.elapsed().as_secs_f64();
-        self.active.push(Active { req, seq, token, produced: Vec::new(), step: 0, ttft_secs: ttft });
+        self.active.push(Active {
+            req,
+            seq,
+            token,
+            produced: Vec::new(),
+            step: 0,
+            ttft_secs: ttft,
+        });
     }
 
     /// Whole-prompt admission of one request; returns true when admitted.
@@ -358,9 +370,11 @@ impl<B: StepBackend> Batcher<B> {
             Failed(String),
         }
         let mut outcomes: Vec<Outcome> = (0..n).map(|_| Outcome::Pending).collect();
+        // time attribution weights by COMPUTED tokens: cached prefix
+        // tokens attach without backend work, so they carry no wall time
         let consumed_total: usize = results
             .iter()
-            .filter_map(|r| r.as_ref().ok().map(|p| p.consumed))
+            .filter_map(|r| r.as_ref().ok().map(|p| p.consumed.saturating_sub(p.cached)))
             .sum();
         let mut spent = 0usize;
         for (&i, r) in idxs.iter().zip(results.into_iter()) {
@@ -372,14 +386,17 @@ impl<B: StepBackend> Batcher<B> {
                     // proportionally to tokens consumed (prefill cost is
                     // ~linear in tokens), keeping the per-request
                     // `admit.prefill_secs` semantics of PR 4
+                    let computed = prog.consumed.saturating_sub(prog.cached);
                     p.prefill_secs += if consumed_total > 0 {
-                        call_secs * prog.consumed as f64 / consumed_total as f64
+                        call_secs * computed as f64 / consumed_total as f64
                     } else {
                         call_secs / idxs.len().max(1) as f64
                     };
-                    // a zero-consumption chunk must still drain the budget,
-                    // or a misbehaving backend livelocks the tick
-                    spent += prog.consumed.max(1);
+                    // only computed tokens drain the budget — cached prefix
+                    // tokens are credited back (prefix-aware admission); a
+                    // zero-compute chunk still drains one token, or a
+                    // misbehaving backend livelocks the tick
+                    spent += computed.max(1);
                     if let Some(first) = prog.first_token {
                         outcomes[i] = Outcome::Done(first);
                     }
@@ -651,7 +668,13 @@ mod tests {
             MockBackend { capacity: 8, begun: 0, finished: 0 },
             BatcherConfig::default(),
         );
-        b.submit(Request { id: 1, prompt: vec![], max_new: 4, submitted: Instant::now(), reply: tx.clone() });
+        b.submit(Request {
+            id: 1,
+            prompt: vec![],
+            max_new: 4,
+            submitted: Instant::now(),
+            reply: tx.clone(),
+        });
         b.submit(mk_req(2, 1, 8, &tx));
         b.run_to_completion();
         drop(tx);
@@ -683,11 +706,20 @@ mod tests {
         finished: usize,
         /// Tag whose prefill errors on its second chunk.
         fail_second_chunk_of: Option<u64>,
+        /// `(tag, tokens)` — this tag's first chunk reports that many
+        /// prompt tokens as prefix-cache hits (consumed for free).
+        cached_prefix_of: Option<(u64, usize)>,
     }
 
     impl ChunkedMock {
         fn new(capacity: usize) -> Self {
-            ChunkedMock { events: Vec::new(), capacity, finished: 0, fail_second_chunk_of: None }
+            ChunkedMock {
+                events: Vec::new(),
+                capacity,
+                finished: 0,
+                fail_second_chunk_of: None,
+                cached_prefix_of: None,
+            }
         }
     }
 
@@ -712,7 +744,15 @@ mod tests {
             if self.fail_second_chunk_of == Some(id) && done > 0 {
                 anyhow::bail!("injected prefill failure");
             }
-            let take = max_tokens.min(prompt.len() - done);
+            // a scripted prefix-cache hit attaches free tokens on the
+            // first chunk, like the engine's attach-then-compute path
+            let cached = match self.cached_prefix_of {
+                Some((tag, c)) if tag == id && done == 0 => {
+                    c.min(prompt.len().saturating_sub(1))
+                }
+                _ => 0,
+            };
+            let take = (cached + max_tokens).min(prompt.len() - done);
             seq.1 = done + take;
             self.events.push(Ev::Chunk(id, take));
             let first_token = if seq.1 == prompt.len() {
@@ -721,7 +761,7 @@ mod tests {
             } else {
                 None
             };
-            Ok(PrefillProgress { consumed: take, first_token })
+            Ok(PrefillProgress { consumed: take, cached, first_token })
         }
         fn prefill_chunk_batch(&mut self, items: &mut [PrefillBatchItem<'_, (u64, usize)>])
                                -> Vec<Result<PrefillProgress>> {
@@ -851,6 +891,35 @@ mod tests {
         ids.sort();
         assert_eq!(ids, (0..6).collect::<Vec<_>>());
         assert_eq!(b.backend.finished, 6);
+    }
+
+    #[test]
+    fn cached_prefix_tokens_are_not_charged_against_the_budget() {
+        // Prompt 1 is 20 tokens with a 16-token prefix-cache hit: its
+        // first chunk consumes all 20 but only 4 were computed, so an
+        // 8-token tick budget has 4 left — enough to also admit and
+        // complete prompt 2 (4 tokens) in the SAME tick.  Without the
+        // cached-token credit, prompt 1 alone would drain the budget and
+        // prompt 2 would wait a tick (a Step would land between the two
+        // activations).
+        let (tx, rx) = channel();
+        let mut backend = ChunkedMock::new(8);
+        backend.cached_prefix_of = Some((1, 16));
+        let mut b = Batcher::new(
+            backend,
+            BatcherConfig { max_batch: 8, prefill_token_budget: Some(8), ..Default::default() },
+        );
+        b.submit(mk_long_req(1, 20, 2, &tx));
+        b.submit(mk_long_req(2, 4, 2, &tx));
+        b.run_to_completion();
+        drop(tx);
+        assert_eq!(rx.iter().filter(|r| r.error.is_none()).count(), 2);
+        let ev = &b.backend.events;
+        let act2 = ev.iter().position(|e| *e == Ev::Activate(2)).unwrap();
+        assert!(
+            ev[..act2].iter().all(|e| !matches!(e, Ev::Step(_))),
+            "prompt 2 must activate in the same tick as the warm prompt 1: {ev:?}"
+        );
     }
 
     // -- concurrent (multi-slot) chunked admission ------------------------

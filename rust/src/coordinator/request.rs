@@ -56,9 +56,21 @@ mod tests {
     #[test]
     fn request_roundtrip() {
         let (tx, rx) = channel();
-        let req = Request { id: 7, prompt: vec![1, 2], max_new: 4, submitted: Instant::now(), reply: tx };
+        let req = Request {
+            id: 7,
+            prompt: vec![1, 2],
+            max_new: 4,
+            submitted: Instant::now(),
+            reply: tx,
+        };
         req.reply
-            .send(Response { id: req.id, tokens: vec![9], jct_secs: 0.1, ttft_secs: 0.05, error: None })
+            .send(Response {
+                id: req.id,
+                tokens: vec![9],
+                jct_secs: 0.1,
+                ttft_secs: 0.05,
+                error: None,
+            })
             .unwrap();
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);

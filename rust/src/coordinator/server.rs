@@ -57,7 +57,11 @@ impl StepBackend for EngineBackend {
                      max_tokens: usize) -> Result<PrefillProgress> {
         debug_assert_eq!(seq.n_tokens, done, "prefill progress out of sync");
         let first_token = self.engine.prefill_seq_partial(seq, prompt, max_tokens)?;
-        Ok(PrefillProgress { consumed: seq.n_tokens - done, first_token })
+        // Prefix-cache hits only happen on the first chunk of a fresh
+        // sequence; report them so the batcher's token budget charges
+        // computed tokens, not attached ones.
+        let cached = if done == 0 { seq.prefix_cached_tokens } else { 0 };
+        Ok(PrefillProgress { consumed: seq.n_tokens - done, cached, first_token })
     }
 
     /// The batched admission fast path: one `Engine::prefill_batch` call
@@ -81,7 +85,9 @@ impl StepBackend for EngineBackend {
             .zip(items.iter())
             .zip(dones)
             .map(|((r, it), done)| {
+                let cached = if done == 0 { it.seq.prefix_cached_tokens } else { 0 };
                 r.map(|first| PrefillProgress { consumed: it.seq.n_tokens - done,
+                                                cached,
                                                 first_token: first })
             })
             .collect()

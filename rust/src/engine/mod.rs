@@ -21,9 +21,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{ArtifactMeta, BackendKind, EngineConfig, PolicyKind};
-use crate::kvcache::page::page_probs;
+use crate::kvcache::page::{page_probs, PageId, PageMeta, RepBounds};
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
-use crate::kvcache::{KvPool, PageViewBuf, SeqCache};
+use crate::kvcache::{prefix_hashes, KvPool, PageViewBuf, PrefixIndex, SeqCache};
 use crate::metrics::Metrics;
 use crate::runtime::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, Qkv,
                      QkvBatchItem, SimBackend, Tokenizer};
@@ -143,6 +143,10 @@ pub struct Engine {
     model: Box<dyn Backend>,
     pool: KvPool,
     policy: Box<dyn SparsityPolicy>,
+    /// Pool-level prefix index (`cfg.prefix_cache`; zero-capacity when off).
+    prefix: PrefixIndex,
+    /// Boosted page-table clone for shared-aware eviction (scratch).
+    evict_scratch: Vec<PageMeta>,
     // scratch buffers reused across steps (no allocation in the hot loop)
     scores: Vec<f32>,
     probs: Vec<f32>,
@@ -193,12 +197,21 @@ impl Engine {
         let kv_dim = meta.model.n_kv_heads * meta.model.head_dim;
         let pool = KvPool::new(cfg.pool_pages, meta.page_size, kv_dim);
         let policy = make_policy(&cfg);
+        // a quarter of the pool for cached prefixes; one index entry
+        // retains one physical page per layer
+        let prefix_cap = if cfg.prefix_cache {
+            (cfg.pool_pages / 4) / meta.model.n_layers.max(1)
+        } else {
+            0
+        };
         Ok(Engine {
             tokenizer: Tokenizer::new(meta.corpus.clone()),
             metrics: Metrics::new(),
             model,
             pool,
             policy,
+            prefix: PrefixIndex::new(prefix_cap),
+            evict_scratch: Vec::new(),
             cfg,
             meta,
             scores: Vec::new(),
@@ -233,6 +246,93 @@ impl Engine {
     pub fn new_seq(&self) -> SeqCache {
         let kv_dim = self.meta.model.n_kv_heads * self.meta.model.head_dim;
         SeqCache::new(self.meta.model.n_layers, self.meta.page_size, kv_dim)
+    }
+
+    /// Fork `seq`: copy its logical page tables only, sharing every
+    /// physical page (refcounted; first divergent append copy-on-writes).
+    /// The fork decodes bit-identically to an independently prefilled
+    /// sequence and must be released like any other
+    /// (`rust/tests/prefix_sharing.rs`).
+    pub fn fork_seq(&mut self, seq: &SeqCache) -> SeqCache {
+        seq.fork(&mut self.pool)
+    }
+
+    /// Entries currently held by the pool-level prefix index.
+    pub fn prefix_len(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Drop every prefix-index entry, releasing its retained pages
+    /// (tests asserting pool drain; serving-layer cache flush).
+    pub fn prefix_clear(&mut self) {
+        self.prefix.release_all(&mut self.pool);
+    }
+
+    /// Attach as many cached prefix pages as the index holds for `prompt`
+    /// onto a FRESH sequence (`seq.n_tokens == 0`), advancing `n_tokens`
+    /// past the attached pages so the caller prefills only the remainder.
+    /// The final prompt token is never attached — its chunk must execute
+    /// to produce the first-token logits — so at least one token always
+    /// reaches the backend.  Counters: `prefix.hit_pages` /
+    /// `prefix.miss_pages` (cacheable pages only) and
+    /// `prefix.hit_requests`.
+    fn attach_prefix(&mut self, seq: &mut SeqCache, prompt: &[u32]) -> Result<()> {
+        debug_assert_eq!(seq.n_tokens, 0);
+        let page = self.meta.page_size;
+        let n_layers = self.meta.model.n_layers;
+        let hashes = prefix_hashes(prompt, page);
+        // pages whose end stays strictly inside the prompt are cacheable
+        let cacheable = hashes.len().min(prompt.len().saturating_sub(1) / page);
+        let mut attached = 0usize;
+        for &h in &hashes[..cacheable] {
+            let end = (attached + 1) * page;
+            let toks = &prompt[attached * page..end];
+            let Some(pages) = self.prefix.lookup(h, toks) else { break };
+            let pages: Vec<(PageId, RepBounds)> = pages.to_vec();
+            debug_assert_eq!(pages.len(), n_layers);
+            for (layer, (id, rep)) in pages.iter().enumerate() {
+                seq.attach_shared_page(layer, &mut self.pool, *id, rep, self.cfg.pin_prefill)?;
+            }
+            seq.n_tokens = end;
+            seq.prefix_cached_tokens = end;
+            attached += 1;
+        }
+        self.metrics.add("prefix.hit_pages", attached as u64);
+        self.metrics.add("prefix.miss_pages", (cacheable - attached) as u64);
+        if attached > 0 {
+            self.metrics.inc("prefix.hit_requests");
+        }
+        Ok(())
+    }
+
+    /// Cache this completed prefill's full prompt pages in the prefix
+    /// index (retaining them), then reclaim the index down to capacity.
+    /// Runs BEFORE post-prefill budget enforcement so Sink/H2O trims
+    /// cannot drop a page the next request could have reused.
+    fn prefix_insert(&mut self, seq: &SeqCache, prompt: &[u32]) {
+        let page = self.meta.page_size;
+        let n_layers = self.meta.model.n_layers;
+        let hashes = prefix_hashes(prompt, page);
+        let cacheable = hashes.len().min(prompt.len().saturating_sub(1) / page);
+        let mut inserted = 0usize;
+        for (pidx, &h) in hashes[..cacheable].iter().enumerate() {
+            let mut pages: Vec<(PageId, RepBounds)> = Vec::with_capacity(n_layers);
+            for lc in &seq.layers {
+                match (lc.table.get(pidx), lc.reps.get(pidx)) {
+                    (Some(m), Some(r)) if m.start_pos == pidx * page && m.len == page => {
+                        pages.push((m.pool_id, r.clone()));
+                    }
+                    _ => return, // table no longer holds the plain prefill prefix
+                }
+            }
+            let toks = &prompt[pidx * page..(pidx + 1) * page];
+            if self.prefix.insert(h, toks, pages, &mut self.pool) {
+                inserted += 1;
+            }
+        }
+        self.metrics.add("prefix.inserted_pages", inserted as u64);
+        let evicted = self.prefix.reclaim(&mut self.pool);
+        self.metrics.add("prefix.evicted_pages", evicted as u64);
     }
 
     /// Run prefill for `prompt`, filling `seq` (pinned pages) and returning
@@ -271,10 +371,17 @@ impl Engine {
         if prompt.is_empty() {
             bail!("empty prompt");
         }
-        let start = seq.n_tokens;
-        if start >= prompt.len() {
-            bail!("sequence already holds {start} tokens of a {}-token prompt", prompt.len());
+        if seq.n_tokens >= prompt.len() {
+            bail!("sequence already holds {} tokens of a {}-token prompt", seq.n_tokens,
+                  prompt.len());
         }
+        // prefix-cache fast path: a fresh sequence attaches every cached
+        // full prompt page before any backend work, so only the remainder
+        // is prefilled (and charged) below
+        if self.cfg.prefix_cache && seq.n_tokens == 0 {
+            self.attach_prefix(seq, prompt)?;
+        }
+        let start = seq.n_tokens;
         // saturating: callers may pass usize::MAX as "finish the rest"
         let end = prompt.len().min(start.saturating_add(max_tokens.max(1)));
         // KV source for this chunk: the streaming entry point when the
@@ -306,16 +413,21 @@ impl Engine {
             KvSrc::Streamed(c) => &c.logits,
             KvSrc::Monolithic(m) => &m.logits,
         };
-        Ok(Some(self.finish_prefill(seq, prompt.len(), logits)))
+        Ok(Some(self.finish_prefill(seq, prompt, logits)))
     }
 
     /// Shared tail of every prefill driver once a sequence's prompt
-    /// completes: stamp `prompt_len`, run post-prefill budget enforcement
-    /// (Sink/H2O trim immediately; RaaS pins prefill so nothing is
-    /// evictable — paper §4.2's small-budget pathology reproduces here),
-    /// then greedy-sample the first token from the final-chunk logits.
-    fn finish_prefill(&mut self, seq: &mut SeqCache, prompt_len: usize, logits: &[f32]) -> u32 {
-        seq.prompt_len = prompt_len;
+    /// completes: stamp `prompt_len`, publish the prompt's full pages into
+    /// the prefix index (before any trim can drop them), run post-prefill
+    /// budget enforcement (Sink/H2O trim immediately; RaaS pins prefill so
+    /// nothing is evictable — paper §4.2's small-budget pathology
+    /// reproduces here), then greedy-sample the first token from the
+    /// final-chunk logits.
+    fn finish_prefill(&mut self, seq: &mut SeqCache, prompt: &[u32], logits: &[f32]) -> u32 {
+        seq.prompt_len = prompt.len();
+        if self.cfg.prefix_cache {
+            self.prefix_insert(seq, prompt);
+        }
         for layer in 0..self.meta.model.n_layers {
             self.enforce_budget(seq, layer);
         }
@@ -355,19 +467,28 @@ impl Engine {
         let mut out: Vec<Result<Option<u32>>> = (0..n).map(|_| Ok(None)).collect();
         // plan: (entry index, start, end) for every valid entry
         let mut plan: Vec<(usize, usize, usize)> = Vec::with_capacity(n);
-        for (i, e) in entries.iter().enumerate() {
+        for (i, e) in entries.iter_mut().enumerate() {
             if e.prompt.is_empty() {
                 out[i] = Err(anyhow::anyhow!("empty prompt"));
                 continue;
             }
-            let start = e.seq.n_tokens;
-            if start >= e.prompt.len() {
+            if e.seq.n_tokens >= e.prompt.len() {
                 out[i] = Err(anyhow::anyhow!(
-                    "sequence already holds {start} tokens of a {}-token prompt",
+                    "sequence already holds {} tokens of a {}-token prompt",
+                    e.seq.n_tokens,
                     e.prompt.len()
                 ));
                 continue;
             }
+            // prefix-cache fast path, per entry, in entry order — exactly
+            // what the sequential loop would have attached
+            if self.cfg.prefix_cache && e.seq.n_tokens == 0 {
+                if let Err(err) = self.attach_prefix(e.seq, e.prompt) {
+                    out[i] = Err(err);
+                    continue;
+                }
+            }
+            let start = e.seq.n_tokens;
             // saturating: callers may pass usize::MAX as "finish the rest"
             let end = e.prompt.len().min(start.saturating_add(e.max_tokens.max(1)));
             plan.push((i, start, end));
@@ -397,9 +518,9 @@ impl Engine {
             }
             e.seq.n_tokens = end;
             if end == e.prompt.len() {
-                let prompt_len = e.prompt.len();
+                let prompt = e.prompt;
                 let seq = &mut *e.seq;
-                out[i] = Ok(Some(self.finish_prefill(seq, prompt_len, &chunk.logits)));
+                out[i] = Ok(Some(self.finish_prefill(seq, prompt, &chunk.logits)));
             }
         }
         out
@@ -418,7 +539,27 @@ impl Engine {
 
     fn enforce_budget(&mut self, seq: &mut SeqCache, layer: usize) {
         while resident_tokens(&seq.layers[layer].table) > self.cfg.budget {
-            match self.policy.evict_candidate(&seq.layers[layer].table) {
+            // Shared pages are judged on the max stamp over ALL sharers
+            // (the pool-level aggregate), not just this sequence's view —
+            // a page another sharer still finds hot must not look stale
+            // here.  The candidate runs on a boosted clone of the table
+            // (index-aligned) only while any sharing is active; the
+            // exclusive path is untouched.  RaaS stamps are monotone, so
+            // an exclusive page's aggregate equals its own stamp and the
+            // boost is exact, never speculative.
+            let cand = if self.pool.any_shared() {
+                self.evict_scratch.clear();
+                self.evict_scratch.extend(seq.layers[layer].table.iter().cloned());
+                for m in &mut self.evict_scratch {
+                    if self.pool.is_shared(m.pool_id) {
+                        m.last_stamp = m.last_stamp.max(self.pool.stamp_max(m.pool_id));
+                    }
+                }
+                self.policy.evict_candidate(&self.evict_scratch)
+            } else {
+                self.policy.evict_candidate(&seq.layers[layer].table)
+            };
+            match cand {
                 Some(idx) => seq.evict(layer, idx, &mut self.pool),
                 None => break,
             }
@@ -518,6 +659,15 @@ impl Engine {
             // per-layer observation (stamps, accumulators)
             let t0 = Instant::now();
             self.policy.observe(&mut seq.layers[layer].table, &self.probs, now);
+            // feed shared pages' fresh stamps into the pool aggregate so
+            // other sharers' eviction sees them (O(1) gate when exclusive)
+            if self.pool.any_shared() {
+                for p in &seq.layers[layer].table {
+                    if self.pool.is_shared(p.pool_id) {
+                        self.pool.note_stamp(p.pool_id, p.last_stamp);
+                    }
+                }
+            }
             t_policy += t0.elapsed().as_secs_f64();
         }
         // batched eviction after the full iteration (paper Appendix B)
@@ -696,6 +846,14 @@ impl Engine {
                 // the observable behavior is identical
                 let t0 = Instant::now();
                 self.policy.observe(&mut e.seq.layers[layer].table, &self.probs, e.now);
+                // same pool-aggregate stamp feed as the sequential path
+                if self.pool.any_shared() {
+                    for p in &e.seq.layers[layer].table {
+                        if self.pool.is_shared(p.pool_id) {
+                            self.pool.note_stamp(p.pool_id, p.last_stamp);
+                        }
+                    }
+                }
                 t_policy += t0.elapsed().as_secs_f64();
             }
 

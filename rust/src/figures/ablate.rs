@@ -17,6 +17,7 @@ use crate::util::rng::Rng;
 
 use super::common::{print_table, results_dir, write_csv};
 
+/// Run the ablation sweep (`raas ablate`): see the module docs.
 pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir(args.str_opt("out"))?;
     let trials = args.usize_or("trials", 150);

@@ -5,8 +5,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+/// Cache-budget sweep used by the figure commands unless `--budgets` is set.
 pub const DEFAULT_BUDGETS: [usize; 5] = [64, 128, 256, 512, 1024];
 
+/// Resolve (and create) the output directory — `results/` by default.
 pub fn results_dir(custom: Option<String>) -> Result<PathBuf> {
     let dir = PathBuf::from(custom.unwrap_or_else(|| "results".to_string()));
     std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
@@ -23,6 +25,7 @@ pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<(
     Ok(())
 }
 
+/// Human-readable byte count with auto-scaled binary unit (B/KiB/MiB/GiB).
 pub fn fmt_bytes(b: f64) -> String {
     if b < 1024.0 {
         format!("{b:.0} B")

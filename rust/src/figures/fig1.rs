@@ -13,6 +13,7 @@ use crate::workload::{LengthProfile, Problem, LONGBENCH, MATH};
 
 use super::common::{print_table, results_dir, write_csv};
 
+/// Run the Figure-1 command (`raas fig1`): see the module docs.
 pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir(args.str_opt("out"))?;
     let n = args.usize_or("samples", 2000);

@@ -35,6 +35,7 @@ const ANALYTIC: [RowSpec; 5] = [
               note: "this paper" },
 ];
 
+/// Run the Figure-2 command (`raas fig2`): see the module docs.
 pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir(args.str_opt("out"))?;
     let fig7 = dir.join("fig7.csv");

@@ -23,14 +23,19 @@ use super::common::{print_table, results_dir, write_csv};
 /// Classification of one page's probability time series.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ColumnKind {
+    /// High attention while derived, then permanent fade (paper Figure 3a).
     Milestone,
+    /// Re-ignites after a long quiet gap (prompt operands — Figure 3b).
     Phoenix,
+    /// Neither pattern: uniformly low or noisy attention.
     Background,
 }
 
 /// Detector thresholds (page-level analogues of the paper's map inspection).
 pub struct Detector {
+    /// Probability above which a step counts as a "high" for the page.
     pub hi: f32,
+    /// Probability below which a step counts as quiet.
     pub lo: f32,
     /// Steps of sustained quiet after the last high for a milestone.
     pub fade_window: usize,
@@ -74,11 +79,12 @@ impl Detector {
     }
 }
 
+/// Run the Figure-3 command (`raas fig3`): see the module docs.
 pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir(args.str_opt("out"))?;
     // --- source 1: python per-head stats, if generated -----------------------
-    let stats_path =
-        std::path::PathBuf::from(args.str_or("artifacts", "artifacts")).join("fig3_attention_stats.json");
+    let stats_path = std::path::PathBuf::from(args.str_or("artifacts", "artifacts"))
+        .join("fig3_attention_stats.json");
     if let Ok(text) = std::fs::read_to_string(&stats_path) {
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
         println!("Figure 3 — trained-model attention maps ({} maps analysed):",

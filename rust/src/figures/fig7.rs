@@ -14,6 +14,7 @@ use crate::workload::Problem;
 
 use super::common::{fmt_bytes, print_table, results_dir, write_csv};
 
+/// Run the Figure-7 command (`raas fig7`): see the module docs.
 pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir(args.str_opt("out"))?;
     let max_decode = args.usize_or("max-decode", 4096);

@@ -15,6 +15,7 @@ use crate::workload::Problem;
 
 use super::common::{print_table, results_dir, write_csv};
 
+/// Run the Figure-8 command (`raas fig8`): see the module docs.
 pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir(args.str_opt("out"))?;
     let trials = args.usize_or("trials", 200);
@@ -82,7 +83,9 @@ fn demo_real_model(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.u64_or("seed", 8));
     let p = Problem::sample(&mut rng, &spec, Some(spec.max_steps));
     let prompt = p.encode_prompt(&spec);
-    let out = engine.generate(&prompt, &GenOptions { max_new: spec.max_decode_tokens(spec.max_steps), ..Default::default() })?;
+    let opts =
+        GenOptions { max_new: spec.max_decode_tokens(spec.max_steps), ..Default::default() };
+    let out = engine.generate(&prompt, &opts)?;
     println!("prompt:   {}", engine.tokenizer.decode(&prompt));
     println!("expected: {}", engine.tokenizer.decode(&p.encode_decode(&spec)));
     println!("sink-64:  {}", engine.tokenizer.decode(&out.tokens));

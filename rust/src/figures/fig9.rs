@@ -13,6 +13,7 @@ use crate::util::stats::ascii_plot;
 
 use super::common::{print_table, results_dir, write_csv, DEFAULT_BUDGETS};
 
+/// Run the Figure-9 command (`raas fig9`): see the module docs.
 pub fn run(args: &Args) -> Result<()> {
     let dir = results_dir(args.str_opt("out"))?;
     let trials = args.usize_or("trials", 200);

@@ -8,8 +8,10 @@
 pub mod page;
 pub mod policy;
 pub mod pool;
+pub mod prefix;
 pub mod seq;
 
 pub use page::{PageId, PageMeta, RepBounds};
 pub use pool::KvPool;
+pub use prefix::{prefix_hashes, PrefixIndex};
 pub use seq::{PageViewBuf, SeqCache, PAGE_VIEW_INLINE};

@@ -67,6 +67,13 @@ pub trait SparsityPolicy: Send {
     /// Page to evict while the resident set exceeds the budget.  `None`
     /// means nothing is evictable (Dense/Quest always; RaaS when only
     /// pinned prefill pages remain — the paper retains prefill regardless).
+    ///
+    /// Shared pages (refcount > 1 in the pool: forked sequences, prefix
+    /// cache hits) are handled above the policy: the engine feeds this
+    /// method a table whose `last_stamp` is boosted to the pool-level
+    /// maximum over all sharers (`KvPool::stamp_max`), so a page still hot
+    /// in *any* co-owning sequence is never the stalest candidate here.
+    /// Policies stay sharing-oblivious — they only ever see per-page stats.
     fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize>;
 
     /// Whether resident memory is bounded by the budget (O(L) memory).

@@ -1,12 +1,20 @@
 //! The physical page pool: two contiguous K/V slabs carved into fixed-size
-//! pages, with a free list and byte-accurate accounting (drives the
-//! Figure-7 memory axis and the coordinator's admission control).
+//! pages, with a free list, per-page reference counts and byte-accurate
+//! accounting (drives the Figure-7 memory axis and the coordinator's
+//! admission control).
 //!
 //! Slab layout (the zero-copy paged-attention substrate, DESIGN.md §2):
 //! page `id` owns `[id * page_size * kv_dim .. (id+1) * page_size * kv_dim]`
 //! of both slabs, so a resident page's K/V is a plain `&[f32]` slice
 //! ([`KvPool::page_k`] / [`KvPool::page_v`]) that backends read in place —
 //! no per-page allocations, no gather copy, real cache locality.
+//!
+//! Sharing (DESIGN.md §2, prefix sharing): pages are refcounted, so several
+//! sequences' page tables — and the pool-level prefix index — can map the
+//! same physical page.  [`KvPool::retain`] adds an owner,
+//! [`KvPool::release`] drops one (the slab range is freed only when the
+//! last owner leaves), and [`KvPool::cow_page`] is the copy-on-write step a
+//! sequence takes before mutating a page it no longer owns exclusively.
 
 use anyhow::{bail, Result};
 
@@ -49,6 +57,18 @@ pub struct KvPool {
     /// Bit `id` set ⇔ page `id` is on the free list — O(1) double-free
     /// detection (the old `free.contains` scan was O(free) per release).
     free_bits: Vec<u64>,
+    /// Owners per page (sequences + the prefix index).  1 on alloc;
+    /// [`KvPool::release`] frees the slab range only at the last owner.
+    refs: Vec<u32>,
+    /// Max RaaS stamp ever observed for the page while allocated
+    /// (reset on alloc).  A shared page's effective eviction stamp is the
+    /// max over its sharers; the pool aggregates it here because sharers
+    /// cannot see each other's tables.
+    stamp_max: Vec<u64>,
+    /// Pages with more than one owner, maintained by retain/release/cow —
+    /// the O(1) "is any sharing active" gate the engine's eviction and
+    /// stamp-aggregation fast paths check before paying per-page work.
+    shared_pages: usize,
     allocated: usize,
     high_water: usize,
 }
@@ -66,6 +86,9 @@ impl KvPool {
             capacity_pages,
             free: (0..capacity_pages as u32).rev().collect(),
             free_bits: vec![u64::MAX; (capacity_pages + 63) / 64],
+            refs: vec![0; capacity_pages],
+            stamp_max: vec![0; capacity_pages],
+            shared_pages: 0,
             allocated: 0,
             high_water: 0,
         }
@@ -131,26 +154,114 @@ impl KvPool {
     }
 
     /// Allocate one page off the free list; errors when the pool is
-    /// exhausted (the serving layer's backpressure signal).
+    /// exhausted (the serving layer's backpressure signal).  The caller is
+    /// the sole owner (refcount 1).
     pub fn alloc(&mut self) -> Result<PageId> {
         let Some(id) = self.free.pop() else {
             bail!("kv pool exhausted ({} pages)", self.capacity_pages);
         };
         self.set_free(id, false);
+        self.refs[id as usize] = 1;
+        self.stamp_max[id as usize] = 0;
         self.allocated += 1;
         self.high_water = self.high_water.max(self.allocated);
         Ok(id)
     }
 
-    /// Return a page to the free list.  Double frees are a hard panic
-    /// (O(1) `free_bits` check): a freed-but-aliased page would silently
-    /// corrupt another sequence's zero-copy views.
+    /// Add one owner to an allocated page (forking copies a page table by
+    /// retaining every mapped page; the prefix index retains the pages it
+    /// caches).  Retaining a free page is a hard panic — it would resurrect
+    /// a slab range another allocation is about to reuse.
+    pub fn retain(&mut self, id: PageId) {
+        assert!((id as usize) < self.capacity_pages, "retain of invalid page {id}");
+        assert!(!self.is_free(id), "retain of free page {id}");
+        self.refs[id as usize] += 1;
+        if self.refs[id as usize] == 2 {
+            self.shared_pages += 1;
+        }
+    }
+
+    /// Drop one owner of a page; the slab range returns to the free list
+    /// only when the last owner leaves.  Releasing a page that has already
+    /// hit zero owners is a hard panic (O(1) `free_bits` check) — the
+    /// double-decref twin of the PR 3 double-free guard: a freed-but-
+    /// aliased page would silently corrupt another sequence's zero-copy
+    /// views.
     pub fn release(&mut self, id: PageId) {
         assert!((id as usize) < self.capacity_pages, "release of invalid page {id}");
         assert!(!self.is_free(id), "double free of page {id}");
-        self.set_free(id, true);
-        self.allocated -= 1;
-        self.free.push(id);
+        let refs = &mut self.refs[id as usize];
+        *refs -= 1;
+        match *refs {
+            0 => {
+                self.set_free(id, true);
+                self.allocated -= 1;
+                self.free.push(id);
+            }
+            1 => self.shared_pages -= 1,
+            _ => {}
+        }
+    }
+
+    /// Owners of page `id` (0 for a free page).
+    pub fn ref_count(&self, id: PageId) -> u32 {
+        self.refs[id as usize]
+    }
+
+    /// Whether page `id` has more than one owner (a write requires
+    /// [`KvPool::cow_page`] first).
+    pub fn is_shared(&self, id: PageId) -> bool {
+        self.refs[id as usize] > 1
+    }
+
+    /// Whether ANY page currently has more than one owner — the O(1) gate
+    /// the engine checks before paying per-page sharing costs (stamp
+    /// aggregation, shared-aware eviction) on the exclusive fast path.
+    pub fn any_shared(&self) -> bool {
+        self.shared_pages > 0
+    }
+
+    /// Copy-on-write: make page `id` exclusively owned by the caller,
+    /// given `len` filled slots.  Exclusive pages are returned unchanged
+    /// (the common case — zero cost).  A shared page is detached: allocate
+    /// a fresh page, memcpy the first `len` slots of both slabs (the
+    /// existing slab ranges, no staging buffer), drop the caller's
+    /// reference on the original, and return the new id for the caller to
+    /// swap into its page table.  The new page inherits the original's
+    /// stamp-max (its content is the same tokens).
+    pub fn cow_page(&mut self, id: PageId, len: usize) -> Result<PageId> {
+        if !self.is_shared(id) {
+            return Ok(id);
+        }
+        let new = self.alloc()?;
+        let n = len * self.kv_dim;
+        let src = self.page_off(id);
+        let dst = self.page_off(new);
+        self.k.copy_within(src..src + n, dst);
+        self.v.copy_within(src..src + n, dst);
+        self.stamp_max[new as usize] = self.stamp_max[id as usize];
+        self.release(id);
+        Ok(new)
+    }
+
+    /// Fold a sharer's observed RaaS stamp into the page's pool-level
+    /// aggregate (monotone max).  Exclusive pages never consult this —
+    /// their own `last_stamp` is authoritative — so feeding it is only
+    /// required while [`KvPool::any_shared`] holds.
+    pub fn note_stamp(&mut self, id: PageId, stamp: u64) {
+        let s = &mut self.stamp_max[id as usize];
+        if stamp > *s {
+            *s = stamp;
+        }
+    }
+
+    /// Max RaaS stamp observed for page `id` by any sharer since
+    /// allocation — the shared page's effective eviction stamp
+    /// (conservative: stamps from departed sharers persist, erring toward
+    /// retention, and RaaS stamps are monotone in `now` so an exclusive
+    /// page's aggregate equals its own stamp).
+    pub fn stamp_max(&self, id: PageId) -> u64 {
+        self.stamp_max[id as usize]
     }
 
     /// Write one token's K and V into `slot` of page `id`.
@@ -167,6 +278,7 @@ impl KvPool {
         debug_assert_eq!(k.len(), n * self.kv_dim);
         debug_assert_eq!(v.len(), n * self.kv_dim);
         debug_assert!(!self.is_free(id), "write to free page {id}");
+        debug_assert!(!self.is_shared(id), "write to shared page {id} without copy-on-write");
         let off = self.page_off(id) + slot * self.kv_dim;
         self.k[off..off + n * self.kv_dim].copy_from_slice(k);
         self.v[off..off + n * self.kv_dim].copy_from_slice(v);
@@ -302,5 +414,105 @@ mod tests {
         let _a = pool.alloc().unwrap();
         let _b = pool.alloc().unwrap();
         assert_eq!(pool.allocated_bytes(), 2 * pool.bytes_per_page());
+    }
+
+    #[test]
+    fn retain_release_refcount_lifecycle() {
+        let mut pool = KvPool::new(2, 4, 2);
+        let a = pool.alloc().unwrap();
+        assert_eq!(pool.ref_count(a), 1);
+        assert!(!pool.is_shared(a));
+        assert!(!pool.any_shared());
+        pool.retain(a);
+        assert_eq!(pool.ref_count(a), 2);
+        assert!(pool.is_shared(a));
+        assert!(pool.any_shared());
+        // first release drops one owner; the slab range stays allocated
+        pool.release(a);
+        assert_eq!(pool.ref_count(a), 1);
+        assert!(!pool.any_shared());
+        assert_eq!(pool.allocated_pages(), 1, "shared release must not free the page");
+        // last owner frees for real
+        pool.release(a);
+        assert_eq!(pool.allocated_pages(), 0);
+        assert_eq!(pool.ref_count(a), 0);
+    }
+
+    #[test]
+    fn releasing_a_shared_page_does_not_recycle_its_slab_range() {
+        // Eviction of a refcount-2 page from one sequence must not hand the
+        // range to the next alloc: the other owner still reads it in place.
+        let mut pool = KvPool::new(2, 2, 2);
+        let a = pool.alloc().unwrap();
+        pool.write_slots(a, 0, 2, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        pool.retain(a);
+        pool.release(a); // one owner evicts
+        let b = pool.alloc().unwrap();
+        assert_ne!(b, a, "shared page's range must not be reallocated");
+        assert_eq!(pool.page_k(a, 2), &[1.0, 2.0, 3.0, 4.0], "survivor's bytes intact");
+    }
+
+    #[test]
+    #[should_panic(expected = "double free of page")]
+    fn double_decref_past_zero_panics() {
+        // Satellite regression mirroring the PR 3 double-free guard: once
+        // the last owner released, another release must hard-panic, not
+        // wrap the refcount.
+        let mut pool = KvPool::new(2, 4, 2);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        pool.release(a);
+        pool.release(a); // refcount hits zero: page freed
+        pool.release(a); // decref past zero
+    }
+
+    #[test]
+    #[should_panic(expected = "retain of free page")]
+    fn retain_of_free_page_panics() {
+        let mut pool = KvPool::new(2, 4, 2);
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        pool.retain(a);
+    }
+
+    #[test]
+    fn cow_page_is_identity_when_exclusive() {
+        let mut pool = KvPool::new(2, 4, 2);
+        let a = pool.alloc().unwrap();
+        assert_eq!(pool.cow_page(a, 3).unwrap(), a);
+        assert_eq!(pool.allocated_pages(), 1);
+    }
+
+    #[test]
+    fn cow_page_detaches_shared_bytes() {
+        let mut pool = KvPool::new(3, 3, 2);
+        let a = pool.alloc().unwrap();
+        pool.write_slots(a, 0, 2, &[1.0, 2.0, 3.0, 4.0], &[-1.0, -2.0, -3.0, -4.0]);
+        pool.retain(a);
+        let b = pool.cow_page(a, 2).unwrap();
+        assert_ne!(b, a);
+        assert_eq!(pool.ref_count(a), 1, "cow dropped the caller's reference");
+        assert_eq!(pool.ref_count(b), 1);
+        assert!(!pool.any_shared());
+        // bytes copied, then divergence stays private
+        assert_eq!(pool.page_k(b, 2), pool.page_k(a, 2).to_vec());
+        assert_eq!(pool.page_v(b, 2), pool.page_v(a, 2).to_vec());
+        pool.write_slot(b, 2, &[9.0, 9.0], &[8.0, 8.0]);
+        assert_eq!(pool.page_k(a, 2), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(pool.page_k(b, 3)[4..], [9.0, 9.0]);
+    }
+
+    #[test]
+    fn stamp_max_aggregates_and_resets_on_alloc() {
+        let mut pool = KvPool::new(1, 4, 2);
+        let a = pool.alloc().unwrap();
+        assert_eq!(pool.stamp_max(a), 0);
+        pool.note_stamp(a, 7);
+        pool.note_stamp(a, 3);
+        assert_eq!(pool.stamp_max(a), 7, "monotone max");
+        pool.release(a);
+        let b = pool.alloc().unwrap();
+        assert_eq!(b, a);
+        assert_eq!(pool.stamp_max(b), 0, "stale stamps cleared on realloc");
     }
 }

@@ -1,0 +1,267 @@
+//! Pool-level prefix index: maps page-granular token-prefix hashes to
+//! already-resident physical pages so a new sequence with a shared prefix
+//! (system prompt, few-shot header, multi-turn history) attaches those
+//! pages instead of re-running `prefill_chunk` over them — the prefix-cache
+//! TTFT win (DESIGN.md §2).
+//!
+//! Keys are chained FNV-1a hashes over the little-endian token bytes at
+//! page boundaries: page `n`'s key hashes tokens `0..(n+1)*page_size`, so a
+//! key identifies the whole prefix up to and including that page, not just
+//! the page's own tokens.  Because causal attention makes a page's K/V a
+//! pure function of the tokens at and before it, the cached slab bytes are
+//! exactly what a fresh prefill would have written — which is what the
+//! bit-identity suites pin.  Each entry additionally stores its final
+//! page's raw tokens as a collision guard: a lookup only hits when the
+//! tokens match, so a 64-bit hash collision degrades to a miss, never to
+//! wrong KV state.
+//!
+//! The index is an owner like any sequence: it retains pages on insert and
+//! releases them on reclaim, so a cached page survives the sequence that
+//! produced it.  `BTreeMap` keeps iteration (and therefore LRU tie-breaks)
+//! deterministic.
+
+use std::collections::BTreeMap;
+
+use super::page::{PageId, RepBounds};
+use super::pool::KvPool;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold `tokens` (little-endian byte order) into a running FNV-1a state.
+/// Chaining page hashes — `h1 = fnv1a_chain(FNV-offset, page0)`,
+/// `h2 = fnv1a_chain(h1, page1)`, … — makes each page's key cover the
+/// entire prefix before it.
+pub fn fnv1a_chain(seed: u64, tokens: &[u32]) -> u64 {
+    let mut h = seed;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Chained prefix hash per FULL page of `tokens`: entry `n` keys pages
+/// `0..=n`, i.e. tokens `0..(n+1)*page_size`.  A trailing partial page
+/// produces no hash — only full pages are cacheable.
+pub fn prefix_hashes(tokens: &[u32], page_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / page_size);
+    let mut h = FNV_OFFSET;
+    for page in tokens.chunks_exact(page_size) {
+        h = fnv1a_chain(h, page);
+        out.push(h);
+    }
+    out
+}
+
+/// One cached prefix page: the physical page (+ rep bounds) per layer,
+/// the page's raw tokens (collision guard) and an LRU tick.
+#[derive(Debug)]
+struct PrefixEntry {
+    /// This page's own tokens (`page_size` of them) — verified on lookup.
+    tokens: Vec<u32>,
+    /// `(physical page, rep bounds)` per layer, index = layer.
+    pages: Vec<(PageId, RepBounds)>,
+    /// Monotone tick of the last hit or insert (LRU victim = minimum).
+    last_hit: u64,
+}
+
+/// The pool-level prefix cache: chained-hash → per-layer resident pages,
+/// capacity-capped with deterministic LRU reclaim.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    entries: BTreeMap<u64, PrefixEntry>,
+    /// Max entries held; one entry retains `n_layers` physical pages.
+    cap_entries: usize,
+    tick: u64,
+}
+
+impl PrefixIndex {
+    /// Empty index holding at most `cap_entries` cached pages (each entry
+    /// retains one physical page per layer).
+    pub fn new(cap_entries: usize) -> Self {
+        PrefixIndex { entries: BTreeMap::new(), cap_entries, tick: 0 }
+    }
+
+    /// Cached entries currently held.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the index holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entry capacity this index reclaims down to.
+    pub fn cap_entries(&self) -> usize {
+        self.cap_entries
+    }
+
+    /// Look up the prefix page keyed by `hash`, verifying the page's own
+    /// tokens against `page_tokens` (hash collisions degrade to a miss).
+    /// A hit refreshes the entry's LRU tick and returns the per-layer
+    /// `(page, rep bounds)` list; the caller attaches via
+    /// [`super::seq::SeqCache::attach_shared_page`], which retains.
+    pub fn lookup(&mut self, hash: u64, page_tokens: &[u32]) -> Option<&[(PageId, RepBounds)]> {
+        self.tick += 1;
+        let e = self.entries.get_mut(&hash)?;
+        if e.tokens != page_tokens {
+            return None;
+        }
+        e.last_hit = self.tick;
+        Some(&e.pages)
+    }
+
+    /// Cache one full prefill page under `hash`: the index retains every
+    /// physical page in `pages` and becomes a co-owner.  Returns `false`
+    /// (retaining nothing) if the key is already present.  Call
+    /// [`PrefixIndex::reclaim`] afterwards to enforce the capacity cap.
+    pub fn insert(&mut self, hash: u64, page_tokens: &[u32], pages: Vec<(PageId, RepBounds)>,
+                  pool: &mut KvPool) -> bool {
+        if self.cap_entries == 0 || self.entries.contains_key(&hash) {
+            return false;
+        }
+        self.tick += 1;
+        for &(id, _) in &pages {
+            pool.retain(id);
+        }
+        self.entries
+            .insert(hash, PrefixEntry { tokens: page_tokens.to_vec(), pages, last_hit: self.tick });
+        true
+    }
+
+    /// Evict least-recently-hit entries until at most `cap_entries` remain
+    /// (ties broken by smallest hash — `BTreeMap` order — for determinism),
+    /// releasing their pages.  Returns the number of entries evicted.
+    pub fn reclaim(&mut self, pool: &mut KvPool) -> usize {
+        let mut evicted = 0usize;
+        while self.entries.len() > self.cap_entries {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(hash, e)| (e.last_hit, **hash))
+                .map(|(hash, _)| *hash)
+                .expect("non-empty index over capacity");
+            let e = self.entries.remove(&victim).expect("victim present");
+            for (id, _) in e.pages {
+                pool.release(id);
+            }
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Drop every entry, releasing all retained pages (engine teardown, or
+    /// tests asserting pool drain).
+    pub fn release_all(&mut self, pool: &mut KvPool) {
+        for (_, e) in std::mem::take(&mut self.entries) {
+            for (id, _) in e.pages {
+                pool.release(id);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_pool() -> KvPool {
+        KvPool::new(16, 4, 2)
+    }
+
+    fn mk_pages(pool: &mut KvPool, n_layers: usize) -> Vec<(PageId, RepBounds)> {
+        (0..n_layers)
+            .map(|_| (pool.alloc().unwrap(), RepBounds::empty(pool.kv_dim())))
+            .collect()
+    }
+
+    #[test]
+    fn chained_hashes_cover_full_pages_only() {
+        let toks: Vec<u32> = (0..11).collect(); // page_size 4 -> 2 full pages
+        let hs = prefix_hashes(&toks, 4);
+        assert_eq!(hs.len(), 2);
+        // chaining: page 1's key depends on page 0's tokens
+        let direct = fnv1a_chain(fnv1a_chain(FNV_OFFSET, &toks[..4]), &toks[4..8]);
+        assert_eq!(hs[1], direct);
+        // a different first page changes the second key too
+        let mut other = toks.clone();
+        other[0] = 99;
+        assert_ne!(prefix_hashes(&other, 4)[1], hs[1]);
+        // same prefix, longer prompt: identical leading keys
+        let longer: Vec<u32> = (0..40).collect();
+        assert_eq!(prefix_hashes(&longer, 4)[..2], hs[..]);
+    }
+
+    #[test]
+    fn insert_retains_and_lookup_hits_with_matching_tokens() {
+        let mut pool = mk_pool();
+        let mut idx = PrefixIndex::new(8);
+        let pages = mk_pages(&mut pool, 2);
+        let ids: Vec<PageId> = pages.iter().map(|&(id, _)| id).collect();
+        let toks = [1u32, 2, 3, 4];
+        assert!(idx.insert(42, &toks, pages, &mut pool));
+        for &id in &ids {
+            assert_eq!(pool.ref_count(id), 2, "index co-owns the page");
+        }
+        let hit = idx.lookup(42, &toks).expect("hit");
+        assert_eq!(hit.len(), 2);
+        assert_eq!(hit[0].0, ids[0]);
+        // wrong tokens under the same hash: collision guard forces a miss
+        assert!(idx.lookup(42, &[9, 9, 9, 9]).is_none());
+        assert!(idx.lookup(7, &toks).is_none(), "unknown key misses");
+        // duplicate insert is a no-op that retains nothing
+        let dup = mk_pages(&mut pool, 2);
+        assert!(!idx.insert(42, &toks, dup.clone(), &mut pool));
+        for &(id, _) in &dup {
+            assert_eq!(pool.ref_count(id), 1);
+            pool.release(id);
+        }
+        idx.release_all(&mut pool);
+        for &id in &ids {
+            assert_eq!(pool.ref_count(id), 1, "release_all drops the index's ref only");
+            pool.release(id);
+        }
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn reclaim_evicts_lru_and_releases_pages() {
+        let mut pool = mk_pool();
+        let mut idx = PrefixIndex::new(2);
+        let mut ids = Vec::new();
+        for h in [10u64, 20, 30] {
+            let pages = mk_pages(&mut pool, 1);
+            ids.push(pages[0].0);
+            idx.insert(h, &[h as u32; 4], pages, &mut pool);
+        }
+        // refresh 10 so 20 becomes the LRU victim
+        assert!(idx.lookup(10, &[10u32; 4]).is_some());
+        assert_eq!(idx.reclaim(&mut pool), 1);
+        assert_eq!(idx.len(), 2);
+        assert!(idx.lookup(20, &[20u32; 4]).is_none(), "LRU entry evicted");
+        assert!(idx.lookup(10, &[10u32; 4]).is_some());
+        assert!(idx.lookup(30, &[30u32; 4]).is_some());
+        assert_eq!(pool.ref_count(ids[1]), 1, "evicted entry released its page");
+        idx.release_all(&mut pool);
+        assert!(idx.is_empty());
+        for id in ids {
+            pool.release(id);
+        }
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_index_caches_nothing() {
+        let mut pool = mk_pool();
+        let mut idx = PrefixIndex::new(0);
+        let pages = mk_pages(&mut pool, 1);
+        let id = pages[0].0;
+        assert!(!idx.insert(1, &[0; 4], pages, &mut pool));
+        assert_eq!(pool.ref_count(id), 1, "disabled index must not retain");
+        pool.release(id);
+    }
+}

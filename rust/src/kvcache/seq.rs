@@ -1,9 +1,16 @@
 //! Per-sequence cache state: one page table (+ representative bounds) per
 //! layer, backed by the shared pool.
+//!
+//! The page table is the logical→physical mapping (DESIGN.md §2): a
+//! sequence owns its `PageMeta` entries, never the physical pages they
+//! point at.  Several sequences may map the same physical page
+//! ([`SeqCache::fork`], prefix-cache attachment); the first divergent
+//! append to a shared page copy-on-writes it through
+//! [`super::pool::KvPool::cow_page`] and swaps the mapping in place.
 
 use anyhow::{bail, Result};
 
-use super::page::{page_probs, PageMeta, RepBounds};
+use super::page::{page_probs, PageId, PageMeta, RepBounds};
 use super::pool::KvPool;
 
 /// One layer's view of a sequence's cache.
@@ -43,6 +50,11 @@ pub struct SeqCache {
     pub n_tokens: usize,
     /// Prompt length, stamped when prefill completes (0 before).
     pub prompt_len: usize,
+    /// Prompt tokens attached from the pool's prefix cache at sequence
+    /// start (0 when the sequence prefilled cold).  The admission layer
+    /// reads this to avoid charging cached tokens against the prefill
+    /// budget — the prefix-cache TTFT win.
+    pub prefix_cached_tokens: usize,
     page_size: usize,
     kv_dim: usize,
 }
@@ -54,6 +66,7 @@ impl SeqCache {
             layers: (0..n_layers).map(|_| LayerCache::default()).collect(),
             n_tokens: 0,
             prompt_len: 0,
+            prefix_cached_tokens: 0,
             page_size,
             kv_dim,
         }
@@ -62,6 +75,54 @@ impl SeqCache {
     /// Slots per page, in tokens.
     pub fn page_size(&self) -> usize {
         self.page_size
+    }
+
+    /// Fork this sequence: copy the logical→physical page tables (and rep
+    /// bounds) only, retaining every mapped physical page — no slab bytes
+    /// move.  Both sequences then share pages until one appends into a
+    /// shared page, which copy-on-writes just that page
+    /// ([`SeqCache::append_slots`]).  The fork decodes bit-identically to
+    /// an independently prefilled sequence (tokens, score logs, slab
+    /// contents — pool ids excepted, pinned by the bit-identity suites).
+    pub fn fork(&self, pool: &mut KvPool) -> SeqCache {
+        let layers = self
+            .layers
+            .iter()
+            .map(|lc| {
+                for p in &lc.table {
+                    pool.retain(p.pool_id);
+                }
+                LayerCache { table: lc.table.clone(), reps: lc.reps.clone() }
+            })
+            .collect();
+        SeqCache {
+            layers,
+            n_tokens: self.n_tokens,
+            prompt_len: self.prompt_len,
+            prefix_cached_tokens: self.prefix_cached_tokens,
+            page_size: self.page_size,
+            kv_dim: self.kv_dim,
+        }
+    }
+
+    /// Map one already-resident physical page (a prefix-cache hit) into
+    /// `layer` at the current append position: retain the page, push a
+    /// full pinned-or-not `PageMeta` (stamp 0, exactly what a fresh
+    /// prefill append would have produced) plus the cached rep bounds.
+    /// The caller advances `n_tokens` once every layer attached.
+    pub fn attach_shared_page(&mut self, layer: usize, pool: &mut KvPool, id: PageId,
+                              rep: &RepBounds, pinned: bool) -> Result<()> {
+        let lc = &mut self.layers[layer];
+        let start_pos = lc.table.last().map_or(0, |p| p.end_pos());
+        if start_pos % self.page_size != 0 {
+            bail!("prefix attach at layer {layer}: position {start_pos} is not page-aligned");
+        }
+        pool.retain(id);
+        let mut meta = PageMeta::new(id, start_pos, pinned, 0);
+        meta.len = self.page_size;
+        lc.table.push(meta);
+        lc.reps.push(rep.clone());
+        Ok(())
     }
 
     /// Append one token's K/V to `layer` at absolute position `pos`.
@@ -106,6 +167,13 @@ impl SeqCache {
             if page.end_pos() != pos + done {
                 bail!("non-contiguous append at layer {layer}: active page ends at {}, \
                        appending position {}", page.end_pos(), pos + done);
+            }
+            // Copy-on-write at the first divergent append: a forked (or
+            // prefix-shared) active page is detached before any slot is
+            // written, so sharers never observe each other's tokens.  On
+            // the exclusive fast path `cow_page` is a refcount compare.
+            if pool.is_shared(page.pool_id) {
+                page.pool_id = pool.cow_page(page.pool_id, page.len)?;
             }
             let take = (self.page_size - page.len).min(n - done);
             pool.write_slots(page.pool_id, page.len, take, &k[done * kv..(done + take) * kv],
@@ -517,6 +585,111 @@ mod tests {
         }
         assert!(pool.allocated_pages() > 0);
         sc.release_all(&mut pool);
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn fork_copies_page_tables_only_and_cow_detaches_on_append() {
+        let (mut sc, mut pool) = mk();
+        for pos in 0..6 {
+            sc.append(0, &mut pool, pos, &[pos as f32; 3], &[10.0 + pos as f32; 3], false, 0)
+                .unwrap();
+        }
+        let pages_before = pool.allocated_pages();
+        let mut fork = sc.fork(&mut pool);
+        assert_eq!(pool.allocated_pages(), pages_before, "fork must not allocate pages");
+        assert_eq!(fork.n_tokens, sc.n_tokens);
+        for (a, b) in sc.layers[0].table.iter().zip(&fork.layers[0].table) {
+            assert_eq!(a.pool_id, b.pool_id, "fork maps the same physical pages");
+            assert!(pool.is_shared(a.pool_id));
+        }
+        // divergent append: the fork's active page detaches, the parent's
+        // bytes stay untouched; the full page stays shared
+        fork.append(0, &mut pool, 6, &[99.0; 3], &[99.0; 3], false, 1).unwrap();
+        assert_eq!(pool.allocated_pages(), pages_before + 1, "COW allocated exactly one page");
+        let (pt, ft) = (&sc.layers[0].table, &fork.layers[0].table);
+        assert_eq!(pt[0].pool_id, ft[0].pool_id, "untouched full page still shared");
+        assert_ne!(pt[1].pool_id, ft[1].pool_id, "active page detached");
+        assert_eq!(pool.page_k(pt[1].pool_id, 2), &[4.0, 4.0, 4.0, 5.0, 5.0, 5.0]);
+        assert_eq!(pool.page_k(ft[1].pool_id, 3)[..6], *pool.page_k(pt[1].pool_id, 2));
+        assert_eq!(pool.page_k(ft[1].pool_id, 3)[6..], [99.0, 99.0, 99.0]);
+        // both releases drain the pool completely
+        sc.release_all(&mut pool);
+        fork.release_all(&mut pool);
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn cow_races_eviction_in_the_same_tick() {
+        // Satellite edge case: sequence A evicts a shared page in the same
+        // tick sequence B copy-on-writes its own mapping of it.  Order:
+        // B's COW drops one ref, then A's evict drops the last — the slab
+        // range must free exactly once and B's detached copy must survive.
+        let (mut sa, mut pool) = mk();
+        for pos in 0..4 {
+            sa.append(0, &mut pool, pos, &[pos as f32; 3], &[0.5; 3], false, 0).unwrap();
+        }
+        let mut sb = sa.fork(&mut pool);
+        let shared = sa.layers[0].table[0].pool_id;
+        assert_eq!(pool.ref_count(shared), 2);
+        // the page is full (4 slots), so drive COW directly through
+        // `cow_page` on B's mapping — the same call `append_slots` makes
+        let nb = pool.cow_page(shared, 4).unwrap();
+        sb.layers[0].table[0].pool_id = nb;
+        assert_eq!(pool.ref_count(shared), 1);
+        // A evicts the (now exclusively owned) original in the same tick
+        sa.evict(0, 0, &mut pool);
+        assert_eq!(pool.ref_count(shared), 0, "slab range freed exactly once");
+        assert_eq!(pool.page_k(nb, 4)[..3], [0.0, 0.0, 0.0], "B's copy intact");
+        assert_eq!(pool.page_k(nb, 4)[9..], [3.0, 3.0, 3.0]);
+        sb.release_all(&mut pool);
+        sa.release_all(&mut pool);
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn evicting_a_shared_page_keeps_the_survivors_view() {
+        // Satellite edge case: evicting a refcount-2 page from one table
+        // must not free the slab range the other sequence still reads.
+        let (mut sa, mut pool) = mk();
+        for pos in 0..8 {
+            sa.append(0, &mut pool, pos, &[pos as f32; 3], &[1.0; 3], false, 0).unwrap();
+        }
+        let mut sb = sa.fork(&mut pool);
+        let victim = sa.layers[0].table[0].pool_id;
+        let before = pool.allocated_pages();
+        sa.evict(0, 0, &mut pool);
+        assert_eq!(pool.allocated_pages(), before, "shared eviction frees no pages");
+        assert_eq!(pool.ref_count(victim), 1);
+        assert_eq!(pool.page_k(sb.layers[0].table[0].pool_id, 4)[..3], [0.0, 0.0, 0.0]);
+        sb.release_all(&mut pool);
+        sa.release_all(&mut pool);
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn attach_shared_page_maps_and_pins() {
+        let (mut donor, mut pool) = mk();
+        for pos in 0..4 {
+            donor.append(0, &mut pool, pos, &[pos as f32; 3], &[2.0; 3], true, 0).unwrap();
+        }
+        let id = donor.layers[0].table[0].pool_id;
+        let rep = donor.layers[0].reps[0].clone();
+        let mut sc = SeqCache::new(2, 4, 3);
+        sc.attach_shared_page(0, &mut pool, id, &rep, true).unwrap();
+        assert_eq!(pool.ref_count(id), 2);
+        let p = &sc.layers[0].table[0];
+        assert_eq!((p.pool_id, p.start_pos, p.len, p.pinned, p.last_stamp), (id, 0, 4, true, 0));
+        assert_eq!(sc.layers[0].reps[0].kmin, rep.kmin);
+        // a second attach lands page-aligned at position 4; a mid-page
+        // attach is rejected before any retain
+        let mut mid = SeqCache::new(1, 4, 3);
+        mid.append(0, &mut pool, 0, &[0.0; 3], &[0.0; 3], true, 0).unwrap();
+        assert!(mid.attach_shared_page(0, &mut pool, id, &rep, true).is_err());
+        assert_eq!(pool.ref_count(id), 2, "failed attach must not retain");
+        sc.release_all(&mut pool);
+        mid.release_all(&mut pool);
+        donor.release_all(&mut pool);
         assert_eq!(pool.allocated_pages(), 0);
     }
 

@@ -37,23 +37,18 @@
 #![allow(clippy::manual_div_ceil)]
 #![allow(clippy::field_reassign_with_default)]
 
-// In-tree harness substrates (offline stand-ins for criterion/serde/clap/
-// rand and the figure regeneration commands).  They are `pub` so the
-// benches, examples and figure binaries can reach them, but they are not
-// part of the serving API surface the doc gate guards — item-level docs
-// there are best-effort, not enforced.
-#[allow(missing_docs)]
+// Every public module — including the in-tree harness substrates (offline
+// stand-ins for criterion/serde/clap/rand) and the figure commands — is
+// item-level documented and held to the same `-D warnings` rustdoc gate as
+// the serving API.
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
-#[allow(missing_docs)]
 pub mod figures;
 pub mod kvcache;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;
-#[allow(missing_docs)]
 pub mod util;
-#[allow(missing_docs)]
 pub mod workload;

@@ -176,10 +176,11 @@ fn sweep(args: &Args) -> Result<()> {
             for _ in 0..n {
                 let p = Problem::sample(&mut rng, &spec, None);
                 let prompt = p.encode_prompt(&spec);
-                let out = engine.generate(
-                    &prompt,
-                    &GenOptions { max_new: spec.max_decode_tokens(spec.max_steps), ..Default::default() },
-                )?;
+                let opts = GenOptions {
+                    max_new: spec.max_decode_tokens(spec.max_steps),
+                    ..Default::default()
+                };
+                let out = engine.generate(&prompt, &opts)?;
                 decode_len.add(out.tokens.len() as f64);
                 if engine.tokenizer.parse_answer(&out.tokens) == Some(p.answer()) {
                     correct += 1;
@@ -314,8 +315,11 @@ fn perf(args: &Args) -> Result<()> {
         let (e, p, ga) = (g("step.exec_secs"), g("step.policy_secs"), g("step.gather_secs"));
         let total = 1e3 * out.decode_secs / force as f64;
         println!(
-            "{pname:>6}: {total:.3} ms/token | exec {e:.3} ms ({:.0}%) | policy {p:.4} ms ({:.1}%) | gather {ga:.4} ms ({:.1}%) | other {:.3} ms",
-            100.0 * e / total, 100.0 * p / total, 100.0 * ga / total,
+            "{pname:>6}: {total:.3} ms/token | exec {e:.3} ms ({:.0}%) | policy {p:.4} ms \
+             ({:.1}%) | gather {ga:.4} ms ({:.1}%) | other {:.3} ms",
+            100.0 * e / total,
+            100.0 * p / total,
+            100.0 * ga / total,
             total - e - p - ga
         );
     }

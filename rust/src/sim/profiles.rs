@@ -101,9 +101,30 @@ pub const MODELS: [ModelProfile; 4] = [
 
 /// The three simulated benchmark personae (paper Figure 6 columns).
 pub const DATASETS: [DatasetProfile; 3] = [
-    DatasetProfile { name: "gsm8k", idx: 0, steps: (4, 10), lookback: 4, base_prompt: 48, prompt_per_step: 2 },
-    DatasetProfile { name: "math500", idx: 1, steps: (8, 22), lookback: 6, base_prompt: 64, prompt_per_step: 2 },
-    DatasetProfile { name: "aime", idx: 2, steps: (16, 40), lookback: 7, base_prompt: 88, prompt_per_step: 2 },
+    DatasetProfile {
+        name: "gsm8k",
+        idx: 0,
+        steps: (4, 10),
+        lookback: 4,
+        base_prompt: 48,
+        prompt_per_step: 2,
+    },
+    DatasetProfile {
+        name: "math500",
+        idx: 1,
+        steps: (8, 22),
+        lookback: 6,
+        base_prompt: 64,
+        prompt_per_step: 2,
+    },
+    DatasetProfile {
+        name: "aime",
+        idx: 2,
+        steps: (16, 40),
+        lookback: 7,
+        base_prompt: 88,
+        prompt_per_step: 2,
+    },
 ];
 
 /// Look up a model persona by its exact name.

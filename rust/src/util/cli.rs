@@ -5,14 +5,18 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: an optional subcommand plus `--flag value` pairs
+/// and bare `--switch`es, with access tracking for the typo guard.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// First argument when it does not start with `--`.
     pub subcommand: Option<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
     accessed: std::cell::RefCell<Vec<String>>,
 }
 
+/// Parse/validation failure with a human-readable message.
 #[derive(Debug)]
 pub struct CliError(pub String);
 
@@ -24,6 +28,7 @@ impl std::fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 impl Args {
+    /// Parse an argv iterator (without the program name).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, CliError> {
         let mut args = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -47,6 +52,7 @@ impl Args {
         Ok(args)
     }
 
+    /// Parse the process's own arguments.
     pub fn from_env() -> Result<Args, CliError> {
         Args::parse(std::env::args().skip(1))
     }
@@ -55,29 +61,36 @@ impl Args {
         self.accessed.borrow_mut().push(key.to_string());
     }
 
+    /// String flag, `None` when absent.
     pub fn str_opt(&self, key: &str) -> Option<String> {
         self.note(key);
         self.flags.get(key).cloned()
     }
+    /// String flag with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.str_opt(key).unwrap_or_else(|| default.to_string())
     }
+    /// `usize` flag with a default (unparseable values fall back too).
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.note(key);
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+    /// `usize` flag, `None` when absent or unparseable.
     pub fn usize_opt(&self, key: &str) -> Option<usize> {
         self.note(key);
         self.flags.get(key).and_then(|v| v.parse().ok())
     }
+    /// `f64` flag with a default.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.note(key);
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+    /// `u64` flag with a default.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.note(key);
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+    /// Whether a bare `--switch` was passed.
     pub fn switch(&self, key: &str) -> bool {
         self.note(key);
         self.switches.iter().any(|s| s == key)
@@ -90,6 +103,7 @@ impl Args {
             None => default.to_vec(),
         }
     }
+    /// Comma-separated string list flag with a default.
     pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         self.note(key);
         match self.flags.get(key) {

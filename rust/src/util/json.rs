@@ -6,17 +6,25 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A JSON value (numbers are `f64`; object keys are sorted).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string (escapes resolved).
     Str(String),
+    /// An ordered array.
     Arr(Vec<Json>),
+    /// An object; `BTreeMap` makes serialization deterministic.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -29,48 +37,57 @@ impl Json {
     }
 
     // -- accessors ---------------------------------------------------------
+    /// Object member by key (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// Array element by index (`None` for non-arrays / out of range).
     pub fn at(&self, idx: usize) -> Option<&Json> {
         match self {
             Json::Arr(a) => a.get(idx),
             _ => None,
         }
     }
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number truncated to `i64`, if this is a number.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|f| f as i64)
     }
+    /// The number truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The member map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -88,15 +105,19 @@ impl Json {
     }
 
     // -- builders ----------------------------------------------------------
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Build an array from any value iterator.
     pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
         Json::Arr(items.into_iter().collect())
     }
+    /// Build a number from anything convertible to `f64`.
     pub fn num<N: Into<f64>>(n: N) -> Json {
         Json::Num(n.into())
     }
+    /// Build a string value.
     pub fn str<S: Into<String>>(s: S) -> Json {
         Json::Str(s.into())
     }
@@ -123,9 +144,12 @@ impl From<bool> for Json {
     }
 }
 
+/// Parse failure: what went wrong and where.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// Description of the failure.
     pub msg: String,
+    /// Byte offset into the input where parsing stopped.
     pub offset: usize,
 }
 
@@ -241,7 +265,9 @@ impl<'a> Parser<'a> {
                     if self.i > self.b.len() {
                         return Err(self.err("truncated utf-8"));
                     }
-                    out.push_str(std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad utf-8"))?);
+                    let s = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("bad utf-8"))?;
+                    out.push_str(s);
                 }
             }
         }

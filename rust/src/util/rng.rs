@@ -5,6 +5,7 @@
 //! generation, trace simulation, property tests) goes through this so runs
 //! are reproducible from a single `--seed`.
 
+/// PCG32 generator with SplitMix64 seeding (see module docs).
 #[derive(Debug, Clone)]
 pub struct Rng {
     state: u64,
@@ -20,6 +21,7 @@ fn splitmix64(x: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seed a generator (any `u64` is a valid seed).
     pub fn new(seed: u64) -> Self {
         let mut s = seed;
         let init_state = splitmix64(&mut s);
@@ -35,6 +37,7 @@ impl Rng {
         Rng::new(self.next_u64())
     }
 
+    /// Next raw 32-bit draw (the core PCG32 step).
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
@@ -43,6 +46,7 @@ impl Rng {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next raw 64-bit draw (two 32-bit draws).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }
@@ -58,11 +62,13 @@ impl Rng {
         lo + (self.f64() * (hi - lo) as f64) as usize
     }
 
+    /// Uniform integer in [lo, hi) over `i64` — panics if lo >= hi.
     pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
         assert!(lo < hi);
         lo + (self.f64() * (hi - lo) as f64) as i64
     }
 
+    /// Bernoulli draw: true with probability `p`.
     pub fn chance(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -74,6 +80,7 @@ impl Rng {
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
 
+    /// Normal with given mean and standard deviation.
     pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }
@@ -116,6 +123,7 @@ impl Rng {
         weights.len() - 1
     }
 
+    /// In-place Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
             let j = self.range(0, i + 1);
@@ -123,6 +131,7 @@ impl Rng {
         }
     }
 
+    /// Uniform element draw — panics on an empty slice.
     pub fn choose<'a, T>(&mut self, v: &'a [T]) -> &'a T {
         &v[self.range(0, v.len())]
     }

@@ -11,24 +11,30 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// An empty summary.
     pub fn new() -> Self {
         Self::default()
     }
+    /// Record one sample.
     pub fn add(&mut self, x: f64) {
         self.samples.push(x);
     }
+    /// Record every sample from an iterator.
     pub fn extend<I: IntoIterator<Item = f64>>(&mut self, xs: I) {
         self.samples.extend(xs);
     }
+    /// Number of recorded samples.
     pub fn count(&self) -> usize {
         self.samples.len()
     }
+    /// Sample mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
         }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
+    /// Sample standard deviation (Bessel-corrected; 0 below 2 samples).
     pub fn std(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
@@ -37,9 +43,11 @@ impl Summary {
         let m = self.mean();
         (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
+    /// Smallest sample (+inf when empty).
     pub fn min(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
     }
+    /// Largest sample (-inf when empty).
     pub fn max(&self) -> f64 {
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
@@ -53,6 +61,7 @@ impl Summary {
         let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
         sorted[rank.min(sorted.len() - 1)]
     }
+    /// Raw samples in insertion order.
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
@@ -110,18 +119,25 @@ pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
 /// Fixed-width histogram.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Inclusive lower bound of the binned range.
     pub lo: f64,
+    /// Exclusive upper bound of the binned range.
     pub hi: f64,
+    /// Per-bin counts over `[lo, hi)`, equal width.
     pub bins: Vec<usize>,
+    /// Samples below `lo`.
     pub underflow: usize,
+    /// Samples at or above `hi`.
     pub overflow: usize,
 }
 
 impl Histogram {
+    /// `n_bins` equal-width bins over `[lo, hi)`.
     pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
         assert!(hi > lo && n_bins > 0);
         Histogram { lo, hi, bins: vec![0; n_bins], underflow: 0, overflow: 0 }
     }
+    /// Count one sample into its bin (or under/overflow).
     pub fn add(&mut self, x: f64) {
         if x < self.lo {
             self.underflow += 1;
@@ -133,13 +149,19 @@ impl Histogram {
             self.bins[idx.min(n - 1)] += 1;
         }
     }
+    /// Total samples counted, including under/overflow.
     pub fn total(&self) -> usize {
         self.bins.iter().sum::<usize>() + self.underflow + self.overflow
     }
 }
 
 /// Render an ASCII line plot (one series) — used for terminal figure output.
-pub fn ascii_plot(title: &str, series: &[(&str, &[(f64, f64)])], width: usize, height: usize) -> String {
+pub fn ascii_plot(
+    title: &str,
+    series: &[(&str, &[(f64, f64)])],
+    width: usize,
+    height: usize,
+) -> String {
     let mut out = String::new();
     let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
     if all.is_empty() {

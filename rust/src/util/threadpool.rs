@@ -8,12 +8,14 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size worker pool; dropping it joins every worker.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl ThreadPool {
+    /// Spawn `n` workers (panics if `n == 0`).
     pub fn new(n: usize) -> Self {
         assert!(n > 0);
         let (tx, rx) = channel::<Job>();
@@ -39,6 +41,7 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers }
     }
 
+    /// Queue a job for the next free worker (fire-and-forget).
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx.as_ref().expect("pool closed").send(Box::new(f)).expect("workers alive");
     }

@@ -8,12 +8,15 @@ use crate::util::rng::Rng;
 /// One synthetic chain-arithmetic problem (mirror of corpus.Problem).
 #[derive(Debug, Clone)]
 pub struct Problem {
+    /// Starting value v_0 (a single digit).
     pub a: u8,
     /// (r, op, b): step i computes v_i = v_r op b (mod 10); op is a token id.
     pub steps: Vec<(usize, u32, u8)>,
+    /// Every intermediate value v_0..v_k (values[i] is step i's result).
     pub values: Vec<u8>,
 }
 
+/// One chain step: `x op y (mod 10)` where `op` is a corpus operator token.
 pub fn apply_op(spec: &CorpusSpec, x: u8, op: u32, y: u8) -> u8 {
     let (x, y) = (x as i32, y as i32);
     let r = if op == spec.plus {
@@ -29,6 +32,8 @@ pub fn apply_op(spec: &CorpusSpec, x: u8, op: u32, y: u8) -> u8 {
 }
 
 impl Problem {
+    /// Sample a `k`-step problem (`k = None`: uniform in the spec's step
+    /// range) — mirror of `corpus.sample_problem`.
     pub fn sample(rng: &mut Rng, spec: &CorpusSpec, k: Option<usize>) -> Problem {
         let k = k.unwrap_or_else(|| rng.range(spec.min_steps, spec.max_steps + 1));
         let a = rng.range(0, 10) as u8;
@@ -46,6 +51,7 @@ impl Problem {
         Problem { a, steps, values }
     }
 
+    /// The final chain value v_k — the digit the model must emit after ANS.
     pub fn answer(&self) -> u8 {
         *self.values.last().unwrap()
     }
@@ -114,6 +120,7 @@ pub fn parse_answer(spec: &CorpusSpec, decoded: &[u32]) -> Option<u8> {
     None
 }
 
+/// Render a token stream as readable text (debugging / trace output).
 pub fn detok(spec: &CorpusSpec, tokens: &[u32]) -> String {
     tokens
         .iter()
@@ -145,21 +152,33 @@ pub fn detok(spec: &CorpusSpec, tokens: &[u32]) -> String {
 /// Prefill/decode length distributions for one dataset family.
 #[derive(Debug, Clone, Copy)]
 pub struct LengthProfile {
+    /// Dataset name as used by `--dataset` flags and figure labels.
     pub name: &'static str,
     /// log-normal (mu, sigma) of the prefill length in tokens
     pub prefill: (f64, f64),
     /// log-normal (mu, sigma) of the decode length in tokens
     pub decode: (f64, f64),
+    /// Whether this is a reasoning (long-decode) family — Figure 1(b).
     pub reasoning: bool,
 }
 
 /// Long-prefill (RAG-style, LongBench) profiles — Figure 1(a).
 pub const LONGBENCH: [LengthProfile; 5] = [
-    LengthProfile { name: "narrativeqa", prefill: (9.8, 0.45), decode: (2.7, 0.5), reasoning: false },
+    LengthProfile {
+        name: "narrativeqa",
+        prefill: (9.8, 0.45),
+        decode: (2.7, 0.5),
+        reasoning: false,
+    },
     LengthProfile { name: "qasper", prefill: (8.3, 0.5), decode: (2.9, 0.6), reasoning: false },
     LengthProfile { name: "hotpotqa", prefill: (9.1, 0.35), decode: (2.5, 0.5), reasoning: false },
     LengthProfile { name: "triviaqa", prefill: (8.9, 0.5), decode: (2.3, 0.55), reasoning: false },
-    LengthProfile { name: "gov_report", prefill: (9.0, 0.4), decode: (6.2, 0.35), reasoning: false },
+    LengthProfile {
+        name: "gov_report",
+        prefill: (9.0, 0.4),
+        decode: (6.2, 0.35),
+        reasoning: false,
+    },
 ];
 
 /// Long-decode (math reasoning) profiles — Figure 1(b); calibrated to the
@@ -171,12 +190,15 @@ pub const MATH: [LengthProfile; 3] = [
 ];
 
 impl LengthProfile {
+    /// Look up a profile across both families by dataset name.
     pub fn by_name(name: &str) -> Option<LengthProfile> {
         LONGBENCH.iter().chain(MATH.iter()).find(|p| p.name == name).copied()
     }
+    /// Draw one prefill length (tokens, floored at 4).
     pub fn sample_prefill(&self, rng: &mut Rng) -> usize {
         rng.lognormal(self.prefill.0, self.prefill.1).round().max(4.0) as usize
     }
+    /// Draw one decode length (tokens, floored at 8).
     pub fn sample_decode(&self, rng: &mut Rng) -> usize {
         rng.lognormal(self.decode.0, self.decode.1).round().max(8.0) as usize
     }

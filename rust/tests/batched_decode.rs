@@ -166,7 +166,8 @@ fn batched_serving_path_matches_sequential_generate() {
         .map(|p| ref_engine.generate(p, &opts).expect("reference").tokens)
         .collect();
 
-    let backend = EngineBackend { engine: engine(PolicyKind::Raas, 96), pages_per_seq_estimate: 16 };
+    let backend =
+        EngineBackend { engine: engine(PolicyKind::Raas, 96), pages_per_seq_estimate: 16 };
     let mut b = Batcher::new(backend, BatcherConfig { max_batch: ps.len(), ..Default::default() });
     let (tx, rx) = channel::<Response>();
     for (id, p) in ps.iter().enumerate() {

@@ -142,6 +142,77 @@ fn chunked_prefill_is_bit_identical_across_policies_and_chunk_sizes() {
 }
 
 #[test]
+fn warm_prefix_hit_prefill_is_bit_identical_to_cold() {
+    // With `prefix_cache: true`, re-prefilling a prompt attaches its full
+    // prefix pages from the index instead of recomputing them.  For every
+    // policy and the same chunk-size spread as the cold suite, the warm
+    // sequence must be bit-identical to the cold one — first token, page
+    // tables (pool ids excepted: attached pages ARE the cold run's
+    // physical pages), slab bytes, RepBounds, decode tokens and Figure-3
+    // logs.  Prompt 120 exceeds the budget so post-prefill trims evict
+    // index-retained (shared) pages along the way.
+    let strip = |snap: Vec<Vec<PageSnap>>| -> Vec<Vec<PageSnap>> {
+        snap.into_iter()
+            .map(|l| l.into_iter().map(|mut p| { p.pool_id = 0; p }).collect())
+            .collect()
+    };
+    for kind in PolicyKind::all() {
+        for &plen in &[70usize, 120] {
+            let prompt = mk_prompt(plen);
+            let (ref_first, ref_snap, ref_tokens, ref_log) = run(kind, &prompt, None);
+            let ref_snap = strip(ref_snap);
+            for &chunk in &[5usize, 16, 37, 200] {
+                let cfg = EngineConfig {
+                    policy: kind,
+                    budget: 96,
+                    prefix_cache: true,
+                    ..Default::default()
+                };
+                let mut e = Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).unwrap();
+                // cold pass populates the index
+                let mut cold = e.new_seq();
+                e.prefill_seq(&mut cold, &prompt).expect("cold prefill");
+                assert_eq!(cold.prefix_cached_tokens, 0);
+                e.release_seq(&mut cold);
+                // warm pass: first chunk attaches every cached full page
+                let mut seq = e.new_seq();
+                let mut first = None;
+                while first.is_none() {
+                    first = e.prefill_seq_partial(&mut seq, &prompt, chunk).expect("warm");
+                }
+                let first = first.unwrap();
+                assert_eq!(seq.prefix_cached_tokens, (plen - 1) / PAGE * PAGE,
+                           "{kind:?}/p{plen}/c{chunk}: warm run must attach every full \
+                            prefix page");
+                assert_eq!(first, ref_first, "{kind:?}/p{plen}/c{chunk}: first token");
+                assert_eq!(strip(snapshot(&e, &seq)), ref_snap,
+                           "{kind:?}/p{plen}/c{chunk}: warm page state diverged");
+                let mut log = Vec::new();
+                let mut tokens = vec![first];
+                let mut tok = first;
+                for step in 1..=8u64 {
+                    tok = e.decode_step(&mut seq, tok, step, Some(&mut log)).expect("decode");
+                    tokens.push(tok);
+                }
+                assert_eq!(tokens, ref_tokens,
+                           "{kind:?}/p{plen}/c{chunk}: warm decode diverged");
+                let log: Vec<(u64, Vec<(usize, u32)>)> = log
+                    .into_iter()
+                    .map(|(now, entry)| {
+                        (now, entry.into_iter().map(|(p, pr)| (p, pr.to_bits())).collect())
+                    })
+                    .collect();
+                assert_eq!(log, ref_log, "{kind:?}/p{plen}/c{chunk}: warm score log diverged");
+                e.release_seq(&mut seq);
+                e.prefix_clear();
+                assert_eq!(e.pool().allocated_pages(), 0,
+                           "{kind:?}/p{plen}/c{chunk}: pool must drain");
+            }
+        }
+    }
+}
+
+#[test]
 fn chunk_boundaries_respect_pinned_prefill_page_alignment() {
     // RaaS pins prefill pages; a 37-token chunk puts boundaries mid-page
     // (37, 70 % 16 != 0).  Pinning must stay page-aligned — chunk

@@ -193,6 +193,69 @@ fn concurrent_prefill_is_bit_identical_across_policies_chunks_and_ways() {
     }
 }
 
+#[test]
+fn warm_batched_prefill_matches_warm_sequential() {
+    // With `prefix_cache: true` and a pre-populated index, the batched
+    // admission path must attach cached prefix pages per entry in entry
+    // order — exactly like the sequential loop — so the two stay
+    // bit-identical INCLUDING pool ids (both engines pre-populate the
+    // index identically, so their free lists and attach order coincide).
+    // Prompts deliberately share page-aligned prefixes with each other
+    // (`mk_prompts` reuses token patterns) and with the warm-up pass.
+    let mk_warm_engine = || {
+        let cfg = EngineConfig {
+            policy: PolicyKind::Raas,
+            budget: 96,
+            prefix_cache: true,
+            ..Default::default()
+        };
+        Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+    };
+    let prompts = mk_prompts();
+    let warm_up = |e: &mut Engine| {
+        for p in &prompts {
+            let mut seq = e.new_seq();
+            e.prefill_seq(&mut seq, p).expect("warm-up prefill");
+            e.release_seq(&mut seq);
+        }
+    };
+    for &chunk in &[5usize, 16, 37] {
+        for &ways in &[1usize, 2, 4] {
+            let mut seq_e = mk_warm_engine();
+            warm_up(&mut seq_e);
+            let (mut ref_seqs, ref_firsts) = run_prefills(&mut seq_e, &prompts, chunk, ways,
+                                                          false);
+            let mut conc_e = mk_warm_engine();
+            warm_up(&mut conc_e);
+            let (mut conc_seqs, conc_firsts) = run_prefills(&mut conc_e, &prompts, chunk, ways,
+                                                            true);
+            assert_eq!(conc_firsts, ref_firsts, "c{chunk}/w{ways}: first tokens diverged");
+            for (i, (rs, cs)) in ref_seqs.iter().zip(&conc_seqs).enumerate() {
+                assert!(cs.prefix_cached_tokens > 0 || prompts[i].len() <= 16,
+                        "c{chunk}/w{ways}/seq{i}: warm run must hit the index");
+                assert_eq!(cs.prefix_cached_tokens, rs.prefix_cached_tokens,
+                           "c{chunk}/w{ways}/seq{i}: cached-token counts diverged");
+                assert_eq!(snapshot(&conc_e, cs), snapshot(&seq_e, rs),
+                           "c{chunk}/w{ways}/seq{i}: warm batched state diverged from \
+                            warm sequential");
+            }
+            assert_eq!(conc_e.metrics.counter("prefix.hit_pages"),
+                       seq_e.metrics.counter("prefix.hit_pages"),
+                       "c{chunk}/w{ways}: hit counters diverged");
+            for s in ref_seqs.iter_mut() {
+                seq_e.release_seq(s);
+            }
+            for s in conc_seqs.iter_mut() {
+                conc_e.release_seq(s);
+            }
+            seq_e.prefix_clear();
+            conc_e.prefix_clear();
+            assert_eq!(seq_e.pool().allocated_pages(), 0, "sequential pool must drain");
+            assert_eq!(conc_e.pool().allocated_pages(), 0, "concurrent pool must drain");
+        }
+    }
+}
+
 /// `SimBackend` with its streaming-prefill entry points masked off: forces
 /// `Engine::prefill_batch` onto the sequential monolithic-slicing fallback
 /// (the AOT `ModelRuntime`'s shape).

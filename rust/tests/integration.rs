@@ -158,7 +158,12 @@ fn score_log_records_waterfall_series() {
     let out = e
         .generate(
             &p.encode_prompt(&spec),
-            &GenOptions { max_new: 48, force_len: Some(48), log_scores: true, ..Default::default() },
+            &GenOptions {
+                max_new: 48,
+                force_len: Some(48),
+                log_scores: true,
+                ..Default::default()
+            },
         )
         .unwrap();
     assert_eq!(out.score_log.len(), 48);
@@ -177,7 +182,8 @@ fn seed_changes_sim_model() {
     // The surrogate is a family of models indexed by --seed: different
     // seeds must yield different generations for the same prompt.
     let mk = |seed: u64| {
-        let cfg = EngineConfig { policy: PolicyKind::Dense, budget: 1024, seed, ..Default::default() };
+        let cfg =
+            EngineConfig { policy: PolicyKind::Dense, budget: 1024, seed, ..Default::default() };
         Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("engine")
     };
     let spec = mk(0).meta.corpus.clone();

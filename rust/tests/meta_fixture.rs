@@ -1,0 +1,49 @@
+//! Cross-language metadata golden (DESIGN.md §4): the committed fixture
+//! `tests/fixtures/meta_sim_default.json` is the `meta.json` the python AOT
+//! path (`python/compile/aot.py::build_meta`) exports for the sim-default
+//! architecture.  This suite asserts the rust parse of that golden equals
+//! [`ArtifactMeta::sim_default`]; `python/tests/test_meta_fixture.py`
+//! asserts the same file from the exporter's side, so a drift in either
+//! language's constants fails one of the two CI jobs.
+
+use std::path::Path;
+
+use raas::config::ArtifactMeta;
+use raas::util::json::Json;
+
+fn fixture() -> (ArtifactMeta, Json) {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/meta_sim_default.json");
+    let text = std::fs::read_to_string(&path).expect("read golden meta fixture");
+    let j = Json::parse(&text).expect("golden meta fixture must be valid JSON");
+    let meta = ArtifactMeta::from_json(path.parent().unwrap(), &j).expect("parse golden meta");
+    (meta, j)
+}
+
+#[test]
+fn golden_meta_json_parses_to_sim_default() {
+    let (meta, _) = fixture();
+    let sim = ArtifactMeta::sim_default();
+    // `dir` is where the file was loaded from (display-only) — everything
+    // else must agree field for field.
+    assert_eq!(meta.model, sim.model, "ModelSpec drifted from python ModelConfig");
+    assert_eq!(meta.corpus, sim.corpus, "CorpusSpec drifted from python corpus constants");
+    assert_eq!(meta.trained, sim.trained);
+    assert_eq!(meta.capacities, sim.capacities, "capacity ladder drifted");
+    assert_eq!(meta.prefill_sizes, sim.prefill_sizes, "prefill paddings drifted");
+    assert_eq!(meta.page_size, sim.page_size, "KV page size drifted");
+}
+
+#[test]
+fn golden_meta_json_vocab_names_cover_the_sim_vocab() {
+    // The exporter writes a name for every non-padding token id below
+    // idx0 + n_idx; the golden must carry all of them (the tokenizer's
+    // display path relies on this map when artifacts are loaded).
+    let (meta, j) = fixture();
+    let names = j.path("corpus.vocab_names").expect("vocab_names present");
+    let last = meta.corpus.idx0 + meta.corpus.n_idx;
+    for id in 0..last {
+        let name = names.get(&id.to_string());
+        assert!(name.is_some(), "vocab_names missing token id {id}");
+    }
+    assert!((last as usize) <= meta.model.vocab, "named ids exceed vocab");
+}

@@ -146,6 +146,77 @@ fn paged_and_gathered_decode_batch_bitwise_identical() {
 }
 
 #[test]
+fn forked_sequences_decode_identically_on_both_routes() {
+    // A fork shares physical pages with its parent; the zero-copy paged
+    // route reads those pages in place, the gather route copies them out.
+    // Both routes must decode a fork (and, afterwards, its parent) exactly
+    // like an independently prefilled sequence — tokens and Figure-3 logs
+    // — across every policy, COW included (`pin_prefill: false` leaves a
+    // shared partial tail page that the first decode append detaches).
+    let steps = 24usize;
+    for policy in PolicyKind::all() {
+        let prompt = prompts(41).remove(1);
+        let mk = |paged: bool| -> Engine {
+            // budget comfortably above prompt+decode residency: COW and
+            // shared reads are under test here, not eviction (shared-page
+            // eviction semantics intentionally differ from independent
+            // RaaS eviction — see SparsityPolicy::evict_candidate)
+            let cfg = EngineConfig {
+                policy,
+                budget: 256,
+                pin_prefill: false,
+                ..Default::default()
+            };
+            if paged {
+                Engine::new_with_capacities(cfg, &CAPS).expect("sim engine")
+            } else {
+                let meta = ArtifactMeta::sim_default();
+                let model =
+                    Box::new(GatheredSim(SimBackend::with_capacities(&meta, cfg.seed, &CAPS)));
+                Engine::with_backend(cfg, meta, model).expect("gathered engine")
+            }
+        };
+        let decode = |e: &mut Engine, seq: &mut SeqCache, first: u32| {
+            let mut log = Vec::new();
+            let mut tokens = vec![first];
+            let mut tok = first;
+            for step in 1..=steps as u64 {
+                tok = e.decode_step(seq, tok, step, Some(&mut log)).expect("decode");
+                tokens.push(tok);
+            }
+            (tokens, log)
+        };
+        let mut outputs = Vec::new();
+        for paged in [true, false] {
+            let mut e = mk(paged);
+            // independent reference
+            let mut ind = e.new_seq();
+            let ifirst = e.prefill_seq(&mut ind, &prompt).expect("prefill");
+            let (itokens, ilog) = decode(&mut e, &mut ind, ifirst);
+            e.release_seq(&mut ind);
+            // fork, then parent, over the same shared pages
+            let mut parent = e.new_seq();
+            let first = e.prefill_seq(&mut parent, &prompt).expect("prefill");
+            assert_eq!(first, ifirst);
+            let mut fork = e.fork_seq(&parent);
+            let (ftokens, flog) = decode(&mut e, &mut fork, first);
+            let (ptokens, plog) = decode(&mut e, &mut parent, first);
+            let route = if paged { "paged" } else { "gathered" };
+            assert_eq!(ftokens, itokens, "{policy:?}/{route}: fork tokens diverged");
+            assert_eq!(flog, ilog, "{policy:?}/{route}: fork score log diverged");
+            assert_eq!(ptokens, itokens, "{policy:?}/{route}: parent tokens diverged");
+            assert_eq!(plog, ilog, "{policy:?}/{route}: parent score log diverged");
+            e.release_seq(&mut fork);
+            e.release_seq(&mut parent);
+            assert_eq!(e.pool().allocated_pages(), 0, "{policy:?}/{route}: pool must drain");
+            outputs.push((itokens, ilog));
+        }
+        assert_eq!(outputs[0], outputs[1],
+                   "{policy:?}: paged and gathered forks diverged from each other");
+    }
+}
+
+#[test]
 fn prop_page_views_match_read_page() {
     // Property: for random pool geometries and write patterns, the
     // zero-copy `page_k`/`page_v` views read exactly what `read_page`

@@ -1,0 +1,325 @@
+//! Prefix sharing + copy-on-write KV pages at engine level (PR 6
+//! acceptance).  Two sharing mechanisms ride the same refcounted pool:
+//!
+//!  * `Engine::fork_seq` — copy the logical page tables only; the first
+//!    divergent append copy-on-writes just the touched page.  A fork (and
+//!    the parent it forked from) must decode bit-identically to an
+//!    independently prefilled sequence: same tokens, same Figure-3 score
+//!    logs, same slab bytes / page tables (pool ids excepted), across all
+//!    five policies.
+//!  * the pool-level prefix index (`prefix_cache: true`) — a repeated
+//!    prompt attaches its already-resident full prefix pages instead of
+//!    re-running prefill over them.  The warm sequence must be
+//!    bit-identical to the cold one, and to a `prefix_cache: false`
+//!    engine's, across all five policies — including prompts that exceed
+//!    the budget so post-prefill trims evict index-retained (shared) pages.
+//!
+//! Plus the shared-page lifecycle edges the satellites name: eviction of a
+//! refcount>1 page frees nothing, the pool drains to zero after releasing
+//! every sequence and clearing the index (no leak, no double free), and
+//! decode feeds shared pages' RaaS stamps into the pool-level aggregate.
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::engine::Engine;
+use raas::kvcache::SeqCache;
+
+const PAGE: usize = 16; // sim-default page size
+
+fn mk_engine(cfg: EngineConfig) -> Engine {
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+fn mk_prompt(len: usize) -> Vec<u32> {
+    (0..len).map(|i| 1 + (i % 40) as u32).collect()
+}
+
+/// Bit patterns of a float slice (strict equality: distinguishes -0.0,
+/// never equates NaN — "bit-identical" taken literally).
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Everything observable about one resident page EXCEPT its pool id —
+/// shared/forked sequences legitimately map different physical pages than
+/// an independent prefill, so identity is everything-but-the-id.
+#[derive(Debug, PartialEq, Eq)]
+struct PageSnap {
+    start_pos: usize,
+    len: usize,
+    pinned: bool,
+    last_stamp: u64,
+    k: Vec<u32>,
+    v: Vec<u32>,
+    kmin: Vec<u32>,
+    kmax: Vec<u32>,
+}
+
+fn snapshot(e: &Engine, seq: &SeqCache) -> Vec<Vec<PageSnap>> {
+    let pool = e.pool();
+    seq.layers
+        .iter()
+        .map(|lc| {
+            lc.table
+                .iter()
+                .zip(&lc.reps)
+                .map(|(p, r)| PageSnap {
+                    start_pos: p.start_pos,
+                    len: p.len,
+                    pinned: p.pinned,
+                    last_stamp: p.last_stamp,
+                    k: bits(pool.page_k(p.pool_id, p.len)),
+                    v: bits(pool.page_v(p.pool_id, p.len)),
+                    kmin: bits(&r.kmin),
+                    kmax: bits(&r.kmax),
+                })
+                .collect()
+        })
+        .collect()
+}
+
+type ScoreLog = Vec<(u64, Vec<(usize, f32)>)>;
+
+fn log_bits(log: ScoreLog) -> Vec<(u64, Vec<(usize, u32)>)> {
+    log.into_iter()
+        .map(|(now, e)| (now, e.into_iter().map(|(p, pr)| (p, pr.to_bits())).collect()))
+        .collect()
+}
+
+/// Decode `steps` tokens from `first` with score logging.
+fn decode(e: &mut Engine, seq: &mut SeqCache, first: u32, steps: u64) -> (Vec<u32>, ScoreLog) {
+    let mut log = Vec::new();
+    let mut tokens = vec![first];
+    let mut tok = first;
+    for step in 1..=steps {
+        tok = e.decode_step(seq, tok, step, Some(&mut log)).expect("decode");
+        tokens.push(tok);
+    }
+    (tokens, log)
+}
+
+#[test]
+fn forked_and_parent_sequences_decode_like_independent_prefills() {
+    // Default config pins prefill, so a post-prefill fork shares only
+    // pinned pages and decode opens fresh unpinned pages — no COW, pure
+    // shared-read decode.  Fork first, then parent, each against an
+    // independent reference; prompt 120 exceeds the 96-token budget so
+    // trims run over shared (refcount-2) pages too.
+    for kind in PolicyKind::all() {
+        for &plen in &[70usize, 120] {
+            let prompt = mk_prompt(plen);
+            let cfg = EngineConfig { policy: kind, budget: 96, ..Default::default() };
+
+            let mut ind = mk_engine(cfg.clone());
+            let mut iseq = ind.new_seq();
+            let ifirst = ind.prefill_seq(&mut iseq, &prompt).expect("prefill");
+            let (itokens, ilog) = decode(&mut ind, &mut iseq, ifirst, 8);
+            let isnap = snapshot(&ind, &iseq);
+
+            let mut e = mk_engine(cfg);
+            let mut parent = e.new_seq();
+            let first = e.prefill_seq(&mut parent, &prompt).expect("prefill");
+            assert_eq!(first, ifirst, "{kind:?}/p{plen}: first token diverged");
+            let mut fork = e.fork_seq(&parent);
+            let (ftokens, flog) = decode(&mut e, &mut fork, first, 8);
+            assert_eq!(ftokens, itokens, "{kind:?}/p{plen}: fork tokens diverged");
+            assert_eq!(log_bits(flog), log_bits(ilog.clone()),
+                       "{kind:?}/p{plen}: fork score log diverged");
+            assert_eq!(snapshot(&e, &fork), isnap,
+                       "{kind:?}/p{plen}: fork pages / slabs / RepBounds diverged");
+            // the parent decodes identically AFTER its fork already did —
+            // sharing must never let one sequence observe the other
+            let (ptokens, plog) = decode(&mut e, &mut parent, first, 8);
+            assert_eq!(ptokens, itokens, "{kind:?}/p{plen}: parent tokens diverged");
+            assert_eq!(log_bits(plog), log_bits(ilog),
+                       "{kind:?}/p{plen}: parent score log diverged");
+            assert_eq!(snapshot(&e, &parent), isnap,
+                       "{kind:?}/p{plen}: parent pages / slabs / RepBounds diverged");
+
+            ind.release_seq(&mut iseq);
+            e.release_seq(&mut fork);
+            e.release_seq(&mut parent);
+            assert_eq!(ind.pool().allocated_pages(), 0, "independent pool must drain");
+            assert_eq!(e.pool().allocated_pages(), 0, "shared pool must drain");
+        }
+    }
+}
+
+#[test]
+fn divergent_append_copy_on_writes_the_shared_tail_page() {
+    // With `pin_prefill: false` the 70-token prompt leaves a partial
+    // (6/16) unpinned tail page; the fork's first decode append lands in
+    // it and must COW.  Budget 96 > 70 + 8 keeps eviction out of the
+    // picture, so forked ≡ independent still holds bitwise for every
+    // policy — now across an actual copy-on-write.
+    for kind in PolicyKind::all() {
+        let prompt = mk_prompt(70);
+        let cfg = EngineConfig {
+            policy: kind,
+            budget: 96,
+            pin_prefill: false,
+            ..Default::default()
+        };
+
+        let mut ind = mk_engine(cfg.clone());
+        let mut iseq = ind.new_seq();
+        let ifirst = ind.prefill_seq(&mut iseq, &prompt).expect("prefill");
+        let (itokens, ilog) = decode(&mut ind, &mut iseq, ifirst, 8);
+        let isnap = snapshot(&ind, &iseq);
+
+        let mut e = mk_engine(cfg);
+        let mut parent = e.new_seq();
+        let first = e.prefill_seq(&mut parent, &prompt).expect("prefill");
+        let mut fork = e.fork_seq(&parent);
+        let tail = |s: &SeqCache| s.layers[0].table.last().unwrap().pool_id;
+        let head = |s: &SeqCache| s.layers[0].table[0].pool_id;
+        assert_eq!(tail(&fork), tail(&parent), "pre-COW: tail page shared");
+        let (ftokens, flog) = decode(&mut e, &mut fork, first, 8);
+        assert_ne!(tail(&fork), tail(&parent), "{kind:?}: divergent append must COW");
+        assert_eq!(head(&fork), head(&parent), "{kind:?}: untouched full page stays shared");
+        assert_eq!(ftokens, itokens, "{kind:?}: fork tokens diverged across COW");
+        assert_eq!(log_bits(flog), log_bits(ilog.clone()), "{kind:?}: fork log diverged");
+        assert_eq!(snapshot(&e, &fork), isnap, "{kind:?}: fork state diverged across COW");
+        // the parent's original tail (exclusive again after the COW)
+        // decodes in place, bit-identically
+        let (ptokens, plog) = decode(&mut e, &mut parent, first, 8);
+        assert_eq!(ptokens, itokens, "{kind:?}: parent tokens diverged");
+        assert_eq!(log_bits(plog), log_bits(ilog), "{kind:?}: parent log diverged");
+        assert_eq!(snapshot(&e, &parent), isnap, "{kind:?}: parent state diverged");
+
+        ind.release_seq(&mut iseq);
+        e.release_seq(&mut fork);
+        e.release_seq(&mut parent);
+        assert_eq!(e.pool().allocated_pages(), 0, "pool must drain after COW + releases");
+        assert_eq!(ind.pool().allocated_pages(), 0);
+    }
+}
+
+#[test]
+fn decode_feeds_shared_page_stamps_into_the_pool_aggregate() {
+    // RaaS re-stamps pages it attends; while a page is shared, decode must
+    // publish the fresh stamp into `KvPool::stamp_max` so OTHER sharers'
+    // eviction sees the page as hot (the shared-page-safe eviction rule).
+    let prompt = mk_prompt(70);
+    let cfg = EngineConfig {
+        policy: PolicyKind::Raas,
+        budget: 96,
+        pin_prefill: false,
+        ..Default::default()
+    };
+    let mut e = mk_engine(cfg);
+    let mut parent = e.new_seq();
+    let first = e.prefill_seq(&mut parent, &prompt).expect("prefill");
+    let mut fork = e.fork_seq(&parent);
+    let (_, _) = decode(&mut e, &mut fork, first, 4);
+    let mut saw_restamp = false;
+    for (p, f) in parent.layers[0].table.iter().zip(&fork.layers[0].table) {
+        if p.pool_id != f.pool_id {
+            continue; // COWed tail — no longer shared
+        }
+        assert_eq!(e.pool().stamp_max(p.pool_id), f.last_stamp,
+                   "pool aggregate must track the sharer's freshest stamp");
+        saw_restamp |= f.last_stamp > p.last_stamp;
+    }
+    assert!(saw_restamp, "decode must have re-stamped at least one shared page");
+    e.release_seq(&mut fork);
+    e.release_seq(&mut parent);
+    assert_eq!(e.pool().allocated_pages(), 0);
+}
+
+#[test]
+fn warm_prefix_hit_is_bit_identical_to_cold_across_policies() {
+    // Same prompt three ways: a `prefix_cache: false` engine (the
+    // pre-existing behavior), the first run on a `prefix_cache: true`
+    // engine (cold — the index is empty), and the second run on that
+    // engine (warm — full prefix pages attach from the index).  All three
+    // must agree on tokens, Figure-3 logs, and page state minus pool ids.
+    // Prompt 120 exceeds the 96-token budget: post-prefill trims then
+    // evict index-retained (shared) pages, which must not free them.
+    for kind in PolicyKind::all() {
+        for &plen in &[70usize, 120] {
+            let prompt = mk_prompt(plen);
+            let base = EngineConfig { policy: kind, budget: 96, ..Default::default() };
+
+            let mut off = mk_engine(base.clone());
+            let mut oseq = off.new_seq();
+            let ofirst = off.prefill_seq(&mut oseq, &prompt).expect("prefill");
+            let (otokens, olog) = decode(&mut off, &mut oseq, ofirst, 8);
+            let osnap = snapshot(&off, &oseq);
+            off.release_seq(&mut oseq);
+
+            let cfg = EngineConfig { prefix_cache: true, ..base };
+            let mut e = mk_engine(cfg);
+            let runs: Vec<_> = (0..2)
+                .map(|_| {
+                    let mut seq = e.new_seq();
+                    let first = e.prefill_seq(&mut seq, &prompt).expect("prefill");
+                    let (tokens, log) = decode(&mut e, &mut seq, first, 8);
+                    let snap = snapshot(&e, &seq);
+                    let cached = seq.prefix_cached_tokens;
+                    e.release_seq(&mut seq);
+                    (tokens, log_bits(log), snap, cached)
+                })
+                .collect();
+            let full_pages = (plen - 1) / PAGE; // final token never attaches
+            for (i, (tokens, log, snap, cached)) in runs.iter().enumerate() {
+                assert_eq!(*tokens, otokens, "{kind:?}/p{plen}/run{i}: tokens diverged");
+                assert_eq!(*log, log_bits(olog.clone()),
+                           "{kind:?}/p{plen}/run{i}: score log diverged");
+                assert_eq!(*snap, osnap,
+                           "{kind:?}/p{plen}/run{i}: pages / slabs / RepBounds diverged");
+                let want = if i == 0 { 0 } else { full_pages * PAGE };
+                assert_eq!(*cached, want, "{kind:?}/p{plen}/run{i}: cached-token count");
+            }
+            assert_eq!(e.metrics.counter("prefix.hit_pages"), full_pages as u64,
+                       "{kind:?}/p{plen}: warm run must hit every full prefix page");
+            assert_eq!(e.metrics.counter("prefix.hit_requests"), 1);
+            assert!(e.prefix_len() > 0, "index must hold the prompt's prefix");
+            // teardown: the index is the last owner; clearing it drains
+            // the pool completely — no leak, no double free
+            e.prefix_clear();
+            assert_eq!(e.prefix_len(), 0);
+            assert_eq!(e.pool().allocated_pages(), 0,
+                       "{kind:?}/p{plen}: pool must drain after prefix_clear");
+            assert_eq!(off.pool().allocated_pages(), 0);
+        }
+    }
+}
+
+#[test]
+fn prefix_cache_off_keeps_the_index_empty() {
+    // The default config must not cache anything: repeated prompts stay
+    // pool-id-exact cold prefills (what every pre-existing suite pins).
+    let prompt = mk_prompt(70);
+    let mut e = mk_engine(EngineConfig { budget: 96, ..Default::default() });
+    assert!(!e.cfg.prefix_cache, "prefix cache must default off");
+    for _ in 0..2 {
+        let mut seq = e.new_seq();
+        e.prefill_seq(&mut seq, &prompt).expect("prefill");
+        assert_eq!(seq.prefix_cached_tokens, 0);
+        e.release_seq(&mut seq);
+    }
+    assert_eq!(e.prefix_len(), 0);
+    assert_eq!(e.metrics.counter("prefix.hit_pages"), 0);
+    assert_eq!(e.pool().allocated_pages(), 0);
+}
+
+#[test]
+fn short_prompts_never_attach_their_final_token() {
+    // A prompt that is exactly one page (or shorter) has no cacheable
+    // prefix — the final chunk must always execute to produce the
+    // first-token logits, so the warm run still prefills everything.
+    let cfg = EngineConfig { budget: 96, prefix_cache: true, ..Default::default() };
+    let mut e = mk_engine(cfg);
+    for plen in [3usize, PAGE] {
+        let prompt = mk_prompt(plen);
+        for run in 0..2 {
+            let mut seq = e.new_seq();
+            e.prefill_seq(&mut seq, &prompt).expect("prefill");
+            assert_eq!(seq.prefix_cached_tokens, 0, "p{plen}/run{run}: nothing to attach");
+            e.release_seq(&mut seq);
+        }
+    }
+    assert_eq!(e.prefix_len(), 0, "page-or-shorter prompts cache nothing");
+    e.prefix_clear();
+    assert_eq!(e.pool().allocated_pages(), 0);
+}

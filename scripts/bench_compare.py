@@ -1,0 +1,155 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare fresh results/BENCH_*.json against the
+committed snapshots in results/baselines/, print per-metric deltas as a
+markdown table (stdout + $GITHUB_STEP_SUMMARY when set), and fail on >20%
+regressions in the gated metrics — decode throughput and TTFT.
+
+Stdlib only (CI runners get no pip step for this).
+
+Baseline file shapes:
+  * a raw JSON array of rows (what the benches write) — a real snapshot;
+    gated regressions against it FAIL the job.
+  * {"provisional": true, "rows": [...]} — a hand-seeded placeholder from
+    an environment that could not run the benches; regressions only WARN.
+    Replace with a real run's artifact to arm the gate.
+
+Gated metrics (matched per row by key):
+  * keys containing "tokens_per_sec"            — higher is better
+  * keys containing "ttft" and ending "_secs"   — lower is better
+Every other shared numeric metric is reported, never gated (wall-clock
+noise on shared runners makes tight gates on tail stats flappy).
+
+Usage:
+  python3 scripts/bench_compare.py [--baselines DIR] [--results DIR]
+                                   [--threshold PCT]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+THRESHOLD = 20.0  # percent
+
+
+def is_gated(key: str) -> bool:
+    return higher_better(key) or lower_better(key)
+
+
+def higher_better(key: str) -> bool:
+    return "tokens_per_sec" in key
+
+
+def lower_better(key: str) -> bool:
+    return "ttft" in key and key.endswith("_secs")
+
+
+def load_rows(path: str):
+    """Return (rows, provisional) for one bench JSON file."""
+    with open(path, "r", encoding="utf-8") as f:
+        data = json.load(f)
+    if isinstance(data, dict):
+        return data.get("rows", []), bool(data.get("provisional", False))
+    return data, False
+
+
+def index_rows(rows):
+    return {r["name"]: r for r in rows if isinstance(r, dict) and "name" in r}
+
+
+def compare_file(name, base_path, new_path, threshold):
+    """Yield (row, metric, base, new, delta_pct, status) tuples."""
+    base_rows, provisional = load_rows(base_path)
+    new_rows, _ = load_rows(new_path)
+    base_idx, new_idx = index_rows(base_rows), index_rows(new_rows)
+    out = []
+    for row_name in sorted(set(base_idx) & set(new_idx)):
+        b, n = base_idx[row_name], new_idx[row_name]
+        for key in sorted(set(b) & set(n)):
+            if key == "name":
+                continue
+            bv, nv = b[key], n[key]
+            if not isinstance(bv, (int, float)) or not isinstance(nv, (int, float)):
+                continue
+            if not is_gated(key):
+                continue
+            delta = 0.0 if bv == 0 else (nv - bv) / abs(bv) * 100.0
+            worse = -delta if higher_better(key) else delta
+            if worse > threshold:
+                status = "warn (provisional baseline)" if provisional else "REGRESSION"
+            else:
+                status = "ok"
+            out.append((row_name, key, bv, nv, delta, status))
+    return out, provisional
+
+
+def fmt(v):
+    return f"{v:.6g}" if isinstance(v, float) else str(v)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baselines", default="results/baselines")
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    args = ap.parse_args()
+
+    lines = ["## Bench regression gate", ""]
+    lines.append(f"Gate: >{args.threshold:.0f}% regression on decode throughput / TTFT "
+                 "metrics fails the job (warn-only against provisional baselines).")
+    lines.append("")
+    failures = 0
+    compared = 0
+    bench_files = sorted(
+        f for f in os.listdir(args.results)
+        if f.startswith("BENCH_") and f.endswith(".json")
+        and os.path.isfile(os.path.join(args.results, f))
+    ) if os.path.isdir(args.results) else []
+    if not bench_files:
+        print(f"error: no BENCH_*.json under {args.results}", file=sys.stderr)
+        return 2
+
+    for fname in bench_files:
+        base_path = os.path.join(args.baselines, fname)
+        new_path = os.path.join(args.results, fname)
+        lines.append(f"### {fname}")
+        lines.append("")
+        if not os.path.exists(base_path):
+            lines.append("_no baseline committed — new bench, nothing to gate_")
+            lines.append("")
+            continue
+        rows, provisional = compare_file(fname, base_path, new_path, args.threshold)
+        if provisional:
+            lines.append("_baseline is provisional: deltas reported, gate warns only_")
+            lines.append("")
+        if not rows:
+            lines.append("_no shared gated metrics_")
+            lines.append("")
+            continue
+        lines.append("| row | metric | baseline | current | delta | status |")
+        lines.append("|---|---|---:|---:|---:|---|")
+        for row_name, key, bv, nv, delta, status in rows:
+            compared += 1
+            if status == "REGRESSION":
+                failures += 1
+            lines.append(f"| {row_name} | {key} | {fmt(bv)} | {fmt(nv)} "
+                         f"| {delta:+.1f}% | {status} |")
+        lines.append("")
+
+    verdict = (f"**{failures} gated regression(s)** across {compared} compared metric(s)."
+               if failures else
+               f"No gated regressions across {compared} compared metric(s).")
+    lines.append(verdict)
+    report = "\n".join(lines)
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a", encoding="utf-8") as f:
+            f.write(report + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
