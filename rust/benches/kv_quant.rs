@@ -1,0 +1,191 @@
+//! KV-quantization benchmark (PR 7): the pool-byte win from fp8/int8 page
+//! storage, and what that buys under a *byte-matched* cache budget — the
+//! fig6/fig7-shaped question "same bytes, more resident tokens: does
+//! accuracy recover?".
+//!
+//!     cargo bench --bench kv_quant              # full run
+//!     cargo bench --bench kv_quant -- --test    # CI smoke
+//!
+//! Writes `results/BENCH_kv_quant.json` (uploaded by the CI bench-smoke job
+//! and gated by `scripts/bench_compare.py`).  One row per policy x dtype
+//! cell.  Every cell gets the SAME pool-byte budget: the f32 cell holds
+//! [`F32_BUDGET_TOKENS`] tokens, and the quantized cells hold however many
+//! tokens fit in the same number of bytes (~4x as many at 1 byte/elem).
+//! Per cell we run a fixed problem set through `Engine::generate` and
+//! report:
+//!
+//!  * `bytes_per_page` / `token_budget` — the compression itself (the PR
+//!    acceptance criterion, asserted below after the JSON is written:
+//!    int8 pages are >= 2x smaller than f32 pages, so the matched token
+//!    budget is >= 2x larger);
+//!  * `tokens_per_sec` — decode throughput including the dequant cost;
+//!  * `answer_accuracy` and `token_agreement` vs an unbudgeted dense-f32
+//!    reference, plus `accuracy_delta_vs_f32` against the same policy's
+//!    f32 cell (quantization error vs capacity gain, netted out).
+
+use std::time::Instant;
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::engine::{Engine, GenOptions};
+use raas::kvcache::KvDtype;
+use raas::util::json::Json;
+use raas::util::rng::Rng;
+use raas::workload::Problem;
+
+/// Token budget of the f32 baseline cell; every other dtype's budget is
+/// derived from the byte budget these tokens occupy at 4 bytes/elem.
+const F32_BUDGET_TOKENS: usize = 128;
+
+/// Reasoning steps per sampled problem (fixed so prompt/decode lengths —
+/// and therefore cache pressure — are comparable across cells).
+const STEPS: usize = 8;
+
+fn mk_engine(policy: PolicyKind, dtype: KvDtype, budget: usize) -> Engine {
+    let cfg = EngineConfig { policy, budget, kv_dtype: dtype, ..Default::default() };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512, 2048]).expect("sim engine")
+}
+
+/// Positionwise agreement between a cell's token stream and the reference
+/// stream: matching positions over the longer length (1.0 == identical).
+fn agreement(got: &[u32], want: &[u32]) -> f64 {
+    let long = got.len().max(want.len());
+    if long == 0 {
+        return 1.0;
+    }
+    let same = got.iter().zip(want).filter(|(a, b)| a == b).count();
+    same as f64 / long as f64
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    let n_problems = if quick { 3usize } else { 16 };
+
+    // Fixed problem set, shared by every cell (and the reference).
+    let mut probe = mk_engine(PolicyKind::Dense, KvDtype::F32, 1 << 20);
+    let spec = probe.meta.corpus.clone();
+    let page = probe.meta.page_size;
+    let kv_dim = probe.meta.model.n_kv_heads * probe.meta.model.head_dim;
+    let opts = GenOptions { max_new: spec.max_decode_tokens(STEPS), ..Default::default() };
+    let mut rng = Rng::new(7);
+    let problems: Vec<(Vec<u32>, u8)> = (0..n_problems)
+        .map(|_| {
+            let p = Problem::sample(&mut rng, &spec, Some(STEPS));
+            (p.encode_prompt(&spec), p.answer())
+        })
+        .collect();
+
+    // Unbudgeted dense-f32 reference: the accuracy topline every cell's
+    // token stream is compared against.  `probe` IS that engine (its huge
+    // budget never evicts and dense selects every resident page anyway).
+    let reference: Vec<Vec<u32>> = problems
+        .iter()
+        .map(|(prompt, _)| probe.generate(prompt, &opts).expect("reference generate").tokens)
+        .collect();
+
+    // Byte budget every dtype is matched to: the bytes the f32 cell's
+    // token budget occupies.
+    let f32_pages = F32_BUDGET_TOKENS / page;
+    let byte_budget = f32_pages * (2 * page * kv_dim * 4);
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!(
+        "{:<24} {:>8} {:>8} {:>10} {:>10} {:>8} {:>8}",
+        "cell", "B/page", "tokens", "tok/s", "agree", "acc", "d(f32)"
+    );
+    println!("{}", "-".repeat(84));
+
+    // (policy, dtype, bytes_per_page, token_budget, accuracy) per cell,
+    // for the post-write acceptance asserts.
+    let mut cells: Vec<(PolicyKind, KvDtype, usize, usize, f64, f64)> = Vec::new();
+    for policy in PolicyKind::all() {
+        let mut f32_accuracy = 0.0f64;
+        for dtype in KvDtype::all() {
+            let bytes_per_page = 2 * page * kv_dim * dtype.bytes_per_elem()
+                + dtype.page_param_bytes();
+            let token_budget = (byte_budget / bytes_per_page).max(1) * page;
+            let mut e = mk_engine(policy, dtype, token_budget);
+            assert_eq!(
+                e.pool().bytes_per_page(),
+                bytes_per_page,
+                "pool byte accounting must match the budget arithmetic"
+            );
+            let mut correct = 0usize;
+            let mut agree_sum = 0.0f64;
+            let mut tokens = 0usize;
+            let mut secs = 0.0f64;
+            for (i, (prompt, answer)) in problems.iter().enumerate() {
+                let t0 = Instant::now();
+                let out = e.generate(prompt, &opts).expect("cell generate");
+                secs += t0.elapsed().as_secs_f64();
+                tokens += out.tokens.len();
+                if e.tokenizer.parse_answer(&out.tokens) == Some(*answer) {
+                    correct += 1;
+                }
+                agree_sum += agreement(&out.tokens, &reference[i]);
+            }
+            let accuracy = correct as f64 / n_problems as f64;
+            let agree = agree_sum / n_problems as f64;
+            let tps = tokens as f64 / secs.max(1e-12);
+            if dtype == KvDtype::F32 {
+                f32_accuracy = accuracy;
+            }
+            let delta = accuracy - f32_accuracy;
+            println!(
+                "{:<24} {:>8} {:>8} {:>10.0} {:>8.3} {:>8.2} {:>+8.2}",
+                format!("kv_quant/{}/{}", policy.name(), dtype.name()),
+                bytes_per_page,
+                token_budget,
+                tps,
+                agree,
+                accuracy,
+                delta
+            );
+            rows.push(Json::obj(vec![
+                ("name", Json::str(format!("kv_quant/{}/{}", policy.name(), dtype.name()))),
+                ("policy", Json::str(policy.name())),
+                ("kv_dtype", Json::str(dtype.name())),
+                ("bytes_per_page", Json::from(bytes_per_page)),
+                ("byte_budget", Json::from(byte_budget)),
+                ("token_budget", Json::from(token_budget)),
+                ("problems", Json::from(n_problems)),
+                ("tokens_per_sec", Json::from(tps)),
+                ("token_agreement", Json::from(agree)),
+                ("answer_accuracy", Json::from(accuracy)),
+                ("accuracy_delta_vs_f32", Json::from(delta)),
+            ]));
+            cells.push((policy, dtype, bytes_per_page, token_budget, accuracy, agree));
+        }
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/BENCH_kv_quant.json", Json::Arr(rows).to_string())
+        .expect("write results/BENCH_kv_quant.json");
+    println!("\nwrote results/BENCH_kv_quant.json");
+
+    // Acceptance criteria (checked after the JSON is written so a failure
+    // still leaves the artifact for debugging).
+    let f32_page_bytes = 2 * page * kv_dim * 4;
+    for &(policy, dtype, bytes_per_page, token_budget, _, agree) in &cells {
+        if dtype.is_quantized() {
+            // >= 2x pool-byte reduction per page, and therefore >= 2x the
+            // resident tokens under the matched byte budget.
+            assert!(
+                f32_page_bytes >= 2 * bytes_per_page,
+                "{dtype}: quantized pages must be >= 2x smaller than f32 \
+                 ({f32_page_bytes} vs {bytes_per_page} bytes)"
+            );
+            assert!(
+                token_budget >= 2 * F32_BUDGET_TOKENS,
+                "{dtype}: matched byte budget must hold >= 2x the f32 tokens \
+                 ({token_budget} vs {F32_BUDGET_TOKENS})"
+            );
+        } else {
+            assert_eq!(token_budget, F32_BUDGET_TOKENS);
+        }
+        if policy == PolicyKind::Dense && dtype == KvDtype::F32 {
+            // dense ignores the budget and f32 is the bit-exact reference
+            // path, so this cell must reproduce the topline stream exactly
+            assert_eq!(agree, 1.0, "dense/f32 must match the reference bitwise");
+        }
+    }
+}

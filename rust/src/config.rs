@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::kvcache::KvDtype;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -340,6 +341,10 @@ pub struct EngineConfig {
     pub max_decode: usize,
     /// Total KV pool size in pages (across sequences).
     pub pool_pages: usize,
+    /// Element dtype of the pool's KV storage.  `F32` is the bit-exact
+    /// reference; `Fp8E4M3`/`Int8` store quantized bytes plus per-page
+    /// scale/zero-point and dequantize on read.
+    pub kv_dtype: KvDtype,
     /// Share full prompt pages across sequences through the pool-level
     /// prefix index (refcount + copy-on-write).  Off by default: sharing
     /// changes pool-id allocation order, and the bit-identity suites pin
@@ -363,6 +368,7 @@ impl Default for EngineConfig {
             pin_prefill: true,
             max_decode: 4096,
             pool_pages: 16384,
+            kv_dtype: KvDtype::from_env(),
             prefix_cache: false,
             seed: 0,
         }
@@ -380,7 +386,7 @@ impl EngineConfig {
     }
 
     /// CLI overrides: --backend --artifacts --policy --budget --alpha
-    /// --max-decode --seed.
+    /// --max-decode --pool-pages --kv-dtype --seed.
     ///
     /// An explicit `--backend` wins; a bare `--artifacts DIR` implies the
     /// xla backend so pre-backend invocations keep driving the real model
@@ -408,6 +414,7 @@ impl EngineConfig {
         }
         c.max_decode = args.usize_or("max-decode", c.max_decode);
         c.pool_pages = args.usize_or("pool-pages", c.pool_pages);
+        c.kv_dtype = KvDtype::parse(&args.str_or("kv-dtype", c.kv_dtype.name()))?;
         if args.switch("prefix-cache") {
             c.prefix_cache = true;
         }
@@ -499,9 +506,12 @@ mod tests {
     #[test]
     fn engine_config_overrides() {
         let args = Args::parse(
-            ["x", "--policy", "quest", "--budget", "512", "--alpha", "0.01", "--prefix-cache"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "x", "--policy", "quest", "--budget", "512", "--alpha", "0.01", "--prefix-cache",
+                "--kv-dtype", "int8",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         )
         .unwrap();
         let c = EngineConfig::from_args(&args).unwrap();
@@ -509,6 +519,9 @@ mod tests {
         assert_eq!(c.budget, 512);
         assert_eq!(c.alpha, 0.01);
         assert!(c.prefix_cache);
+        assert_eq!(c.kv_dtype, KvDtype::Int8);
         assert!(!EngineConfig::default().prefix_cache, "prefix cache is opt-in");
+        // no default-dtype assertion here: the CI matrix legs run the whole
+        // suite under KV_DTYPE=fp8|int8, which EngineConfig::default() obeys
     }
 }

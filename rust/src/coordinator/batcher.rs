@@ -168,6 +168,10 @@ struct Prefilling<S> {
     done: usize,
     /// Prefill wall seconds accumulated across chunks.
     prefill_secs: f64,
+    /// Deficit-round-robin entitlement: budget tokens granted but not yet
+    /// spent.  Carries across rounds and ticks, so a slot the budget ran
+    /// out before reaching catches up instead of starving.
+    deficit: usize,
 }
 
 /// Iteration-level scheduler over a [`StepBackend`].
@@ -187,6 +191,10 @@ pub struct Batcher<B: StepBackend> {
     /// iteration, and a `Vec::remove(0)` here is O(n²) under queue
     /// pressure.
     queue: VecDeque<Request>,
+    /// Deficit-round-robin cursor: the admission-slot index the next
+    /// remainder token goes to, rotating so `budget < slots` serves every
+    /// slot over successive rounds rather than only the FIFO front.
+    drr_next: usize,
     /// Requests answered so far (successes and failures).
     pub completed: u64,
 }
@@ -200,6 +208,7 @@ impl<B: StepBackend> Batcher<B> {
             active: Vec::new(),
             prefilling: Vec::new(),
             queue: VecDeque::new(),
+            drr_next: 0,
             completed: 0,
         }
     }
@@ -296,9 +305,13 @@ impl<B: StepBackend> Batcher<B> {
             {
                 let req = self.queue.pop_front().expect("queue non-empty");
                 match self.backend.begin_chunked() {
-                    Some(seq) => self
-                        .prefilling
-                        .push(Prefilling { req, seq, done: 0, prefill_secs: 0.0 }),
+                    Some(seq) => self.prefilling.push(Prefilling {
+                        req,
+                        seq,
+                        done: 0,
+                        prefill_secs: 0.0,
+                        deficit: 0,
+                    }),
                     None => {
                         let cost = req.prompt.len().max(1);
                         self.begin_whole(req);
@@ -314,21 +327,36 @@ impl<B: StepBackend> Batcher<B> {
     }
 
     /// One batched prefill round over the in-flight admission slots:
-    /// split `budget` front-biased (the FIFO front gets
-    /// `ceil(left / slots_left)`, so concurrency 1 degenerates to the
-    /// PR-4 whole-budget front and equal-length prompts still activate in
-    /// submission order), issue ONE batched chunk call, apply per-prompt
-    /// progress, activate completions in slot order and report failures.
-    /// Returns the budget left — always strictly less than `budget` when
-    /// any prompt participated (each drains at least one token), so the
+    /// split `budget` deficit-round-robin — every slot's deficit grows by
+    /// `budget / slots`, the remainder is handed out one token at a time
+    /// from the rotating [`Batcher::drr_next`] cursor, and shares are then
+    /// drawn FIFO as `min(deficit, left)`.  Equal entitlement means
+    /// concurrency 1 still degenerates to the PR-4 whole-budget front and
+    /// equal-length co-admitted prompts still activate in submission
+    /// order; unlike the old front-biased `ceil(left / slots_left)` split,
+    /// a budget smaller than the slot count rotates over the tail instead
+    /// of starving it behind the FIFO front.  Issues ONE batched chunk
+    /// call, applies per-prompt progress (consumed tokens repay deficit),
+    /// activates completions in slot order and reports failures.  Returns
+    /// the budget left — always strictly less than `budget` when any
+    /// prompt participated (each drains at least one token), so the
     /// admission loop cannot livelock.
     fn prefill_round(&mut self, budget: usize) -> usize {
         let n = self.prefilling.len();
+        let base = budget / n;
+        let rem = budget % n;
+        let start = self.drr_next % n;
+        for (i, p) in self.prefilling.iter_mut().enumerate() {
+            // slots start, start+1, … start+rem-1 (mod n) get one extra
+            let extra = usize::from((i + n - start) % n < rem);
+            p.deficit += base + extra;
+        }
+        self.drr_next = (start + rem) % n;
         let mut shares = Vec::with_capacity(n);
         {
             let mut left = budget;
-            for i in 0..n {
-                let share = left.div_ceil(n - i);
+            for p in &self.prefilling {
+                let share = p.deficit.min(left);
                 shares.push(share);
                 left -= share;
             }
@@ -397,6 +425,8 @@ impl<B: StepBackend> Batcher<B> {
                     // zero-compute chunk still drains one token, or a
                     // misbehaving backend livelocks the tick
                     spent += computed.max(1);
+                    // consumed tokens repay the DRR entitlement too
+                    p.deficit = p.deficit.saturating_sub(computed.max(1));
                     if let Some(first) = prog.first_token {
                         outcomes[i] = Outcome::Done(first);
                     }
@@ -1036,6 +1066,65 @@ mod tests {
         ids.sort();
         assert_eq!(ids, (0..6).collect::<Vec<_>>());
         assert_eq!(b.backend.finished, 6, "all sequences released");
+    }
+
+    #[test]
+    fn drr_shares_rotate_over_slots_when_budget_is_smaller_than_slot_count() {
+        // 4 co-admitted 6-token prompts under a 2-token/tick budget: the
+        // old front-biased split (`ceil(left / slots_left)`) gave tokens
+        // to slots 0 and 1 every tick and starved slots 2 and 3 until the
+        // front pair finished.  Deficit round-robin hands the remainder
+        // out from a rotating cursor, so every prompt must receive a
+        // chunk within the first two ticks.
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            ChunkedMock::new(8),
+            BatcherConfig {
+                max_batch: 8,
+                prefill_token_budget: Some(2),
+                prefill_concurrency: 4,
+            },
+        );
+        for id in 0..4u64 {
+            b.submit(mk_long_req(id, 6, 1, &tx));
+        }
+        b.tick();
+        b.tick();
+        let served: std::collections::BTreeSet<u64> = b
+            .backend
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Chunk(id, _) => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            served,
+            (0..4u64).collect::<std::collections::BTreeSet<u64>>(),
+            "2 ticks × 2-token budget must touch all 4 slots, not just the front"
+        );
+        // chunks never exceed the per-tick budget
+        for e in &b.backend.events {
+            if let Ev::Chunk(_, n) = e {
+                assert!(*n <= 2, "chunk of {n} tokens exceeded the 2-token budget");
+            }
+        }
+        b.run_to_completion();
+        drop(tx);
+        assert_eq!(rx.iter().filter(|r| r.error.is_none()).count(), 4);
+        // equal entitlement keeps equal-length prompts activating FIFO
+        let activations: Vec<u64> = b
+            .backend
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Activate(id) => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(activations, (0..4).collect::<Vec<u64>>());
+        assert_eq!(b.backend.finished, 4, "all sequences released");
     }
 
     #[test]

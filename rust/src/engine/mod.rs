@@ -16,6 +16,8 @@
 //! budget-bounded eviction (timestamps/eviction are batched per iteration,
 //! as in the paper's implementation, Appendix B).
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -23,7 +25,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ArtifactMeta, BackendKind, EngineConfig, PolicyKind};
 use crate::kvcache::page::{page_probs, PageId, PageMeta, RepBounds};
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
-use crate::kvcache::{prefix_hashes, KvPool, PageViewBuf, PrefixIndex, SeqCache};
+use crate::kvcache::{prefix_hashes, KvPool, PageView, PageViewBuf, PrefixIndex, SeqCache};
 use crate::metrics::Metrics;
 use crate::runtime::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, Qkv,
                      QkvBatchItem, SimBackend, Tokenizer};
@@ -195,7 +197,7 @@ impl Engine {
     pub fn with_backend(cfg: EngineConfig, meta: ArtifactMeta, model: Box<dyn Backend>)
                         -> Result<Self> {
         let kv_dim = meta.model.n_kv_heads * meta.model.head_dim;
-        let pool = KvPool::new(cfg.pool_pages, meta.page_size, kv_dim);
+        let pool = KvPool::new_with_dtype(cfg.pool_pages, meta.page_size, kv_dim, cfg.kv_dtype);
         let policy = make_policy(&cfg);
         // a quarter of the pool for cached prefixes; one index entry
         // retains one physical page per layer
@@ -783,6 +785,38 @@ impl Engine {
             };
             t_exec += t0.elapsed().as_secs_f64();
 
+            // Cross-sequence rep-score sharing: when refcounted page
+            // sharing is live (forks, prefix hits), sequences whose logical
+            // tables resolve to the same physical page hold bit-identical
+            // `RepBounds` clones for it (fork clones them, prefix attach
+            // copies the donor's), so the O(kv_dim) score fold for a shared
+            // page is computed once per distinct query and copied —
+            // copying an f32 is exact, pinned by
+            // `rust/tests/batched_decode.rs::forked_*`.  Cache key:
+            // (physical page, query equivalence class); query classes are
+            // detected bitwise, the same predicate the backend's weight
+            // reuse trusts.  Shared pages are never written in place (COW
+            // detaches first, under a fresh pool id) and a shared page's id
+            // cannot be freed or reallocated inside this loop, so entries
+            // never go stale within the layer.
+            let share_scores = self.pool.any_shared();
+            let mut score_cache: HashMap<(PageId, usize), f32> = HashMap::new();
+            let mut qclass: Vec<usize> = Vec::with_capacity(qkvs.len());
+            if share_scores {
+                for j in 0..qkvs.len() {
+                    let q = &qkvs[j].q[..];
+                    let c = (0..j)
+                        .find(|&p| {
+                            let pq = &qkvs[p].q[..];
+                            !q.is_empty()
+                                && pq.len() == q.len()
+                                && pq.iter().zip(q).all(|(a, b)| a.to_bits() == b.to_bits())
+                        })
+                        .unwrap_or(j);
+                    qclass.push(c);
+                }
+            }
+
             // append + rep-score + select + gather + observe, per sequence
             for (j, &i) in idxs.iter().enumerate() {
                 if !alive[i] {
@@ -800,8 +834,28 @@ impl Engine {
                 }
                 let t0 = Instant::now();
                 let lc = &e.seq.layers[layer];
-                lc.rep_scores(&qkvs[j].q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
-                              &mut self.scores);
+                if share_scores {
+                    self.scores.clear();
+                    for (p, rep) in lc.table.iter().zip(&lc.reps) {
+                        let s = if self.pool.is_shared(p.pool_id) {
+                            match score_cache.entry((p.pool_id, qclass[j])) {
+                                Entry::Occupied(hit) => {
+                                    self.metrics.inc("decode.rep_score_shared");
+                                    *hit.get()
+                                }
+                                Entry::Vacant(slot) => *slot.insert(rep.score(
+                                    &qkvs[j].q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
+                                )),
+                            }
+                        } else {
+                            rep.score(&qkvs[j].q, spec.n_heads, spec.n_kv_heads, spec.head_dim)
+                        };
+                        self.scores.push(s);
+                    }
+                } else {
+                    lc.rep_scores(&qkvs[j].q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
+                                  &mut self.scores);
+                }
                 page_probs(&self.scores, spec.head_dim, &mut self.probs);
                 // Figure-3 capture: same point as the sequential path —
                 // layer-0 probs as computed, before select/observe/evict
@@ -864,7 +918,7 @@ impl Engine {
                 // pool is stable), then ONE batched paged call.  View
                 // assembly is timed as the gather phase it replaces.
                 let t0 = Instant::now();
-                let mut flat: Vec<(&[f32], &[f32], usize)> = Vec::new();
+                let mut flat: Vec<PageView<'_>> = Vec::new();
                 // (entry index, qkvs index, flat range) per live item
                 let mut spans: Vec<(usize, usize, usize, usize)> = Vec::with_capacity(idxs.len());
                 for (j, &i) in idxs.iter().enumerate() {

@@ -9,9 +9,11 @@ pub mod page;
 pub mod policy;
 pub mod pool;
 pub mod prefix;
+pub mod quant;
 pub mod seq;
 
-pub use page::{PageId, PageMeta, RepBounds};
+pub use page::{PageData, PageId, PageMeta, PageView, RepBounds};
 pub use pool::KvPool;
 pub use prefix::{prefix_hashes, PrefixIndex};
+pub use quant::{KvDtype, QuantParams};
 pub use seq::{PageViewBuf, SeqCache, PAGE_VIEW_INLINE};

@@ -1,4 +1,7 @@
-//! Page metadata: what the sparsity policies reason about.
+//! Page metadata: what the sparsity policies reason about, plus the
+//! dtype-tagged [`PageView`] the paged attention route consumes.
+
+use super::quant::{KvDtype, QuantParams};
 
 /// Index into the pool's contiguous K/V slabs: page `id` owns slab range
 /// `[id * page_size * kv_dim .. (id+1) * page_size * kv_dim]`
@@ -35,6 +38,89 @@ impl PageMeta {
     /// One past the absolute position of the last filled slot.
     pub fn end_pos(&self) -> usize {
         self.start_pos + self.len
+    }
+}
+
+/// One page's K/V storage as the paged attention route sees it: either
+/// zero-copy `f32` slab ranges (the reference dtype) or quantized bytes
+/// plus the page's affine dequantization params.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PageData<'p> {
+    /// Reference storage: in-place `f32` slab views, `[len * kv_dim]`.
+    F32 {
+        /// Keys.
+        k: &'p [f32],
+        /// Values.
+        v: &'p [f32],
+    },
+    /// Quantized storage: one byte per element, `[len * kv_dim]`, decoded
+    /// as `zero + scale * code(q)` per stream.
+    Quant {
+        /// Element encoding.
+        dtype: KvDtype,
+        /// Quantized keys.
+        k: &'p [u8],
+        /// Quantized values.
+        v: &'p [u8],
+        /// Key-stream dequantization params.
+        k_params: QuantParams,
+        /// Value-stream dequantization params.
+        v_params: QuantParams,
+    },
+}
+
+/// A dtype-tagged, zero-copy view of one resident page's filled slots —
+/// the element type of [`crate::runtime::PagedAttnInput::pages`].  `F32`
+/// views alias the pool's master slab; quantized views alias the byte
+/// slabs and carry the page's `(scale, zero)` params so backends can
+/// dequantize into scratch (or fuse the dequant into their kernels).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageView<'p> {
+    /// Number of live slots in the view.
+    pub len: usize,
+    /// The page's storage at its pool dtype.
+    pub data: PageData<'p>,
+}
+
+impl PageView<'_> {
+    /// The empty `f32` view — inline-buffer filler
+    /// ([`crate::kvcache::PageViewBuf`]).
+    pub const EMPTY: PageView<'static> = PageView { len: 0, data: PageData::F32 { k: &[], v: &[] } };
+
+    /// Dequantize (or copy) this view's keys into `dst`
+    /// (`[len * kv_dim]`) — the gather-route bridge for backends that
+    /// want contiguous `f32` regardless of the pool dtype.
+    pub fn copy_k_into(&self, dst: &mut [f32]) {
+        match self.data {
+            PageData::F32 { k, .. } => dst.copy_from_slice(k),
+            PageData::Quant { dtype, k, k_params, .. } => dtype.decode_slice(k, k_params, dst),
+        }
+    }
+
+    /// Dequantize (or copy) this view's values into `dst` (`[len * kv_dim]`).
+    pub fn copy_v_into(&self, dst: &mut [f32]) {
+        match self.data {
+            PageData::F32 { v, .. } => dst.copy_from_slice(v),
+            PageData::Quant { dtype, v, v_params, .. } => dtype.decode_slice(v, v_params, dst),
+        }
+    }
+
+    /// Whether two views alias the same storage bytes (same slab range of
+    /// the same pool) — the O(1) identity check behind cross-item work
+    /// reuse in batched paged attention.
+    pub fn same_storage(&self, other: &PageView<'_>) -> bool {
+        if self.len != other.len {
+            return false;
+        }
+        match (&self.data, &other.data) {
+            (PageData::F32 { k: a, .. }, PageData::F32 { k: b, .. }) => {
+                std::ptr::eq(a.as_ptr(), b.as_ptr())
+            }
+            (PageData::Quant { k: a, .. }, PageData::Quant { k: b, .. }) => {
+                std::ptr::eq(a.as_ptr(), b.as_ptr())
+            }
+            _ => false,
+        }
     }
 }
 

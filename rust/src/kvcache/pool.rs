@@ -15,10 +15,24 @@
 //! [`KvPool::release`] drops one (the slab range is freed only when the
 //! last owner leaves), and [`KvPool::cow_page`] is the copy-on-write step a
 //! sequence takes before mutating a page it no longer owns exclusively.
+//!
+//! Dtypes (DESIGN.md §2, quantized slab layout): the pool is dtype-generic
+//! at runtime via [`KvDtype`].  `F32` is the reference layout above.  Under
+//! `Fp8E4M3`/`Int8` the pool additionally carries one-byte-per-element
+//! quantized slabs plus a per-page running value range; every write updates
+//! the range and re-encodes the page's filled prefix from the master `f32`
+//! slab, so the quantized bytes are a pure function of the page's final
+//! contents (chunking/fork/COW invariant — the bit-identity suites hold
+//! under every dtype).  Attention consumes the quantized bytes through
+//! [`KvPool::page_view`] / [`KvPool::read_page`]; the `f32` master doubles
+//! as the simulator's reference instrumentation and is excluded from the
+//! byte accounting, which reflects the quantized layout a device slab
+//! would carry ([`KvPool::bytes_per_page`]).
 
 use anyhow::{bail, Result};
 
-use super::page::PageId;
+use super::page::{PageData, PageId, PageView};
+use super::quant::{KvDtype, QuantParams};
 
 /// The shared physical KV page pool (one per engine).
 ///
@@ -47,11 +61,29 @@ use super::page::PageId;
 pub struct KvPool {
     page_size: usize,
     kv_dim: usize,
+    /// Element dtype of the attention-visible storage.
+    dtype: KvDtype,
     /// Contiguous key slab, `[capacity_pages * page_size * kv_dim]`; each
     /// slot holds `kv_dim = n_kv_heads * head_dim` post-RoPE key floats.
+    /// Under a quantized dtype this is the *master* copy the quantized
+    /// bytes re-encode from (reference instrumentation, not accounted).
     k: Vec<f32>,
     /// Contiguous value slab, same geometry as `k`.
     v: Vec<f32>,
+    /// Quantized key slab, `[capacity_pages * page_size * kv_dim]` bytes —
+    /// empty for `F32`.
+    qk: Vec<u8>,
+    /// Quantized value slab, same geometry as `qk`.
+    qv: Vec<u8>,
+    /// Per-page running key minimum/maximum (quantized dtypes only; reset
+    /// on alloc).  Quant params derive from these deterministically.
+    k_lo: Vec<f32>,
+    /// See `k_lo`.
+    k_hi: Vec<f32>,
+    /// Per-page running value minimum/maximum.
+    v_lo: Vec<f32>,
+    /// See `v_lo`.
+    v_hi: Vec<f32>,
     capacity_pages: usize,
     free: Vec<PageId>,
     /// Bit `id` set ⇔ page `id` is on the free list — O(1) double-free
@@ -75,14 +107,31 @@ pub struct KvPool {
 
 impl KvPool {
     /// `capacity_pages` pages of `page_size` tokens, `kv_dim` floats per
-    /// token for K and V each.
+    /// token for K and V each, stored as reference `f32`
+    /// (= [`KvPool::new_with_dtype`] with [`KvDtype::F32`]).
     pub fn new(capacity_pages: usize, page_size: usize, kv_dim: usize) -> Self {
+        Self::new_with_dtype(capacity_pages, page_size, kv_dim, KvDtype::F32)
+    }
+
+    /// Pool with an explicit storage dtype (`--kv-dtype`); quantized
+    /// dtypes add the byte slabs + per-page range metadata.
+    pub fn new_with_dtype(capacity_pages: usize, page_size: usize, kv_dim: usize,
+                          dtype: KvDtype) -> Self {
         let stride = page_size * kv_dim;
+        let qlen = if dtype.is_quantized() { capacity_pages * stride } else { 0 };
+        let plen = if dtype.is_quantized() { capacity_pages } else { 0 };
         KvPool {
             page_size,
             kv_dim,
+            dtype,
             k: vec![0.0; capacity_pages * stride],
             v: vec![0.0; capacity_pages * stride],
+            qk: vec![0; qlen],
+            qv: vec![0; qlen],
+            k_lo: vec![f32::INFINITY; plen],
+            k_hi: vec![f32::NEG_INFINITY; plen],
+            v_lo: vec![f32::INFINITY; plen],
+            v_hi: vec![f32::NEG_INFINITY; plen],
             capacity_pages,
             free: (0..capacity_pages as u32).rev().collect(),
             free_bits: vec![u64::MAX; (capacity_pages + 63) / 64],
@@ -97,6 +146,10 @@ impl KvPool {
     /// Slots per page, in tokens.
     pub fn page_size(&self) -> usize {
         self.page_size
+    }
+    /// Element dtype of the attention-visible K/V storage.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
     }
     /// Floats per slot for K (and, separately, for V).
     pub fn kv_dim(&self) -> usize {
@@ -118,9 +171,15 @@ impl KvPool {
     pub fn high_water_pages(&self) -> usize {
         self.high_water
     }
-    /// Bytes one page occupies (K + V slab shares, f32).
+    /// Bytes one page occupies in the attention-visible layout: K + V slab
+    /// shares at the storage dtype's width, plus per-page quant metadata
+    /// (`(scale, zero)` × K/V for quantized dtypes).  The `f32` master
+    /// slab kept under quantized dtypes is sim-side reference
+    /// instrumentation and deliberately not counted — this figure is what
+    /// a device-resident slab of the same dtype would occupy.
     pub fn bytes_per_page(&self) -> usize {
-        2 * self.page_size * self.kv_dim * 4
+        2 * self.page_size * self.kv_dim * self.dtype.bytes_per_elem()
+            + self.dtype.page_param_bytes()
     }
     /// Bytes currently allocated.
     pub fn allocated_bytes(&self) -> usize {
@@ -163,6 +222,13 @@ impl KvPool {
         self.set_free(id, false);
         self.refs[id as usize] = 1;
         self.stamp_max[id as usize] = 0;
+        if self.dtype.is_quantized() {
+            // fresh range: the first write's fold wins
+            self.k_lo[id as usize] = f32::INFINITY;
+            self.k_hi[id as usize] = f32::NEG_INFINITY;
+            self.v_lo[id as usize] = f32::INFINITY;
+            self.v_hi[id as usize] = f32::NEG_INFINITY;
+        }
         self.allocated += 1;
         self.high_water = self.high_water.max(self.allocated);
         Ok(id)
@@ -239,6 +305,18 @@ impl KvPool {
         let dst = self.page_off(new);
         self.k.copy_within(src..src + n, dst);
         self.v.copy_within(src..src + n, dst);
+        if self.dtype.is_quantized() {
+            // scales travel with the bytes: the detached copy inherits the
+            // original's running range (same tokens ⇒ same params), so its
+            // quantized prefix is byte-identical until it diverges
+            self.qk.copy_within(src..src + n, dst);
+            self.qv.copy_within(src..src + n, dst);
+            let (s, d) = (id as usize, new as usize);
+            self.k_lo[d] = self.k_lo[s];
+            self.k_hi[d] = self.k_hi[s];
+            self.v_lo[d] = self.v_lo[s];
+            self.v_hi[d] = self.v_hi[s];
+        }
         self.stamp_max[new as usize] = self.stamp_max[id as usize];
         self.release(id);
         Ok(new)
@@ -273,6 +351,12 @@ impl KvPool {
     /// into slots `slot..slot+n` of page `id` — one slab memcpy for K and
     /// one for V, the pool-direct prefill path (vs one `write_slot` call
     /// per token).
+    ///
+    /// Under a quantized dtype this is the quantize-on-append hook: the
+    /// write folds into the page's running value range and re-encodes the
+    /// page's filled prefix from the master slab under the updated params,
+    /// making the quantized bytes a pure function of (contents, range) —
+    /// independent of how writes were chunked.
     pub fn write_slots(&mut self, id: PageId, slot: usize, n: usize, k: &[f32], v: &[f32]) {
         debug_assert!(slot + n <= self.page_size);
         debug_assert_eq!(k.len(), n * self.kv_dim);
@@ -282,26 +366,100 @@ impl KvPool {
         let off = self.page_off(id) + slot * self.kv_dim;
         self.k[off..off + n * self.kv_dim].copy_from_slice(k);
         self.v[off..off + n * self.kv_dim].copy_from_slice(v);
+        if self.dtype.is_quantized() {
+            let i = id as usize;
+            for &x in k {
+                self.k_lo[i] = self.k_lo[i].min(x);
+                self.k_hi[i] = self.k_hi[i].max(x);
+            }
+            for &x in v {
+                self.v_lo[i] = self.v_lo[i].min(x);
+                self.v_hi[i] = self.v_hi[i].max(x);
+            }
+            self.requantize_page(id, slot + n);
+        }
+    }
+
+    /// Re-encode the first `filled` slots of page `id` from the master
+    /// slab under the page's current range params.
+    fn requantize_page(&mut self, id: PageId, filled: usize) {
+        let (kp, vp) = self.page_params(id);
+        let n = filled * self.kv_dim;
+        let off = self.page_off(id);
+        let dt = self.dtype;
+        dt.encode_slice(&self.k[off..off + n], kp, &mut self.qk[off..off + n]);
+        dt.encode_slice(&self.v[off..off + n], vp, &mut self.qv[off..off + n]);
     }
 
     /// Copy `len` slots of page `id` into the destination slices (gather).
+    /// Under a quantized dtype the destination receives the *dequantized*
+    /// stored bytes, so the gather route attends exactly what the paged
+    /// route sees.
     pub fn read_page(&self, id: PageId, len: usize, dst_k: &mut [f32], dst_v: &mut [f32]) {
         debug_assert!(len <= self.page_size);
         let n = len * self.kv_dim;
         let off = self.page_off(id);
-        dst_k[..n].copy_from_slice(&self.k[off..off + n]);
-        dst_v[..n].copy_from_slice(&self.v[off..off + n]);
+        if self.dtype.is_quantized() {
+            let (kp, vp) = self.page_params(id);
+            self.dtype.decode_slice(&self.qk[off..off + n], kp, &mut dst_k[..n]);
+            self.dtype.decode_slice(&self.qv[off..off + n], vp, &mut dst_v[..n]);
+        } else {
+            dst_k[..n].copy_from_slice(&self.k[off..off + n]);
+            dst_v[..n].copy_from_slice(&self.v[off..off + n]);
+        }
     }
 
-    /// Zero-copy view of the first `len` slots of page `id`'s keys,
-    /// `[len * kv_dim]` — what the paged attention path reads in place.
+    /// Dtype-tagged zero-copy view of the first `len` slots of page `id` —
+    /// what the paged attention entry points consume
+    /// ([`crate::runtime::PagedAttnInput`]).  `F32` pools hand out the
+    /// master slab ranges directly; quantized pools hand out the byte
+    /// slabs plus the page's derived `(scale, zero)` params.
+    pub fn page_view(&self, id: PageId, len: usize) -> PageView<'_> {
+        debug_assert!(len <= self.page_size);
+        let n = len * self.kv_dim;
+        let off = self.page_off(id);
+        let data = if self.dtype.is_quantized() {
+            let (k_params, v_params) = self.page_params(id);
+            PageData::Quant {
+                dtype: self.dtype,
+                k: &self.qk[off..off + n],
+                v: &self.qv[off..off + n],
+                k_params,
+                v_params,
+            }
+        } else {
+            PageData::F32 { k: &self.k[off..off + n], v: &self.v[off..off + n] }
+        };
+        PageView { len, data }
+    }
+
+    /// The `(K, V)` quantization params of page `id`, derived from its
+    /// running value range (identity params for `F32`).  Deterministic:
+    /// same range ⇒ same params, on every pool.
+    pub fn page_params(&self, id: PageId) -> (QuantParams, QuantParams) {
+        if !self.dtype.is_quantized() {
+            return (QuantParams::IDENTITY, QuantParams::IDENTITY);
+        }
+        let i = id as usize;
+        (
+            self.dtype.params(self.k_lo[i], self.k_hi[i]),
+            self.dtype.params(self.v_lo[i], self.v_hi[i]),
+        )
+    }
+
+    /// Zero-copy view of the first `len` slots of page `id`'s *master*
+    /// (`f32`) keys, `[len * kv_dim]`.  Under `F32` this is exactly what
+    /// attention reads; under a quantized dtype it is the unquantized
+    /// reference copy (bit-identity oracles, RepBounds folds) — attention
+    /// goes through [`KvPool::page_view`] / [`KvPool::read_page`] instead.
     pub fn page_k(&self, id: PageId, len: usize) -> &[f32] {
         debug_assert!(len <= self.page_size);
         let off = self.page_off(id);
         &self.k[off..off + len * self.kv_dim]
     }
 
-    /// Zero-copy view of the first `len` slots of page `id`'s values.
+    /// Zero-copy view of the first `len` slots of page `id`'s *master*
+    /// (`f32`) values (see [`KvPool::page_k`] for the dtype caveat).
     pub fn page_v(&self, id: PageId, len: usize) -> &[f32] {
         debug_assert!(len <= self.page_size);
         let off = self.page_off(id);
@@ -500,6 +658,127 @@ mod tests {
         pool.write_slot(b, 2, &[9.0, 9.0], &[8.0, 8.0]);
         assert_eq!(pool.page_k(a, 2), &[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(pool.page_k(b, 3)[4..], [9.0, 9.0]);
+    }
+
+    #[test]
+    fn quant_bytes_per_page_accounting() {
+        // sim-default geometry: 16 slots × kv_dim 64
+        let f32_pool = KvPool::new(4, 16, 64);
+        assert_eq!(f32_pool.bytes_per_page(), 2 * 16 * 64 * 4);
+        for d in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let q = KvPool::new_with_dtype(4, 16, 64, d);
+            assert_eq!(q.dtype(), d);
+            assert_eq!(q.bytes_per_page(), 2 * 16 * 64 + 16);
+            assert!(
+                f32_pool.bytes_per_page() >= 2 * q.bytes_per_page(),
+                "quantized page must be at least 2x smaller"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_roundtrip_within_bound() {
+        for d in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut pool = KvPool::new_with_dtype(2, 4, 3, d);
+            let id = pool.alloc().unwrap();
+            let k = [0.5f32, -2.0, 7.25, 0.0, 3.5, -0.125];
+            let v = [10.0f32, -10.0, 0.25, 4.0, -1.0, 2.0];
+            pool.write_slots(id, 0, 2, &k, &v);
+            let (kp, vp) = pool.page_params(id);
+            let mut dk = vec![0.0f32; 6];
+            let mut dv = vec![0.0f32; 6];
+            pool.read_page(id, 2, &mut dk, &mut dv);
+            for i in 0..6 {
+                assert!((dk[i] - k[i]).abs() <= d.error_bound(k[i], kp), "{d} k[{i}]");
+                assert!((dv[i] - v[i]).abs() <= d.error_bound(v[i], vp), "{d} v[{i}]");
+            }
+            // master stays exact; the view exposes the quantized bytes
+            assert_eq!(pool.page_k(id, 2), &k[..]);
+            match pool.page_view(id, 2).data {
+                PageData::Quant { dtype, k: qb, .. } => {
+                    assert_eq!(dtype, d);
+                    assert_eq!(qb.len(), 6);
+                }
+                PageData::F32 { .. } => panic!("quant pool must hand out quant views"),
+            }
+        }
+    }
+
+    #[test]
+    fn quant_bytes_are_chunking_invariant() {
+        // the same slot contents written as one run vs slot-by-slot must
+        // produce byte-identical quantized slabs AND identical params —
+        // the property that keeps chunked/monolithic prefill bit-identical
+        // under quantized dtypes
+        for d in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut a = KvPool::new_with_dtype(1, 4, 3, d);
+            let mut b = KvPool::new_with_dtype(1, 4, 3, d);
+            let ia = a.alloc().unwrap();
+            let ib = b.alloc().unwrap();
+            let k: Vec<f32> = (0..12).map(|x| (x as f32 - 6.0) * 1.7).collect();
+            let v: Vec<f32> = (0..12).map(|x| (x as f32).sin() * 40.0).collect();
+            a.write_slots(ia, 0, 4, &k, &v);
+            for s in 0..4 {
+                b.write_slots(ib, s, 1, &k[s * 3..(s + 1) * 3], &v[s * 3..(s + 1) * 3]);
+            }
+            assert_eq!(a.page_params(ia), b.page_params(ib), "{d}: params must match");
+            let (mut ka, mut va) = (vec![0.0; 12], vec![0.0; 12]);
+            let (mut kb, mut vb) = (vec![0.0; 12], vec![0.0; 12]);
+            a.read_page(ia, 4, &mut ka, &mut va);
+            b.read_page(ib, 4, &mut kb, &mut vb);
+            let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&ka), bits(&kb), "{d}: dequantized keys must be bit-identical");
+            assert_eq!(bits(&va), bits(&vb), "{d}: dequantized values must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn cow_preserves_quant_params_until_divergence() {
+        // COW divergence with scales: the detached copy must carry the
+        // original's bytes AND params; post-divergence writes must only
+        // change the copy
+        let d = KvDtype::Int8;
+        let mut pool = KvPool::new_with_dtype(3, 3, 2, d);
+        let a = pool.alloc().unwrap();
+        pool.write_slots(a, 0, 2, &[1.0, 2.0, 3.0, 4.0], &[-1.0, -2.0, -3.0, -4.0]);
+        let params_a = pool.page_params(a);
+        pool.retain(a);
+        let b = pool.cow_page(a, 2).unwrap();
+        assert_ne!(b, a);
+        assert_eq!(pool.page_params(b), params_a, "detached copy inherits params");
+        let (mut ka, mut va) = (vec![0.0; 4], vec![0.0; 4]);
+        let (mut kb, mut vb) = (vec![0.0; 4], vec![0.0; 4]);
+        pool.read_page(a, 2, &mut ka, &mut va);
+        pool.read_page(b, 2, &mut kb, &mut vb);
+        assert_eq!(ka, kb, "copied prefix dequantizes identically");
+        assert_eq!(va, vb);
+        // divergent write widens only the copy's range
+        pool.write_slots(b, 2, 1, &[100.0, -50.0], &[7.0, 7.0]);
+        assert_eq!(pool.page_params(a), params_a, "original's params untouched");
+        assert_ne!(pool.page_params(b), params_a, "copy re-derives params");
+        let (mut ka2, mut va2) = (vec![0.0; 4], vec![0.0; 4]);
+        pool.read_page(a, 2, &mut ka2, &mut va2);
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&ka), bits(&ka2), "original's dequant bytes untouched");
+    }
+
+    #[test]
+    fn f32_pool_views_stay_master_backed() {
+        // the F32 tag must keep today's zero-copy semantics exactly
+        let mut pool = KvPool::new(2, 4, 2);
+        assert_eq!(pool.dtype(), KvDtype::F32);
+        let a = pool.alloc().unwrap();
+        pool.write_slots(a, 0, 2, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        match pool.page_view(a, 2).data {
+            PageData::F32 { k, v } => {
+                assert!(std::ptr::eq(k.as_ptr(), pool.page_k(a, 2).as_ptr()));
+                assert_eq!(k, pool.page_k(a, 2));
+                assert_eq!(v, pool.page_v(a, 2));
+            }
+            PageData::Quant { .. } => panic!("F32 pool must hand out f32 views"),
+        }
+        let (kp, vp) = pool.page_params(a);
+        assert_eq!((kp.scale, kp.zero, vp.scale, vp.zero), (1.0, 0.0, 1.0, 0.0));
     }
 
     #[test]

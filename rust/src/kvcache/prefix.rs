@@ -19,6 +19,12 @@
 //! releases them on reclaim, so a cached page survives the sequence that
 //! produced it.  `BTreeMap` keeps iteration (and therefore LRU tie-breaks)
 //! deterministic.
+//!
+//! Dtype-generic by construction: entries store only `(PageId, RepBounds)`,
+//! and under a quantized pool ([`super::quant::KvDtype`]) the quantized
+//! bytes and per-page `(scale, zero)` params are pool-resident state keyed
+//! by that id — so a warm attach shares them automatically, and a sharer
+//! dequantizes bit-identically to the donor.
 
 use std::collections::BTreeMap;
 
@@ -251,6 +257,40 @@ mod tests {
         for id in ids {
             pool.release(id);
         }
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn quantized_pages_attach_with_pool_resident_params() {
+        // Entries store only (PageId, RepBounds); under a quantized pool
+        // the bytes and per-page (scale, zero) live in the pool keyed by
+        // that id, so a warm attach inherits them automatically and reads
+        // bit-identically to the donor — even after the donor departs.
+        use super::super::quant::KvDtype;
+        let mut pool = KvPool::new_with_dtype(4, 4, 2, KvDtype::Int8);
+        let mut idx = PrefixIndex::new(4);
+        let id = pool.alloc().unwrap();
+        let k: Vec<f32> = (0..8).map(|i| (i as f32) * 1.25 - 3.0).collect();
+        let v: Vec<f32> = (0..8).map(|i| 5.0 - (i as f32) * 0.75).collect();
+        pool.write_slots(id, 0, 4, &k, &v);
+        let params = pool.page_params(id);
+        let (mut dk, mut dv) = (vec![0.0; 8], vec![0.0; 8]);
+        pool.read_page(id, 4, &mut dk, &mut dv);
+        assert!(idx.insert(9, &[1, 2, 3, 4], vec![(id, RepBounds::empty(2))], &mut pool));
+        assert_eq!(pool.ref_count(id), 2, "index co-owns the quantized page");
+        let attached = idx.lookup(9, &[1, 2, 3, 4]).expect("warm hit")[0].0;
+        assert_eq!(attached, id, "a hit attaches the resident physical page");
+        assert_eq!(pool.page_params(attached), params);
+        // donor departs; the index keeps the page, its bytes AND its params
+        pool.release(id);
+        assert_eq!(pool.allocated_pages(), 1);
+        assert_eq!(pool.page_params(attached), params);
+        let (mut ak, mut av) = (vec![0.0; 8], vec![0.0; 8]);
+        pool.read_page(attached, 4, &mut ak, &mut av);
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&ak), bits(&dk), "attached keys dequantize like the donor's");
+        assert_eq!(bits(&av), bits(&dv), "attached values dequantize like the donor's");
+        idx.release_all(&mut pool);
         assert_eq!(pool.allocated_pages(), 0);
     }
 

@@ -1,0 +1,408 @@
+//! KV-slab element dtypes and per-page quantization codecs (DESIGN.md §2,
+//! slab layout).
+//!
+//! The pool stores K/V either as raw `f32` (the reference dtype) or as one
+//! byte per element under a per-page affine code:
+//!
+//! * [`KvDtype::Int8`] — asymmetric affine `u8`: `x ≈ zero + scale * q`
+//!   with `zero = lo` and `scale = hi/255 - lo/255` derived from the
+//!   page's running value range (the overflow-safe form of
+//!   `(hi - lo)/255`).  Worst-case absolute error ≈ `range / 510`.
+//! * [`KvDtype::Fp8E4M3`] — symmetric FP8 E4M3FN: `x ≈ scale * e4m3(q)`
+//!   with `scale = amax / 448` (448 is the format's largest finite value;
+//!   E4M3FN spends the infinity encodings on more range).  Relative error
+//!   ≤ 2⁻⁴ for normals plus a `scale · 2⁻¹⁰` subnormal floor.
+//!
+//! Parameters are a pure function of a page's running `(lo, hi)` range
+//! ([`KvDtype::params`]), and pages re-encode from the master slab whenever
+//! the range grows — so the quantized bytes depend only on a page's final
+//! contents, never on chunking, batching, or fork order.  That is what
+//! keeps every bit-identity suite green under `KV_DTYPE=fp8|int8`.
+
+use anyhow::{bail, Result};
+
+/// Element dtype of the pool's K/V slabs, selected at pool construction
+/// (`--kv-dtype`, [`crate::config::EngineConfig::kv_dtype`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    /// Raw `f32` — the reference dtype; bit-identical to the pre-quant pool.
+    #[default]
+    F32,
+    /// FP8 E4M3FN with a symmetric per-page scale (`amax / 448`).
+    Fp8E4M3,
+    /// Asymmetric affine `u8` with per-page `(scale, zero)`.
+    Int8,
+}
+
+impl KvDtype {
+    /// Every dtype, in reference-first order (bench/CI matrix order).
+    pub fn all() -> [KvDtype; 3] {
+        [KvDtype::F32, KvDtype::Fp8E4M3, KvDtype::Int8]
+    }
+
+    /// Parse a CLI/env name (`f32`, `fp8` / `fp8e4m3`, `int8`).
+    pub fn parse(s: &str) -> Result<KvDtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Ok(KvDtype::F32),
+            "fp8" | "fp8e4m3" | "e4m3" => Ok(KvDtype::Fp8E4M3),
+            "int8" | "i8" | "u8" => Ok(KvDtype::Int8),
+            other => bail!("unknown kv dtype '{other}' (expected f32|fp8|int8)"),
+        }
+    }
+
+    /// Canonical name (round-trips through [`KvDtype::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Fp8E4M3 => "fp8",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Dtype from the `KV_DTYPE` environment variable (the CI bit-identity
+    /// matrix hook), defaulting to `F32` when unset.  An unparseable value
+    /// panics: a typo in a CI matrix leg must fail loudly, not silently
+    /// re-run the `f32` leg.
+    pub fn from_env() -> KvDtype {
+        match std::env::var("KV_DTYPE") {
+            Ok(s) => KvDtype::parse(&s).expect("invalid KV_DTYPE env var"),
+            Err(_) => KvDtype::F32,
+        }
+    }
+
+    /// Slab bytes per stored K or V element.
+    pub fn bytes_per_elem(&self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::Fp8E4M3 | KvDtype::Int8 => 1,
+        }
+    }
+
+    /// Whether this dtype carries per-page quantization parameters.
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, KvDtype::F32)
+    }
+
+    /// Accounting bytes of per-page quantization metadata: `(scale, zero)`
+    /// per K and per V stream, 4 bytes each.  0 for `F32`.
+    pub fn page_param_bytes(&self) -> usize {
+        if self.is_quantized() {
+            16
+        } else {
+            0
+        }
+    }
+
+    /// Derive this dtype's per-page parameters from a page's running value
+    /// range.  Deterministic and total: called with the same `(lo, hi)` it
+    /// always yields the same params, including on empty pages
+    /// (`lo = +inf, hi = -inf` ⇒ the zero code).
+    pub fn params(&self, lo: f32, hi: f32) -> QuantParams {
+        match self {
+            KvDtype::F32 => QuantParams { scale: 1.0, zero: 0.0 },
+            KvDtype::Int8 => {
+                if !(lo <= hi) {
+                    return QuantParams { scale: 0.0, zero: 0.0 };
+                }
+                // hi/255 - lo/255 rather than (hi-lo)/255: the subtraction
+                // cannot overflow even at lo = -f32::MAX, hi = f32::MAX
+                let scale = hi / 255.0 - lo / 255.0;
+                QuantParams { scale: scale.max(0.0), zero: lo }
+            }
+            KvDtype::Fp8E4M3 => {
+                if !(lo <= hi) {
+                    return QuantParams { scale: 0.0, zero: 0.0 };
+                }
+                let amax = lo.abs().max(hi.abs());
+                QuantParams { scale: amax / 448.0, zero: 0.0 }
+            }
+        }
+    }
+
+    /// Quantize `src` into `dst` under `params` (one byte per element).
+    /// No-op for `F32` (the master slab is the storage).
+    pub fn encode_slice(&self, src: &[f32], params: QuantParams, dst: &mut [u8]) {
+        debug_assert_eq!(src.len(), dst.len());
+        match self {
+            KvDtype::F32 => {}
+            KvDtype::Int8 => {
+                if params.scale <= 0.0 {
+                    dst.fill(0);
+                    return;
+                }
+                // (x - zero)/scale computed as x/scale - zero/scale: both
+                // quotients are ≤ ~255 in magnitude for in-range x, so the
+                // subtraction cannot overflow the way (x - zero) can when
+                // x and zero sit at opposite float extremes
+                let inv = 1.0 / params.scale;
+                let zq = params.zero * inv;
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = (x * inv - zq).round().clamp(0.0, 255.0) as u8;
+                }
+            }
+            KvDtype::Fp8E4M3 => {
+                if params.scale <= 0.0 {
+                    dst.fill(0);
+                    return;
+                }
+                for (d, &x) in dst.iter_mut().zip(src) {
+                    *d = f32_to_e4m3(x / params.scale);
+                }
+            }
+        }
+    }
+
+    /// Dequantize `src` into `dst` under `params`.  Exact inverse of the
+    /// code points: `Int8`'s `q = 0` decodes to `zero` exactly, `Fp8`'s
+    /// codes decode through the closed-form E4M3FN value.
+    pub fn decode_slice(&self, src: &[u8], params: QuantParams, dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len());
+        match self {
+            KvDtype::F32 => {}
+            KvDtype::Int8 => {
+                for (d, &q) in dst.iter_mut().zip(src) {
+                    *d = params.zero + params.scale * q as f32;
+                }
+            }
+            KvDtype::Fp8E4M3 => {
+                for (d, &q) in dst.iter_mut().zip(src) {
+                    *d = params.scale * e4m3_to_f32(q);
+                }
+            }
+        }
+    }
+
+    /// Worst-case absolute reconstruction error for one value `x` encoded
+    /// under `params` (used by the round-trip property tests; includes
+    /// small slack for the f32 arithmetic of the codec itself).
+    pub fn error_bound(&self, x: f32, params: QuantParams) -> f32 {
+        match self {
+            KvDtype::F32 => 0.0,
+            // half a code step, plus slack for the inv-scale multiply
+            KvDtype::Int8 => params.scale * 0.501 + x.abs() * 1e-5 + 1e-30,
+            // 2⁻⁴ relative for normals, scale·2⁻¹⁰ subnormal floor
+            KvDtype::Fp8E4M3 => {
+                (x.abs() * (1.0 / 16.0)).max(params.scale * (1.0 / 512.0)) * 1.001
+                    + x.abs() * 1e-5
+                    + 1e-30
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-page affine dequantization parameters: `x ≈ zero + scale * code(q)`.
+/// `F32` pages carry the identity `(1, 0)`; `Fp8E4M3` pages always have
+/// `zero = 0` (symmetric).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Multiplier applied to the decoded code point.
+    pub scale: f32,
+    /// Additive offset (the page minimum for `Int8`).
+    pub zero: f32,
+}
+
+impl QuantParams {
+    /// The identity parameters (`scale = 1, zero = 0`).
+    pub const IDENTITY: QuantParams = QuantParams { scale: 1.0, zero: 0.0 };
+}
+
+/// Round a non-negative finite `f32` to the nearest integer, ties to even
+/// (the IEEE default the E4M3FN codec needs; `f32::round` ties away).
+fn round_even(x: f32) -> u32 {
+    let f = x.floor();
+    let d = x - f;
+    let mut n = f as u32;
+    if d > 0.5 || (d == 0.5 && n % 2 == 1) {
+        n += 1;
+    }
+    n
+}
+
+/// Encode one `f32` as an FP8 E4M3FN byte: 1 sign, 4 exponent (bias 7),
+/// 3 mantissa; no infinities, NaN = `0x7F`, largest finite = ±448
+/// (`0x7E`), subnormal ULP = 2⁻⁹.  Round-to-nearest-even, saturating.
+pub fn f32_to_e4m3(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7F;
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0x00 };
+    let a = x.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    // floor(log2(a)) for normal f32 inputs; f32 subnormals (< 2^-126) are
+    // far below the E4M3 subnormal range and round to zero below
+    let e0 = ((a.to_bits() >> 23) & 0xFF) as i32 - 127;
+    let e = e0.max(-6);
+    // scale so one unit = one mantissa ULP at exponent e: normals land in
+    // [8, 16), E4M3-subnormals (e == -6) in [0, 8)
+    let scaled = a * exp2i(3 - e);
+    let mut m = round_even(scaled);
+    let mut exp = e;
+    if m >= 16 {
+        // rounding carried into the next binade (15.5+ -> 16 = 2 * 8)
+        m /= 2;
+        exp += 1;
+    }
+    if exp > 8 || (exp == 8 && m > 14) {
+        return sign | 0x7E; // saturate at 448
+    }
+    if m < 8 {
+        // E4M3 subnormal: biased exponent 0, value = m * 2^-9
+        sign | m as u8
+    } else {
+        let biased = (exp + 7) as u8;
+        sign | (biased << 3) | (m - 8) as u8
+    }
+}
+
+/// Decode one FP8 E4M3FN byte (see [`f32_to_e4m3`] for the format).
+pub fn e4m3_to_f32(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((b >> 3) & 0x0F) as i32;
+    let man = (b & 0x07) as f32;
+    if exp == 0x0F && (b & 0x07) == 0x07 {
+        return f32::NAN.copysign(sign);
+    }
+    let v = if exp == 0 { man * exp2i(-9) } else { (8.0 + man) * exp2i(exp - 10) };
+    sign * v
+}
+
+/// `2^e` as f32 for the small exponents the codec needs.
+fn exp2i(e: i32) -> f32 {
+    if (-126..=127).contains(&e) {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else if e > 127 {
+        f32::INFINITY
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for d in KvDtype::all() {
+            assert_eq!(KvDtype::parse(d.name()).unwrap(), d);
+            assert_eq!(format!("{d}"), d.name());
+        }
+        assert_eq!(KvDtype::parse("FP8E4M3").unwrap(), KvDtype::Fp8E4M3);
+        assert_eq!(KvDtype::parse("I8").unwrap(), KvDtype::Int8);
+        assert!(KvDtype::parse("f16").is_err());
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+    }
+
+    #[test]
+    fn e4m3_exact_code_points() {
+        // spot-check the format's anchor values both directions
+        assert_eq!(e4m3_to_f32(0x00), 0.0);
+        assert_eq!(e4m3_to_f32(0x01), 2f32.powi(-9)); // smallest subnormal
+        assert_eq!(e4m3_to_f32(0x08), 2f32.powi(-6)); // smallest normal
+        assert_eq!(e4m3_to_f32(0x7E), 448.0); // largest finite
+        assert_eq!(e4m3_to_f32(0xFE), -448.0);
+        assert!(e4m3_to_f32(0x7F).is_nan());
+        assert_eq!(f32_to_e4m3(448.0), 0x7E);
+        assert_eq!(f32_to_e4m3(-448.0), 0xFE);
+        assert_eq!(f32_to_e4m3(1.0), 0x38); // biased exp 7, mantissa 0
+        assert_eq!(f32_to_e4m3(1.75), 0x3E);
+        assert_eq!(f32_to_e4m3(0.0), 0x00);
+        assert!(e4m3_to_f32(f32_to_e4m3(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn e4m3_roundtrip_is_identity_on_all_finite_codes() {
+        for b in 0u16..=255 {
+            let b = b as u8;
+            if b & 0x7F == 0x7F {
+                continue; // NaN codes
+            }
+            let x = e4m3_to_f32(b);
+            let b2 = f32_to_e4m3(x);
+            // -0.0 encodes back to 0x80, +0.0 to 0x00; both decode equal
+            assert_eq!(e4m3_to_f32(b2).to_bits(), x.to_bits(), "code {b:#04x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_saturates_and_rounds_to_even() {
+        assert_eq!(f32_to_e4m3(1e30), 0x7E);
+        assert_eq!(f32_to_e4m3(-1e30), 0xFE);
+        assert_eq!(f32_to_e4m3(464.0), 0x7E); // tie at 448/480 midpoint -> even 14
+        assert_eq!(f32_to_e4m3(465.0), 0x7E); // above the tie: saturates too
+        // 1.0625 is the midpoint of 1.0 (m=8) and 1.125 (m=9): ties to 8
+        assert_eq!(f32_to_e4m3(1.0625), 0x38);
+        // 1.1875 is the midpoint of 1.125 (m=9) and 1.25 (m=10): ties to 10
+        assert_eq!(f32_to_e4m3(1.1875), 0x3A);
+        // below half the smallest subnormal: rounds to zero
+        assert_eq!(f32_to_e4m3(2f32.powi(-11)), 0x00);
+        assert_eq!(f32_to_e4m3(-2f32.powi(-11)), 0x80);
+    }
+
+    #[test]
+    fn int8_params_edges() {
+        let d = KvDtype::Int8;
+        // empty range (fresh page) yields the zero code
+        let p = d.params(f32::INFINITY, f32::NEG_INFINITY);
+        assert_eq!(p.scale, 0.0);
+        // degenerate single-value range: scale 0, zero reproduces exactly
+        let p = d.params(3.5, 3.5);
+        assert_eq!(p.scale, 0.0);
+        assert_eq!(p.zero, 3.5);
+        let (src, mut enc, mut dec) = (vec![3.5f32; 4], vec![0u8; 4], vec![0f32; 4]);
+        d.encode_slice(&src, p, &mut enc);
+        d.decode_slice(&enc, p, &mut dec);
+        assert_eq!(dec, src);
+        // full-extreme range must not overflow
+        let p = d.params(-f32::MAX, f32::MAX);
+        assert!(p.scale.is_finite() && p.scale > 0.0);
+    }
+
+    #[test]
+    fn roundtrip_error_within_bound() {
+        let vals = [
+            0.0f32, 1.0, -1.0, 0.37, -250.0, 1e-8, 3e4, -3e4, 1e-30, f32::MAX / 2.0,
+        ];
+        for d in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let p = d.params(lo, hi);
+            let mut enc = vec![0u8; vals.len()];
+            let mut dec = vec![0f32; vals.len()];
+            d.encode_slice(&vals, p, &mut enc);
+            d.decode_slice(&enc, p, &mut dec);
+            for (i, (&x, &y)) in vals.iter().zip(&dec).enumerate() {
+                let bound = d.error_bound(x, p);
+                assert!(
+                    (x - y).abs() <= bound,
+                    "{d} val[{i}]={x} decoded {y} err {} > bound {bound}",
+                    (x - y).abs()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_lo_hi_decode_near_exact() {
+        let d = KvDtype::Int8;
+        let (lo, hi) = (-7.25f32, 19.5f32);
+        let p = d.params(lo, hi);
+        let src = [lo, hi];
+        let mut enc = [0u8; 2];
+        let mut dec = [0f32; 2];
+        d.encode_slice(&src, p, &mut enc);
+        assert_eq!(enc[0], 0);
+        assert_eq!(enc[1], 255);
+        d.decode_slice(&enc, p, &mut dec);
+        assert_eq!(dec[0], lo, "q=0 must decode to the page minimum exactly");
+        assert!((dec[1] - hi).abs() <= p.scale * 0.501);
+    }
+}

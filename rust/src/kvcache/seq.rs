@@ -10,7 +10,7 @@
 
 use anyhow::{bail, Result};
 
-use super::page::{page_probs, PageId, PageMeta, RepBounds};
+use super::page::{page_probs, PageId, PageMeta, PageView, RepBounds};
 use super::pool::KvPool;
 
 /// One layer's view of a sequence's cache.
@@ -264,26 +264,27 @@ impl SeqCache {
         used
     }
 
-    /// Iterate `(k, v, len)` slab views of the selected pages, in
+    /// Iterate dtype-tagged [`PageView`]s of the selected pages, in
     /// selection order — the shared core of [`SeqCache::page_views`],
     /// [`SeqCache::page_views_into`] and the batched flat-view assembly in
-    /// `Engine::decode_batch`.  The views alias the pool slabs, so the
-    /// pool cannot be mutated while they live.
+    /// `Engine::decode_batch`.  The views alias the pool slabs (`f32`
+    /// master for the reference dtype, quantized bytes + per-page params
+    /// otherwise), so the pool cannot be mutated while they live.
     pub fn page_view_iter<'s, 'p: 's>(&'s self, layer: usize, pool: &'p KvPool,
                                       sel: &'s [usize])
-                                      -> impl Iterator<Item = (&'p [f32], &'p [f32], usize)> + 's {
+                                      -> impl Iterator<Item = PageView<'p>> + 's {
         let lc = &self.layers[layer];
         sel.iter().map(move |&i| {
             let page = &lc.table[i];
-            (pool.page_k(page.pool_id, page.len), pool.page_v(page.pool_id, page.len), page.len)
+            pool.page_view(page.pool_id, page.len)
         })
     }
 
-    /// Zero-copy twin of [`SeqCache::gather`]: collect `(k, v, len)` slab
-    /// views of the selected pages, in selection order, into `out` — no
-    /// copy, no capacity padding, no `valid` mask.
+    /// Zero-copy twin of [`SeqCache::gather`]: collect [`PageView`]s of
+    /// the selected pages, in selection order, into `out` — no copy, no
+    /// capacity padding, no `valid` mask.
     pub fn page_views<'p>(&self, layer: usize, pool: &'p KvPool, sel: &[usize],
-                          out: &mut Vec<(&'p [f32], &'p [f32], usize)>) {
+                          out: &mut Vec<PageView<'p>>) {
         out.clear();
         out.extend(self.page_view_iter(layer, pool, sel));
     }
@@ -344,15 +345,14 @@ pub const PAGE_VIEW_INLINE: usize = 32;
 /// holding engine-lifetime scratch.
 pub struct PageViewBuf<'p> {
     len: usize,
-    inline: [(&'p [f32], &'p [f32], usize); PAGE_VIEW_INLINE],
-    spill: Vec<(&'p [f32], &'p [f32], usize)>,
+    inline: [PageView<'p>; PAGE_VIEW_INLINE],
+    spill: Vec<PageView<'p>>,
 }
 
 impl<'p> PageViewBuf<'p> {
     /// Empty buffer (all-inline until [`PAGE_VIEW_INLINE`] views).
     pub fn new() -> Self {
-        const EMPTY: &[f32] = &[];
-        PageViewBuf { len: 0, inline: [(EMPTY, EMPTY, 0); PAGE_VIEW_INLINE], spill: Vec::new() }
+        PageViewBuf { len: 0, inline: [PageView::EMPTY; PAGE_VIEW_INLINE], spill: Vec::new() }
     }
 
     /// Drop every view (keeps the spill allocation for reuse).
@@ -361,9 +361,9 @@ impl<'p> PageViewBuf<'p> {
         self.spill.clear();
     }
 
-    /// Append one `(k, v, len)` page view, spilling to the heap past the
-    /// inline capacity.
-    pub fn push(&mut self, view: (&'p [f32], &'p [f32], usize)) {
+    /// Append one page view, spilling to the heap past the inline
+    /// capacity.
+    pub fn push(&mut self, view: PageView<'p>) {
         if self.spill.is_empty() && self.len < PAGE_VIEW_INLINE {
             self.inline[self.len] = view;
         } else {
@@ -389,7 +389,7 @@ impl<'p> PageViewBuf<'p> {
     }
 
     /// The collected views as one contiguous slice, in push order.
-    pub fn views(&self) -> &[(&'p [f32], &'p [f32], usize)] {
+    pub fn views(&self) -> &[PageView<'p>] {
         if self.spill.is_empty() {
             &self.inline[..self.len]
         } else {
@@ -406,7 +406,26 @@ impl Default for PageViewBuf<'_> {
 
 #[cfg(test)]
 mod tests {
+    use super::super::page::PageData;
     use super::*;
+
+    fn f32_view(len: usize, k: &[f32], v: &[f32]) -> PageView<'_> {
+        PageView { len, data: PageData::F32 { k, v } }
+    }
+
+    fn view_k<'p>(view: &PageView<'p>) -> &'p [f32] {
+        match view.data {
+            PageData::F32 { k, .. } => k,
+            PageData::Quant { .. } => panic!("expected an f32 view"),
+        }
+    }
+
+    fn view_v<'p>(view: &PageView<'p>) -> &'p [f32] {
+        match view.data {
+            PageData::F32 { v, .. } => v,
+            PageData::Quant { .. } => panic!("expected an f32 view"),
+        }
+    }
 
     fn mk() -> (SeqCache, KvPool) {
         (SeqCache::new(2, 4, 3), KvPool::new(64, 4, 3))
@@ -484,17 +503,17 @@ mod tests {
         let mut buf = PageViewBuf::new();
         assert!(buf.is_empty());
         for i in 0..PAGE_VIEW_INLINE {
-            buf.push((&backing[..2], &backing[2..], i));
+            buf.push(f32_view(i, &backing[..2], &backing[2..]));
         }
         assert_eq!(buf.len(), PAGE_VIEW_INLINE);
         assert_eq!(buf.views().len(), PAGE_VIEW_INLINE);
         // one past the inline capacity: spills, stays contiguous, keeps order
-        buf.push((&backing[..1], &backing[..1], 99));
+        buf.push(f32_view(99, &backing[..1], &backing[..1]));
         assert_eq!(buf.len(), PAGE_VIEW_INLINE + 1);
         let views = buf.views();
         assert_eq!(views.len(), PAGE_VIEW_INLINE + 1);
-        assert_eq!(views[0].2, 0);
-        assert_eq!(views[PAGE_VIEW_INLINE].2, 99);
+        assert_eq!(views[0].len, 0);
+        assert_eq!(views[PAGE_VIEW_INLINE].len, 99);
         buf.clear();
         assert!(buf.is_empty());
         assert!(buf.views().is_empty());
@@ -512,6 +531,35 @@ mod tests {
         let mut buf = PageViewBuf::new();
         sc.page_views_into(0, &pool, &sel, &mut buf);
         assert_eq!(buf.views(), &vec_views[..]);
+    }
+
+    #[test]
+    fn quantized_pool_views_dequantize_like_gather() {
+        // An int8 pool: `page_views` must hand out Quant-tagged views whose
+        // `copy_*_into` bridge reproduces `gather`'s dequantized bytes.
+        use super::super::quant::KvDtype;
+        let mut sc = SeqCache::new(1, 4, 3);
+        let mut pool = KvPool::new_with_dtype(8, 4, 3, KvDtype::Int8);
+        for pos in 0..6 {
+            let x = pos as f32 * 1.5 - 3.0;
+            sc.append(0, &mut pool, pos, &[x; 3], &[-x; 3], false, 0).unwrap();
+        }
+        let sel = [0usize, 1];
+        let (mut k, mut v, mut valid) = (Vec::new(), Vec::new(), Vec::new());
+        let used = sc.gather(0, &pool, &sel, 8, &mut k, &mut v, &mut valid);
+        let mut views = Vec::new();
+        sc.page_views(0, &pool, &sel, &mut views);
+        let mut off = 0usize;
+        for w in &views {
+            assert!(matches!(w.data, PageData::Quant { .. }), "int8 pool must tag views Quant");
+            let (mut dk, mut dv) = (vec![0.0f32; w.len * 3], vec![0.0f32; w.len * 3]);
+            w.copy_k_into(&mut dk);
+            w.copy_v_into(&mut dv);
+            assert_eq!(dk[..], k[off * 3..(off + w.len) * 3]);
+            assert_eq!(dv[..], v[off * 3..(off + w.len) * 3]);
+            off += w.len;
+        }
+        assert_eq!(off, used);
     }
 
     #[test]
@@ -538,10 +586,10 @@ mod tests {
         let mut views = Vec::new();
         sc.page_views(0, &pool, &sel, &mut views);
         assert_eq!(views.len(), 2);
-        assert_eq!(views[0].2, 4);
-        assert_eq!(views[1].2, 3);
-        let flat_k: Vec<f32> = views.iter().flat_map(|&(k, _, _)| k.iter().copied()).collect();
-        let flat_v: Vec<f32> = views.iter().flat_map(|&(_, v, _)| v.iter().copied()).collect();
+        assert_eq!(views[0].len, 4);
+        assert_eq!(views[1].len, 3);
+        let flat_k: Vec<f32> = views.iter().flat_map(|w| view_k(w).iter().copied()).collect();
+        let flat_v: Vec<f32> = views.iter().flat_map(|w| view_v(w).iter().copied()).collect();
         assert_eq!(flat_k, k[..used * 3]);
         assert_eq!(flat_v, v[..used * 3]);
     }

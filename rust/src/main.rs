@@ -81,6 +81,7 @@ fn print_help() {
          common flags: --backend sim|xla  --artifacts DIR\n\
            --policy dense|sink|h2o|quest|raas\n\
            --budget N  --alpha A  --seed S  --out results/\n\
+           --kv-dtype f32|fp8|int8 (KV-slab storage; f32 is bit-exact)\n\
          \n\
          the default `sim` backend is a deterministic pure-Rust surrogate\n\
          (no artifacts needed); `xla` drives the PJRT/HLO path and needs a\n\

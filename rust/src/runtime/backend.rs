@@ -15,6 +15,7 @@
 use anyhow::{bail, Result};
 
 use crate::config::ModelSpec;
+use crate::kvcache::PageView;
 
 /// Output of one layer-qkv call.
 pub struct Qkv {
@@ -57,21 +58,25 @@ pub struct AttnBatchItem<'a> {
 
 /// Zero-copy input to the paged attention entry points (DESIGN.md §2,
 /// paged route): the selected pages' K/V viewed *in place* in the pool
-/// slabs — no gather copy, no capacity padding, no `valid` mask.
+/// slabs — no gather copy, no capacity padding, no `valid` mask.  Views
+/// are dtype-tagged ([`PageView`]): `f32` pools hand out master-slab
+/// slices, quantized pools hand out byte slices plus each page's affine
+/// dequantization params, and the backend decides where to dequantize
+/// (scratch arena in `SimBackend`, fused in a native kernel).
 pub struct PagedAttnInput<'a> {
     /// hidden `[d_model]`.
     pub h: &'a [f32],
     /// query `[n_heads * head_dim]`.
     pub q: &'a [f32],
-    /// Selected pages in selection order: `(k, v, len)` with `k`/`v` of
-    /// `[len * kv_dim]` — `len` live slots, nothing padded.
-    pub pages: &'a [(&'a [f32], &'a [f32], usize)],
+    /// Selected pages in selection order, `len` live slots each, nothing
+    /// padded.
+    pub pages: &'a [PageView<'a>],
 }
 
 impl PagedAttnInput<'_> {
     /// Total live slots across the selected pages.
     pub fn n_slots(&self) -> usize {
-        self.pages.iter().map(|&(_, _, len)| len).sum()
+        self.pages.iter().map(|p| p.len).sum()
     }
 }
 
@@ -329,13 +334,13 @@ pub trait Backend: std::fmt::Debug {
         let mut v_sel = vec![0.0f32; capacity * kv_dim];
         let mut valid = vec![0.0f32; capacity];
         let mut used = 0usize;
-        for &(k, v, len) in input.pages {
-            k_sel[used * kv_dim..(used + len) * kv_dim].copy_from_slice(k);
-            v_sel[used * kv_dim..(used + len) * kv_dim].copy_from_slice(v);
-            for s in 0..len {
+        for page in input.pages {
+            page.copy_k_into(&mut k_sel[used * kv_dim..(used + page.len) * kv_dim]);
+            page.copy_v_into(&mut v_sel[used * kv_dim..(used + page.len) * kv_dim]);
+            for s in 0..page.len {
                 valid[used + s] = 1.0;
             }
-            used += len;
+            used += page.len;
         }
         self.layer_attn_mlp(layer, capacity, input.h, input.q, &k_sel, &v_sel, &valid)
     }

@@ -47,6 +47,7 @@ use anyhow::{bail, Result};
 use super::backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, PrefillChunkOut,
                      PrefillOut, Qkv};
 use crate::config::{ArtifactMeta, ModelSpec};
+use crate::kvcache::{PageData, PageView};
 use crate::sim::profiles::{ModelProfile, MODELS};
 
 /// Period (in tokens) of milestone emission, mirroring the 9-token reasoning
@@ -110,6 +111,11 @@ pub struct SimBackend {
     /// the backend trait takes `&self` on the hot path.  `RefCell` (not a
     /// lock) — backends live on one replica thread.
     memo: RefCell<Vec<LayerMemo>>,
+    /// Reusable dequantization scratch for the paged route: quantized
+    /// [`PageView`]s decode into this arena at entry, `f32` views stay
+    /// zero-copy, and the INVARIANT-pinned attention loops below run over
+    /// plain `f32` slices either way.  Same `RefCell` discipline as `memo`.
+    dequant: RefCell<Vec<f32>>,
 }
 
 impl SimBackend {
@@ -137,6 +143,7 @@ impl SimBackend {
             embed_dirs: Vec::new(),
             mix_bias: Vec::new(),
             memo: RefCell::new((0..n_layers).map(|_| LayerMemo::default()).collect()),
+            dequant: RefCell::new(Vec::new()),
         };
         let mut out_dirs = Vec::with_capacity(b.spec.vocab * b.spec.d_model);
         let mut embed_dirs = Vec::with_capacity(b.spec.vocab * b.spec.d_model);
@@ -445,7 +452,8 @@ impl SimBackend {
 
     /// Paged twin of [`SimBackend::softmax_weights`]: softmax weights for
     /// one (query-head slice, kv group `g`) pair over an item's live slots,
-    /// read in place page by page, written into `dst` (`[n_slots]`).
+    /// read page by page from the resolved `f32` views
+    /// ([`resolve_pages`]), written into `dst` (`[n_slots]`).
     ///
     /// INVARIANT (do not edit one side alone): this must stay bit-identical
     /// to the corresponding per-head pass of both `layer_attn_mlp_paged`
@@ -456,14 +464,14 @@ impl SimBackend {
     /// the same bits.  Divergence is caught by
     /// `tests::paged_attn_matches_gathered_bitwise` and
     /// `rust/tests/paged_attention.rs`.
-    fn paged_softmax_weights(&self, inp: &PagedAttnInput<'_>, qh: &[f32], g: usize,
+    fn paged_softmax_weights(&self, pages: &[(&[f32], &[f32], usize)], qh: &[f32], g: usize,
                              dst: &mut [f32]) {
         let hd = self.spec.head_dim;
         let kv_dim = self.spec.n_kv_heads * hd;
         let scale = 1.0 / (hd as f32).sqrt();
         let mut max = f32::NEG_INFINITY;
         let mut slot = 0usize;
-        for &(pk, _, len) in inp.pages {
+        for &(pk, _, len) in pages {
             for t in 0..len {
                 let ks = &pk[t * kv_dim + g * hd..t * kv_dim + (g + 1) * hd];
                 let mut dot = 0.0f32;
@@ -500,10 +508,10 @@ impl SimBackend {
     }
 
     /// Paged twin of [`SimBackend::attn_weights`]: per-head softmax weights
-    /// `[n_heads * n_slots]` for one item, with the same bitwise-detected
-    /// head/kv-group collapse.  Returns whether all heads in each kv group
-    /// carry identical rows.
-    fn paged_attn_weights(&self, inp: &PagedAttnInput<'_>, n_slots: usize,
+    /// `[n_heads * n_slots]` for one item over the resolved `f32` page
+    /// views, with the same bitwise-detected head/kv-group collapse.
+    /// Returns whether all heads in each kv group carry identical rows.
+    fn paged_attn_weights(&self, q: &[f32], pages: &[(&[f32], &[f32], usize)], n_slots: usize,
                           weights: &mut Vec<f32>) -> bool {
         let s = &self.spec;
         let hd = s.head_dim;
@@ -511,18 +519,18 @@ impl SimBackend {
         let group = s.n_heads / s.n_kv_heads;
         weights.clear();
         weights.resize(s.n_heads * n_slots, 0.0);
-        let q0 = &inp.q[..hd];
-        let q_uniform = (1..s.n_heads).all(|h| bits_eq(&inp.q[h * hd..(h + 1) * hd], q0));
+        let q0 = &q[..hd];
+        let q_uniform = (1..s.n_heads).all(|h| bits_eq(&q[h * hd..(h + 1) * hd], q0));
         if !q_uniform {
             for head in 0..s.n_heads {
                 let g = head / group;
-                let qh = &inp.q[head * hd..(head + 1) * hd];
-                self.paged_softmax_weights(inp, qh, g,
+                let qh = &q[head * hd..(head + 1) * hd];
+                self.paged_softmax_weights(pages, qh, g,
                                            &mut weights[head * n_slots..(head + 1) * n_slots]);
             }
             return false;
         }
-        let k_uniform = inp.pages.iter().all(|&(pk, _, len)| {
+        let k_uniform = pages.iter().all(|&(pk, _, len)| {
             (0..len).all(|t| {
                 let base = t * kv_dim;
                 (1..s.n_kv_heads).all(|g| {
@@ -533,7 +541,7 @@ impl SimBackend {
         let distinct = if k_uniform { 1 } else { s.n_kv_heads };
         for g in 0..distinct {
             let head0 = g * group;
-            self.paged_softmax_weights(inp, q0, g,
+            self.paged_softmax_weights(pages, q0, g,
                                        &mut weights[head0 * n_slots..(head0 + 1) * n_slots]);
         }
         // broadcast the computed rows to the remaining heads
@@ -558,14 +566,71 @@ fn bits_eq(a: &[f32], b: &[f32]) -> bool {
     a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
-/// Bitwise page-list equality on the weight-relevant parts (key slices and
-/// live-slot structure) — the paged-path reuse predicate.  Values are
-/// deliberately not compared: weights don't depend on them.
-fn pages_eq(a: &[(&[f32], &[f32], usize)], b: &[(&[f32], &[f32], usize)]) -> bool {
+/// Bitwise page-list equality on the weight-relevant parts (key storage,
+/// dequantization params and live-slot structure) — the paged-path reuse
+/// predicate, checked on the ORIGINAL dtype-tagged views before any
+/// dequantization (arena copies have fresh storage, but dequantization is
+/// a pure function of these inputs, so equal inputs give equal weights).
+/// Values are deliberately not compared: weights don't depend on them.
+fn pages_eq(a: &[PageView<'_>], b: &[PageView<'_>]) -> bool {
     a.len() == b.len()
-        && a.iter()
-            .zip(b)
-            .all(|(&(ak, _, alen), &(bk, _, blen))| alen == blen && bits_eq(ak, bk))
+        && a.iter().zip(b).all(|(x, y)| {
+            x.len == y.len
+                && match (&x.data, &y.data) {
+                    (PageData::F32 { k: ak, .. }, PageData::F32 { k: bk, .. }) => bits_eq(ak, bk),
+                    (
+                        PageData::Quant { dtype: ad, k: ak, k_params: ap, .. },
+                        PageData::Quant { dtype: bd, k: bk, k_params: bp, .. },
+                    ) => {
+                        ad == bd
+                            && ap.scale.to_bits() == bp.scale.to_bits()
+                            && ap.zero.to_bits() == bp.zero.to_bits()
+                            && ak == bk
+                    }
+                    _ => false,
+                }
+        })
+}
+
+/// Resolve dtype-tagged page views into plain `f32` `(k, v, len)` views
+/// for the attention loops: `F32` pages stay zero-copy (they alias the
+/// pool's master slab), quantized pages decode into `arena` — one
+/// reusable allocation per backend, cleared per call.  Decoding here is
+/// bit-identical to `KvPool::read_page`'s gather-route decoding (same
+/// `decode_slice`), which is what keeps paged ≡ gathered under every
+/// dtype.
+fn resolve_pages<'a>(views: &'a [PageView<'a>], arena: &'a mut Vec<f32>)
+                     -> Vec<(&'a [f32], &'a [f32], usize)> {
+    arena.clear();
+    // pass 1: decode every quantized page, recording its arena offset
+    // (slices are taken only after the arena stops growing)
+    let mut offs = Vec::with_capacity(views.len());
+    for w in views {
+        match w.data {
+            PageData::F32 { .. } => offs.push(usize::MAX),
+            PageData::Quant { dtype, k, v, k_params, v_params } => {
+                let off = arena.len();
+                let n = k.len();
+                arena.resize(off + 2 * n, 0.0);
+                let (ka, va) = arena[off..off + 2 * n].split_at_mut(n);
+                dtype.decode_slice(k, k_params, ka);
+                dtype.decode_slice(v, v_params, va);
+                offs.push(off);
+            }
+        }
+    }
+    let arena = &arena[..];
+    views
+        .iter()
+        .zip(offs)
+        .map(|(w, off)| match w.data {
+            PageData::F32 { k, v } => (k, v, w.len),
+            PageData::Quant { k, .. } => {
+                let n = k.len();
+                (&arena[off..off + n], &arena[off + n..off + 2 * n], w.len)
+            }
+        })
+        .collect()
 }
 
 impl Backend for SimBackend {
@@ -925,6 +990,8 @@ impl Backend for SimBackend {
         let group = s.n_heads / s.n_kv_heads;
         let scale = 1.0 / (hd as f32).sqrt();
         let n_slots = inp.n_slots();
+        let mut arena = self.dequant.borrow_mut();
+        let pages = resolve_pages(inp.pages, &mut arena);
         let mut attn = vec![0.0f32; s.n_heads * hd];
         let mut scores = vec![0.0f32; n_slots];
         for head in 0..s.n_heads {
@@ -932,7 +999,7 @@ impl Backend for SimBackend {
             let qh = &inp.q[head * hd..(head + 1) * hd];
             let mut max = f32::NEG_INFINITY;
             let mut slot = 0usize;
-            for &(pk, _, len) in inp.pages {
+            for &(pk, _, len) in &pages {
                 for t in 0..len {
                     let ks = &pk[t * kv_dim + g * hd..t * kv_dim + (g + 1) * hd];
                     let mut dot = 0.0f32;
@@ -961,7 +1028,7 @@ impl Backend for SimBackend {
             }
             let out = &mut attn[head * hd..(head + 1) * hd];
             let mut slot = 0usize;
-            for &(_, pv, len) in inp.pages {
+            for &(_, pv, len) in &pages {
                 for t in 0..len {
                     let w = scores[slot] / denom;
                     slot += 1;
@@ -997,13 +1064,19 @@ impl Backend for SimBackend {
         let mut n_slots = 0usize;
         let mut owner: Option<usize> = None;
         for (idx, it) in items.iter().enumerate() {
+            // reuse is detected on the ORIGINAL dtype-tagged views (the
+            // arena below is cleared per item, so its copies carry no
+            // identity); dequantization is pure, so equal views ⇒ equal
+            // resolved pages ⇒ equal weights
             let reuse = owner.is_some_and(|p| {
                 let pv = &items[p];
                 bits_eq(pv.q, it.q) && pages_eq(pv.pages, it.pages)
             });
+            let mut arena = self.dequant.borrow_mut();
+            let pages = resolve_pages(it.pages, &mut arena);
             if !reuse {
                 n_slots = it.n_slots();
-                grouped = self.paged_attn_weights(it, n_slots, &mut weights);
+                grouped = self.paged_attn_weights(it.q, &pages, n_slots, &mut weights);
                 owner = Some(idx);
             }
             let mut attn = vec![0.0f32; s.n_heads * hd];
@@ -1017,7 +1090,7 @@ impl Backend for SimBackend {
                     let w = &weights[head0 * n_slots..(head0 + 1) * n_slots];
                     out_g.fill(0.0);
                     let mut slot = 0usize;
-                    for &(_, pv, len) in it.pages {
+                    for &(_, pv, len) in &pages {
                         for t in 0..len {
                             let wv = w[slot];
                             slot += 1;
@@ -1040,7 +1113,7 @@ impl Backend for SimBackend {
                     let w = &weights[head * n_slots..(head + 1) * n_slots];
                     let out = &mut attn[head * hd..(head + 1) * hd];
                     let mut slot = 0usize;
-                    for &(_, pv, len) in it.pages {
+                    for &(_, pv, len) in &pages {
                         for t in 0..len {
                             let wv = w[slot];
                             slot += 1;
@@ -1396,8 +1469,10 @@ mod tests {
             let owned = make_pages(&b, layer, &lens);
             let n_slots: usize = lens.iter().sum();
             let qkv = b.layer_qkv(layer, &h, n_slots).unwrap();
-            let views: Vec<(&[f32], &[f32], usize)> =
-                owned.iter().map(|(k, v, len)| (&k[..], &v[..], *len)).collect();
+            let views: Vec<PageView<'_>> = owned
+                .iter()
+                .map(|(k, v, len)| PageView { len: *len, data: PageData::F32 { k, v } })
+                .collect();
             let inp = PagedAttnInput { h: &h, q: &qkv.q, pages: &views };
             let paged = b.layer_attn_mlp_paged(layer, &inp).unwrap();
             for capacity in [n_slots, n_slots + 7, 2 * n_slots + 64] {
@@ -1412,6 +1487,77 @@ mod tests {
     }
 
     #[test]
+    fn quantized_paged_matches_dequantized_gather_bitwise() {
+        // Quant-tagged views through the paged route must reproduce the
+        // gathered reference over the SAME dequantized bytes exactly: the
+        // arena decode and the gather-route decode share `decode_slice`,
+        // so paged ≡ gathered holds under every dtype.
+        use crate::kvcache::KvDtype;
+        let b = backend();
+        let s = b.spec().clone();
+        let kv_dim = s.n_kv_heads * s.head_dim;
+        let h = b.embed_tok(2).unwrap();
+        for dtype in [KvDtype::Fp8E4M3, KvDtype::Int8] {
+            let owned = make_pages(&b, 0, &[4, 3, 1]);
+            let n_slots: usize = owned.iter().map(|(_, _, len)| len).sum();
+            let qkv = b.layer_qkv(0, &h, n_slots).unwrap();
+            // per-page quantization exactly as the pool does it: params from
+            // the page's own min/max, one byte per element
+            let quantized: Vec<(Vec<u8>, Vec<u8>, _, _, usize)> = owned
+                .iter()
+                .map(|(k, v, len)| {
+                    let range = |xs: &[f32]| {
+                        let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+                        let hi = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        dtype.params(lo, hi)
+                    };
+                    let (kp, vp) = (range(k), range(v));
+                    let mut qk = vec![0u8; k.len()];
+                    let mut qv = vec![0u8; v.len()];
+                    dtype.encode_slice(k, kp, &mut qk);
+                    dtype.encode_slice(v, vp, &mut qv);
+                    (qk, qv, kp, vp, *len)
+                })
+                .collect();
+            let views: Vec<PageView<'_>> = quantized
+                .iter()
+                .map(|(qk, qv, kp, vp, len)| PageView {
+                    len: *len,
+                    data: PageData::Quant { dtype, k: qk, v: qv, k_params: *kp, v_params: *vp },
+                })
+                .collect();
+            let inp = PagedAttnInput { h: &h, q: &qkv.q, pages: &views };
+            let paged = b.layer_attn_mlp_paged(0, &inp).unwrap();
+            // gathered reference over the dequantized bytes
+            let capacity = n_slots + 5;
+            let mut k_sel = vec![0.0f32; capacity * kv_dim];
+            let mut v_sel = vec![0.0f32; capacity * kv_dim];
+            let mut valid = vec![0.0f32; capacity];
+            let mut used = 0usize;
+            for w in &views {
+                w.copy_k_into(&mut k_sel[used * kv_dim..(used + w.len) * kv_dim]);
+                w.copy_v_into(&mut v_sel[used * kv_dim..(used + w.len) * kv_dim]);
+                for t in 0..w.len {
+                    valid[used + t] = 1.0;
+                }
+                used += w.len;
+            }
+            let gathered = b
+                .layer_attn_mlp(0, capacity, &h, &qkv.q, &k_sel, &v_sel, &valid)
+                .unwrap();
+            assert_eq!(paged, gathered, "quantized paged diverged from gathered ({dtype})");
+            // batch path with a bit-identical twin: the pages_eq reuse
+            // predicate must fire on Quant views and stay bit-identical
+            let items =
+                vec![PagedAttnInput { h: &h, q: &qkv.q, pages: &views },
+                     PagedAttnInput { h: &h, q: &qkv.q, pages: &views }];
+            let batched = b.layer_attn_mlp_paged_batch(0, &items).unwrap();
+            assert_eq!(batched[0], paged);
+            assert_eq!(batched[1], paged);
+        }
+    }
+
+    #[test]
     fn paged_batch_matches_per_item_bitwise() {
         // items 0 and 1 share bit-identical (q, pages) — exercising the
         // weight-reuse path — item 2 differs in pages, item 3 in q
@@ -1422,10 +1568,14 @@ mod tests {
         let pages_b = make_pages(&b, 0, &[2, 2, 2]);
         let q_a = b.layer_qkv(0, &h1, 7).unwrap().q;
         let q_b = b.layer_qkv(0, &h2, 11).unwrap().q;
-        let va: Vec<(&[f32], &[f32], usize)> =
-            pages_a.iter().map(|(k, v, len)| (&k[..], &v[..], *len)).collect();
-        let vb: Vec<(&[f32], &[f32], usize)> =
-            pages_b.iter().map(|(k, v, len)| (&k[..], &v[..], *len)).collect();
+        let va: Vec<PageView<'_>> = pages_a
+            .iter()
+            .map(|(k, v, len)| PageView { len: *len, data: PageData::F32 { k, v } })
+            .collect();
+        let vb: Vec<PageView<'_>> = pages_b
+            .iter()
+            .map(|(k, v, len)| PageView { len: *len, data: PageData::F32 { k, v } })
+            .collect();
         let items = vec![
             PagedAttnInput { h: &h1, q: &q_a, pages: &va },
             PagedAttnInput { h: &h2, q: &q_a, pages: &va },

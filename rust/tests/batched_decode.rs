@@ -153,6 +153,81 @@ fn score_log_is_pinned_per_step_and_page_ordered() {
 }
 
 #[test]
+fn forked_sequences_decode_batched_bitwise_with_rep_score_sharing() {
+    // `decode_batch` dedups Quest/RaaS rep-score work across sequences
+    // whose logical page tables resolve to the same physical pool pages (a
+    // fork family holding refcounted prefill pages).  The cache must be
+    // invisible: a parent and its fork decoded in ONE batch produce
+    // bit-identical tokens and Figure-3 logs to an independent
+    // single-sequence decode, for every policy, while the
+    // `decode.rep_score_shared` counter proves the dedup engaged.
+    let steps = 8u64;
+    let prompt: Vec<u32> = (0..70).map(|i| 1 + (i % 40) as u32).collect();
+    let to_bits = |log: &Vec<(u64, Vec<(usize, f32)>)>| -> Vec<(u64, Vec<(usize, u32)>)> {
+        log.iter()
+            .map(|(now, e)| (*now, e.iter().map(|&(p, pr)| (p, pr.to_bits())).collect()))
+            .collect()
+    };
+    for policy in PolicyKind::all() {
+        // independent single-sequence reference
+        let mut ind = engine(policy, 96);
+        let mut iseq = ind.new_seq();
+        let ifirst = ind.prefill_seq(&mut iseq, &prompt).expect("prefill");
+        let mut ilog: Vec<(u64, Vec<(usize, f32)>)> = Vec::new();
+        let mut itokens = vec![ifirst];
+        let mut tok = ifirst;
+        for step in 1..=steps {
+            tok = ind.decode_step(&mut iseq, tok, step, Some(&mut ilog)).expect("decode");
+            itokens.push(tok);
+        }
+        ind.release_seq(&mut iseq);
+        assert_eq!(ind.pool().allocated_pages(), 0);
+
+        // parent + fork decoded together in one batch
+        let mut e = engine(policy, 96);
+        let mut parent = e.new_seq();
+        let first = e.prefill_seq(&mut parent, &prompt).expect("prefill");
+        assert_eq!(first, ifirst, "{policy:?}: first token diverged");
+        let fork = e.fork_seq(&parent);
+        let mut seqs = vec![parent, fork];
+        let mut tokens = vec![first; 2];
+        let mut produced: Vec<Vec<u32>> = vec![vec![first]; 2];
+        let mut logs: Vec<Vec<(u64, Vec<(usize, f32)>)>> = vec![Vec::new(); 2];
+        for step in 1..=steps {
+            let mut entries: Vec<BatchEntry<'_>> = seqs
+                .iter_mut()
+                .zip(logs.iter_mut())
+                .enumerate()
+                .map(|(i, (seq, log))| BatchEntry {
+                    seq,
+                    token: tokens[i],
+                    now: step,
+                    log: Some(log),
+                })
+                .collect();
+            let results = e.decode_batch(&mut entries);
+            drop(entries);
+            for (i, r) in results.into_iter().enumerate() {
+                tokens[i] = r.expect("batched decode step");
+                produced[i].push(tokens[i]);
+            }
+        }
+        for (i, who) in ["parent", "fork"].iter().enumerate() {
+            assert_eq!(produced[i], itokens, "{policy:?}: {who} tokens diverged in batch");
+            assert_eq!(to_bits(&logs[i]), to_bits(&ilog), "{policy:?}: {who} log diverged");
+        }
+        assert!(
+            e.metrics.counter("decode.rep_score_shared") > 0,
+            "{policy:?}: shared physical pages + identical queries must hit the score cache"
+        );
+        for mut seq in seqs {
+            e.release_seq(&mut seq);
+        }
+        assert_eq!(e.pool().allocated_pages(), 0, "shared pool must drain");
+    }
+}
+
+#[test]
 fn batched_serving_path_matches_sequential_generate() {
     // End to end through the coordinator: Batcher -> EngineBackend ->
     // step_batch -> decode_batch must answer exactly what per-request

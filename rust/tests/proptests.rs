@@ -51,6 +51,56 @@ fn prop_pool_never_over_allocates() {
 }
 
 // ---------------------------------------------------------------------------
+// quantization codecs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quant_roundtrip_error_within_bound() {
+    // Int8/Fp8E4M3 absolute reconstruction error stays within the dtype's
+    // published `error_bound` on adversarial (inf/NaN-free) inputs: random
+    // signs, magnitudes spanning ~60 decades, exact zeros, and pages whose
+    // running range is pinned to a ±1e30 extreme — the large-dynamic-range
+    // regime where a wrong scale or an overflowing affine would blow up.
+    use raas::kvcache::KvDtype;
+    forall("quant_roundtrip", |rng| {
+        let n = rng.range(1, 65);
+        let mut vals: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.chance(0.1) {
+                    0.0
+                } else {
+                    let mag = 10f64.powf(rng.normal() * 10.0) as f32;
+                    let s = if rng.chance(0.5) { -1.0 } else { 1.0 };
+                    (s * mag).clamp(-1e30, 1e30)
+                }
+            })
+            .collect();
+        if rng.chance(0.3) {
+            vals[0] = if rng.chance(0.5) { -1e30 } else { 1e30 };
+        }
+        for d in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let p = d.params(lo, hi);
+            assert!(p.scale.is_finite(), "{d}: params must stay finite");
+            let mut enc = vec![0u8; vals.len()];
+            let mut dec = vec![0f32; vals.len()];
+            d.encode_slice(&vals, p, &mut enc);
+            d.decode_slice(&enc, p, &mut dec);
+            for (i, (&x, &y)) in vals.iter().zip(&dec).enumerate() {
+                assert!(y.is_finite(), "{d}: decode must stay finite");
+                let bound = d.error_bound(x, p);
+                assert!(
+                    (x - y).abs() <= bound,
+                    "{d} val[{i}]={x:e} decoded {y:e} err {:e} > bound {bound:e}",
+                    (x - y).abs()
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
 // sequence cache invariants
 // ---------------------------------------------------------------------------
 
