@@ -5,7 +5,7 @@ to the L KV slots the coordinator gathered for it (the selected pages under
 Quest/RaaS, or the full resident cache under Dense/Sink/H2O), padded to a
 static slot capacity with ``valid == 0`` entries.
 
-TPU mapping (see DESIGN.md §7): the CUDA original streams KV pages through
+TPU mapping (see DESIGN.md §8): the CUDA original streams KV pages through
 shared memory with warp-level softmax; here the HBM→VMEM schedule is the
 BlockSpec + the ``block_l`` inner loop (flash-style online softmax over slot
 blocks), and the per-block score/weighted-sum contractions are MXU-shaped

@@ -5,7 +5,6 @@
 //!     cargo bench --bench batcher_router
 
 use std::sync::mpsc::channel;
-use std::time::Instant;
 
 use anyhow::Result;
 use raas::bench::{Bencher, BenchConfig};
@@ -42,13 +41,7 @@ fn main() {
             let mut batcher =
                 Batcher::new(NullBackend, BatcherConfig { max_batch: batch, ..Default::default() });
             for id in 0..batch as u64 {
-                batcher.submit(Request {
-                    id,
-                    prompt: vec![1, 2, 3],
-                    max_new: 64,
-                    submitted: Instant::now(),
-                    reply: tx.clone(),
-                });
+                batcher.submit(Request::new(id, vec![1, 2, 3], 64, tx.clone()));
             }
             // 64 scheduler iterations over `batch` live sequences
             let mut steps = 0;
@@ -66,13 +59,7 @@ fn main() {
         let cfg = BatcherConfig { max_batch: 8, ..Default::default() };
         let mut batcher = Batcher::new(NullBackend, cfg);
         for id in 0..1024u64 {
-            batcher.submit(Request {
-                id,
-                prompt: vec![1],
-                max_new: 4,
-                submitted: Instant::now(),
-                reply: tx.clone(),
-            });
+            batcher.submit(Request::new(id, vec![1], 4, tx.clone()));
         }
         batcher.run_to_completion();
         batcher.completed

@@ -77,22 +77,18 @@ fn stall_run(budget: Option<usize>, concurrency: usize, n_long: usize, long_len:
              spec: &CorpusSpec) -> (Vec<f64>, f64) {
     let engine = mk_engine();
     let mut b = Batcher::new(
-        EngineBackend { engine, pages_per_seq_estimate: 64 },
+        EngineBackend::new(engine),
         BatcherConfig {
             max_batch: 2 + n_long,
             prefill_token_budget: budget,
             prefill_concurrency: concurrency,
+            ..Default::default()
         },
     );
     let (tx, _rx) = channel::<Response>();
     for id in 0..2u64 {
-        b.submit(Request {
-            id,
-            prompt: prompt_of(8, spec),
-            max_new: 100_000, // decoders outlive the measurement window
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        });
+        // decoders outlive the measurement window
+        b.submit(Request::new(id, prompt_of(8, spec), 100_000, tx.clone()));
     }
     // admit the decoders and take a few steady-state steps
     for _ in 0..3 {
@@ -100,13 +96,7 @@ fn stall_run(budget: Option<usize>, concurrency: usize, n_long: usize, long_len:
     }
     let t_submit = Instant::now();
     for i in 0..n_long as u64 {
-        b.submit(Request {
-            id: 99 + i,
-            prompt: prompt_of(long_len, spec),
-            max_new: 2,
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        });
+        b.submit(Request::new(99 + i, prompt_of(long_len, spec), 2, tx.clone()));
     }
     let mut ticks = Vec::new();
     loop {
@@ -135,23 +125,18 @@ fn stall_run(budget: Option<usize>, concurrency: usize, n_long: usize, long_len:
 fn coadmit_run(concurrency: usize, lens: &[usize], spec: &CorpusSpec) -> (Vec<f64>, f64) {
     let engine = mk_engine();
     let mut b = Batcher::new(
-        EngineBackend { engine, pages_per_seq_estimate: 64 },
+        EngineBackend::new(engine),
         BatcherConfig {
             max_batch: lens.len(),
             prefill_token_budget: Some(CHUNK),
             prefill_concurrency: concurrency,
+            ..Default::default()
         },
     );
     let (tx, rx) = channel::<Response>();
     let t0 = Instant::now();
     for (id, &len) in lens.iter().enumerate() {
-        b.submit(Request {
-            id: id as u64,
-            prompt: prompt_of(len, spec),
-            max_new: 1,
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        });
+        b.submit(Request::new(id as u64, prompt_of(len, spec), 1, tx.clone()));
     }
     b.run_to_completion();
     let makespan = t0.elapsed().as_secs_f64();

@@ -1,0 +1,257 @@
+//! Robustness benchmark (ISSUE 8): serving goodput and tail latency under
+//! injected fault rates, plus the park→resume overhead of the two
+//! preemption modes.
+//!
+//!     cargo bench --bench robustness              # full run
+//!     cargo bench --bench robustness -- --test    # CI smoke
+//!
+//! Writes `results/BENCH_robustness.json` (uploaded by the CI bench-smoke
+//! job).  Two sections:
+//!
+//!  * `faults/rateNN` — a fixed request mix served through
+//!    `Batcher<StepFaultInjector<EngineBackend>>` at overall fault rates
+//!    0% / 5% / 20%.  A rate `r` means: each admission faults with
+//!    probability `r`, and each decode step / page allocation with `r/20`
+//!    (alloc faults force real preemptions mid-run).  Reported: goodput
+//!    (completed tokens per wall-second — failures produce nothing),
+//!    p50/p99 job-completion time over completed requests, and the
+//!    done/failed/shed/preempted tallies.
+//!  * `preempt/{mode}/pN` — the cost of one park→resume cycle at the
+//!    `EngineBackend` layer: `restore` pays two page-copy passes
+//!    (swap-out + swap-in), `recompute` pays a free park and a
+//!    prompt+history replay on resume.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use raas::config::{EngineConfig, PolicyKind, PreemptMode};
+use raas::coordinator::batcher::{Batcher, BatcherConfig, StepBackend};
+use raas::coordinator::request::{Outcome, Request, Response};
+use raas::coordinator::server::EngineBackend;
+use raas::engine::Engine;
+use raas::runtime::{FaultOp, FaultSchedule, StepFaultInjector};
+use raas::util::json::Json;
+use raas::util::stats::Summary;
+
+fn mk_engine() -> Engine {
+    let cfg = EngineConfig { policy: PolicyKind::Raas, budget: 96, ..Default::default() };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+struct RunStats {
+    done: usize,
+    failed: usize,
+    shed: usize,
+    preemptions: u64,
+    tokens: usize,
+    wall_secs: f64,
+    jcts: Vec<f64>,
+}
+
+/// Serve `n_reqs` fixed requests under an overall fault rate; returns the
+/// outcome tally, completed-token count and per-completion JCTs.
+fn faulted_run(rate: f64, n_reqs: u64, max_new: usize, seed: u64) -> RunStats {
+    let mut schedule = FaultSchedule::new(seed);
+    if rate > 0.0 {
+        schedule = schedule
+            .rate(FaultOp::Begin, rate)
+            .rate(FaultOp::Step, rate / 20.0)
+            .rate(FaultOp::Alloc, rate / 20.0);
+    }
+    let backend =
+        StepFaultInjector::new(EngineBackend::new(mk_engine()).with_page_estimate(8), schedule);
+    let mut b = Batcher::new(backend, BatcherConfig { max_batch: 4, ..Default::default() });
+    let (tx, rx) = channel::<Response>();
+    let t0 = Instant::now();
+    for id in 0..n_reqs {
+        let prompt: Vec<u32> = (0..32).map(|i| 1 + ((i + id as usize) % 40) as u32).collect();
+        b.submit(Request::new(id, prompt, max_new, tx.clone()));
+    }
+    b.run_to_completion();
+    let wall_secs = t0.elapsed().as_secs_f64();
+    drop(tx);
+    let mut s = RunStats {
+        done: 0,
+        failed: 0,
+        shed: 0,
+        preemptions: b.preemptions,
+        tokens: 0,
+        wall_secs,
+        jcts: Vec::new(),
+    };
+    for r in rx.iter() {
+        match r.outcome {
+            Outcome::Done => {
+                s.done += 1;
+                s.tokens += r.tokens.len();
+                s.jcts.push(r.jct_secs);
+            }
+            Outcome::Failed => s.failed += 1,
+            Outcome::Shed => s.shed += 1,
+        }
+    }
+    assert_eq!(s.done + s.failed + s.shed, n_reqs as usize, "lost requests under faults");
+    assert_eq!(
+        b.backend.inner.engine.pool().allocated_pages(),
+        0,
+        "faulted run leaked pool pages"
+    );
+    s
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ------------------------------------------------------------------
+    // Goodput + tail latency vs fault rate.
+    // ------------------------------------------------------------------
+    let n_reqs: u64 = if quick { 12 } else { 48 };
+    let reps: usize = if quick { 1 } else { 3 };
+    let max_new = 32usize;
+    println!(
+        "{:<18} {:>6} {:>6} {:>6} {:>8} {:>14} {:>10} {:>10}",
+        "benchmark", "done", "fail", "shed", "preempt", "goodput tok/s", "p50 jct", "p99 jct"
+    );
+    println!("{}", "-".repeat(86));
+    let mut goodputs: Vec<(usize, f64)> = Vec::new();
+    for &rate in &[0.0f64, 0.05, 0.20] {
+        let pct = (rate * 100.0).round() as usize;
+        let (mut done, mut failed, mut shed, mut tokens) = (0usize, 0usize, 0usize, 0usize);
+        let mut preemptions = 0u64;
+        let mut wall = 0.0f64;
+        let mut jcts = Summary::new();
+        for rep in 0..reps {
+            let s = faulted_run(rate, n_reqs, max_new, 11 + rep as u64);
+            done += s.done;
+            failed += s.failed;
+            shed += s.shed;
+            tokens += s.tokens;
+            preemptions += s.preemptions;
+            wall += s.wall_secs;
+            jcts.extend(s.jcts);
+        }
+        let goodput = tokens as f64 / wall;
+        let (p50, p99) = if jcts.count() > 0 {
+            (jcts.percentile(50.0), jcts.percentile(99.0))
+        } else {
+            (0.0, 0.0)
+        };
+        println!(
+            "{:<18} {:>6} {:>6} {:>6} {:>8} {:>14.0} {:>7.2} ms {:>7.2} ms",
+            format!("faults/rate{pct:02}"),
+            done,
+            failed,
+            shed,
+            preemptions,
+            goodput,
+            p50 * 1e3,
+            p99 * 1e3
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::str(format!("faults/rate{pct:02}"))),
+            ("fault_rate", Json::from(rate)),
+            ("requests", Json::from(n_reqs as usize * reps)),
+            ("max_new", Json::from(max_new)),
+            ("done", Json::from(done)),
+            ("failed", Json::from(failed)),
+            ("shed", Json::from(shed)),
+            ("preemptions", Json::from(preemptions as usize)),
+            // completed tokens per wall-second: the headline robustness
+            // metric — failures and sheds contribute time but no tokens
+            ("goodput_tokens_per_sec", Json::from(goodput)),
+            ("jct_p50_secs", Json::from(p50)),
+            ("jct_p99_secs", Json::from(p99)),
+        ]));
+        goodputs.push((pct, goodput));
+    }
+    if let (Some(&(_, g0)), Some(&(_, g20))) = (goodputs.first(), goodputs.last()) {
+        let retained = g20 / g0;
+        println!("\ngoodput retained at 20% faults: {:.0}%", retained * 100.0);
+        rows.push(Json::obj(vec![
+            ("name", Json::str("faults_summary")),
+            ("goodput_retained_at_rate20", Json::from(retained)),
+        ]));
+    }
+
+    // ------------------------------------------------------------------
+    // Park→resume cycle cost, restore vs recompute.
+    // ------------------------------------------------------------------
+    let iters: usize = if quick { 3 } else { 20 };
+    println!(
+        "\n{:<22} {:>8} {:>12} {:>12} {:>12} {:>16}",
+        "benchmark", "prompt", "park", "resume", "cycle", "moved/replayed"
+    );
+    println!("{}", "-".repeat(88));
+    for &plen in &[128usize, 512] {
+        let prompt: Vec<u32> = (0..plen).map(|i| 1 + (i % 40) as u32).collect();
+        for mode in [PreemptMode::Restore, PreemptMode::Recompute] {
+            let mut be = EngineBackend::new(mk_engine());
+            let (mut seq, mut tok) = be.begin(&prompt).expect("begin");
+            let mut produced = Vec::new();
+            for step in 1..=4u64 {
+                produced.push(tok);
+                tok = be.step(&mut seq, tok, step).expect("step");
+            }
+            let mut park = Summary::new();
+            let mut resume = Summary::new();
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                be.preempt(7, seq, mode).expect("preempt");
+                park.add(t0.elapsed().as_secs_f64());
+                let t1 = Instant::now();
+                seq = be.resume(7, &prompt, &produced).expect("resume");
+                resume.add(t1.elapsed().as_secs_f64());
+            }
+            be.finish(seq);
+            assert_eq!(be.engine.pool().allocated_pages(), 0, "preempt bench leaked pages");
+            let moved = match mode {
+                PreemptMode::Restore => {
+                    be.engine.metrics.counter("preempt.restore_bytes") / iters as u64
+                }
+                PreemptMode::Recompute => {
+                    be.engine.metrics.counter("preempt.recompute_tokens") / iters as u64
+                }
+            };
+            let unit = match mode {
+                PreemptMode::Restore => "bytes",
+                PreemptMode::Recompute => "tokens",
+            };
+            let cycle = park.mean() + resume.mean();
+            println!(
+                "{:<22} {:>8} {:>9.3} ms {:>9.3} ms {:>9.3} ms {:>9} {}",
+                format!("preempt/{}/p{plen}", mode.name()),
+                plen,
+                park.mean() * 1e3,
+                resume.mean() * 1e3,
+                cycle * 1e3,
+                moved,
+                unit
+            );
+            let mut row = vec![
+                ("name", Json::str(format!("preempt/{}/p{plen}", mode.name()))),
+                ("mode", Json::str(mode.name())),
+                ("prompt", Json::from(plen)),
+                ("history_tokens", Json::from(produced.len())),
+                ("iters", Json::from(iters)),
+                ("park_mean_secs", Json::from(park.mean())),
+                ("resume_mean_secs", Json::from(resume.mean())),
+                ("cycle_mean_secs", Json::from(cycle)),
+            ];
+            match mode {
+                PreemptMode::Restore => {
+                    row.push(("restore_bytes_per_cycle", Json::from(moved as usize)))
+                }
+                PreemptMode::Recompute => {
+                    row.push(("recompute_tokens_per_cycle", Json::from(moved as usize)))
+                }
+            }
+            rows.push(Json::obj(row));
+        }
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/BENCH_robustness.json", Json::Arr(rows).to_string())
+        .expect("write results/BENCH_robustness.json");
+    println!("\nwrote results/BENCH_robustness.json");
+}

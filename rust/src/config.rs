@@ -314,6 +314,44 @@ impl std::fmt::Display for PolicyKind {
     }
 }
 
+/// What happens to a preempted sequence's KV pages until it resumes
+/// (DESIGN.md §6): the recompute-vs-restore policy of ROADMAP item 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PreemptMode {
+    /// Drop the pages outright; on resume, replay prompt + generated
+    /// tokens through the prefill/decode paths.  Zero host memory, extra
+    /// compute proportional to the victim's progress.
+    Recompute,
+    /// Copy the page bytes + quant params to a host-side swap buffer; on
+    /// resume, swap them back in verbatim.  Host memory proportional to
+    /// the victim's resident set, near-zero extra compute.
+    Restore,
+}
+
+impl PreemptMode {
+    /// Parse a CLI mode name (`recompute`, `restore`).
+    pub fn parse(s: &str) -> Result<PreemptMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "recompute" | "replay" => PreemptMode::Recompute,
+            "restore" | "swap" => PreemptMode::Restore,
+            other => bail!("unknown preempt mode '{other}' (recompute|restore)"),
+        })
+    }
+    /// Canonical lowercase name (matches [`PreemptMode::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PreemptMode::Recompute => "recompute",
+            PreemptMode::Restore => "restore",
+        }
+    }
+}
+
+impl std::fmt::Display for PreemptMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 /// Engine + policy configuration.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -462,6 +500,14 @@ mod tests {
         assert_eq!(PolicyKind::parse("RaaS").unwrap(), PolicyKind::Raas);
         assert_eq!(PolicyKind::parse("streamingllm").unwrap(), PolicyKind::Sink);
         assert!(PolicyKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn preempt_mode_parse() {
+        assert_eq!(PreemptMode::parse("recompute").unwrap(), PreemptMode::Recompute);
+        assert_eq!(PreemptMode::parse("SWAP").unwrap(), PreemptMode::Restore);
+        assert_eq!(PreemptMode::Restore.name(), "restore");
+        assert!(PreemptMode::parse("discard").is_err());
     }
 
     #[test]

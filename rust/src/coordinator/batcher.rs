@@ -18,7 +18,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::request::{Request, Response};
+use super::request::{Outcome, Request, RequestId, Response};
+use crate::config::PreemptMode;
+use crate::kvcache::PoolExhausted;
 
 /// One sequence's slot in a batched scheduler iteration
 /// ([`StepBackend::step_batch`]).
@@ -115,6 +117,35 @@ pub trait StepBackend {
     fn step_batch(&mut self, items: &mut [StepItem<'_, Self::Seq>]) -> Vec<Result<u32>> {
         items.iter_mut().map(|it| self.step(it.seq, it.token, it.now)).collect()
     }
+    /// Park an active sequence under pool pressure so its pages free up;
+    /// the scheduler re-admits the request later through
+    /// [`StepBackend::resume`].  `mode` picks recompute (drop the KV,
+    /// replay on resume) vs restore (swap the pages to a host-side buffer,
+    /// [`crate::kvcache::SwapHandle`]).  Default: drop the sequence —
+    /// recompute semantics, correct for any deterministic backend.
+    fn preempt(&mut self, _id: RequestId, seq: Self::Seq, _mode: PreemptMode) -> Result<()> {
+        self.finish(seq);
+        Ok(())
+    }
+    /// Rebuild the sequence of a preempted request from its token history:
+    /// `prompt`, then the `produced` tokens already applied as decode
+    /// steps, in order.  The returned sequence must be bit-identical to
+    /// the state right after the last applied step — the preempt/resume
+    /// identity pinned by `rust/tests/preemption.rs`.  Default: recompute
+    /// via [`StepBackend::begin`] plus replaying `produced` through
+    /// [`StepBackend::step`] with the original step counters.
+    fn resume(&mut self, _id: RequestId, prompt: &[u32], produced: &[u32])
+              -> Result<Self::Seq> {
+        let (mut seq, _first) = self.begin(prompt)?;
+        for (i, &t) in produced.iter().enumerate() {
+            self.step(&mut seq, t, (i + 1) as u64)?;
+        }
+        Ok(seq)
+    }
+    /// Bump a named robustness counter (`preempt.count`, `shed.count`, …).
+    /// Default: no-op; `EngineBackend` forwards to the engine metrics
+    /// registry so chaos harnesses can assert on them.
+    fn record_counter(&mut self, _name: &'static str, _delta: u64) {}
     /// Release sequence resources.
     fn finish(&mut self, seq: Self::Seq);
     /// Whether `token` terminates its sequence.
@@ -141,11 +172,24 @@ pub struct BatcherConfig {
     /// (DESIGN.md §5).  1 (the default) reproduces the one-at-a-time
     /// PR-4 state machine; ignored unless `prefill_token_budget` is set.
     pub prefill_concurrency: usize,
+    /// How preempted sequences park their KV (DESIGN.md §6): recompute
+    /// (drop the pages, replay the token history on resume) or restore
+    /// (swap the page bytes to a host-side buffer and copy them back).
+    pub preempt_mode: PreemptMode,
+    /// Shed new submissions ([`Outcome::Shed`]) once the FIFO queue is
+    /// this deep.  `None` (the default) never sheds on depth.
+    pub max_queue_depth: Option<usize>,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 8, prefill_token_budget: None, prefill_concurrency: 1 }
+        BatcherConfig {
+            max_batch: 8,
+            prefill_token_budget: None,
+            prefill_concurrency: 1,
+            preempt_mode: PreemptMode::Recompute,
+            max_queue_depth: None,
+        }
     }
 }
 
@@ -155,6 +199,20 @@ struct Active<S> {
     token: u32,
     produced: Vec<u32>,
     step: u64,
+    ttft_secs: f64,
+}
+
+/// A preempted request awaiting re-admission (DESIGN.md §5, the
+/// `Preempted` state): its sequence is parked with the backend (restore
+/// mode keeps a swap buffer; recompute mode dropped the KV), and the
+/// batcher keeps the exact token history needed to rebuild bit-identical
+/// decode state through [`StepBackend::resume`].
+struct Parked {
+    req: Request,
+    /// The pending token — the last step's output, not yet applied.
+    token: u32,
+    /// Tokens already applied as decode steps, in order.
+    produced: Vec<u32>,
     ttft_secs: f64,
 }
 
@@ -191,12 +249,20 @@ pub struct Batcher<B: StepBackend> {
     /// iteration, and a `Vec::remove(0)` here is O(n²) under queue
     /// pressure.
     queue: VecDeque<Request>,
+    /// Preempted requests in preemption order; re-admitted FIFO *ahead*
+    /// of the queue (they already waited once and their pages/history are
+    /// warm), as soon as a slot and pool headroom open up.
+    preempted: VecDeque<Parked>,
     /// Deficit-round-robin cursor: the admission-slot index the next
     /// remainder token goes to, rotating so `budget < slots` serves every
     /// slot over successive rounds rather than only the FIFO front.
     drr_next: usize,
-    /// Requests answered so far (successes and failures).
+    /// Requests answered so far (done, failed, or shed).
     pub completed: u64,
+    /// Sequences preempted so far (mirrors the `preempt.count` counter).
+    pub preemptions: u64,
+    /// Requests shed so far (mirrors the `shed.count` counter).
+    pub sheds: u64,
 }
 
 impl<B: StepBackend> Batcher<B> {
@@ -208,19 +274,51 @@ impl<B: StepBackend> Batcher<B> {
             active: Vec::new(),
             prefilling: Vec::new(),
             queue: VecDeque::new(),
+            preempted: VecDeque::new(),
             drr_next: 0,
             completed: 0,
+            preemptions: 0,
+            sheds: 0,
         }
     }
 
     /// Enqueue a request (FIFO; admission happens on the next tick).
+    /// Sheds immediately when the queue is at
+    /// [`BatcherConfig::max_queue_depth`].
     pub fn submit(&mut self, req: Request) {
+        if let Some(depth) = self.cfg.max_queue_depth {
+            if self.queue.len() >= depth {
+                self.shed(req, format!("queue depth at cap {depth}"));
+                return;
+            }
+        }
         self.queue.push_back(req);
     }
 
-    /// Requests not yet answered: queued, mid-prefill, or decoding.
+    /// Requests not yet answered: queued, preempted, mid-prefill, or
+    /// decoding.
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.prefilling.len() + self.active.len()
+        self.queue.len() + self.preempted.len() + self.prefilling.len() + self.active.len()
+    }
+
+    /// Refuse `req` with [`Outcome::Shed`] and account for it.
+    fn shed(&mut self, req: Request, reason: String) {
+        self.backend.record_counter("shed.count", 1);
+        self.sheds += 1;
+        let resp = Response::shed(req.id, req.submitted, reason);
+        let _ = req.reply.send(resp);
+        self.completed += 1;
+    }
+
+    /// Deadline gate at admission: sheds an expired request, passes a
+    /// live one through.
+    fn shed_if_expired(&mut self, req: Request) -> Option<Request> {
+        if req.expired_at(Instant::now()) {
+            self.shed(req, "deadline expired before admission".to_string());
+            None
+        } else {
+            Some(req)
+        }
     }
 
     /// Sequences holding a batch slot: decoding or mid-prefill.
@@ -233,9 +331,11 @@ impl<B: StepBackend> Batcher<B> {
     }
 
     /// Admit queued requests (runs before the decode sweep each
-    /// iteration): prefill-first whole prompts, or budget-paced chunks
+    /// iteration): preempted sequences resume first (FIFO, ahead of the
+    /// queue), then prefill-first whole prompts or budget-paced chunks
     /// when [`BatcherConfig::prefill_token_budget`] is set.
     fn admit(&mut self) {
+        self.resume_preempted();
         match self.cfg.prefill_token_budget {
             None => self.admit_prefill_first(),
             // a zero budget would make no progress and livelock the
@@ -244,10 +344,51 @@ impl<B: StepBackend> Batcher<B> {
         }
     }
 
+    /// Re-admit preempted sequences FIFO while slots and pool headroom
+    /// allow.  A typed [`PoolExhausted`] resume failure parks the request
+    /// again (front of the line) and stops — unless nothing else is
+    /// running or queued, in which case no pages will ever free and the
+    /// request is failed rather than livelocked.
+    fn resume_preempted(&mut self) {
+        while !self.preempted.is_empty() && self.slot_available() {
+            let p = self.preempted.pop_front().expect("preempted non-empty");
+            // the deadline may have passed while parked
+            if p.req.expired_at(Instant::now()) {
+                self.shed(p.req, "deadline expired while preempted".to_string());
+                continue;
+            }
+            match self.backend.resume(p.req.id, &p.req.prompt, &p.produced) {
+                Ok(seq) => {
+                    let step = p.produced.len() as u64;
+                    self.active.push(Active {
+                        req: p.req,
+                        seq,
+                        token: p.token,
+                        produced: p.produced,
+                        step,
+                        ttft_secs: p.ttft_secs,
+                    });
+                }
+                Err(e) => {
+                    let exhausted = e.downcast_ref::<PoolExhausted>().is_some();
+                    if exhausted && (self.in_flight() > 0 || !self.queue.is_empty()) {
+                        self.preempted.push_front(p);
+                        break;
+                    }
+                    let resp =
+                        Response::err(p.req.id, p.req.submitted, format!("resume: {e:#}"));
+                    let _ = p.req.reply.send(resp);
+                    self.completed += 1;
+                }
+            }
+        }
+    }
+
     /// Legacy admission: whole prompts, while capacity allows.
     fn admit_prefill_first(&mut self) {
         while !self.queue.is_empty() && self.slot_available() {
             let req = self.queue.pop_front().expect("queue non-empty");
+            let Some(req) = self.shed_if_expired(req) else { continue };
             self.begin_whole(req);
         }
     }
@@ -304,6 +445,7 @@ impl<B: StepBackend> Batcher<B> {
                 && self.slot_available()
             {
                 let req = self.queue.pop_front().expect("queue non-empty");
+                let Some(req) = self.shed_if_expired(req) else { continue };
                 match self.backend.begin_chunked() {
                     Some(seq) => self.prefilling.push(Prefilling {
                         req,
@@ -392,12 +534,12 @@ impl<B: StepBackend> Batcher<B> {
                 )));
             }
         }
-        enum Outcome {
+        enum RoundOutcome {
             Pending,
             Done(u32),
             Failed(String),
         }
-        let mut outcomes: Vec<Outcome> = (0..n).map(|_| Outcome::Pending).collect();
+        let mut outcomes: Vec<RoundOutcome> = (0..n).map(|_| RoundOutcome::Pending).collect();
         // time attribution weights by COMPUTED tokens: cached prefix
         // tokens attach without backend work, so they carry no wall time
         let consumed_total: usize = results
@@ -428,10 +570,10 @@ impl<B: StepBackend> Batcher<B> {
                     // consumed tokens repay the DRR entitlement too
                     p.deficit = p.deficit.saturating_sub(computed.max(1));
                     if let Some(first) = prog.first_token {
-                        outcomes[i] = Outcome::Done(first);
+                        outcomes[i] = RoundOutcome::Done(first);
                     }
                 }
-                Err(e) => outcomes[i] = Outcome::Failed(format!("prefill: {e:#}")),
+                Err(e) => outcomes[i] = RoundOutcome::Failed(format!("prefill: {e:#}")),
             }
         }
         // apply front to back so completions activate in FIFO slot order
@@ -439,9 +581,9 @@ impl<B: StepBackend> Batcher<B> {
         let old = std::mem::take(&mut self.prefilling);
         for (p, oc) in old.into_iter().zip(outcomes) {
             match oc {
-                Outcome::Pending => self.prefilling.push(p),
-                Outcome::Done(first) => self.activate(p.req, p.seq, first, p.prefill_secs),
-                Outcome::Failed(msg) => {
+                RoundOutcome::Pending => self.prefilling.push(p),
+                RoundOutcome::Done(first) => self.activate(p.req, p.seq, first, p.prefill_secs),
+                RoundOutcome::Failed(msg) => {
                     let resp = Response::err(p.req.id, p.req.submitted, msg);
                     self.backend.finish(p.seq);
                     let _ = p.req.reply.send(resp);
@@ -473,6 +615,7 @@ impl<B: StepBackend> Batcher<B> {
                     tokens: a.produced,
                     jct_secs: a.req.submitted.elapsed().as_secs_f64(),
                     ttft_secs: a.ttft_secs,
+                    outcome: Outcome::Done,
                     error: None,
                 };
                 self.backend.finish(a.seq);
@@ -508,12 +651,27 @@ impl<B: StepBackend> Batcher<B> {
             }
         }
         let mut steps = 0;
+        let mut stalled: Vec<RequestId> = Vec::new();
         // apply back-to-front so error removals keep earlier indices valid
         for (idx, r) in results.into_iter().enumerate().rev() {
             match r {
                 Ok(next) => {
                     self.active[idx].token = next;
                     steps += 1;
+                }
+                // Pool pressure with a co-scheduled victim available: the
+                // step failed *before* mutating the sequence (the engine's
+                // pre-mutation exhaustion guard), so rewind this tick's
+                // bookkeeping and retry after a preemption frees pages.
+                Err(e)
+                    if e.downcast_ref::<PoolExhausted>().is_some()
+                        && self.active.len() > 1 =>
+                {
+                    let a = &mut self.active[idx];
+                    let t = a.produced.pop().expect("token was pushed this tick");
+                    debug_assert_eq!(t, a.token, "rewound token must be the pending one");
+                    a.step = a.produced.len() as u64;
+                    stalled.push(a.req.id);
                 }
                 Err(e) => {
                     let a = self.active.remove(idx);
@@ -525,7 +683,55 @@ impl<B: StepBackend> Batcher<B> {
                 }
             }
         }
+        if !stalled.is_empty() {
+            self.preempt_one(&stalled);
+        }
         steps
+    }
+
+    /// Preempt one victim so a pool-stalled sequence can progress next
+    /// tick: the active sequence with the fewest produced tokens (least
+    /// recompute/restore cost lost; ties break to the youngest slot),
+    /// never the oldest stalled sequence itself — the one whose progress
+    /// this preemption guarantees.  One victim per tick is enough;
+    /// repeated pressure preempts again on the next tick.
+    fn preempt_one(&mut self, stalled_ids: &[RequestId]) {
+        let oldest = self
+            .active
+            .iter()
+            .position(|a| stalled_ids.contains(&a.req.id))
+            .expect("a stalled id is active");
+        let victim = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != oldest)
+            .min_by(|(ia, a), (ib, b)| {
+                a.produced.len().cmp(&b.produced.len()).then(ib.cmp(ia))
+            })
+            .map(|(i, _)| i);
+        let Some(vi) = victim else { return };
+        let a = self.active.remove(vi);
+        match self.backend.preempt(a.req.id, a.seq, self.cfg.preempt_mode) {
+            Ok(()) => {
+                self.backend.record_counter("preempt.count", 1);
+                self.preemptions += 1;
+                self.preempted.push_back(Parked {
+                    req: a.req,
+                    token: a.token,
+                    produced: a.produced,
+                    ttft_secs: a.ttft_secs,
+                });
+            }
+            Err(e) => {
+                // parking failed — the sequence state is gone; fail the
+                // request rather than resume from corrupt history
+                let resp =
+                    Response::err(a.req.id, a.req.submitted, format!("preempt: {e:#}"));
+                let _ = a.req.reply.send(resp);
+                self.completed += 1;
+            }
+        }
     }
 
     /// Drive until all submitted work completes.
@@ -540,7 +746,8 @@ impl<B: StepBackend> Batcher<B> {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
-    use std::time::Instant;
+
+    use crate::runtime::{FaultOp, FaultSchedule, StepFaultInjector};
 
     /// Scripted backend: echoes prompt[0], counts down, then EOS (token 0).
     struct MockBackend {
@@ -578,7 +785,7 @@ mod tests {
 
     fn mk_req(id: u64, first: u32, max_new: usize, tx: &std::sync::mpsc::Sender<Response>)
               -> Request {
-        Request { id, prompt: vec![first], max_new, submitted: Instant::now(), reply: tx.clone() }
+        Request::new(id, vec![first], max_new, tx.clone())
     }
 
     #[test]
@@ -698,13 +905,7 @@ mod tests {
             MockBackend { capacity: 8, begun: 0, finished: 0 },
             BatcherConfig::default(),
         );
-        b.submit(Request {
-            id: 1,
-            prompt: vec![],
-            max_new: 4,
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        });
+        b.submit(Request::new(1, vec![], 4, tx.clone()));
         b.submit(mk_req(2, 1, 8, &tx));
         b.run_to_completion();
         drop(tx);
@@ -734,8 +935,6 @@ mod tests {
         events: Vec<Ev>,
         capacity: usize,
         finished: usize,
-        /// Tag whose prefill errors on its second chunk.
-        fail_second_chunk_of: Option<u64>,
         /// `(tag, tokens)` — this tag's first chunk reports that many
         /// prompt tokens as prefix-cache hits (consumed for free).
         cached_prefix_of: Option<(u64, usize)>,
@@ -743,13 +942,7 @@ mod tests {
 
     impl ChunkedMock {
         fn new(capacity: usize) -> Self {
-            ChunkedMock {
-                events: Vec::new(),
-                capacity,
-                finished: 0,
-                fail_second_chunk_of: None,
-                cached_prefix_of: None,
-            }
+            ChunkedMock { events: Vec::new(), capacity, finished: 0, cached_prefix_of: None }
         }
     }
 
@@ -770,9 +963,6 @@ mod tests {
             let id = prompt[0] as u64;
             if seq.0 == u64::MAX {
                 seq.0 = id;
-            }
-            if self.fail_second_chunk_of == Some(id) && done > 0 {
-                anyhow::bail!("injected prefill failure");
             }
             // a scripted prefix-cache hit attaches free tokens on the
             // first chunk, like the engine's attach-then-compute path
@@ -819,13 +1009,7 @@ mod tests {
 
     fn mk_long_req(id: u64, prompt_len: usize, max_new: usize,
                    tx: &std::sync::mpsc::Sender<Response>) -> Request {
-        Request {
-            id,
-            prompt: vec![id as u32; prompt_len.max(1)],
-            max_new,
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        }
+        Request::new(id, vec![id as u32; prompt_len.max(1)], max_new, tx.clone())
     }
 
     #[test]
@@ -1130,18 +1314,19 @@ mod tests {
     #[test]
     fn concurrent_prefill_error_is_isolated_to_the_failing_prompt() {
         // Two co-prefilling prompts, one of which errors on its second
-        // chunk: the failure must be reported for that request only, its
-        // sequence released, and its neighbor must keep streaming to
-        // completion.
+        // chunk (scheduled through the fault injector, keyed by the
+        // prompt tag): the failure must be reported for that request
+        // only, its sequence released, and its neighbor must keep
+        // streaming to completion.
         let (tx, rx) = channel();
-        let mut backend = ChunkedMock::new(8);
-        backend.fail_second_chunk_of = Some(3);
+        let schedule = FaultSchedule::new(0).fail_nth_for(FaultOp::Chunk, 3, 2);
         let mut b = Batcher::new(
-            backend,
+            StepFaultInjector::new(ChunkedMock::new(8), schedule),
             BatcherConfig {
                 max_batch: 8,
                 prefill_token_budget: Some(8),
                 prefill_concurrency: 2,
+                ..Default::default()
             },
         );
         b.submit(mk_long_req(3, 12, 2, &tx)); // fails on its second chunk
@@ -1151,19 +1336,20 @@ mod tests {
         let mut resps: Vec<Response> = rx.iter().collect();
         resps.sort_by_key(|r| r.id);
         assert_eq!(resps.len(), 2);
+        assert_eq!(resps[0].outcome, Outcome::Failed);
         assert!(resps[0].error.as_deref().unwrap_or("").contains("prefill"));
         assert!(resps[1].error.is_none());
-        assert_eq!(b.backend.finished, 2, "failed partial + finished neighbor released");
+        assert_eq!(b.backend.schedule.injected(), 1);
+        assert_eq!(b.backend.inner.finished, 2, "failed partial + finished neighbor released");
         assert_eq!(b.pending(), 0);
     }
 
     #[test]
     fn chunked_prefill_error_releases_the_sequence() {
         let (tx, rx) = channel();
-        let mut backend = ChunkedMock::new(8);
-        backend.fail_second_chunk_of = Some(3);
+        let schedule = FaultSchedule::new(0).fail_nth_for(FaultOp::Chunk, 3, 2);
         let mut b = Batcher::new(
-            backend,
+            StepFaultInjector::new(ChunkedMock::new(8), schedule),
             BatcherConfig { max_batch: 8, prefill_token_budget: Some(4), ..Default::default() },
         );
         b.submit(mk_long_req(3, 12, 4, &tx)); // fails on its second chunk
@@ -1176,7 +1362,125 @@ mod tests {
         assert!(resps[0].error.as_deref().unwrap_or("").contains("prefill"));
         assert!(resps[1].error.is_none());
         // the failed partial sequence AND the finished one were released
-        assert_eq!(b.backend.finished, 2);
+        assert_eq!(b.backend.inner.finished, 2);
         assert_eq!(b.pending(), 0);
+    }
+
+    // -- preemption, deadlines, shedding ----------------------------------
+
+    #[test]
+    fn pool_pressure_preempts_a_victim_and_resumes_bit_identically() {
+        // Two decoding sequences; the third alloc draw (request 1's step
+        // on tick 2) injects a typed PoolExhausted.  The batcher must
+        // preempt the co-scheduled victim (request 2, fewest produced),
+        // retry the stalled step, resume the victim FIFO, and the final
+        // token streams must equal an uninterrupted control run's.
+        let run = |faults: bool| -> (Vec<Response>, u64, usize) {
+            let (tx, rx) = channel();
+            let schedule = if faults {
+                FaultSchedule::new(0).fail_nth(FaultOp::Alloc, 3)
+            } else {
+                FaultSchedule::new(0)
+            };
+            let inner = MockBackend { capacity: 8, begun: 0, finished: 0 };
+            let mut b = Batcher::new(
+                StepFaultInjector::new(inner, schedule),
+                BatcherConfig { max_batch: 8, ..Default::default() },
+            );
+            b.submit(mk_req(1, 6, 16, &tx));
+            b.submit(mk_req(2, 5, 16, &tx));
+            b.run_to_completion();
+            drop(tx);
+            let mut resps: Vec<Response> = rx.iter().collect();
+            resps.sort_by_key(|r| r.id);
+            (resps, b.preemptions, b.backend.inner.finished)
+        };
+        let (control, p0, _) = run(false);
+        let (chaos, p1, finished) = run(true);
+        assert_eq!(p0, 0);
+        assert_eq!(p1, 1, "the alloc fault must trigger exactly one preemption");
+        // releases: the preempted sequence at park time, then both
+        // sequences (one rebuilt by resume) at retirement
+        assert_eq!(finished, 3);
+        for (c, f) in control.iter().zip(&chaos) {
+            assert_eq!(c.id, f.id);
+            assert_eq!(f.outcome, Outcome::Done, "preemption must be invisible: {:?}", f.error);
+            assert_eq!(c.tokens, f.tokens, "request {} tokens diverged after preemption", c.id);
+        }
+    }
+
+    #[test]
+    fn preempted_requests_readmit_ahead_of_the_queue() {
+        // A and B decode (max_batch 2), C waits queued.  When B is
+        // preempted under injected pool pressure, the freed slot must go
+        // back to B (FIFO ahead of the queue), not to C.
+        let (tx, rx) = channel();
+        let schedule = FaultSchedule::new(0).fail_nth(FaultOp::Alloc, 3);
+        let mut b = Batcher::new(
+            StepFaultInjector::new(ChunkedMock::new(8), schedule),
+            BatcherConfig { max_batch: 2, ..Default::default() },
+        );
+        b.submit(mk_long_req(1, 1, 6, &tx));
+        b.submit(mk_long_req(2, 1, 6, &tx));
+        b.submit(mk_long_req(3, 1, 2, &tx));
+        b.run_to_completion();
+        drop(tx);
+        assert_eq!(b.preemptions, 1);
+        assert_eq!(rx.iter().filter(|r| r.outcome == Outcome::Done).count(), 3);
+        let activations: Vec<u64> = b
+            .backend
+            .inner
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Activate(id) => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            activations,
+            vec![1, 2, 2, 3],
+            "the preempted request must resume before the queued one admits"
+        );
+    }
+
+    #[test]
+    fn expired_requests_are_shed_at_admission() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 8, begun: 0, finished: 0 },
+            BatcherConfig::default(),
+        );
+        b.submit(mk_req(1, 3, 8, &tx).with_deadline_ms(0)); // expired on arrival
+        b.submit(mk_req(2, 3, 8, &tx));
+        b.run_to_completion();
+        drop(tx);
+        let mut resps: Vec<Response> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps[0].outcome, Outcome::Shed);
+        assert!(resps[0].error.as_deref().unwrap_or("").contains("deadline"));
+        assert!(resps[0].tokens.is_empty());
+        assert_eq!(resps[1].outcome, Outcome::Done);
+        assert_eq!(b.sheds, 1);
+        assert_eq!(b.backend.begun, 1, "shed requests never reach the backend");
+    }
+
+    #[test]
+    fn queue_depth_cap_sheds_excess_submissions() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 1, begun: 0, finished: 0 },
+            BatcherConfig { max_batch: 1, max_queue_depth: Some(2), ..Default::default() },
+        );
+        for id in 0..5 {
+            b.submit(mk_req(id, 3, 4, &tx));
+        }
+        assert_eq!(b.sheds, 3, "queue holds 2, the rest shed at submit");
+        b.run_to_completion();
+        drop(tx);
+        let resps: Vec<Response> = rx.iter().collect();
+        assert_eq!(resps.len(), 5, "every request gets exactly one response");
+        assert_eq!(resps.iter().filter(|r| r.outcome == Outcome::Shed).count(), 3);
+        assert_eq!(resps.iter().filter(|r| r.outcome == Outcome::Done).count(), 2);
     }
 }

@@ -9,6 +9,6 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, PrefillBatchItem, PrefillProgress, StepBackend,
                   StepItem};
-pub use request::{Request, RequestId, Response};
-pub use router::{Router, RoutePolicy};
+pub use request::{Outcome, Request, RequestId, Response};
+pub use router::{Router, RoutePolicy, SubmitError};
 pub use server::EngineServer;

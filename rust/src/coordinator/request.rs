@@ -16,8 +16,61 @@ pub struct Request {
     pub max_new: usize,
     /// Submission instant (the JCT/TTFT clock origin).
     pub submitted: Instant,
+    /// Absolute completion deadline; the batcher sheds the request
+    /// ([`Outcome::Shed`]) rather than admit it past this instant.
+    /// `None` means no deadline.
+    pub deadline: Option<Instant>,
+    /// Router-level retry budget: how many more times a `submit` failure
+    /// may fail over to another replica before the request is failed.
+    pub retries_left: u32,
     /// Where the response is delivered.
     pub reply: Sender<Response>,
+}
+
+impl Request {
+    /// Request with no deadline and no retry budget, submitted now.
+    pub fn new(id: RequestId, prompt: Vec<u32>, max_new: usize, reply: Sender<Response>) -> Self {
+        Request {
+            id,
+            prompt,
+            max_new,
+            submitted: Instant::now(),
+            deadline: None,
+            retries_left: 0,
+            reply,
+        }
+    }
+
+    /// Set an absolute deadline `ms` milliseconds from submission.
+    pub fn with_deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline = Some(self.submitted + std::time::Duration::from_millis(ms));
+        self
+    }
+
+    /// Set the router-level retry budget.
+    pub fn with_retries(mut self, retries: u32) -> Self {
+        self.retries_left = retries;
+        self
+    }
+
+    /// Whether the deadline (if any) has passed at instant `now`.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// How a request's lifecycle ended — every submitted request resolves to
+/// exactly one of these (the fault-tolerance trichotomy, DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Decode completed (EOS or `max_new`); `tokens` holds the output.
+    Done,
+    /// An execution error killed the request; `error` holds the
+    /// diagnostic.
+    Failed,
+    /// Load shedding: the coordinator refused the work (deadline expired,
+    /// queue too deep) before/while serving it; `error` holds the reason.
+    Shed,
 }
 
 /// The completed response.
@@ -25,13 +78,15 @@ pub struct Request {
 pub struct Response {
     /// The request this answers.
     pub id: RequestId,
-    /// Decoded tokens (empty on error).
+    /// Decoded tokens (empty unless [`Outcome::Done`]).
     pub tokens: Vec<u32>,
     /// Job completion time (paper metric): submission → full response.
     pub jct_secs: f64,
     /// Time to first token.
     pub ttft_secs: f64,
-    /// Failure diagnostic; `None` on success.
+    /// How the request ended.
+    pub outcome: Outcome,
+    /// Failure/shed diagnostic; `None` on success.
     pub error: Option<String>,
 }
 
@@ -43,7 +98,20 @@ impl Response {
             tokens: Vec::new(),
             jct_secs: submitted.elapsed().as_secs_f64(),
             ttft_secs: 0.0,
+            outcome: Outcome::Failed,
             error: Some(msg),
+        }
+    }
+
+    /// Load-shed response: the request was refused, not executed.
+    pub fn shed(id: RequestId, submitted: Instant, reason: String) -> Self {
+        Response {
+            id,
+            tokens: Vec::new(),
+            jct_secs: submitted.elapsed().as_secs_f64(),
+            ttft_secs: 0.0,
+            outcome: Outcome::Shed,
+            error: Some(reason),
         }
     }
 }
@@ -52,28 +120,48 @@ impl Response {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
+    use std::time::Duration;
 
     #[test]
     fn request_roundtrip() {
         let (tx, rx) = channel();
-        let req = Request {
-            id: 7,
-            prompt: vec![1, 2],
-            max_new: 4,
-            submitted: Instant::now(),
-            reply: tx,
-        };
+        let req = Request::new(7, vec![1, 2], 4, tx);
         req.reply
             .send(Response {
                 id: req.id,
                 tokens: vec![9],
                 jct_secs: 0.1,
                 ttft_secs: 0.05,
+                outcome: Outcome::Done,
                 error: None,
             })
             .unwrap();
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);
+        assert_eq!(resp.outcome, Outcome::Done);
         assert!(resp.error.is_none());
+    }
+
+    #[test]
+    fn deadline_and_retry_builders() {
+        let (tx, _rx) = channel();
+        let req = Request::new(1, vec![3], 2, tx).with_deadline_ms(0).with_retries(2);
+        assert_eq!(req.retries_left, 2);
+        assert!(req.deadline.is_some());
+        assert!(req.expired_at(req.submitted + Duration::from_millis(1)));
+        let (tx2, _rx2) = channel();
+        let open = Request::new(2, vec![3], 2, tx2);
+        assert!(!open.expired_at(Instant::now() + Duration::from_secs(3600)));
+    }
+
+    #[test]
+    fn outcome_constructors_classify() {
+        let t = Instant::now();
+        let f = Response::err(4, t, "boom".into());
+        assert_eq!(f.outcome, Outcome::Failed);
+        assert!(f.error.is_some());
+        let s = Response::shed(5, t, "deadline expired".into());
+        assert_eq!(s.outcome, Outcome::Shed);
+        assert!(s.tokens.is_empty());
     }
 }

@@ -1,10 +1,22 @@
 //! Multi-replica request router (vllm-project/router-style): dispatches
 //! requests across engine replicas by round-robin, least-loaded, or
-//! session-affinity hashing.
+//! session-affinity hashing — with per-replica health tracking
+//! (consecutive-failure circuit breaker, seeded half-open probes) and
+//! failover: a failed `submit` returns the request to the router, which
+//! retries it on the next healthy replica while the request's retry
+//! budget lasts (DESIGN.md §6).
 
-use anyhow::Result;
+use crate::util::rng::Rng;
 
 use super::request::Request;
+
+/// Consecutive submit failures that trip a replica's circuit breaker.
+const FAILURE_THRESHOLD: u32 = 3;
+/// Breaker hold-off after the first trip, in router ticks (one tick per
+/// [`Router::route`] call); doubles per consecutive trip.
+const BASE_BACKOFF: u64 = 4;
+/// Backoff growth cap, in ticks (plus up to 50% seeded jitter).
+const MAX_BACKOFF: u64 = 64;
 
 /// How the router picks a replica for each request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,7 +32,7 @@ pub enum RoutePolicy {
 
 impl RoutePolicy {
     /// Parse a CLI route-policy name (`rr`, `least`, `affinity`).
-    pub fn parse(s: &str) -> Result<RoutePolicy> {
+    pub fn parse(s: &str) -> anyhow::Result<RoutePolicy> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "rr" | "roundrobin" | "round-robin" => RoutePolicy::RoundRobin,
             "least" | "leastloaded" | "least-loaded" => RoutePolicy::LeastLoaded,
@@ -30,17 +42,39 @@ impl RoutePolicy {
     }
 }
 
+/// A failed hand-off that returns the request to the caller — the router
+/// (for failover) or the submitter (to reply/retry) — instead of dropping
+/// it on the floor.  Not an `anyhow::Error`: the request's reply channel
+/// is `Send` but not `Sync`, and losing the request to an opaque error was
+/// exactly the bug this type fixes.
+pub struct SubmitError {
+    /// The request, intact, so the caller can retry or answer it.
+    pub req: Request,
+    /// Why the hand-off failed.
+    pub reason: String,
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SubmitError")
+            .field("req_id", &self.req.id)
+            .field("reason", &self.reason)
+            .finish()
+    }
+}
+
 /// What the router needs from a replica (implemented by `EngineServer`;
 /// mocked in tests).
 pub trait Replica {
-    /// Hand one request to this replica's mailbox.
-    fn submit(&self, req: Request) -> Result<()>;
+    /// Hand one request to this replica's mailbox; on failure the request
+    /// comes back in the [`SubmitError`].
+    fn submit(&self, req: Request) -> Result<(), SubmitError>;
     /// Requests this replica has accepted but not yet answered.
     fn pending(&self) -> usize;
 }
 
 impl Replica for super::server::EngineServer {
-    fn submit(&self, req: Request) -> Result<()> {
+    fn submit(&self, req: Request) -> Result<(), SubmitError> {
         // inherent method (mailbox send) — inherent methods take precedence,
         // so this does not recurse.
         EngineServer::submit(self, req)
@@ -52,20 +86,59 @@ impl Replica for super::server::EngineServer {
 
 use super::server::EngineServer;
 
-/// Dispatches requests across engine replicas (DESIGN.md §5).
+/// Per-replica breaker state (logical router ticks, one per route call).
+#[derive(Debug, Clone, Default)]
+struct Health {
+    /// Submit failures since the last success (resets on success/trip).
+    consecutive_failures: u32,
+    /// No traffic until this tick; 0 = closed.
+    open_until: u64,
+    /// Consecutive breaker trips (exponential-backoff exponent); resets
+    /// on the first successful probe.
+    trips: u32,
+}
+
+/// Dispatches requests across engine replicas (DESIGN.md §5), failing
+/// over around unhealthy ones (DESIGN.md §6).
 pub struct Router<R: Replica> {
     replicas: Vec<R>,
+    health: Vec<Health>,
     policy: RoutePolicy,
     next_rr: usize,
+    /// Jitter stream for half-open backoff (deterministic per seed).
+    rng: Rng,
+    /// Logical clock: one tick per [`Router::route`] call.
+    now: u64,
     /// Requests routed so far.
     pub routed: u64,
+    /// Submits retried on another replica after a failure.
+    pub failovers: u64,
+    /// Circuit-breaker trips (a replica taken out of rotation).
+    pub breaker_opens: u64,
 }
 
 impl<R: Replica> Router<R> {
-    /// Router over at least one replica.
+    /// Router over at least one replica (jitter seed 0; see
+    /// [`Router::with_seed`]).
     pub fn new(replicas: Vec<R>, policy: RoutePolicy) -> Self {
+        Self::with_seed(replicas, policy, 0)
+    }
+
+    /// Router with an explicit backoff-jitter seed.
+    pub fn with_seed(replicas: Vec<R>, policy: RoutePolicy, seed: u64) -> Self {
         assert!(!replicas.is_empty());
-        Router { replicas, policy, next_rr: 0, routed: 0 }
+        let health = replicas.iter().map(|_| Health::default()).collect();
+        Router {
+            replicas,
+            health,
+            policy,
+            next_rr: 0,
+            rng: Rng::new(seed),
+            now: 0,
+            routed: 0,
+            failovers: 0,
+            breaker_opens: 0,
+        }
     }
 
     /// The replica set, in submission-index order.
@@ -78,19 +151,31 @@ impl<R: Replica> Router<R> {
         self.replicas
     }
 
-    fn pick(&mut self, req: &Request) -> usize {
+    /// Whether replica `i`'s breaker admits traffic at the current tick
+    /// (closed, or open long enough to half-open probe).
+    pub fn is_healthy(&self, i: usize) -> bool {
+        self.health[i].open_until <= self.now
+    }
+
+    /// Replica indices the breaker currently admits.
+    fn available(&self) -> Vec<usize> {
+        (0..self.replicas.len()).filter(|&i| self.is_healthy(i)).collect()
+    }
+
+    /// Apply the route policy over the available set, returning a
+    /// position *within* `avail`.
+    fn pick(&mut self, req: &Request, avail: &[usize]) -> usize {
         match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.next_rr;
-                self.next_rr = (self.next_rr + 1) % self.replicas.len();
-                i
+                let p = self.next_rr % avail.len();
+                self.next_rr = (self.next_rr + 1) % avail.len();
+                p
             }
-            RoutePolicy::LeastLoaded => self
-                .replicas
+            RoutePolicy::LeastLoaded => avail
                 .iter()
                 .enumerate()
-                .min_by_key(|(_, r)| r.pending())
-                .map(|(i, _)| i)
+                .min_by_key(|(_, &i)| self.replicas[i].pending())
+                .map(|(p, _)| p)
                 .unwrap(),
             RoutePolicy::Affinity => {
                 // FNV-1a over the first 8 prompt tokens + avalanche finaliser
@@ -103,17 +188,82 @@ impl<R: Replica> Router<R> {
                 h = (h ^ (h >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
                 h = (h ^ (h >> 27)).wrapping_mul(0x94d049bb133111eb);
                 h ^= h >> 31;
-                (h % self.replicas.len() as u64) as usize
+                (h % avail.len() as u64) as usize
             }
         }
     }
 
-    /// Route one request; returns the chosen replica index.
-    pub fn route(&mut self, req: Request) -> Result<usize> {
-        let i = self.pick(&req);
-        self.replicas[i].submit(req)?;
-        self.routed += 1;
-        Ok(i)
+    fn on_success(&mut self, i: usize) {
+        let h = &mut self.health[i];
+        h.consecutive_failures = 0;
+        h.open_until = 0;
+        h.trips = 0;
+    }
+
+    fn on_failure(&mut self, i: usize) {
+        let half_open = {
+            let h = &self.health[i];
+            h.trips > 0 && h.open_until <= self.now
+        };
+        let trip = {
+            let h = &mut self.health[i];
+            h.consecutive_failures += 1;
+            half_open || h.consecutive_failures >= FAILURE_THRESHOLD
+        };
+        if trip {
+            let h = &mut self.health[i];
+            h.trips += 1;
+            h.consecutive_failures = 0;
+            let backoff = (BASE_BACKOFF << (h.trips - 1).min(4)).min(MAX_BACKOFF);
+            let base_until = self.now + backoff;
+            let jitter = self.rng.range(0, backoff as usize / 2 + 1) as u64;
+            self.health[i].open_until = base_until + jitter;
+            self.breaker_opens += 1;
+        }
+    }
+
+    /// Route one request: pick a replica by policy among the healthy set,
+    /// and on a failed `submit` fail over to the next healthy replica
+    /// while the request's retry budget lasts.  Returns the replica index
+    /// that accepted the request, or the request itself (in the
+    /// [`SubmitError`]) when every attempt failed — never loses it.
+    pub fn route(&mut self, req: Request) -> Result<usize, SubmitError> {
+        self.now += 1;
+        let mut avail = self.available();
+        if avail.is_empty() {
+            // every breaker is open: force-probe the soonest to recover
+            // rather than deadlock the fleet
+            let i = (0..self.replicas.len())
+                .min_by_key(|&i| self.health[i].open_until)
+                .expect("router has at least one replica");
+            avail.push(i);
+        }
+        let start = self.pick(&req, &avail);
+        let mut req = req;
+        let mut last_reason = String::new();
+        for attempt in 0..avail.len() {
+            if attempt > 0 {
+                if req.retries_left == 0 {
+                    break;
+                }
+                req.retries_left -= 1;
+                self.failovers += 1;
+            }
+            let i = avail[(start + attempt) % avail.len()];
+            match self.replicas[i].submit(req) {
+                Ok(()) => {
+                    self.on_success(i);
+                    self.routed += 1;
+                    return Ok(i);
+                }
+                Err(se) => {
+                    req = se.req;
+                    last_reason = se.reason;
+                    self.on_failure(i);
+                }
+            }
+        }
+        Err(SubmitError { req, reason: format!("no replica accepted: {last_reason}") })
     }
 }
 
@@ -122,14 +272,18 @@ mod tests {
     use super::*;
     use std::cell::Cell;
     use std::sync::mpsc::channel;
-    use std::time::Instant;
 
     struct MockReplica {
         sent: Cell<usize>,
         load: usize,
+        /// When set, every submit fails and hands the request back.
+        failing: Cell<bool>,
     }
     impl Replica for MockReplica {
-        fn submit(&self, _req: Request) -> Result<()> {
+        fn submit(&self, req: Request) -> Result<(), SubmitError> {
+            if self.failing.get() {
+                return Err(SubmitError { req, reason: "mock replica down".to_string() });
+            }
             self.sent.set(self.sent.get() + 1);
             Ok(())
         }
@@ -142,11 +296,14 @@ mod tests {
         let (tx, _rx) = channel();
         // leak the receiver side: mock never replies
         std::mem::forget(_rx);
-        Request { id: 0, prompt, max_new: 1, submitted: Instant::now(), reply: tx }
+        Request::new(0, prompt, 1, tx)
     }
 
     fn mocks(loads: &[usize]) -> Vec<MockReplica> {
-        loads.iter().map(|&l| MockReplica { sent: Cell::new(0), load: l }).collect()
+        loads
+            .iter()
+            .map(|&l| MockReplica { sent: Cell::new(0), load: l, failing: Cell::new(false) })
+            .collect()
     }
 
     #[test]
@@ -180,5 +337,71 @@ mod tests {
     fn policy_parse() {
         assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
         assert!(RoutePolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn failed_submit_returns_the_request_to_the_caller() {
+        // The regression this PR fixes: a failed submit used to discard
+        // the request (reply channel and all); now it comes back intact.
+        let reps = mocks(&[0]);
+        reps[0].failing.set(true);
+        let mut r = Router::new(reps, RoutePolicy::RoundRobin);
+        let original = req(vec![7, 8, 9]);
+        let id = original.id;
+        let err = r.route(original).unwrap_err();
+        assert_eq!(err.req.id, id);
+        assert_eq!(err.req.prompt, vec![7, 8, 9], "request must come back intact");
+        assert!(err.reason.contains("mock replica down"));
+        assert_eq!(r.routed, 0);
+    }
+
+    #[test]
+    fn failover_retries_on_the_next_healthy_replica() {
+        let reps = mocks(&[0, 0]);
+        reps[0].failing.set(true);
+        let mut r = Router::new(reps, RoutePolicy::RoundRobin);
+        let i = r.route(req(vec![1]).with_retries(1)).unwrap();
+        assert_eq!(i, 1, "must fail over from replica 0");
+        assert_eq!(r.failovers, 1);
+        assert_eq!(r.replicas()[1].sent.get(), 1);
+    }
+
+    #[test]
+    fn no_retry_budget_means_no_failover() {
+        let reps = mocks(&[0, 0]);
+        reps[0].failing.set(true);
+        let mut r = Router::new(reps, RoutePolicy::RoundRobin);
+        let err = r.route(req(vec![1])).unwrap_err();
+        assert_eq!(err.req.retries_left, 0);
+        assert_eq!(r.failovers, 0);
+        assert_eq!(r.replicas()[1].sent.get(), 0, "no budget, no second attempt");
+    }
+
+    #[test]
+    fn breaker_opens_after_consecutive_failures_and_reprobes() {
+        let reps = mocks(&[0, 0]);
+        reps[0].failing.set(true);
+        let mut r = Router::with_seed(reps, RoutePolicy::RoundRobin, 7);
+        // round-robin alternates the first attempt, so every other route
+        // hits replica 0 (and fails over to 1); the third failure trips it
+        for _ in 0..6 {
+            assert_eq!(r.route(req(vec![1]).with_retries(1)).unwrap(), 1);
+        }
+        assert_eq!(r.breaker_opens, 1, "threshold consecutive failures trip the breaker");
+        assert!(!r.is_healthy(0));
+        // while open, traffic routes straight to 1 with no failover
+        let failovers_before = r.failovers;
+        for _ in 0..2 {
+            assert_eq!(r.route(req(vec![1]).with_retries(1)).unwrap(), 1);
+        }
+        assert_eq!(r.failovers, failovers_before, "open breaker removes 0 from rotation");
+        // replica recovers; after the hold-off a half-open probe succeeds
+        // and the breaker closes
+        r.replicas()[0].failing.set(false);
+        for _ in 0..(MAX_BACKOFF + MAX_BACKOFF / 2) {
+            let _ = r.route(req(vec![1]).with_retries(1)).unwrap();
+        }
+        assert!(r.is_healthy(0), "successful probe must close the breaker");
+        assert!(r.replicas()[0].sent.get() > 0, "replica 0 rejoined the rotation");
     }
 }

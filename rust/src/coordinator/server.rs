@@ -1,6 +1,7 @@
 //! Engine replica server: an [`Engine`] + [`Batcher`] living on a dedicated
 //! thread, fed through an mpsc mailbox.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender, TryRecvError};
 use std::sync::Arc;
@@ -10,10 +11,19 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig, PrefillBatchItem, PrefillProgress, StepBackend,
                      StepItem};
-use super::request::Request;
-use crate::config::EngineConfig;
+use super::request::{Request, RequestId};
+use super::router::SubmitError;
+use crate::config::{EngineConfig, PreemptMode};
 use crate::engine::{BatchEntry, Engine, PrefillEntry};
-use crate::kvcache::SeqCache;
+use crate::kvcache::{SeqCache, SwapHandle};
+
+/// A restore-mode preempted sequence: the page-table skeleton (its
+/// `pool_id`s are stale until swap-in remaps them) plus the host-side
+/// swap buffer holding the page bytes.
+struct ParkedSeq {
+    seq: SeqCache,
+    handle: SwapHandle,
+}
 
 /// [`StepBackend`] implementation over the real engine.
 pub struct EngineBackend {
@@ -21,6 +31,22 @@ pub struct EngineBackend {
     pub engine: Engine,
     /// Reserve this many free pool pages per admitted sequence.
     pub pages_per_seq_estimate: usize,
+    /// Restore-mode preempted sequences by request id (recompute mode
+    /// parks nothing — the batcher's token history is enough).
+    parked: HashMap<RequestId, ParkedSeq>,
+}
+
+impl EngineBackend {
+    /// Backend over `engine` with the default per-sequence page reserve.
+    pub fn new(engine: Engine) -> Self {
+        EngineBackend { engine, pages_per_seq_estimate: 64, parked: HashMap::new() }
+    }
+
+    /// Override the per-sequence page reserve `has_capacity` checks.
+    pub fn with_page_estimate(mut self, pages: usize) -> Self {
+        self.pages_per_seq_estimate = pages;
+        self
+    }
 }
 
 impl StepBackend for EngineBackend {
@@ -111,6 +137,60 @@ impl StepBackend for EngineBackend {
         self.engine.decode_batch(&mut entries)
     }
 
+    fn preempt(&mut self, id: RequestId, mut seq: SeqCache, mode: PreemptMode) -> Result<()> {
+        match mode {
+            PreemptMode::Restore => {
+                // Page bytes (and quant params) move to a host-side swap
+                // buffer; the page-table skeleton is parked for swap-in.
+                let handle = self.engine.swap_out_seq(&mut seq);
+                self.parked.insert(id, ParkedSeq { seq, handle });
+            }
+            PreemptMode::Recompute => {
+                // Drop everything; resume replays prompt + produced tokens.
+                self.engine.release_seq(&mut seq);
+            }
+        }
+        Ok(())
+    }
+
+    fn resume(&mut self, id: RequestId, prompt: &[u32], produced: &[u32]) -> Result<SeqCache> {
+        if let Some(parked) = self.parked.get_mut(&id) {
+            // Restore: all-or-nothing swap-in.  On pool pressure the entry
+            // stays parked (untouched) and the typed error tells the
+            // batcher to retry on a later tick.
+            self.engine.swap_in_seq(&mut parked.seq, &parked.handle)?;
+            let parked = self.parked.remove(&id).expect("entry present");
+            return Ok(parked.seq);
+        }
+        // Recompute: fresh prefill, then replay the generated tokens with
+        // their original step counters so stamps and per-page policy state
+        // (H2O accumulators, Figure-3 logs) rebuild bit-identically.
+        let mut seq = self.engine.new_seq();
+        let replay = |engine: &mut Engine, seq: &mut SeqCache| -> Result<()> {
+            engine.prefill_seq(seq, prompt)?;
+            for (i, &tok) in produced.iter().enumerate() {
+                engine.decode_step(seq, tok, (i + 1) as u64, None)?;
+            }
+            Ok(())
+        };
+        match replay(&mut self.engine, &mut seq) {
+            Ok(()) => {
+                self.engine
+                    .metrics
+                    .add("preempt.recompute_tokens", (prompt.len() + produced.len()) as u64);
+                Ok(seq)
+            }
+            Err(e) => {
+                self.engine.release_seq(&mut seq);
+                Err(e)
+            }
+        }
+    }
+
+    fn record_counter(&mut self, name: &'static str, delta: u64) {
+        self.engine.metrics.add(name, delta);
+    }
+
     fn finish(&mut self, mut seq: SeqCache) {
         self.engine.release_seq(&mut seq);
     }
@@ -166,7 +246,7 @@ impl EngineServer {
                         return;
                     }
                 };
-                let backend = EngineBackend { engine, pages_per_seq_estimate: 64 };
+                let backend = EngineBackend::new(engine);
                 let mut batcher = Batcher::new(backend, bcfg);
                 loop {
                     // Drain the mailbox without blocking while work is active;
@@ -206,12 +286,23 @@ impl EngineServer {
         Ok(EngineServer { tx, load, handle: Some(handle), name: thread_name })
     }
 
-    /// Enqueue one request into the replica mailbox.
-    pub fn submit(&self, req: Request) -> Result<()> {
-        self.load.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.tx
-            .send(Msg::Req(req))
-            .map_err(|_| anyhow::anyhow!("replica {} is down", self.name))
+    /// Enqueue one request into the replica mailbox.  On a dead replica
+    /// the request is handed back inside the error so the caller can
+    /// fail over instead of losing it.
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        match self.tx.send(Msg::Req(req)) {
+            Ok(()) => {
+                self.load.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                let req = match e.0 {
+                    Msg::Req(r) => r,
+                    Msg::Shutdown => unreachable!("submit only sends Req"),
+                };
+                Err(SubmitError { req, reason: format!("replica {} is down", self.name) })
+            }
+        }
     }
 
     /// Requests accepted but not yet answered.

@@ -25,7 +25,8 @@ use anyhow::{bail, Context, Result};
 use crate::config::{ArtifactMeta, BackendKind, EngineConfig, PolicyKind};
 use crate::kvcache::page::{page_probs, PageId, PageMeta, RepBounds};
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
-use crate::kvcache::{prefix_hashes, KvPool, PageView, PageViewBuf, PrefixIndex, SeqCache};
+use crate::kvcache::{prefix_hashes, KvPool, PageView, PageViewBuf, PoolExhausted, PrefixIndex,
+                     SeqCache, SwapHandle};
 use crate::metrics::Metrics;
 use crate::runtime::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, Qkv,
                      QkvBatchItem, SimBackend, Tokenizer};
@@ -257,6 +258,38 @@ impl Engine {
     /// (`rust/tests/prefix_sharing.rs`).
     pub fn fork_seq(&mut self, seq: &SeqCache) -> SeqCache {
         seq.fork(&mut self.pool)
+    }
+
+    /// Swap every resident page of `seq` out to a host-side buffer
+    /// (restore-mode preemption, DESIGN.md §6): the slab ranges are freed
+    /// for other sequences while the bytes (master + quantized + params +
+    /// stamp aggregates) park in the returned [`SwapHandle`].  The page
+    /// tables keep their metadata — [`Engine::swap_in_seq`] remaps the
+    /// now-stale pool ids on resume.  Pages must be exclusively owned
+    /// (the serving path's invariant; a shared page panics in the pool).
+    pub fn swap_out_seq(&mut self, seq: &mut SeqCache) -> SwapHandle {
+        let ids: Vec<PageId> =
+            seq.layers.iter().flat_map(|lc| lc.table.iter().map(|p| p.pool_id)).collect();
+        let handle = self.pool.swap_out(&ids);
+        self.metrics.add("preempt.restore_bytes", handle.bytes() as u64);
+        handle
+    }
+
+    /// Swap a parked sequence's pages back in, remapping every page-table
+    /// entry from its old pool id to the freshly allocated one.  Fails
+    /// with [`PoolExhausted`] (all-or-nothing, pool and handle untouched)
+    /// when the pool cannot hold the whole set yet — retry after more
+    /// pages free up.  After a successful swap-in the sequence decodes
+    /// bit-identically to one that was never swapped (the restored bytes
+    /// are verbatim; only pool ids differ).
+    pub fn swap_in_seq(&mut self, seq: &mut SeqCache, handle: &SwapHandle) -> Result<()> {
+        let map: HashMap<PageId, PageId> = self.pool.swap_in(handle)?.into_iter().collect();
+        for lc in &mut seq.layers {
+            for p in &mut lc.table {
+                p.pool_id = *map.get(&p.pool_id).expect("swap handle covers every resident page");
+            }
+        }
+        Ok(())
     }
 
     /// Entries currently held by the pool-level prefix index.
@@ -584,6 +617,16 @@ impl Engine {
     pub fn decode_step(&mut self, seq: &mut SeqCache, token: u32, now: u64,
                        score_log: Option<&mut Vec<(u64, Vec<(usize, f32)>)>>)
                        -> Result<u32> {
+        // Pre-mutation headroom check (DESIGN.md §6): the per-layer loop
+        // below appends as it goes, so an alloc failure at layer k would
+        // leave layers 0..k appended and the sequence poisoned (a retry
+        // trips the contiguity check).  Failing BEFORE any append keeps
+        // the sequence intact, so the batcher can preempt a victim and
+        // retry this exact step.
+        let need = seq.pages_needed_for_next_token(&self.pool);
+        if need > self.pool.free_pages() {
+            return Err(PoolExhausted { capacity_pages: self.pool.capacity_pages() }.into());
+        }
         let spec = self.meta.model.clone();
         let paged = self.model.supports_paged();
         let pos = seq.n_tokens;
@@ -716,6 +759,21 @@ impl Engine {
         let paged = self.model.supports_paged();
         let mut out: Vec<Result<u32>> = (0..n).map(|_| Ok(0u32)).collect();
         let mut alive = vec![true; n];
+        // Pre-mutation headroom admission (DESIGN.md §6): fail entries the
+        // pool cannot hold BEFORE any append, in entry order — an entry
+        // that fails here is untouched and retryable after preemption
+        // frees pages.  Entries needing no new pages always proceed, so
+        // one hungry entry never starves its fitting neighbors.
+        let mut headroom = self.pool.free_pages();
+        for (i, e) in entries.iter().enumerate() {
+            let need = e.seq.pages_needed_for_next_token(&self.pool);
+            if need <= headroom {
+                headroom -= need;
+            } else {
+                alive[i] = false;
+                out[i] = Err(PoolExhausted { capacity_pages: self.pool.capacity_pages() }.into());
+            }
+        }
         let mut t_exec = 0.0f64;
         let mut t_policy = 0.0f64;
         let mut t_gather = 0.0f64;
@@ -1266,6 +1324,94 @@ mod tests {
         conc.release_seq(&mut ca);
         conc.release_seq(&mut cb);
         conc.release_seq(&mut fresh);
+    }
+
+    #[test]
+    fn decode_exhaustion_fails_pre_mutation_and_is_retryable() {
+        // Two prefilled sequences fill the pool exactly; the next decode
+        // step must fail with the typed `PoolExhausted` BEFORE any layer
+        // appends, leaving the sequence intact — and once the other
+        // sequence releases, the retried step decodes the token an
+        // uncrowded engine would have produced.
+        // Sim geometry: 4 layers, 16-token pages → a 16-token prompt
+        // prefills 4 pages; the first decode token needs 4 more (pinned
+        // boundary on every layer).
+        let prompt: Vec<u32> = (0..16u32).map(|i| 1 + i % 40).collect();
+        let cfg = EngineConfig { budget: 10_000, pool_pages: 8, ..Default::default() };
+        let mut crowded = Engine::new_with_capacities(cfg.clone(), &[64, 128]).unwrap();
+        let mut sa = crowded.new_seq();
+        let tok = crowded.prefill_seq(&mut sa, &prompt).unwrap();
+        let mut sb = crowded.new_seq();
+        let other: Vec<u32> = (0..16u32).map(|i| 2 + i % 31).collect();
+        crowded.prefill_seq(&mut sb, &other).unwrap();
+        assert_eq!(crowded.pool().free_pages(), 0);
+
+        let before = (sa.n_tokens, sa.resident_pages_total());
+        let err = crowded.decode_step(&mut sa, tok, 1, None).unwrap_err();
+        assert!(err.downcast_ref::<crate::kvcache::PoolExhausted>().is_some(),
+                "exhaustion must surface as the typed signal, got: {err:#}");
+        assert_eq!((sa.n_tokens, sa.resident_pages_total()), before,
+                   "failed step must not mutate the sequence");
+
+        // victim teardown frees headroom; the exact same step now succeeds
+        crowded.release_seq(&mut sb);
+        let got = crowded.decode_step(&mut sa, tok, 1, None).unwrap();
+
+        let mut control = Engine::new_with_capacities(cfg, &[64, 128]).unwrap();
+        let mut sc = control.new_seq();
+        let ctok = control.prefill_seq(&mut sc, &prompt).unwrap();
+        assert_eq!(tok, ctok);
+        assert_eq!(got, control.decode_step(&mut sc, ctok, 1, None).unwrap(),
+                   "retried step must decode exactly what an uncrowded run does");
+        crowded.release_seq(&mut sa);
+        control.release_seq(&mut sc);
+        assert_eq!(crowded.pool().allocated_pages(), 0);
+    }
+
+    #[test]
+    fn swap_out_in_roundtrip_decodes_bit_identically() {
+        let prompt: Vec<u32> = (0..20u32).map(|i| 1 + i % 40).collect();
+        let cfg = EngineConfig { budget: 128, ..Default::default() };
+        let opts = GenOptions { max_new: 12, force_len: Some(12), log_scores: true,
+                                ..Default::default() };
+        let mut plain = Engine::new(cfg.clone()).unwrap();
+        let reference = plain.generate(&prompt, &opts).unwrap();
+
+        let mut e = Engine::new(cfg).unwrap();
+        let mut seq = e.new_seq();
+        let mut tok = e.prefill_seq(&mut seq, &prompt).unwrap();
+        let mut tokens = vec![tok];
+        let mut log = Vec::new();
+        for step in 1..=4u64 {
+            tok = e.decode_step(&mut seq, tok, step, Some(&mut log)).unwrap();
+            tokens.push(tok);
+        }
+        // park: every resident page leaves the pool, bytes go host-side
+        let pages = seq.resident_pages_total();
+        let handle = e.swap_out_seq(&mut seq);
+        assert_eq!(handle.pages(), pages);
+        assert_eq!(e.pool().allocated_pages(), 0);
+        // churn the freed ranges so swap-in really has to remap ids
+        let filler: Vec<_> = (0..3).map(|_| {
+            let mut s = e.new_seq();
+            e.prefill_seq(&mut s, &prompt).unwrap();
+            s
+        }).collect();
+        for mut s in filler {
+            e.release_seq(&mut s);
+        }
+        e.swap_in_seq(&mut seq, &handle).unwrap();
+        for step in 5..=12u64 {
+            tok = e.decode_step(&mut seq, tok, step, Some(&mut log)).unwrap();
+            tokens.push(tok);
+        }
+        // `generate` discards the final decode's output token (it pushes
+        // before decoding), so compare the same 12-token window
+        tokens.truncate(reference.tokens.len());
+        assert_eq!(tokens, reference.tokens, "swap roundtrip must not change the decode");
+        assert_eq!(log, reference.score_log, "Figure-3 logs must survive the roundtrip");
+        e.release_seq(&mut seq);
+        assert_eq!(e.pool().allocated_pages(), 0);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Ablations of RaaS design choices (DESIGN.md §6 calls these out):
+//! Ablations of RaaS design choices (DESIGN.md §7 calls these out):
 //!
 //!  A. **Prefill pinning** on/off — removes idea #2; phoenix operands get
 //!     evicted and accuracy collapses on reasoning prompts.

@@ -13,7 +13,7 @@ pub mod quant;
 pub mod seq;
 
 pub use page::{PageData, PageId, PageMeta, PageView, RepBounds};
-pub use pool::KvPool;
+pub use pool::{KvPool, PoolExhausted, SwapHandle};
 pub use prefix::{prefix_hashes, PrefixIndex};
 pub use quant::{KvDtype, QuantParams};
 pub use seq::{PageViewBuf, SeqCache, PAGE_VIEW_INLINE};

@@ -29,10 +29,75 @@
 //! byte accounting, which reflects the quantized layout a device slab
 //! would carry ([`KvPool::bytes_per_page`]).
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use super::page::{PageData, PageId, PageView};
 use super::quant::{KvDtype, QuantParams};
+
+/// Typed allocation-failure error: the pool's free list is empty.
+///
+/// This is the serving layer's backpressure signal — the batcher
+/// downcasts step/prefill errors to it (`err.downcast_ref::<PoolExhausted>()`)
+/// to distinguish "preempt a victim and retry" from a genuine execution
+/// fault (DESIGN.md §6).  Fault injectors construct it directly so
+/// injected exhaustion takes the same recovery path as the real thing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolExhausted {
+    /// Total pages the pool was sized for.
+    pub capacity_pages: usize,
+}
+
+impl std::fmt::Display for PoolExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kv pool exhausted ({} pages)", self.capacity_pages)
+    }
+}
+
+impl std::error::Error for PoolExhausted {}
+
+/// One page's bytes parked in host memory by [`KvPool::swap_out`].
+#[derive(Debug, Clone)]
+struct SwappedPage {
+    /// Original pool id (so page tables can be remapped on swap-in).
+    id: PageId,
+    /// Master `f32` key slots, full page stride.
+    k: Vec<f32>,
+    /// Master `f32` value slots, full page stride.
+    v: Vec<f32>,
+    /// Quantized key bytes (empty for `F32` pools).
+    qk: Vec<u8>,
+    /// Quantized value bytes (empty for `F32` pools).
+    qv: Vec<u8>,
+    /// Running quant ranges `(k_lo, k_hi, v_lo, v_hi)`.
+    ranges: (f32, f32, f32, f32),
+    /// Pool-level stamp aggregate at swap-out.
+    stamp_max: u64,
+}
+
+/// A set of pages held in the host-side swap buffer (restore-mode
+/// preemption, DESIGN.md §6): [`KvPool::swap_out`] copies the slab
+/// bytes + quant params out and frees the slab ranges;
+/// [`KvPool::swap_in`] re-allocates and writes them back bit-identically.
+/// The handle owns the bytes — dropping it discards the swapped state.
+#[derive(Debug)]
+pub struct SwapHandle {
+    pages: Vec<SwappedPage>,
+    /// Accounted bytes (quantized layout) the swapped pages occupied —
+    /// feeds the `preempt.restore_bytes` metric.
+    bytes: usize,
+}
+
+impl SwapHandle {
+    /// Number of pages parked in this handle.
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Accounted bytes of the parked pages (what a device slab freed).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
 
 /// The shared physical KV page pool (one per engine).
 ///
@@ -217,7 +282,7 @@ impl KvPool {
     /// the sole owner (refcount 1).
     pub fn alloc(&mut self) -> Result<PageId> {
         let Some(id) = self.free.pop() else {
-            bail!("kv pool exhausted ({} pages)", self.capacity_pages);
+            return Err(PoolExhausted { capacity_pages: self.capacity_pages }.into());
         };
         self.set_free(id, false);
         self.refs[id as usize] = 1;
@@ -475,6 +540,72 @@ impl KvPool {
     pub fn slot_v(&self, id: PageId, slot: usize) -> &[f32] {
         let off = self.page_off(id) + slot * self.kv_dim;
         &self.v[off..off + self.kv_dim]
+    }
+
+    /// Swap the given pages out to a host-side buffer (restore-mode
+    /// preemption): copy each page's full slab stride (master `f32`,
+    /// quantized bytes, running ranges, stamp aggregate) into the returned
+    /// [`SwapHandle`] and release the slab range.  The pages must be
+    /// exclusively owned by the caller — swapping a shared page out from
+    /// under another sharer's zero-copy views is a hard panic, exactly
+    /// like a shared write without COW.
+    pub fn swap_out(&mut self, ids: &[PageId]) -> SwapHandle {
+        let stride = self.page_size * self.kv_dim;
+        let mut pages = Vec::with_capacity(ids.len());
+        for &id in ids {
+            assert!(!self.is_free(id), "swap_out of free page {id}");
+            assert!(!self.is_shared(id), "swap_out of shared page {id}");
+            let off = self.page_off(id);
+            let i = id as usize;
+            let quant = self.dtype.is_quantized();
+            pages.push(SwappedPage {
+                id,
+                k: self.k[off..off + stride].to_vec(),
+                v: self.v[off..off + stride].to_vec(),
+                qk: if quant { self.qk[off..off + stride].to_vec() } else { Vec::new() },
+                qv: if quant { self.qv[off..off + stride].to_vec() } else { Vec::new() },
+                ranges: if quant {
+                    (self.k_lo[i], self.k_hi[i], self.v_lo[i], self.v_hi[i])
+                } else {
+                    (0.0, 0.0, 0.0, 0.0)
+                },
+                stamp_max: self.stamp_max[i],
+            });
+            self.release(id);
+        }
+        let bytes = ids.len() * self.bytes_per_page();
+        SwapHandle { pages, bytes }
+    }
+
+    /// Swap a parked page set back in: allocate one fresh page per entry,
+    /// restore the bytes/ranges/stamps verbatim, and return the
+    /// `(old_id, new_id)` remapping for the owning sequence's page tables.
+    /// All-or-nothing: if the pool cannot hold the whole set the call
+    /// fails with [`PoolExhausted`] *before* any allocation, leaving both
+    /// the pool and the handle untouched (retryable after more pages
+    /// free up).  The restored quantized bytes are the swapped-out bytes
+    /// verbatim — no re-encode — so restore-mode resume is bit-identical.
+    pub fn swap_in(&mut self, handle: &SwapHandle) -> Result<Vec<(PageId, PageId)>> {
+        if self.free.len() < handle.pages.len() {
+            return Err(PoolExhausted { capacity_pages: self.capacity_pages }.into());
+        }
+        let stride = self.page_size * self.kv_dim;
+        let mut map = Vec::with_capacity(handle.pages.len());
+        for page in &handle.pages {
+            let id = self.alloc().expect("headroom checked above");
+            let off = self.page_off(id);
+            self.k[off..off + stride].copy_from_slice(&page.k);
+            self.v[off..off + stride].copy_from_slice(&page.v);
+            if self.dtype.is_quantized() {
+                self.qk[off..off + stride].copy_from_slice(&page.qk);
+                self.qv[off..off + stride].copy_from_slice(&page.qv);
+                let i = id as usize;
+                (self.k_lo[i], self.k_hi[i], self.v_lo[i], self.v_hi[i]) = page.ranges;
+            }
+            self.stamp_max[id as usize] = page.stamp_max;
+            map.push((page.id, id));
+        }
+        Ok(map)
     }
 }
 
@@ -779,6 +910,131 @@ mod tests {
         }
         let (kp, vp) = pool.page_params(a);
         assert_eq!((kp.scale, kp.zero, vp.scale, vp.zero), (1.0, 0.0, 1.0, 0.0));
+    }
+
+    #[test]
+    fn exhaustion_error_is_typed_and_non_mutating() {
+        // Satellite: pin pool-exhaustion-during-decode behavior at the
+        // pool layer — a failed alloc is the typed `PoolExhausted` signal,
+        // mutates nothing (no phantom allocation, no free_bits drift), and
+        // the pool stays fully usable after pages are released.
+        let mut pool = KvPool::new(2, 4, 2);
+        let a = pool.alloc().unwrap();
+        let _b = pool.alloc().unwrap();
+        let err = pool.alloc().unwrap_err();
+        let typed = err.downcast_ref::<PoolExhausted>().expect("typed exhaustion error");
+        assert_eq!(typed.capacity_pages, 2);
+        assert_eq!(pool.allocated_pages(), 2, "failed alloc must not count");
+        assert_eq!(pool.free_pages(), 0);
+        // recovery: release → the exact same page comes back, refcounted 1
+        pool.release(a);
+        assert_eq!(pool.free_pages(), 1);
+        let c = pool.alloc().unwrap();
+        assert_eq!(c, a);
+        assert_eq!(pool.ref_count(c), 1);
+    }
+
+    #[test]
+    fn mid_decode_exhaustion_releases_cleanly_without_leak() {
+        // Satellite: the decode-shaped exhaustion scenario — a sequence
+        // holds pages, the next alloc fails, the sequence is torn down.
+        // Every held page must return to the free list exactly once
+        // (the free_bits double-free guard stays armed throughout).
+        let mut pool = KvPool::new(3, 4, 2);
+        let held: Vec<_> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+        assert!(pool.alloc().unwrap_err().downcast_ref::<PoolExhausted>().is_some());
+        for &id in &held {
+            pool.release(id);
+        }
+        assert_eq!(pool.allocated_pages(), 0, "no leaked pages after teardown");
+        assert_eq!(pool.free_pages(), 3);
+        // and the guard still fires on a second release
+        let a = pool.alloc().unwrap();
+        pool.release(a);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.release(a);
+        }));
+        assert!(result.is_err(), "double free must still panic after exhaustion recovery");
+    }
+
+    #[test]
+    fn swap_roundtrip_restores_bytes_and_frees_while_parked() {
+        let mut pool = KvPool::new(2, 2, 2);
+        let a = pool.alloc().unwrap();
+        pool.write_slots(a, 0, 2, &[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        pool.note_stamp(a, 9);
+        let handle = pool.swap_out(&[a]);
+        assert_eq!(handle.pages(), 1);
+        assert_eq!(handle.bytes(), pool.bytes_per_page());
+        assert_eq!(pool.allocated_pages(), 0, "swap_out frees the slab range");
+        // the freed range is reusable while the page is parked
+        let filler = pool.alloc().unwrap();
+        pool.write_slots(filler, 0, 1, &[-9.0, -9.0], &[-9.0, -9.0]);
+        let map = pool.swap_in(&handle).unwrap();
+        assert_eq!(map.len(), 1);
+        assert_eq!(map[0].0, a, "mapping keys on the original id");
+        let new = map[0].1;
+        assert_eq!(pool.page_k(new, 2), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(pool.page_v(new, 2), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(pool.stamp_max(new), 9, "stamp aggregate survives the roundtrip");
+        pool.release(new);
+        pool.release(filler);
+        assert_eq!(pool.allocated_pages(), 0);
+    }
+
+    #[test]
+    fn swap_in_is_all_or_nothing_under_pressure() {
+        let mut pool = KvPool::new(2, 2, 2);
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        pool.write_slots(a, 0, 1, &[1.0, 1.0], &[1.0, 1.0]);
+        pool.write_slots(b, 0, 1, &[2.0, 2.0], &[2.0, 2.0]);
+        let handle = pool.swap_out(&[a, b]);
+        // occupy one page: swap-in of two must fail before allocating any
+        let filler = pool.alloc().unwrap();
+        let err = pool.swap_in(&handle).unwrap_err();
+        assert!(err.downcast_ref::<PoolExhausted>().is_some());
+        assert_eq!(pool.allocated_pages(), 1, "failed swap_in must not half-allocate");
+        // retryable: free the filler and the same handle swaps in whole
+        pool.release(filler);
+        let map = pool.swap_in(&handle).unwrap();
+        assert_eq!(map.len(), 2);
+        assert_eq!(pool.page_k(map[0].1, 1), &[1.0, 1.0]);
+        assert_eq!(pool.page_k(map[1].1, 1), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn swap_roundtrip_preserves_quantized_bytes_verbatim() {
+        // restore-mode bit-identity depends on the quantized bytes and
+        // params surviving the roundtrip without a re-encode
+        for d in [KvDtype::Int8, KvDtype::Fp8E4M3] {
+            let mut pool = KvPool::new_with_dtype(2, 4, 3, d);
+            let a = pool.alloc().unwrap();
+            let k = [0.5f32, -2.0, 7.25, 0.0, 3.5, -0.125];
+            let v = [10.0f32, -10.0, 0.25, 4.0, -1.0, 2.0];
+            pool.write_slots(a, 0, 2, &k, &v);
+            let params = pool.page_params(a);
+            let (mut k0, mut v0) = (vec![0.0f32; 6], vec![0.0f32; 6]);
+            pool.read_page(a, 2, &mut k0, &mut v0);
+            let handle = pool.swap_out(&[a]);
+            let map = pool.swap_in(&handle).unwrap();
+            let new = map[0].1;
+            assert_eq!(pool.page_params(new), params, "{d}: params survive");
+            let (mut k1, mut v1) = (vec![0.0f32; 6], vec![0.0f32; 6]);
+            pool.read_page(new, 2, &mut k1, &mut v1);
+            let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&k0), bits(&k1), "{d}: dequant keys bit-identical");
+            assert_eq!(bits(&v0), bits(&v1), "{d}: dequant values bit-identical");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "swap_out of shared page")]
+    fn swap_out_of_shared_page_panics() {
+        let mut pool = KvPool::new(2, 4, 2);
+        let a = pool.alloc().unwrap();
+        pool.retain(a);
+        pool.swap_out(&[a]);
     }
 
     #[test]

@@ -301,6 +301,27 @@ impl SeqCache {
         }
     }
 
+    /// Pages the next single-token *decode* append would allocate across
+    /// all layers: a layer takes one page when its table is empty, its
+    /// active page is full, or its active page is pinned (decode appends
+    /// are unpinned, so the prefill/decode boundary forces a fresh page —
+    /// the same predicate [`SeqCache::append_slots`] applies per layer),
+    /// or when the active page is shared (the COW detach transiently
+    /// allocates one page before dropping the shared reference).  The
+    /// engine checks this against the pool's free-page headroom *before*
+    /// mutating any layer, so a pool-exhausted decode step fails
+    /// pre-append and the sequence stays intact and retryable once
+    /// preemption frees pages (DESIGN.md §6).
+    pub fn pages_needed_for_next_token(&self, pool: &KvPool) -> usize {
+        self.layers
+            .iter()
+            .filter(|lc| match lc.table.last() {
+                None => true,
+                Some(p) => p.len >= self.page_size || p.pinned || pool.is_shared(p.pool_id),
+            })
+            .count()
+    }
+
     /// Resident tokens in one layer's table.
     pub fn resident_tokens(&self, layer: usize) -> usize {
         self.layers[layer].resident_tokens()
@@ -560,6 +581,36 @@ mod tests {
             off += w.len;
         }
         assert_eq!(off, used);
+    }
+
+    #[test]
+    fn pages_needed_for_next_token_tracks_the_append_predicate() {
+        let (mut sc, mut pool) = mk();
+        // empty tables: every layer opens a page
+        assert_eq!(sc.pages_needed_for_next_token(&pool), 2);
+        // pinned (prefill) active page: the decode boundary still forces
+        // a fresh page per layer
+        for layer in 0..2 {
+            sc.append(layer, &mut pool, 0, &[0.0; 3], &[0.0; 3], true, 0).unwrap();
+        }
+        assert_eq!(sc.pages_needed_for_next_token(&pool), 2);
+        // an unpinned active page with free slots needs nothing
+        for layer in 0..2 {
+            sc.append(layer, &mut pool, 1, &[0.0; 3], &[0.0; 3], false, 1).unwrap();
+        }
+        assert_eq!(sc.pages_needed_for_next_token(&pool), 0);
+        // fill layer 0's active page (it opened at position 1): that layer
+        // needs a fresh one for the next token
+        for pos in 2..5 {
+            sc.append(0, &mut pool, pos, &[0.0; 3], &[0.0; 3], false, 1).unwrap();
+        }
+        assert_eq!(sc.pages_needed_for_next_token(&pool), 1);
+        // a shared active page counts: the COW detach allocates
+        let mut fork = sc.fork(&mut pool);
+        assert_eq!(sc.pages_needed_for_next_token(&pool), 2);
+        fork.release_all(&mut pool);
+        sc.release_all(&mut pool);
+        assert_eq!(pool.allocated_pages(), 0);
     }
 
     #[test]

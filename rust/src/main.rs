@@ -12,9 +12,9 @@
 
 use anyhow::{bail, Result};
 
-use raas::config::{BackendKind, EngineConfig, PolicyKind};
+use raas::config::{BackendKind, EngineConfig, PolicyKind, PreemptMode};
 use raas::coordinator::batcher::BatcherConfig;
-use raas::coordinator::request::{Request, Response};
+use raas::coordinator::request::{Outcome, Request, Response};
 use raas::coordinator::router::{RoutePolicy, Router};
 use raas::coordinator::server::EngineServer;
 use raas::engine::{Engine, GenOptions};
@@ -75,7 +75,9 @@ fn print_help() {
            sweep       model accuracy sweep (--policies, --budgets, --problems)\n\
            serve       multi-replica serving demo (--replicas, --requests, --rate,\n\
                        --prefill-budget N for chunked admission,\n\
-                       --prefill-concurrency K to co-admit K prompts)\n\
+                       --prefill-concurrency K to co-admit K prompts,\n\
+                       --preempt-mode recompute|restore, --deadline-ms N,\n\
+                       --retry N failovers, --max-queue N sheds beyond depth)\n\
            fig1..fig9  regenerate the paper's figures (writes results/*.csv)\n\
          \n\
          common flags: --backend sim|xla  --artifacts DIR\n\
@@ -224,12 +226,22 @@ fn serve(args: &Args) -> Result<()> {
     // Concurrent chunked admission: how many prompts may prefill at once,
     // their chunks packed into one batched call (1 = PR-4 one-at-a-time).
     let prefill_concurrency = args.usize_or("prefill-concurrency", 1);
+    // Robustness knobs (DESIGN.md §6): what happens to a preempted
+    // sequence's pages, per-request deadline + router retry budget, and
+    // queue-depth load shedding.
+    let preempt_mode = PreemptMode::parse(&args.str_or("preempt-mode", "recompute"))?;
+    let deadline_ms = args.u64_or("deadline-ms", 0); // 0 = no deadline
+    let retries = args.usize_or("retry", 1) as u32;
+    let max_queue_depth = args.usize_opt("max-queue");
     let cfg = EngineConfig::from_args(args)?;
     let caps: Option<Vec<usize>> = Some(args.usize_list_or("capacities", &[64, 128, 256, 512]));
 
     println!("spawning {replicas} replica(s) (policy={}, budget={})…", cfg.policy, cfg.budget);
-    let bcfg = BatcherConfig { max_batch, prefill_token_budget: prefill_budget,
-                               prefill_concurrency };
+    let bcfg = BatcherConfig { max_batch,
+                               prefill_token_budget: prefill_budget,
+                               prefill_concurrency,
+                               preempt_mode,
+                               max_queue_depth };
     let servers: Vec<EngineServer> = (0..replicas)
         .map(|i| EngineServer::spawn(format!("r{i}"), cfg.clone(), bcfg.clone(), caps.clone()))
         .collect::<Result<_>>()?;
@@ -247,14 +259,22 @@ fn serve(args: &Args) -> Result<()> {
         }
         let p = Problem::sample(&mut rng, &spec, None);
         answers.push(p.answer());
-        let req = Request {
+        let mut req = Request::new(
             id,
-            prompt: p.encode_prompt(&spec),
-            max_new: spec.max_decode_tokens(spec.max_steps),
-            submitted: std::time::Instant::now(),
-            reply: tx.clone(),
-        };
-        router.route(req)?;
+            p.encode_prompt(&spec),
+            spec.max_decode_tokens(spec.max_steps),
+            tx.clone(),
+        )
+        .with_retries(retries);
+        if deadline_ms > 0 {
+            req = req.with_deadline_ms(deadline_ms);
+        }
+        if let Err(se) = router.route(req) {
+            // Every replica refused (or is dead): answer the caller with a
+            // failure instead of silently dropping the request.
+            let resp = Response::err(se.req.id, se.req.submitted, se.reason);
+            let _ = se.req.reply.send(resp);
+        }
     }
     drop(tx);
 
@@ -263,11 +283,22 @@ fn serve(args: &Args) -> Result<()> {
     let mut tokens = 0usize;
     let mut correct = 0usize;
     let mut errors = 0usize;
+    let mut sheds = 0usize;
     for resp in rx.iter() {
-        if let Some(e) = &resp.error {
-            eprintln!("request {} failed: {e}", resp.id);
-            errors += 1;
-            continue;
+        match resp.outcome {
+            Outcome::Shed => {
+                eprintln!("request {} shed: {}", resp.id,
+                          resp.error.as_deref().unwrap_or("unknown"));
+                sheds += 1;
+                continue;
+            }
+            Outcome::Failed => {
+                eprintln!("request {} failed: {}", resp.id,
+                          resp.error.as_deref().unwrap_or("unknown"));
+                errors += 1;
+                continue;
+            }
+            Outcome::Done => {}
         }
         jct.add(resp.jct_secs);
         ttft.add(resp.ttft_secs);
@@ -284,7 +315,7 @@ fn serve(args: &Args) -> Result<()> {
              jct.percentile(99.0), jct.mean());
     println!("TTFT p50 {:.0}ms p99 {:.0}ms", 1e3 * ttft.percentile(50.0),
              1e3 * ttft.percentile(99.0));
-    println!("accuracy: {:.2} ({correct}/{done}), errors {errors}",
+    println!("accuracy: {:.2} ({correct}/{done}), errors {errors}, shed {sheds}",
              correct as f64 / done.max(1) as f64);
     for r in router.into_replicas() {
         r.shutdown();

@@ -1,0 +1,584 @@
+//! Deterministic fault injection (DESIGN.md §6): seeded, schedule-driven
+//! failures threaded in front of a real backend so robustness behavior —
+//! preemption, shedding, retry, failover — is testable without flaky
+//! timing tricks or ad-hoc `fail_xxx` fields on mock backends.
+//!
+//! Two wrappers share one [`FaultSchedule`]:
+//!
+//! * [`FaultInjector`] implements [`Backend`] around any boxed model
+//!   backend, failing `embed_tok`/`embed_tok_batch` (decode-step faults —
+//!   injected *before* any KV append, so sequence state stays intact and
+//!   the error is retryable) and `prefill`/`prefill_chunk`/
+//!   `prefill_chunk_batch` (prefill-chunk faults).
+//! * [`StepFaultInjector`] implements [`StepBackend`] around a scheduler
+//!   backend, additionally injecting typed [`PoolExhausted`] allocation
+//!   faults (the batcher's preemption trigger) and whole-admission
+//!   `begin` faults.
+//!
+//! Faults are either *targeted* (fail the Nth call of an op, optionally
+//! scoped to one sequence key — the replacement for the old
+//! `fail_second_chunk_of` test field) or *rate-based* (each call fails
+//! with seeded probability `p` via [`Rng::chance`]).  A schedule can also
+//! *hang*: after a call budget every subsequent call fails permanently,
+//! modelling a dead replica for the router's circuit breaker.  Everything
+//! is driven by one [`Rng`] stream, so a chaos run is reproducible from
+//! its seed alone.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ModelSpec, PreemptMode};
+use crate::coordinator::batcher::{PrefillBatchItem, PrefillProgress, StepBackend, StepItem};
+use crate::coordinator::request::RequestId;
+use crate::kvcache::PoolExhausted;
+use crate::runtime::backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem,
+                              PrefillChunkOut, PrefillOut, Qkv, QkvBatchItem};
+use crate::util::rng::Rng;
+
+/// Injection sites a [`FaultSchedule`] distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultOp {
+    /// Whole-prompt admission ([`StepBackend::begin`]).
+    Begin,
+    /// One prefill chunk (model-level `prefill`/`prefill_chunk`, or
+    /// scheduler-level [`StepBackend::prefill_chunk`]).
+    Chunk,
+    /// One decode step (model-level `embed_tok`, or scheduler-level
+    /// [`StepBackend::step`]).
+    Step,
+    /// A KV-pool allocation: injected as a typed [`PoolExhausted`] so
+    /// schedulers exercise the preemption path, not generic failure.
+    Alloc,
+    /// A replica `submit` (checked by router/serving harnesses directly;
+    /// the backend wrappers never draw it).
+    Submit,
+}
+
+const N_OPS: usize = 5;
+
+impl FaultOp {
+    fn idx(self) -> usize {
+        match self {
+            FaultOp::Begin => 0,
+            FaultOp::Chunk => 1,
+            FaultOp::Step => 2,
+            FaultOp::Alloc => 3,
+            FaultOp::Submit => 4,
+        }
+    }
+}
+
+/// A one-shot targeted fault: fail the `nth` checked call of `op`
+/// (1-indexed), counted globally (`key == None`) or per sequence key.
+#[derive(Debug, Clone)]
+struct Targeted {
+    op: FaultOp,
+    key: Option<u64>,
+    nth: u64,
+}
+
+/// A seeded, deterministic fault plan (see module docs).  Built with the
+/// `rate`/`fail_nth`/`fail_nth_for`/`hang_after` builders, consumed by the
+/// injector wrappers through [`FaultSchedule::check`].
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    rng: Rng,
+    rates: [f64; N_OPS],
+    targeted: Vec<Targeted>,
+    /// Calls seen per `(op, key)`; the `None` key row counts every call of
+    /// the op regardless of sequence.
+    seen: HashMap<(usize, Option<u64>), u64>,
+    hang_after: Option<u64>,
+    calls: u64,
+    hung: bool,
+    injected: u64,
+}
+
+impl FaultSchedule {
+    /// A fault-free schedule seeded for the rate draws; faults are added
+    /// with the builder methods.
+    pub fn new(seed: u64) -> Self {
+        FaultSchedule {
+            rng: Rng::new(seed),
+            rates: [0.0; N_OPS],
+            targeted: Vec::new(),
+            seen: HashMap::new(),
+            hang_after: None,
+            calls: 0,
+            hung: false,
+            injected: 0,
+        }
+    }
+
+    /// Fail each checked call of `op` with probability `p` (seeded draw).
+    pub fn rate(mut self, op: FaultOp, p: f64) -> Self {
+        self.rates[op.idx()] = p;
+        self
+    }
+
+    /// Fail the `nth` checked call of `op` (1-indexed), counted across all
+    /// sequences.  One-shot: the entry is consumed when it fires.
+    pub fn fail_nth(mut self, op: FaultOp, nth: u64) -> Self {
+        self.targeted.push(Targeted { op, key: None, nth });
+        self
+    }
+
+    /// Fail the `nth` checked call of `op` whose sequence key is `key`
+    /// (1-indexed; the wrappers key prefill ops by `prompt[0]`).  The
+    /// schedule-level replacement for per-mock failure fields like the old
+    /// `fail_second_chunk_of`: `fail_nth_for(Chunk, tag, 2)`.
+    pub fn fail_nth_for(mut self, op: FaultOp, key: u64, nth: u64) -> Self {
+        self.targeted.push(Targeted { op, key: Some(key), nth });
+        self
+    }
+
+    /// After `calls` total checks, every subsequent call fails permanently
+    /// (a dead replica, as seen by a router health check).
+    pub fn hang_after(mut self, calls: u64) -> Self {
+        self.hang_after = Some(calls);
+        self
+    }
+
+    /// Record one call of `op` (scoped to `key` when the caller has one)
+    /// and decide whether it faults.  Deterministic: targeted entries fire
+    /// on exact call counts, rate draws consume the seeded stream only for
+    /// ops with a nonzero rate.
+    pub fn check(&mut self, op: FaultOp, key: Option<u64>) -> bool {
+        self.calls += 1;
+        if let Some(h) = self.hang_after {
+            if self.calls > h {
+                self.hung = true;
+            }
+        }
+        if self.hung {
+            self.injected += 1;
+            return true;
+        }
+        let global = {
+            let c = self.seen.entry((op.idx(), None)).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let keyed = key.map(|k| {
+            let c = self.seen.entry((op.idx(), Some(k))).or_insert(0);
+            *c += 1;
+            *c
+        });
+        let hit = self.targeted.iter().position(|t| {
+            t.op == op
+                && match t.key {
+                    None => t.nth == global,
+                    Some(k) => key == Some(k) && keyed == Some(t.nth),
+                }
+        });
+        if let Some(i) = hit {
+            self.targeted.remove(i);
+            self.injected += 1;
+            return true;
+        }
+        let p = self.rates[op.idx()];
+        if p > 0.0 && self.rng.chance(p) {
+            self.injected += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Total faults fired so far (targeted + rate + hang).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Whether the schedule has entered the permanent-failure (hung) state.
+    pub fn is_hung(&self) -> bool {
+        self.hung
+    }
+}
+
+fn prompt_key(tokens: &[u32]) -> Option<u64> {
+    tokens.first().map(|&t| t as u64)
+}
+
+/// [`Backend`] wrapper injecting schedule-driven faults in front of a real
+/// model backend (see module docs for the injection sites).  All other
+/// entry points delegate verbatim — including the capability probes, so
+/// the engine routes (paged, chunked, batched) exactly as it would against
+/// the bare inner backend.
+#[derive(Debug)]
+pub struct FaultInjector {
+    inner: Box<dyn Backend>,
+    /// `Backend` methods take `&self`; the schedule mutates per call.
+    schedule: RefCell<FaultSchedule>,
+}
+
+impl FaultInjector {
+    /// Wrap `inner`, drawing faults from `schedule`.
+    pub fn new(inner: Box<dyn Backend>, schedule: FaultSchedule) -> Self {
+        FaultInjector { inner, schedule: RefCell::new(schedule) }
+    }
+
+    /// Faults fired so far.
+    pub fn injected(&self) -> u64 {
+        self.schedule.borrow().injected()
+    }
+
+    fn fires(&self, op: FaultOp, key: Option<u64>) -> bool {
+        self.schedule.borrow_mut().check(op, key)
+    }
+}
+
+impl Backend for FaultInjector {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        self.inner.spec()
+    }
+
+    fn capacities(&self) -> Vec<usize> {
+        self.inner.capacities()
+    }
+
+    fn capacity_for(&self, n_slots: usize) -> Result<usize> {
+        self.inner.capacity_for(n_slots)
+    }
+
+    fn embed_tok(&self, token: u32) -> Result<Vec<f32>> {
+        if self.fires(FaultOp::Step, None) {
+            bail!("injected step fault");
+        }
+        self.inner.embed_tok(token)
+    }
+
+    fn layer_qkv(&self, layer: usize, h: &[f32], pos: usize) -> Result<Qkv> {
+        self.inner.layer_qkv(layer, h, pos)
+    }
+
+    fn layer_attn_mlp(&self, layer: usize, capacity: usize, h: &[f32], q: &[f32],
+                      k_sel: &[f32], v_sel: &[f32], valid: &[f32]) -> Result<Vec<f32>> {
+        self.inner.layer_attn_mlp(layer, capacity, h, q, k_sel, v_sel, valid)
+    }
+
+    fn lm_head(&self, h: &[f32]) -> Result<Vec<f32>> {
+        self.inner.lm_head(h)
+    }
+
+    fn prefill(&self, tokens: &[u32]) -> Result<PrefillOut> {
+        if self.fires(FaultOp::Chunk, prompt_key(tokens)) {
+            bail!("injected prefill fault");
+        }
+        self.inner.prefill(tokens)
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        self.inner.supports_chunked_prefill()
+    }
+
+    fn prefill_chunk(&self, tokens: &[u32], start: usize, end: usize)
+                     -> Result<PrefillChunkOut> {
+        if self.fires(FaultOp::Chunk, prompt_key(tokens)) {
+            bail!("injected prefill fault");
+        }
+        self.inner.prefill_chunk(tokens, start, end)
+    }
+
+    fn prefill_chunk_batch(&self, items: &[PrefillChunkItem<'_>])
+                           -> Result<Vec<PrefillChunkOut>> {
+        // Backend batch semantics are all-or-nothing: any item's fault
+        // fails the whole call, and the engine's per-item fallback then
+        // isolates the failure (fresh draws happen there).
+        for it in items {
+            if self.fires(FaultOp::Chunk, prompt_key(it.tokens)) {
+                bail!("injected prefill fault");
+            }
+        }
+        self.inner.prefill_chunk_batch(items)
+    }
+
+    fn embed_tok_batch(&self, tokens: &[u32]) -> Result<Vec<Vec<f32>>> {
+        for _ in tokens {
+            if self.fires(FaultOp::Step, None) {
+                bail!("injected step fault");
+            }
+        }
+        self.inner.embed_tok_batch(tokens)
+    }
+
+    fn layer_qkv_batch(&self, layer: usize, items: &[QkvBatchItem<'_>]) -> Result<Vec<Qkv>> {
+        self.inner.layer_qkv_batch(layer, items)
+    }
+
+    fn layer_attn_mlp_batch(&self, layer: usize, items: &[AttnBatchItem<'_>])
+                            -> Result<Vec<Vec<f32>>> {
+        self.inner.layer_attn_mlp_batch(layer, items)
+    }
+
+    fn lm_head_batch(&self, hs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.inner.lm_head_batch(hs)
+    }
+
+    fn supports_paged(&self) -> bool {
+        self.inner.supports_paged()
+    }
+
+    fn layer_attn_mlp_paged(&self, layer: usize, input: &PagedAttnInput<'_>)
+                            -> Result<Vec<f32>> {
+        self.inner.layer_attn_mlp_paged(layer, input)
+    }
+
+    fn layer_attn_mlp_paged_batch(&self, layer: usize, items: &[PagedAttnInput<'_>])
+                                  -> Result<Vec<Vec<f32>>> {
+        self.inner.layer_attn_mlp_paged_batch(layer, items)
+    }
+}
+
+/// [`StepBackend`] wrapper injecting scheduler-level faults: `begin`
+/// failures, per-chunk prefill failures (keyed by `prompt[0]`, so one
+/// co-admitted prompt fails in isolation), decode-step failures, and typed
+/// [`PoolExhausted`] allocation faults that drive the batcher's preemption
+/// path.  Batched entry points stay batched on fault-free ticks and fall
+/// back per item only when a fault fires, so scheduling behavior is
+/// unchanged until the moment of failure.
+#[derive(Debug)]
+pub struct StepFaultInjector<B: StepBackend> {
+    /// The wrapped scheduler backend (public so tests can inspect it).
+    pub inner: B,
+    /// The driving fault plan (public so tests can assert on `injected`).
+    pub schedule: FaultSchedule,
+}
+
+impl<B: StepBackend> StepFaultInjector<B> {
+    /// Wrap `inner`, drawing faults from `schedule`.
+    pub fn new(inner: B, schedule: FaultSchedule) -> Self {
+        StepFaultInjector { inner, schedule }
+    }
+
+    /// Draw the decode-step fault pair (alloc first, then step), returning
+    /// the error to report if either fires.
+    fn step_fault(&mut self) -> Option<anyhow::Error> {
+        if self.schedule.check(FaultOp::Alloc, None) {
+            return Some(PoolExhausted { capacity_pages: 0 }.into());
+        }
+        if self.schedule.check(FaultOp::Step, None) {
+            return Some(anyhow::anyhow!("injected step fault"));
+        }
+        None
+    }
+}
+
+impl<B: StepBackend> StepBackend for StepFaultInjector<B> {
+    type Seq = B::Seq;
+
+    fn begin(&mut self, prompt: &[u32]) -> Result<(Self::Seq, u32)> {
+        if self.schedule.check(FaultOp::Begin, prompt_key(prompt)) {
+            bail!("injected begin fault");
+        }
+        self.inner.begin(prompt)
+    }
+
+    fn begin_chunked(&mut self) -> Option<Self::Seq> {
+        self.inner.begin_chunked()
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut Self::Seq, prompt: &[u32], done: usize,
+                     max_tokens: usize) -> Result<PrefillProgress> {
+        if self.schedule.check(FaultOp::Chunk, prompt_key(prompt)) {
+            bail!("injected prefill failure");
+        }
+        self.inner.prefill_chunk(seq, prompt, done, max_tokens)
+    }
+
+    fn prefill_chunk_batch(&mut self, items: &mut [PrefillBatchItem<'_, Self::Seq>])
+                           -> Vec<Result<PrefillProgress>> {
+        let fire: Vec<bool> = items
+            .iter()
+            .map(|it| self.schedule.check(FaultOp::Chunk, prompt_key(it.prompt)))
+            .collect();
+        if fire.iter().all(|&f| !f) {
+            return self.inner.prefill_chunk_batch(items);
+        }
+        // a fault fired: fall back per item so only the faulted prompts
+        // fail (checks were already drawn above — delegate directly)
+        items
+            .iter_mut()
+            .zip(fire)
+            .map(|(it, f)| {
+                if f {
+                    bail!("injected prefill failure");
+                }
+                self.inner.prefill_chunk(it.seq, it.prompt, it.done, it.max_tokens)
+            })
+            .collect()
+    }
+
+    fn record_prefill_secs(&mut self, secs: f64) {
+        self.inner.record_prefill_secs(secs);
+    }
+
+    fn step(&mut self, seq: &mut Self::Seq, token: u32, now: u64) -> Result<u32> {
+        if let Some(e) = self.step_fault() {
+            return Err(e);
+        }
+        self.inner.step(seq, token, now)
+    }
+
+    fn step_batch(&mut self, items: &mut [StepItem<'_, Self::Seq>]) -> Vec<Result<u32>> {
+        let faults: Vec<Option<anyhow::Error>> =
+            items.iter().map(|_| self.step_fault()).collect();
+        if faults.iter().all(|f| f.is_none()) {
+            return self.inner.step_batch(items);
+        }
+        items
+            .iter_mut()
+            .zip(faults)
+            .map(|(it, f)| match f {
+                Some(e) => Err(e),
+                None => self.inner.step(it.seq, it.token, it.now),
+            })
+            .collect()
+    }
+
+    fn preempt(&mut self, id: RequestId, seq: Self::Seq, mode: PreemptMode) -> Result<()> {
+        self.inner.preempt(id, seq, mode)
+    }
+
+    fn resume(&mut self, id: RequestId, prompt: &[u32], produced: &[u32]) -> Result<Self::Seq> {
+        self.inner.resume(id, prompt, produced)
+    }
+
+    fn record_counter(&mut self, name: &'static str, delta: u64) {
+        self.inner.record_counter(name, delta);
+    }
+
+    fn finish(&mut self, seq: Self::Seq) {
+        self.inner.finish(seq);
+    }
+
+    fn is_eos(&self, token: u32) -> bool {
+        self.inner.is_eos(token)
+    }
+
+    fn has_capacity(&self, active: usize) -> bool {
+        self.inner.has_capacity(active)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArtifactMeta;
+    use crate::runtime::SimBackend;
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let mut a = FaultSchedule::new(9).rate(FaultOp::Step, 0.3);
+        let mut b = FaultSchedule::new(9).rate(FaultOp::Step, 0.3);
+        let fa: Vec<bool> = (0..500).map(|_| a.check(FaultOp::Step, None)).collect();
+        let fb: Vec<bool> = (0..500).map(|_| b.check(FaultOp::Step, None)).collect();
+        assert_eq!(fa, fb);
+        assert!(a.injected() > 0, "a 30% rate over 500 draws must fire");
+        assert!(a.injected() < 500, "…but not always");
+    }
+
+    #[test]
+    fn targeted_faults_fire_once_on_exact_counts() {
+        let mut s = FaultSchedule::new(0)
+            .fail_nth(FaultOp::Step, 3)
+            .fail_nth_for(FaultOp::Chunk, 7, 2);
+        let steps: Vec<bool> = (0..5).map(|_| s.check(FaultOp::Step, None)).collect();
+        assert_eq!(steps, vec![false, false, true, false, false]);
+        // key 5's chunks never fault; key 7 faults on its own second chunk
+        assert!(!s.check(FaultOp::Chunk, Some(5)));
+        assert!(!s.check(FaultOp::Chunk, Some(7)));
+        assert!(!s.check(FaultOp::Chunk, Some(5)));
+        assert!(s.check(FaultOp::Chunk, Some(7)));
+        assert!(!s.check(FaultOp::Chunk, Some(7)), "targeted entries are one-shot");
+        assert_eq!(s.injected(), 2);
+    }
+
+    #[test]
+    fn hang_fails_everything_after_the_call_budget() {
+        let mut s = FaultSchedule::new(1).hang_after(2);
+        assert!(!s.check(FaultOp::Step, None));
+        assert!(!s.check(FaultOp::Chunk, None));
+        for _ in 0..10 {
+            assert!(s.check(FaultOp::Step, Some(3)), "hung schedules fail every call");
+        }
+        assert!(s.is_hung());
+    }
+
+    #[test]
+    fn backend_injector_is_transparent_without_faults() {
+        let meta = ArtifactMeta::sim_default();
+        let bare = SimBackend::new(&meta, 0);
+        let wrapped =
+            FaultInjector::new(Box::new(SimBackend::new(&meta, 0)), FaultSchedule::new(4));
+        let tokens = [3u32, 4, 5, 6];
+        let a = bare.prefill(&tokens).unwrap();
+        let b = wrapped.prefill(&tokens).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(bare.embed_tok(3).unwrap(), wrapped.embed_tok(3).unwrap());
+        assert_eq!(bare.supports_paged(), wrapped.supports_paged());
+        assert_eq!(bare.capacities(), wrapped.capacities());
+        assert_eq!(wrapped.injected(), 0);
+    }
+
+    #[test]
+    fn backend_injector_fails_the_scheduled_calls() {
+        let meta = ArtifactMeta::sim_default();
+        let schedule = FaultSchedule::new(2)
+            .fail_nth(FaultOp::Step, 2)
+            .fail_nth_for(FaultOp::Chunk, 9, 1);
+        let b = FaultInjector::new(Box::new(SimBackend::new(&meta, 0)), schedule);
+        assert!(b.embed_tok(3).is_ok());
+        let err = b.embed_tok(3).unwrap_err();
+        assert!(format!("{err:#}").contains("injected step fault"));
+        assert!(b.embed_tok(3).is_ok(), "targeted faults are one-shot");
+        assert!(b.prefill(&[8, 8]).is_ok());
+        let err = b.prefill(&[9, 9]).unwrap_err();
+        assert!(format!("{err:#}").contains("injected prefill fault"));
+        assert_eq!(b.injected(), 2);
+    }
+
+    /// Minimal scheduler backend for the step-injector tests.
+    #[derive(Debug)]
+    struct Counting {
+        steps: u64,
+    }
+
+    impl StepBackend for Counting {
+        type Seq = ();
+        fn begin(&mut self, _prompt: &[u32]) -> Result<((), u32)> {
+            Ok(((), 1))
+        }
+        fn step(&mut self, _seq: &mut (), _token: u32, _now: u64) -> Result<u32> {
+            self.steps += 1;
+            Ok(1)
+        }
+        fn finish(&mut self, _seq: ()) {}
+        fn is_eos(&self, _token: u32) -> bool {
+            false
+        }
+        fn has_capacity(&self, _active: usize) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn step_injector_surfaces_typed_pool_exhaustion() {
+        let schedule = FaultSchedule::new(3).fail_nth(FaultOp::Alloc, 2);
+        let mut b = StepFaultInjector::new(Counting { steps: 0 }, schedule);
+        let (mut seq, _) = b.begin(&[1]).unwrap();
+        assert!(b.step(&mut seq, 1, 1).is_ok());
+        let err = b.step(&mut seq, 1, 2).unwrap_err();
+        assert!(
+            err.downcast_ref::<PoolExhausted>().is_some(),
+            "alloc faults must stay typed through the injector: {err:#}"
+        );
+        assert!(b.step(&mut seq, 1, 3).is_ok());
+        assert_eq!(b.inner.steps, 2, "faulted step never reached the inner backend");
+    }
+}

@@ -8,6 +8,7 @@
 //! the request path) through the `xla` crate.
 
 pub mod backend;
+pub mod fault;
 pub mod sim_backend;
 pub mod tokenizer;
 
@@ -27,6 +28,7 @@ pub mod model;
 
 pub use backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, PrefillChunkOut,
                   PrefillOut, Qkv, QkvBatchItem};
+pub use fault::{FaultInjector, FaultOp, FaultSchedule, StepFaultInjector};
 pub use sim_backend::SimBackend;
 pub use tokenizer::Tokenizer;
 

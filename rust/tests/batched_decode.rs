@@ -8,7 +8,6 @@
 //! suite pins it.
 
 use std::sync::mpsc::channel;
-use std::time::Instant;
 
 use raas::config::{EngineConfig, PolicyKind};
 use raas::coordinator::batcher::{Batcher, BatcherConfig};
@@ -241,18 +240,11 @@ fn batched_serving_path_matches_sequential_generate() {
         .map(|p| ref_engine.generate(p, &opts).expect("reference").tokens)
         .collect();
 
-    let backend =
-        EngineBackend { engine: engine(PolicyKind::Raas, 96), pages_per_seq_estimate: 16 };
+    let backend = EngineBackend::new(engine(PolicyKind::Raas, 96)).with_page_estimate(16);
     let mut b = Batcher::new(backend, BatcherConfig { max_batch: ps.len(), ..Default::default() });
     let (tx, rx) = channel::<Response>();
     for (id, p) in ps.iter().enumerate() {
-        b.submit(Request {
-            id: id as u64,
-            prompt: p.clone(),
-            max_new,
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        });
+        b.submit(Request::new(id as u64, p.clone(), max_new, tx.clone()));
     }
     b.run_to_completion();
     drop(tx);

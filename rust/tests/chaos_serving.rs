@@ -1,0 +1,264 @@
+//! Chaos serving (ISSUE 8): seeded random faults across every policy ×
+//! KV dtype, driven through the real `Engine` + `Batcher` stack by the
+//! deterministic fault-injection harness.  Invariants under chaos:
+//!
+//!  * conservation: every submitted request resolves to EXACTLY ONE
+//!    response, and that response is exactly one of Done / Failed / Shed;
+//!  * hygiene: the KV pool drains to zero allocated pages after every
+//!    cell, faults and preemptions included;
+//!  * observability: the robustness counters (`preempt.count`,
+//!    `shed.count`, mode-specific preempt counters) are non-zero and agree
+//!    with the batcher's own accounting;
+//!  * the router fails over around injected submit faults and trips its
+//!    circuit breaker on a hung replica without losing a single request.
+//!
+//! The fault seed comes from `CHAOS_SEED` (CI runs a 3-seed matrix);
+//! everything else is fixed, so any failure reproduces from the seed.
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::mpsc::channel;
+
+use anyhow::Result;
+use raas::config::{EngineConfig, PolicyKind, PreemptMode};
+use raas::coordinator::batcher::{Batcher, BatcherConfig, StepBackend, StepItem};
+use raas::coordinator::request::{Outcome, Request, RequestId, Response};
+use raas::coordinator::router::{Replica, SubmitError};
+use raas::coordinator::server::EngineBackend;
+use raas::coordinator::{RoutePolicy, Router};
+use raas::engine::Engine;
+use raas::kvcache::{KvDtype, SeqCache};
+use raas::runtime::{FaultOp, FaultSchedule, StepFaultInjector};
+
+const POLICIES: [PolicyKind; 5] = [
+    PolicyKind::Dense,
+    PolicyKind::Sink,
+    PolicyKind::H2o,
+    PolicyKind::Quest,
+    PolicyKind::Raas,
+];
+const DTYPES: [KvDtype; 3] = [KvDtype::F32, KvDtype::Fp8E4M3, KvDtype::Int8];
+const N_REQS: u64 = 12;
+
+fn chaos_seed() -> u64 {
+    std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// `EngineBackend` that never sees EOS, so every surviving request decodes
+/// exactly `max_new` tokens — the tick structure (and thus the targeted
+/// fault's alignment) is deterministic across policies and dtypes.
+struct NoEos(EngineBackend);
+
+impl StepBackend for NoEos {
+    type Seq = SeqCache;
+    fn begin(&mut self, prompt: &[u32]) -> Result<(SeqCache, u32)> {
+        self.0.begin(prompt)
+    }
+    fn step(&mut self, seq: &mut SeqCache, token: u32, now: u64) -> Result<u32> {
+        self.0.step(seq, token, now)
+    }
+    fn step_batch(&mut self, items: &mut [StepItem<'_, SeqCache>]) -> Vec<Result<u32>> {
+        self.0.step_batch(items)
+    }
+    fn preempt(&mut self, id: RequestId, seq: SeqCache, mode: PreemptMode) -> Result<()> {
+        self.0.preempt(id, seq, mode)
+    }
+    fn resume(&mut self, id: RequestId, prompt: &[u32], produced: &[u32]) -> Result<SeqCache> {
+        self.0.resume(id, prompt, produced)
+    }
+    fn record_counter(&mut self, name: &'static str, delta: u64) {
+        self.0.record_counter(name, delta);
+    }
+    fn finish(&mut self, seq: SeqCache) {
+        self.0.finish(seq);
+    }
+    fn is_eos(&self, _token: u32) -> bool {
+        false
+    }
+    fn has_capacity(&self, active: usize) -> bool {
+        self.0.has_capacity(active)
+    }
+}
+
+struct CellStats {
+    done: usize,
+    failed: usize,
+    shed: usize,
+    preemptions: u64,
+}
+
+/// One chaos cell: 12 requests against one engine under rate + targeted
+/// faults.  Panics on any invariant violation; returns the outcome tally.
+fn chaos_cell(policy: PolicyKind, dtype: KvDtype, mode: PreemptMode, seed: u64) -> CellStats {
+    let cfg = EngineConfig { policy, kv_dtype: dtype, budget: 96, ..Default::default() };
+    let engine = Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine");
+    // Rates give broad random coverage; the targeted Alloc fault fires on
+    // the 2nd decode-step draw of the first tick — 3 sequences are active
+    // then, so every cell exercises preemption deterministically.
+    let schedule = FaultSchedule::new(seed)
+        .rate(FaultOp::Begin, 0.1)
+        .rate(FaultOp::Step, 0.01)
+        .rate(FaultOp::Alloc, 0.01)
+        .fail_nth(FaultOp::Alloc, 2);
+    let backend = StepFaultInjector::new(
+        NoEos(EngineBackend::new(engine).with_page_estimate(8)),
+        schedule,
+    );
+    let mut b = Batcher::new(
+        backend,
+        BatcherConfig {
+            max_batch: 3,
+            preempt_mode: mode,
+            max_queue_depth: Some(8),
+            ..Default::default()
+        },
+    );
+    let (tx, rx) = channel::<Response>();
+    for id in 0..N_REQS {
+        let prompt: Vec<u32> = (0..16).map(|i| 1 + ((i + id as usize) % 40) as u32).collect();
+        let mut req = Request::new(id, prompt, 20, tx.clone());
+        if id % 6 == 0 {
+            // already expired on arrival: must shed, never execute
+            req = req.with_deadline_ms(0);
+        }
+        b.submit(req);
+    }
+    b.run_to_completion();
+    drop(tx);
+
+    // conservation: exactly one response per id, each a single outcome
+    let mut seen: BTreeMap<u64, Outcome> = BTreeMap::new();
+    let mut stats = CellStats { done: 0, failed: 0, shed: 0, preemptions: b.preemptions };
+    for r in rx.iter() {
+        assert!(seen.insert(r.id, r.outcome).is_none(),
+                "{policy:?}/{dtype:?}: request {} answered twice", r.id);
+        match r.outcome {
+            Outcome::Done => {
+                assert!(r.error.is_none(), "Done with error: {:?}", r.error);
+                assert!(!r.tokens.is_empty(), "Done with no tokens");
+                stats.done += 1;
+            }
+            Outcome::Failed => {
+                assert!(r.error.is_some(), "Failed without a diagnostic");
+                stats.failed += 1;
+            }
+            Outcome::Shed => {
+                assert!(r.error.is_some(), "Shed without a reason");
+                assert!(r.tokens.is_empty(), "Shed must not carry tokens");
+                stats.shed += 1;
+            }
+        }
+    }
+    assert_eq!(seen.len(), N_REQS as usize,
+               "{policy:?}/{dtype:?}: lost {} request(s)", N_REQS as usize - seen.len());
+
+    // hygiene: no leaked pages, whatever the fault pattern did
+    let engine = &b.backend.inner.0.engine;
+    assert_eq!(engine.pool().allocated_pages(), 0,
+               "{policy:?}/{dtype:?}: chaos leaked pool pages");
+
+    // observability: counters mirror the batcher and are actually firing
+    assert_eq!(engine.metrics.counter("shed.count"), b.sheds);
+    assert_eq!(engine.metrics.counter("preempt.count"), b.preemptions);
+    assert!(b.preemptions >= 1, "{policy:?}/{dtype:?}: targeted Alloc fault must preempt");
+    match mode {
+        PreemptMode::Restore => {
+            assert!(engine.metrics.counter("preempt.restore_bytes") > 0)
+        }
+        PreemptMode::Recompute => {
+            assert!(engine.metrics.counter("preempt.recompute_tokens") > 0)
+        }
+    }
+    // the two expired requests + the four over-depth submissions shed
+    assert!(stats.shed >= 6, "{policy:?}/{dtype:?}: expected >= 6 sheds, got {}", stats.shed);
+    stats
+}
+
+#[test]
+fn chaos_matrix_conserves_requests_and_pages() {
+    let seed = chaos_seed();
+    let mut total = CellStats { done: 0, failed: 0, shed: 0, preemptions: 0 };
+    for (pi, &policy) in POLICIES.iter().enumerate() {
+        for (di, &dtype) in DTYPES.iter().enumerate() {
+            // both preemption modes across the matrix
+            let mode = if (pi + di) % 2 == 0 {
+                PreemptMode::Recompute
+            } else {
+                PreemptMode::Restore
+            };
+            // decorrelate cells while keeping the run reproducible
+            let cell_seed = seed
+                .wrapping_mul(1_000_003)
+                .wrapping_add((pi * DTYPES.len() + di) as u64);
+            let s = chaos_cell(policy, dtype, mode, cell_seed);
+            total.done += s.done;
+            total.failed += s.failed;
+            total.shed += s.shed;
+            total.preemptions += s.preemptions;
+        }
+    }
+    let cells = POLICIES.len() * DTYPES.len();
+    assert_eq!(total.done + total.failed + total.shed, cells * N_REQS as usize);
+    assert!(total.done > 0, "chaos must not kill everything");
+    assert!(total.failed > 0, "a 10% begin-fault rate over {cells} cells must fail some");
+    assert!(total.preemptions as usize >= cells, "every cell preempts at least once");
+}
+
+/// A replica whose `submit` faults on a [`FaultSchedule`] — the
+/// [`FaultOp::Submit`] consumer the backend wrappers leave to serving
+/// harnesses.
+struct FlakyReplica {
+    schedule: RefCell<FaultSchedule>,
+    accepted: Cell<usize>,
+}
+
+impl FlakyReplica {
+    fn new(schedule: FaultSchedule) -> Self {
+        FlakyReplica { schedule: RefCell::new(schedule), accepted: Cell::new(0) }
+    }
+}
+
+impl Replica for FlakyReplica {
+    fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        if self.schedule.borrow_mut().check(FaultOp::Submit, None) {
+            return Err(SubmitError { req, reason: "injected submit fault".to_string() });
+        }
+        self.accepted.set(self.accepted.get() + 1);
+        Ok(())
+    }
+    fn pending(&self) -> usize {
+        0
+    }
+}
+
+#[test]
+fn router_chaos_fails_over_and_trips_the_breaker_without_losing_requests() {
+    let seed = chaos_seed();
+    // replica 0 dies (hangs) after 5 submits; replica 1 stays healthy
+    let replicas = vec![
+        FlakyReplica::new(FaultSchedule::new(seed).hang_after(5)),
+        FlakyReplica::new(FaultSchedule::new(seed.wrapping_add(1))),
+    ];
+    let mut router = Router::with_seed(replicas, RoutePolicy::RoundRobin, seed);
+    let mut accepted = 0usize;
+    let mut returned = 0usize;
+    for i in 0..60u64 {
+        let (tx, rx) = channel();
+        std::mem::forget(rx); // mock replicas never reply
+        let req = Request::new(i, vec![1 + (i % 40) as u32], 1, tx).with_retries(1);
+        match router.route(req) {
+            Ok(_) => accepted += 1,
+            Err(se) => {
+                // the request must come back intact, never vanish
+                assert_eq!(se.req.id, i);
+                returned += 1;
+            }
+        }
+    }
+    assert_eq!(accepted + returned, 60, "conservation across router chaos");
+    assert!(router.failovers > 0, "dead replica must force failovers");
+    assert!(router.breaker_opens > 0, "repeated failures must trip the breaker");
+    assert!(router.replicas()[1].accepted.get() > 0, "healthy replica carries the load");
+    // with one healthy replica and a retry budget, nothing is ever lost
+    assert_eq!(returned, 0, "failover to the healthy replica must absorb every request");
+}

@@ -18,7 +18,6 @@
 //! sequential-chunked and concurrent-chunked admission.
 
 use std::sync::mpsc::channel;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -336,22 +335,18 @@ fn serving_concurrent_admission_matches_sequential_and_prefill_first() {
     let run = |budget: Option<usize>, concurrency: usize| -> Vec<Vec<u32>> {
         let engine = mk_engine(PolicyKind::Raas);
         let mut b = Batcher::new(
-            EngineBackend { engine, pages_per_seq_estimate: 40 },
+            EngineBackend::new(engine).with_page_estimate(40),
             BatcherConfig {
                 max_batch: 4,
                 prefill_token_budget: budget,
                 prefill_concurrency: concurrency,
+                ..Default::default()
             },
         );
         let (tx, rx) = channel::<Response>();
         for (id, &len) in lens.iter().enumerate() {
-            b.submit(Request {
-                id: id as u64,
-                prompt: (0..len).map(|i| 1 + ((i + id) % 40) as u32).collect(),
-                max_new: 24,
-                submitted: Instant::now(),
-                reply: tx.clone(),
-            });
+            let prompt = (0..len).map(|i| 1 + ((i + id) % 40) as u32).collect();
+            b.submit(Request::new(id as u64, prompt, 24, tx.clone()));
         }
         b.run_to_completion();
         drop(tx);

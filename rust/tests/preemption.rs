@@ -1,0 +1,210 @@
+//! Preempt → resume bit-identity (ISSUE 8 tentpole): a sequence parked
+//! under pool pressure and later resumed must decode the exact token
+//! stream — and emit the exact Figure-3 score log — of an uninterrupted
+//! run, in BOTH preemption modes (recompute: drop pages + replay history;
+//! restore: swap pages to a host buffer and back) across all five
+//! policies.  Two layers:
+//!
+//!  * engine-level: manual decode with score logging, preempted mid-run;
+//!  * serving-level: `Batcher` + `EngineBackend` with a deterministic
+//!    injected `PoolExhausted` fault forcing a real preemption, compared
+//!    against a fault-free control run of the same requests.
+
+use std::sync::mpsc::channel;
+
+use anyhow::Result;
+use raas::config::{EngineConfig, PolicyKind, PreemptMode};
+use raas::coordinator::batcher::{Batcher, BatcherConfig, StepBackend, StepItem};
+use raas::coordinator::request::{Outcome, Request, RequestId, Response};
+use raas::coordinator::server::EngineBackend;
+use raas::engine::{Engine, GenOptions};
+use raas::kvcache::SeqCache;
+use raas::runtime::{FaultOp, FaultSchedule, StepFaultInjector};
+
+const POLICIES: [PolicyKind; 5] = [
+    PolicyKind::Dense,
+    PolicyKind::Sink,
+    PolicyKind::H2o,
+    PolicyKind::Quest,
+    PolicyKind::Raas,
+];
+const MODES: [PreemptMode; 2] = [PreemptMode::Recompute, PreemptMode::Restore];
+
+fn mk_engine(policy: PolicyKind) -> Engine {
+    let cfg = EngineConfig { policy, budget: 96, ..Default::default() };
+    Engine::new_with_capacities(cfg, &[64, 128, 256, 512]).expect("sim engine")
+}
+
+#[test]
+fn engine_level_preempt_resume_is_bit_identical() {
+    // Decode 12 steps; preempt after step 4 (both modes), resume, finish.
+    // Tokens AND per-step Figure-3 score logs must match an uninterrupted
+    // reference run — stamps, H2O accumulators and page tables all rebuild.
+    let prompt: Vec<u32> = (0..20u32).map(|i| 1 + i % 40).collect();
+    let steps = 12usize;
+    for policy in POLICIES {
+        let opts = GenOptions {
+            max_new: steps,
+            force_len: Some(steps),
+            log_scores: true,
+            ..Default::default()
+        };
+        let mut plain = mk_engine(policy);
+        let reference = plain.generate(&prompt, &opts).expect("reference run");
+
+        for mode in MODES {
+            let mut e = mk_engine(policy);
+            let mut seq = e.new_seq();
+            let mut tok = e.prefill_seq(&mut seq, &prompt).expect("prefill");
+            let mut tokens = vec![tok];
+            let mut log = Vec::new();
+            // the decode-step inputs applied so far — the `produced`
+            // history the scheduler would hand to `StepBackend::resume`
+            let mut fed = Vec::new();
+            for step in 1..=4u64 {
+                fed.push(tok);
+                tok = e.decode_step(&mut seq, tok, step, Some(&mut log)).expect("step");
+                tokens.push(tok);
+            }
+            match mode {
+                PreemptMode::Restore => {
+                    // park: bytes go host-side; churn the freed ranges so
+                    // swap-in really remaps physical pages
+                    let handle = e.swap_out_seq(&mut seq);
+                    let mut filler = e.new_seq();
+                    e.prefill_seq(&mut filler, &prompt).expect("filler prefill");
+                    e.release_seq(&mut filler);
+                    e.swap_in_seq(&mut seq, &handle).expect("swap in");
+                }
+                PreemptMode::Recompute => {
+                    // park: drop everything; resume re-prefills and replays
+                    // the fed tokens with their original step counters
+                    // (exactly what `EngineBackend::resume` does)
+                    e.release_seq(&mut seq);
+                    seq = e.new_seq();
+                    let first = e.prefill_seq(&mut seq, &prompt).expect("re-prefill");
+                    assert_eq!(first, tokens[0], "re-prefill must decode the same token");
+                    for (i, &t) in fed.iter().enumerate() {
+                        e.decode_step(&mut seq, t, (i + 1) as u64, None).expect("replay");
+                    }
+                }
+            }
+            for step in 5..=steps as u64 {
+                tok = e.decode_step(&mut seq, tok, step, Some(&mut log)).expect("step");
+                tokens.push(tok);
+            }
+            // generate() pushes before decoding, so compare its window
+            tokens.truncate(reference.tokens.len());
+            assert_eq!(tokens, reference.tokens,
+                       "{policy:?}/{mode}: preempted decode diverged");
+            assert_eq!(log, reference.score_log,
+                       "{policy:?}/{mode}: Figure-3 log diverged");
+            e.release_seq(&mut seq);
+            assert_eq!(e.pool().allocated_pages(), 0, "{policy:?}/{mode}: pages leaked");
+        }
+    }
+}
+
+/// `EngineBackend` that never sees EOS, so every request decodes exactly
+/// `max_new` tokens — the run length (and thus the fault schedule's
+/// alignment) is deterministic across policies.
+struct NoEos(EngineBackend);
+
+impl StepBackend for NoEos {
+    type Seq = SeqCache;
+    fn begin(&mut self, prompt: &[u32]) -> Result<(SeqCache, u32)> {
+        self.0.begin(prompt)
+    }
+    fn step(&mut self, seq: &mut SeqCache, token: u32, now: u64) -> Result<u32> {
+        self.0.step(seq, token, now)
+    }
+    fn step_batch(&mut self, items: &mut [StepItem<'_, SeqCache>]) -> Vec<Result<u32>> {
+        self.0.step_batch(items)
+    }
+    fn preempt(&mut self, id: RequestId, seq: SeqCache, mode: PreemptMode) -> Result<()> {
+        self.0.preempt(id, seq, mode)
+    }
+    fn resume(&mut self, id: RequestId, prompt: &[u32], produced: &[u32]) -> Result<SeqCache> {
+        self.0.resume(id, prompt, produced)
+    }
+    fn record_counter(&mut self, name: &'static str, delta: u64) {
+        self.0.record_counter(name, delta);
+    }
+    fn finish(&mut self, seq: SeqCache) {
+        self.0.finish(seq);
+    }
+    fn is_eos(&self, _token: u32) -> bool {
+        false
+    }
+    fn has_capacity(&self, active: usize) -> bool {
+        self.0.has_capacity(active)
+    }
+}
+
+/// Serve 3 fixed requests under `schedule`; returns the per-request token
+/// streams (id order) plus the batcher after the run (for counters/pool).
+fn serve(policy: PolicyKind, mode: PreemptMode, schedule: FaultSchedule)
+         -> (Vec<Vec<u32>>, Batcher<StepFaultInjector<NoEos>>) {
+    let backend = StepFaultInjector::new(
+        NoEos(EngineBackend::new(mk_engine(policy)).with_page_estimate(8)),
+        schedule,
+    );
+    let mut b = Batcher::new(
+        backend,
+        BatcherConfig { max_batch: 3, preempt_mode: mode, ..Default::default() },
+    );
+    let (tx, rx) = channel::<Response>();
+    for id in 0..3u64 {
+        let prompt: Vec<u32> = (0..16).map(|i| 1 + ((i + id as usize) % 40) as u32).collect();
+        b.submit(Request::new(id, prompt, 20, tx.clone()));
+    }
+    b.run_to_completion();
+    drop(tx);
+    let mut resp: Vec<Response> = rx.iter().collect();
+    resp.sort_by_key(|r| r.id);
+    assert_eq!(resp.len(), 3, "all requests answered");
+    for r in &resp {
+        assert_eq!(r.outcome, Outcome::Done, "request {} ended {:?}: {:?}",
+                   r.id, r.outcome, r.error);
+        assert_eq!(r.tokens.len(), 20);
+    }
+    (resp.into_iter().map(|r| r.tokens).collect(), b)
+}
+
+#[test]
+fn serving_preempt_resume_is_bit_identical_across_policies_and_modes() {
+    // The injected Alloc fault fires on the 2nd decode-step draw of the
+    // first batched tick — while 3 sequences are active — so the batcher
+    // must rewind the stalled step, preempt a victim (mode under test),
+    // resume it, and still answer every request with exactly the tokens a
+    // fault-free run decodes.
+    for policy in POLICIES {
+        for mode in MODES {
+            let (control, cb) = serve(policy, mode, FaultSchedule::new(0));
+            assert_eq!(cb.preemptions, 0, "control run must not preempt");
+
+            let schedule = FaultSchedule::new(0).fail_nth(FaultOp::Alloc, 2);
+            let (chaos, b) = serve(policy, mode, schedule);
+            assert_eq!(chaos, control,
+                       "{policy:?}/{mode}: preempt/resume changed decoded tokens");
+            assert!(b.preemptions >= 1, "{policy:?}/{mode}: the fault must preempt");
+            assert_eq!(b.backend.schedule.injected(), 1, "exactly the targeted fault fired");
+
+            let m = &b.backend.inner.0.engine.metrics;
+            assert_eq!(m.counter("preempt.count"), b.preemptions,
+                       "metrics mirror the batcher counter");
+            match mode {
+                PreemptMode::Restore => assert!(
+                    m.counter("preempt.restore_bytes") > 0,
+                    "{policy:?}: restore mode must swap bytes host-side"
+                ),
+                PreemptMode::Recompute => assert!(
+                    m.counter("preempt.recompute_tokens") > 0,
+                    "{policy:?}: recompute mode must replay tokens"
+                ),
+            }
+            assert_eq!(b.backend.inner.0.engine.pool().allocated_pages(), 0,
+                       "{policy:?}/{mode}: pool must drain");
+        }
+    }
+}

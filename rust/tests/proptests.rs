@@ -510,13 +510,8 @@ fn prop_batcher_conserves_requests_and_capacity() {
             BatcherConfig { max_batch: rng.range(1, 8), ..Default::default() },
         );
         for id in 0..n as u64 {
-            b.submit(Request {
-                id,
-                prompt: vec![rng.range(1, 20) as u32],
-                max_new: rng.range(1, 40),
-                submitted: std::time::Instant::now(),
-                reply: tx.clone(),
-            });
+            let prompt = vec![rng.range(1, 20) as u32];
+            b.submit(Request::new(id, prompt, rng.range(1, 40), tx.clone()));
         }
         b.run_to_completion();
         drop(tx);

@@ -5,7 +5,6 @@
 //! stay resident and per-layer residency respects the budget.
 
 use std::sync::mpsc::channel;
-use std::time::Instant;
 
 use anyhow::Result;
 use raas::config::{EngineConfig, PolicyKind};
@@ -36,7 +35,7 @@ impl Instrumented {
         let budget = engine.cfg.budget;
         let page_size = engine.meta.page_size;
         Instrumented {
-            inner: EngineBackend { engine, pages_per_seq_estimate },
+            inner: EngineBackend::new(engine).with_page_estimate(pages_per_seq_estimate),
             budget,
             page_size,
             strict_order,
@@ -151,13 +150,7 @@ fn submit_problems(b: &mut Batcher<Instrumented>, n: u64, max_new: usize,
     let mut rng = Rng::new(17);
     for id in 0..n {
         let p = Problem::sample(&mut rng, &spec, Some(8));
-        b.submit(Request {
-            id,
-            prompt: p.encode_prompt(&spec),
-            max_new,
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        });
+        b.submit(Request::new(id, p.encode_prompt(&spec), max_new, tx.clone()));
     }
 }
 
@@ -237,7 +230,7 @@ fn chunked_admission_matches_monolithic_and_records_prefill_metrics() {
     let run = |budget: Option<usize>| -> (Vec<Vec<u32>>, usize) {
         let engine = mk_engine(1e-4, 96, 512);
         let mut b = Batcher::new(
-            EngineBackend { engine, pages_per_seq_estimate: 40 },
+            EngineBackend::new(engine).with_page_estimate(40),
             BatcherConfig { max_batch: 2, prefill_token_budget: budget, ..Default::default() },
         );
         let (tx, rx) = channel::<Response>();
@@ -245,13 +238,7 @@ fn chunked_admission_matches_monolithic_and_records_prefill_metrics() {
         let mut rng = Rng::new(23);
         for id in 0..n_reqs {
             let p = Problem::sample(&mut rng, &spec, Some(8));
-            b.submit(Request {
-                id,
-                prompt: p.encode_prompt(&spec),
-                max_new: 48,
-                submitted: Instant::now(),
-                reply: tx.clone(),
-            });
+            b.submit(Request::new(id, p.encode_prompt(&spec), 48, tx.clone()));
         }
         b.run_to_completion();
         drop(tx);
