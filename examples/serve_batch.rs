@@ -52,13 +52,15 @@ fn main() -> Result<()> {
     for id in 0..n_requests as u64 {
         let p = Problem::sample(&mut rng, &spec, None);
         answers.push(p.answer());
-        router.route(Request {
+        let req = Request::new(
             id,
-            prompt: p.encode_prompt(&spec),
-            max_new: spec.max_decode_tokens(spec.max_steps),
-            submitted: Instant::now(),
-            reply: tx.clone(),
-        })?;
+            p.encode_prompt(&spec),
+            spec.max_decode_tokens(spec.max_steps),
+            tx.clone(),
+        );
+        if let Err(se) = router.route(req) {
+            anyhow::bail!("request {} not routed: {}", se.req.id, se.reason);
+        }
     }
     drop(tx);
 

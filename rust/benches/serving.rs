@@ -1,0 +1,185 @@
+//! Supervised serving benchmark (ISSUE 9): throughput, TTFT and
+//! inter-token latency of the supervisor + scored router + replica fleet
+//! at 2/4/8 replicas under Poisson and bursty arrivals, with and without
+//! one replica crash mid-run.
+//!
+//!     cargo bench --bench serving              # full run
+//!     cargo bench --bench serving -- --test    # CI smoke (2 replicas)
+//!
+//! Writes `results/BENCH_serving.json` (uploaded by the CI bench-smoke
+//! job; `scripts/bench_compare.py` gates the `*_tokens_per_sec` and
+//! `ttft_*_secs` keys against `results/baselines/`).  Row naming:
+//! `serving/r{N}/{poisson|bursty}[/crash]` — the `/crash` cells kill
+//! replica 0 on its 10th tick and include the recovery cost in every
+//! percentile.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::coordinator::batcher::BatcherConfig;
+use raas::coordinator::request::{Outcome, Request, Response};
+use raas::coordinator::router::RoutePolicy;
+use raas::coordinator::supervisor::{Supervisor, SupervisorConfig};
+use raas::runtime::FaultSchedule;
+use raas::util::clock::WallClock;
+use raas::util::json::Json;
+use raas::util::rng::Rng;
+use raas::util::stats::Summary;
+
+struct CellStats {
+    done: usize,
+    failed: usize,
+    crashes: u64,
+    redispatched: u64,
+    tokens: usize,
+    wall_secs: f64,
+    ttfts: Vec<f64>,
+    intertokens: Vec<f64>,
+}
+
+/// One serving cell: `n_reqs` requests against `n` supervised replicas
+/// under the given arrival process, optionally crashing replica 0 on its
+/// 10th tick.
+fn serve_cell(n: usize, bursty: bool, crash: bool, n_reqs: u64, max_new: usize) -> CellStats {
+    let cfg = EngineConfig { policy: PolicyKind::Raas, budget: 96, seed: 7, ..Default::default() };
+    let faults = if crash {
+        vec![Some(FaultSchedule::new(7).crash_at_tick(10))]
+    } else {
+        Vec::new()
+    };
+    let mut sup = Supervisor::spawn(
+        n,
+        cfg,
+        BatcherConfig { max_batch: 4, ..Default::default() },
+        Some(vec![64, 128, 256, 512]),
+        RoutePolicy::Scored,
+        SupervisorConfig::default(),
+        WallClock::shared(),
+        faults,
+    )
+    .expect("spawn supervisor");
+    let mut rng = Rng::new(11);
+    let (tx, rx) = channel::<Response>();
+    let t0 = Instant::now();
+    for id in 0..n_reqs {
+        if bursty {
+            // bursts of 8 back-to-back arrivals separated by a quiet gap
+            if id > 0 && id % 8 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(4));
+            }
+        } else {
+            // Poisson arrivals, ~500 req/s offered load
+            std::thread::sleep(std::time::Duration::from_secs_f64(rng.exp(500.0)));
+        }
+        let prompt: Vec<u32> = (0..32).map(|i| 1 + ((i + id as usize) % 40) as u32).collect();
+        let req = Request::new(id, prompt, max_new, tx.clone()).with_retries(2);
+        if let Err(se) = sup.submit(req) {
+            let _ = se.req.reply.send(Response::err(se.req.id, se.req.submitted, se.reason));
+        }
+        sup.poll();
+    }
+    drop(tx);
+    assert!(sup.run_until_idle(2_000_000), "serving bench must drain, not wedge");
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let (crashes, redispatched) = (sup.crashes, sup.redispatched);
+    sup.shutdown();
+    let mut s = CellStats {
+        done: 0,
+        failed: 0,
+        crashes,
+        redispatched,
+        tokens: 0,
+        wall_secs,
+        ttfts: Vec::new(),
+        intertokens: Vec::new(),
+    };
+    for r in rx.iter() {
+        match r.outcome {
+            Outcome::Done => {
+                s.done += 1;
+                s.tokens += r.tokens.len();
+                s.ttfts.push(r.ttft_secs);
+                if r.tokens.len() > 1 {
+                    s.intertokens
+                        .push((r.jct_secs - r.ttft_secs).max(0.0) / (r.tokens.len() - 1) as f64);
+                }
+            }
+            Outcome::Failed | Outcome::Shed => s.failed += 1,
+        }
+    }
+    assert_eq!(s.done + s.failed, n_reqs as usize, "serving bench lost requests");
+    s
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    let replica_counts: &[usize] = if quick { &[2] } else { &[2, 4, 8] };
+    let max_new = 24usize;
+    let mut rows: Vec<Json> = Vec::new();
+    println!(
+        "{:<26} {:>5} {:>5} {:>7} {:>10} {:>12} {:>9} {:>9} {:>9} {:>9}",
+        "benchmark", "done", "fail", "redisp", "req/s", "tok/s", "ttft p50", "ttft p99",
+        "itl p50", "itl p99"
+    );
+    println!("{}", "-".repeat(112));
+    for &n in replica_counts {
+        let n_reqs = if quick { 3 * n as u64 } else { 6 * n as u64 };
+        for bursty in [false, true] {
+            let arrival = if bursty { "bursty" } else { "poisson" };
+            for crash in [false, true] {
+                let name = if crash {
+                    format!("serving/r{n}/{arrival}/crash")
+                } else {
+                    format!("serving/r{n}/{arrival}")
+                };
+                let s = serve_cell(n, bursty, crash, n_reqs, max_new);
+                let mut ttft = Summary::new();
+                ttft.extend(s.ttfts.iter().copied());
+                let mut itl = Summary::new();
+                itl.extend(s.intertokens.iter().copied());
+                let rps = s.done as f64 / s.wall_secs;
+                let tps = s.tokens as f64 / s.wall_secs;
+                println!(
+                    "{:<26} {:>5} {:>5} {:>7} {:>10.1} {:>12.0} {:>6.2}ms {:>6.2}ms \
+                     {:>6.3}ms {:>6.3}ms",
+                    name,
+                    s.done,
+                    s.failed,
+                    s.redispatched,
+                    rps,
+                    tps,
+                    1e3 * ttft.percentile(50.0),
+                    1e3 * ttft.percentile(99.0),
+                    1e3 * itl.percentile(50.0),
+                    1e3 * itl.percentile(99.0)
+                );
+                if crash {
+                    assert_eq!(s.crashes, 1, "{name}: the injected crash must fire");
+                }
+                rows.push(Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("replicas", Json::from(n)),
+                    ("arrival", Json::str(arrival)),
+                    ("crash", Json::from(if crash { 1usize } else { 0 })),
+                    ("requests", Json::from(n_reqs as usize)),
+                    ("max_new", Json::from(max_new)),
+                    ("done", Json::from(s.done)),
+                    ("failed", Json::from(s.failed)),
+                    ("crashes", Json::from(s.crashes as usize)),
+                    ("redispatched", Json::from(s.redispatched as usize)),
+                    ("requests_per_sec", Json::from(rps)),
+                    ("goodput_tokens_per_sec", Json::from(tps)),
+                    ("ttft_p50_secs", Json::from(ttft.percentile(50.0))),
+                    ("ttft_p99_secs", Json::from(ttft.percentile(99.0))),
+                    ("intertoken_p50_secs", Json::from(itl.percentile(50.0))),
+                    ("intertoken_p99_secs", Json::from(itl.percentile(99.0))),
+                ]));
+            }
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/BENCH_serving.json", Json::Arr(rows).to_string())
+        .expect("write results/BENCH_serving.json");
+    println!("\nwrote results/BENCH_serving.json");
+}

@@ -21,6 +21,7 @@ use anyhow::Result;
 use super::request::{Outcome, Request, RequestId, Response};
 use crate::config::PreemptMode;
 use crate::kvcache::PoolExhausted;
+use crate::util::clock::{SharedClock, WallClock};
 
 /// One sequence's slot in a batched scheduler iteration
 /// ([`StepBackend::step_batch`]).
@@ -152,6 +153,12 @@ pub trait StepBackend {
     fn is_eos(&self, token: u32) -> bool;
     /// True when another sequence can be admitted (pool headroom).
     fn has_capacity(&self, active: usize) -> bool;
+    /// Free pages in the backing KV pool, when the backend has one — a
+    /// live placement signal the replica publishes for scored routing
+    /// (DESIGN.md §6).  `None` (the default) means unknown/no pool.
+    fn free_pages(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Admission/scheduling knobs of the continuous batcher (DESIGN.md §5).
@@ -257,6 +264,9 @@ pub struct Batcher<B: StepBackend> {
     /// remainder token goes to, rotating so `budget < slots` serves every
     /// slot over successive rounds rather than only the FIFO front.
     drr_next: usize,
+    /// Serving clock for deadline expiry (sim in tests, wall in `main` —
+    /// DESIGN.md §6).  Perf metrics (TTFT/JCT) stay on `Instant`.
+    clock: SharedClock,
     /// Requests answered so far (done, failed, or shed).
     pub completed: u64,
     /// Sequences preempted so far (mirrors the `preempt.count` counter).
@@ -266,8 +276,15 @@ pub struct Batcher<B: StepBackend> {
 }
 
 impl<B: StepBackend> Batcher<B> {
-    /// Scheduler over `backend` with the given admission config.
+    /// Scheduler over `backend` with the given admission config, on the
+    /// process wall clock.
     pub fn new(backend: B, cfg: BatcherConfig) -> Self {
+        Self::with_clock(backend, cfg, WallClock::shared())
+    }
+
+    /// Scheduler with an explicit serving clock (sim clocks make deadline
+    /// tests deterministic; supervised replicas share the supervisor's).
+    pub fn with_clock(backend: B, cfg: BatcherConfig, clock: SharedClock) -> Self {
         Batcher {
             backend,
             cfg,
@@ -276,6 +293,7 @@ impl<B: StepBackend> Batcher<B> {
             queue: VecDeque::new(),
             preempted: VecDeque::new(),
             drr_next: 0,
+            clock,
             completed: 0,
             preemptions: 0,
             sheds: 0,
@@ -283,9 +301,11 @@ impl<B: StepBackend> Batcher<B> {
     }
 
     /// Enqueue a request (FIFO; admission happens on the next tick).
-    /// Sheds immediately when the queue is at
-    /// [`BatcherConfig::max_queue_depth`].
-    pub fn submit(&mut self, req: Request) {
+    /// Stamps the serving-clock arrival (first batcher wins, so the
+    /// deadline budget survives re-dispatch) and sheds immediately when
+    /// the queue is at [`BatcherConfig::max_queue_depth`].
+    pub fn submit(&mut self, mut req: Request) {
+        req.stamp_arrival(self.clock.now_ms());
         if let Some(depth) = self.cfg.max_queue_depth {
             if self.queue.len() >= depth {
                 self.shed(req, format!("queue depth at cap {depth}"));
@@ -301,6 +321,45 @@ impl<B: StepBackend> Batcher<B> {
         self.queue.len() + self.preempted.len() + self.prefilling.len() + self.active.len()
     }
 
+    /// Depth of the FIFO admission queue (a scored-placement signal).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Prompts currently mid-prefill — the prefill-budget occupancy
+    /// signal scored placement reads.
+    pub fn prefilling_len(&self) -> usize {
+        self.prefilling.len()
+    }
+
+    /// Tear the scheduler down after a replica-level failure: every
+    /// request the batcher still owns — decoding, mid-prefill, preempted,
+    /// or queued — comes back intact (in that order) so a supervisor can
+    /// re-dispatch it to another replica.  Sequence resources are released
+    /// best-effort behind a panic guard: after a caught replica panic the
+    /// backend may be mid-tick-inconsistent, and recovering the requests
+    /// matters more than this replica's pages (it is being torn down with
+    /// its pool).
+    pub fn drain_requests(&mut self) -> Vec<Request> {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let mut out = Vec::new();
+        for a in std::mem::take(&mut self.active) {
+            let backend = &mut self.backend;
+            let _ = catch_unwind(AssertUnwindSafe(move || backend.finish(a.seq)));
+            out.push(a.req);
+        }
+        for p in std::mem::take(&mut self.prefilling) {
+            let backend = &mut self.backend;
+            let _ = catch_unwind(AssertUnwindSafe(move || backend.finish(p.seq)));
+            out.push(p.req);
+        }
+        for p in std::mem::take(&mut self.preempted) {
+            out.push(p.req);
+        }
+        out.extend(std::mem::take(&mut self.queue));
+        out
+    }
+
     /// Refuse `req` with [`Outcome::Shed`] and account for it.
     fn shed(&mut self, req: Request, reason: String) {
         self.backend.record_counter("shed.count", 1);
@@ -313,7 +372,7 @@ impl<B: StepBackend> Batcher<B> {
     /// Deadline gate at admission: sheds an expired request, passes a
     /// live one through.
     fn shed_if_expired(&mut self, req: Request) -> Option<Request> {
-        if req.expired_at(Instant::now()) {
+        if req.expired_at_ms(self.clock.now_ms()) {
             self.shed(req, "deadline expired before admission".to_string());
             None
         } else {
@@ -353,7 +412,7 @@ impl<B: StepBackend> Batcher<B> {
         while !self.preempted.is_empty() && self.slot_available() {
             let p = self.preempted.pop_front().expect("preempted non-empty");
             // the deadline may have passed while parked
-            if p.req.expired_at(Instant::now()) {
+            if p.req.expired_at_ms(self.clock.now_ms()) {
                 self.shed(p.req, "deadline expired while preempted".to_string());
                 continue;
             }
@@ -1482,5 +1541,55 @@ mod tests {
         assert_eq!(resps.len(), 5, "every request gets exactly one response");
         assert_eq!(resps.iter().filter(|r| r.outcome == Outcome::Shed).count(), 3);
         assert_eq!(resps.iter().filter(|r| r.outcome == Outcome::Done).count(), 2);
+    }
+
+    #[test]
+    fn deadline_expiry_follows_the_injected_clock_not_real_time() {
+        // PR 8's deadline tests could only express "expired immediately"
+        // (deadline 0) without sleeping; with the injectable clock the
+        // budget elapses exactly when the test says so.
+        let sim = crate::util::clock::SimClock::new();
+        let (tx, rx) = channel();
+        let mut b = Batcher::with_clock(
+            MockBackend { capacity: 1, begun: 0, finished: 0 },
+            BatcherConfig { max_batch: 1, ..Default::default() },
+            sim.clone(),
+        );
+        b.submit(mk_req(1, 30, 40, &tx).with_deadline_ms(50)); // will hold the slot
+        b.submit(mk_req(2, 3, 8, &tx).with_deadline_ms(50)); // waits in queue
+        b.tick(); // admits 1 only (capacity 1); 2 still queued, clock at 0
+        assert_eq!(b.backend.begun, 1);
+        sim.advance(60); // past request 2's budget while it queues
+        b.run_to_completion();
+        drop(tx);
+        let mut resps: Vec<Response> = rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps[0].outcome, Outcome::Done, "admitted before expiry, runs to done");
+        assert_eq!(resps[1].outcome, Outcome::Shed, "expired on the sim clock while queued");
+        assert_eq!(b.backend.begun, 1, "the expired request never reached the backend");
+    }
+
+    #[test]
+    fn drain_requests_returns_every_owned_request_in_order() {
+        let (tx, rx) = channel();
+        let mut b = Batcher::new(
+            MockBackend { capacity: 2, begun: 0, finished: 0 },
+            BatcherConfig { max_batch: 2, ..Default::default() },
+        );
+        for id in 0..5 {
+            b.submit(mk_req(id, 30, 40, &tx));
+        }
+        b.tick(); // 0 and 1 decoding, 2..4 queued
+        assert_eq!(b.pending(), 5);
+        let drained = b.drain_requests();
+        let ids: Vec<u64> = drained.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4], "active first, then the FIFO queue");
+        assert_eq!(b.pending(), 0, "the batcher owns nothing after a drain");
+        assert_eq!(b.backend.finished, 2, "active sequences were released");
+        drop(tx);
+        assert_eq!(rx.iter().count(), 0, "drained requests are not answered here");
+        for r in &drained {
+            assert!(r.arrived_ms.is_some(), "arrival stamps survive the drain");
+        }
     }
 }

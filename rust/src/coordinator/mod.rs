@@ -1,14 +1,17 @@
 //! Layer-3 serving coordinator: request lifecycle, continuous batching,
-//! multi-replica routing.  Threads + mpsc mailboxes stand in for the async
-//! runtime (tokio is unavailable offline; DESIGN.md §3).
+//! multi-replica routing and replica supervision.  Threads + mpsc
+//! mailboxes stand in for the async runtime (tokio is unavailable
+//! offline; DESIGN.md §3).
 
 pub mod batcher;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod supervisor;
 
 pub use batcher::{Batcher, BatcherConfig, PrefillBatchItem, PrefillProgress, StepBackend,
                   StepItem};
 pub use request::{Outcome, Request, RequestId, Response};
-pub use router::{Router, RoutePolicy, SubmitError};
-pub use server::EngineServer;
+pub use router::{Replica, ReplicaSignals, Router, RoutePolicy, SubmitError};
+pub use server::{EngineServer, ReplicaEvent, ReplicaState, ReplicaStatus, SpawnOpts};
+pub use supervisor::{Supervisor, SupervisorConfig};

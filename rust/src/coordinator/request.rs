@@ -14,12 +14,20 @@ pub struct Request {
     pub prompt: Vec<u32>,
     /// Decode-length cap (EOS may stop earlier).
     pub max_new: usize,
-    /// Submission instant (the JCT/TTFT clock origin).
+    /// Submission instant (the JCT/TTFT clock origin — a latency metric,
+    /// so it stays on real time; deadline logic rides the injectable
+    /// serving clock below).
     pub submitted: Instant,
-    /// Absolute completion deadline; the batcher sheds the request
-    /// ([`Outcome::Shed`]) rather than admit it past this instant.
+    /// Deadline budget in serving-clock milliseconds, measured from
+    /// [`Request::arrived_ms`]; the batcher sheds the request
+    /// ([`Outcome::Shed`]) rather than admit it past the budget.
     /// `None` means no deadline.
-    pub deadline: Option<Instant>,
+    pub deadline_ms: Option<u64>,
+    /// Serving-clock arrival stamp, set once by the first batcher that
+    /// sees the request ([`Request::stamp_arrival`]).  It survives
+    /// cross-replica re-dispatch, so a recovered request keeps its
+    /// original deadline budget instead of resetting it.
+    pub arrived_ms: Option<u64>,
     /// Router-level retry budget: how many more times a `submit` failure
     /// may fail over to another replica before the request is failed.
     pub retries_left: u32,
@@ -35,15 +43,17 @@ impl Request {
             prompt,
             max_new,
             submitted: Instant::now(),
-            deadline: None,
+            deadline_ms: None,
+            arrived_ms: None,
             retries_left: 0,
             reply,
         }
     }
 
-    /// Set an absolute deadline `ms` milliseconds from submission.
+    /// Set a deadline budget of `ms` serving-clock milliseconds from
+    /// arrival (0 = expired as soon as it arrives).
     pub fn with_deadline_ms(mut self, ms: u64) -> Self {
-        self.deadline = Some(self.submitted + std::time::Duration::from_millis(ms));
+        self.deadline_ms = Some(ms);
         self
     }
 
@@ -53,15 +63,27 @@ impl Request {
         self
     }
 
-    /// Whether the deadline (if any) has passed at instant `now`.
-    pub fn expired_at(&self, now: Instant) -> bool {
-        self.deadline.is_some_and(|d| now >= d)
+    /// Record the serving-clock arrival if not already stamped (first
+    /// batcher wins; re-dispatch after a replica death keeps the stamp).
+    pub fn stamp_arrival(&mut self, now_ms: u64) {
+        if self.arrived_ms.is_none() {
+            self.arrived_ms = Some(now_ms);
+        }
+    }
+
+    /// Whether the deadline budget (if any) is exhausted at serving-clock
+    /// time `now_ms`.  Never true before the arrival stamp exists.
+    pub fn expired_at_ms(&self, now_ms: u64) -> bool {
+        match (self.deadline_ms, self.arrived_ms) {
+            (Some(d), Some(a)) => now_ms.saturating_sub(a) >= d,
+            _ => false,
+        }
     }
 }
 
 /// How a request's lifecycle ended — every submitted request resolves to
 /// exactly one of these (the fault-tolerance trichotomy, DESIGN.md §6).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Outcome {
     /// Decode completed (EOS or `max_new`); `tokens` holds the output.
     Done,
@@ -120,7 +142,6 @@ impl Response {
 mod tests {
     use super::*;
     use std::sync::mpsc::channel;
-    use std::time::Duration;
 
     #[test]
     fn request_roundtrip() {
@@ -145,13 +166,26 @@ mod tests {
     #[test]
     fn deadline_and_retry_builders() {
         let (tx, _rx) = channel();
-        let req = Request::new(1, vec![3], 2, tx).with_deadline_ms(0).with_retries(2);
+        let mut req = Request::new(1, vec![3], 2, tx).with_deadline_ms(50).with_retries(2);
         assert_eq!(req.retries_left, 2);
-        assert!(req.deadline.is_some());
-        assert!(req.expired_at(req.submitted + Duration::from_millis(1)));
+        assert_eq!(req.deadline_ms, Some(50));
+        // no arrival stamp yet: the budget hasn't started
+        assert!(!req.expired_at_ms(1_000_000));
+        req.stamp_arrival(100);
+        req.stamp_arrival(9_999); // second stamp is ignored (first batcher wins)
+        assert_eq!(req.arrived_ms, Some(100));
+        assert!(!req.expired_at_ms(149));
+        assert!(req.expired_at_ms(150));
+        // a zero budget expires the moment it arrives
         let (tx2, _rx2) = channel();
-        let open = Request::new(2, vec![3], 2, tx2);
-        assert!(!open.expired_at(Instant::now() + Duration::from_secs(3600)));
+        let mut zero = Request::new(2, vec![3], 2, tx2).with_deadline_ms(0);
+        zero.stamp_arrival(7);
+        assert!(zero.expired_at_ms(7));
+        // no deadline never expires
+        let (tx3, _rx3) = channel();
+        let mut open = Request::new(3, vec![3], 2, tx3);
+        open.stamp_arrival(0);
+        assert!(!open.expired_at_ms(u64::MAX));
     }
 
     #[test]

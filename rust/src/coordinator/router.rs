@@ -1,22 +1,31 @@
 //! Multi-replica request router (vllm-project/router-style): dispatches
-//! requests across engine replicas by round-robin, least-loaded, or
-//! session-affinity hashing — with per-replica health tracking
-//! (consecutive-failure circuit breaker, seeded half-open probes) and
-//! failover: a failed `submit` returns the request to the router, which
-//! retries it on the next healthy replica while the request's retry
-//! budget lasts (DESIGN.md §6).
+//! requests across engine replicas by round-robin, least-loaded,
+//! session-affinity hashing, or health/KV-aware scoring — with
+//! per-replica health tracking (consecutive-failure circuit breaker on
+//! the injectable serving clock, seeded half-open probes, supervisor
+//! quarantine) and failover: a failed `submit` returns the request to
+//! the router, which retries it on the next healthy replica while the
+//! request's retry budget lasts (DESIGN.md §6).
 
+use std::collections::HashMap;
+
+use crate::kvcache::prefix_hashes;
+use crate::util::clock::{SharedClock, WallClock};
 use crate::util::rng::Rng;
 
 use super::request::Request;
 
 /// Consecutive submit failures that trip a replica's circuit breaker.
 const FAILURE_THRESHOLD: u32 = 3;
-/// Breaker hold-off after the first trip, in router ticks (one tick per
-/// [`Router::route`] call); doubles per consecutive trip.
-const BASE_BACKOFF: u64 = 4;
-/// Backoff growth cap, in ticks (plus up to 50% seeded jitter).
-const MAX_BACKOFF: u64 = 64;
+/// Breaker hold-off after the first trip, in serving-clock milliseconds;
+/// doubles per consecutive trip.
+const BASE_BACKOFF_MS: u64 = 50;
+/// Backoff growth cap in milliseconds (plus up to 50% seeded jitter).
+const MAX_BACKOFF_MS: u64 = 800;
+/// Affinity-map entries before the router forgets everything (bounds
+/// memory on long-lived servers; cold restarts only cost prefix-cache
+/// misses, not correctness).
+const AFFINITY_CAP: usize = 8192;
 
 /// How the router picks a replica for each request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,15 +37,21 @@ pub enum RoutePolicy {
     /// Hash the prompt prefix (session affinity: same session hits the same
     /// replica, maximising KV-cache locality in prefix-caching setups).
     Affinity,
+    /// Health/KV-aware scoring over live [`ReplicaSignals`] (free pool
+    /// pages, queue depth, prefill occupancy, heartbeat age), with
+    /// prefix-affinity: a prompt whose first `PrefixIndex` page hash was
+    /// last served by a live replica routes back to it.
+    Scored,
 }
 
 impl RoutePolicy {
-    /// Parse a CLI route-policy name (`rr`, `least`, `affinity`).
+    /// Parse a CLI route-policy name (`rr`, `least`, `affinity`, `scored`).
     pub fn parse(s: &str) -> anyhow::Result<RoutePolicy> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "rr" | "roundrobin" | "round-robin" => RoutePolicy::RoundRobin,
             "least" | "leastloaded" | "least-loaded" => RoutePolicy::LeastLoaded,
             "affinity" | "hash" => RoutePolicy::Affinity,
+            "scored" | "kv" | "kv-aware" => RoutePolicy::Scored,
             other => anyhow::bail!("unknown route policy '{other}'"),
         })
     }
@@ -63,6 +78,38 @@ impl std::fmt::Debug for SubmitError {
     }
 }
 
+/// Live placement signals a replica publishes (scored routing input).
+/// Defaults are the "know nothing" neutral reading so mocks and
+/// non-engine replicas keep working.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSignals {
+    /// Whether the replica accepts work (not killed/hung/crashed).
+    pub alive: bool,
+    /// Serving-clock ms since the replica's last tick-loop heartbeat.
+    pub heartbeat_age_ms: u64,
+    /// Free pages in the replica's KV pool.
+    pub free_pages: usize,
+    /// Depth of the replica's FIFO admission queue.
+    pub queue_depth: usize,
+    /// Prompts mid-prefill on the replica.
+    pub prefilling: usize,
+    /// Requests accepted but not yet answered.
+    pub pending: usize,
+}
+
+impl Default for ReplicaSignals {
+    fn default() -> Self {
+        ReplicaSignals {
+            alive: true,
+            heartbeat_age_ms: 0,
+            free_pages: 0,
+            queue_depth: 0,
+            prefilling: 0,
+            pending: 0,
+        }
+    }
+}
+
 /// What the router needs from a replica (implemented by `EngineServer`;
 /// mocked in tests).
 pub trait Replica {
@@ -71,31 +118,26 @@ pub trait Replica {
     fn submit(&self, req: Request) -> Result<(), SubmitError>;
     /// Requests this replica has accepted but not yet answered.
     fn pending(&self) -> usize;
-}
-
-impl Replica for super::server::EngineServer {
-    fn submit(&self, req: Request) -> Result<(), SubmitError> {
-        // inherent method (mailbox send) — inherent methods take precedence,
-        // so this does not recurse.
-        EngineServer::submit(self, req)
-    }
-    fn pending(&self) -> usize {
-        EngineServer::pending(self)
+    /// Live placement signals (default: neutral, always-alive reading for
+    /// replicas that don't publish occupancy).
+    fn signals(&self) -> ReplicaSignals {
+        ReplicaSignals { pending: self.pending(), ..ReplicaSignals::default() }
     }
 }
 
-use super::server::EngineServer;
-
-/// Per-replica breaker state (logical router ticks, one per route call).
+/// Per-replica breaker state (serving-clock milliseconds).
 #[derive(Debug, Clone, Default)]
 struct Health {
     /// Submit failures since the last success (resets on success/trip).
     consecutive_failures: u32,
-    /// No traffic until this tick; 0 = closed.
+    /// No traffic until this serving-clock ms; 0 = closed.
     open_until: u64,
     /// Consecutive breaker trips (exponential-backoff exponent); resets
     /// on the first successful probe.
     trips: u32,
+    /// Supervisor verdict: the replica crashed or hung and is permanently
+    /// out of rotation (unlike a breaker trip, this never half-opens).
+    quarantined: bool,
 }
 
 /// Dispatches requests across engine replicas (DESIGN.md §5), failing
@@ -107,14 +149,22 @@ pub struct Router<R: Replica> {
     next_rr: usize,
     /// Jitter stream for half-open backoff (deterministic per seed).
     rng: Rng,
-    /// Logical clock: one tick per [`Router::route`] call.
-    now: u64,
+    /// Serving clock the breaker and heartbeat-age scoring read.
+    clock: SharedClock,
+    /// KV page size for prefix-affinity hashing (must match the engines').
+    page_size: usize,
+    /// First-page prefix hash → replica that last served it.
+    affinity: HashMap<u64, usize>,
     /// Requests routed so far.
     pub routed: u64,
     /// Submits retried on another replica after a failure.
     pub failovers: u64,
     /// Circuit-breaker trips (a replica taken out of rotation).
     pub breaker_opens: u64,
+    /// Scored routes that landed on their prefix-affinity target.
+    pub affinity_hits: u64,
+    /// Replicas permanently removed from rotation by the supervisor.
+    pub quarantines: u64,
 }
 
 impl<R: Replica> Router<R> {
@@ -124,7 +174,8 @@ impl<R: Replica> Router<R> {
         Self::with_seed(replicas, policy, 0)
     }
 
-    /// Router with an explicit backoff-jitter seed.
+    /// Router with an explicit backoff-jitter seed (wall clock; swap it
+    /// with [`Router::with_clock`] for deterministic tests).
     pub fn with_seed(replicas: Vec<R>, policy: RoutePolicy, seed: u64) -> Self {
         assert!(!replicas.is_empty());
         let health = replicas.iter().map(|_| Health::default()).collect();
@@ -134,11 +185,29 @@ impl<R: Replica> Router<R> {
             policy,
             next_rr: 0,
             rng: Rng::new(seed),
-            now: 0,
+            clock: WallClock::shared(),
+            page_size: 16,
+            affinity: HashMap::new(),
             routed: 0,
             failovers: 0,
             breaker_opens: 0,
+            affinity_hits: 0,
+            quarantines: 0,
         }
+    }
+
+    /// Use `clock` for breaker backoff and heartbeat-age scoring (must be
+    /// the same clock the replicas stamp heartbeats on).
+    pub fn with_clock(mut self, clock: SharedClock) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// KV page size for prefix-affinity hashing; must match the engines'
+    /// page size or affinity keys never match the prefix cache.
+    pub fn with_page_size(mut self, page_size: usize) -> Self {
+        self.page_size = page_size.max(1);
+        self
     }
 
     /// The replica set, in submission-index order.
@@ -151,10 +220,25 @@ impl<R: Replica> Router<R> {
         self.replicas
     }
 
-    /// Whether replica `i`'s breaker admits traffic at the current tick
-    /// (closed, or open long enough to half-open probe).
+    /// Permanently remove replica `i` from rotation (supervisor verdict
+    /// after a crash or hang; unlike a breaker trip it never half-opens).
+    pub fn quarantine(&mut self, i: usize) {
+        if !self.health[i].quarantined {
+            self.health[i].quarantined = true;
+            self.quarantines += 1;
+        }
+    }
+
+    /// Whether replica `i` is quarantined.
+    pub fn is_quarantined(&self, i: usize) -> bool {
+        self.health[i].quarantined
+    }
+
+    /// Whether replica `i`'s breaker admits traffic right now (not
+    /// quarantined, and closed or open long enough to half-open probe).
     pub fn is_healthy(&self, i: usize) -> bool {
-        self.health[i].open_until <= self.now
+        let h = &self.health[i];
+        !h.quarantined && h.open_until <= self.clock.now_ms()
     }
 
     /// Replica indices the breaker currently admits.
@@ -162,9 +246,29 @@ impl<R: Replica> Router<R> {
         (0..self.replicas.len()).filter(|&i| self.is_healthy(i)).collect()
     }
 
+    /// First-page prefix hash of `prompt` (the affinity key), if the
+    /// prompt spans at least one full KV page.
+    fn affinity_key(&self, prompt: &[u32]) -> Option<u64> {
+        prefix_hashes(prompt, self.page_size).first().copied()
+    }
+
+    /// Health/KV-aware placement score for replica `i`: free pool pages
+    /// minus load/queue/prefill pressure, discounted by heartbeat age.
+    /// Higher is better; a non-accepting replica scores `-inf`.
+    fn score(&self, i: usize) -> f64 {
+        let s = self.replicas[i].signals();
+        if !s.alive {
+            return f64::NEG_INFINITY;
+        }
+        s.free_pages as f64
+            - 2.0 * (s.pending + s.queue_depth) as f64
+            - s.prefilling as f64
+            - s.heartbeat_age_ms as f64 / 50.0
+    }
+
     /// Apply the route policy over the available set, returning a
     /// position *within* `avail`.
-    fn pick(&mut self, req: &Request, avail: &[usize]) -> usize {
+    fn pick(&mut self, req: &Request, akey: Option<u64>, avail: &[usize]) -> usize {
         match self.policy {
             RoutePolicy::RoundRobin => {
                 let p = self.next_rr % avail.len();
@@ -190,6 +294,29 @@ impl<R: Replica> Router<R> {
                 h ^= h >> 31;
                 (h % avail.len() as u64) as usize
             }
+            RoutePolicy::Scored => {
+                // prefix-affinity first: the replica holding this prompt's
+                // first KV page skips that prefill work entirely
+                if let Some(target) = akey.and_then(|k| self.affinity.get(&k).copied()) {
+                    if let Some(p) = avail.iter().position(|&i| i == target) {
+                        self.affinity_hits += 1;
+                        return p;
+                    }
+                }
+                // otherwise the best-scoring live replica (falls back to
+                // position 0 if every candidate scores -inf — the failover
+                // loop will rotate off it)
+                let mut best = 0usize;
+                let mut best_score = f64::NEG_INFINITY;
+                for (p, &i) in avail.iter().enumerate() {
+                    let sc = self.score(i);
+                    if sc > best_score {
+                        best_score = sc;
+                        best = p;
+                    }
+                }
+                best
+            }
         }
     }
 
@@ -200,10 +327,10 @@ impl<R: Replica> Router<R> {
         h.trips = 0;
     }
 
-    fn on_failure(&mut self, i: usize) {
+    fn on_failure(&mut self, i: usize, now: u64) {
         let half_open = {
             let h = &self.health[i];
-            h.trips > 0 && h.open_until <= self.now
+            h.trips > 0 && h.open_until <= now
         };
         let trip = {
             let h = &mut self.health[i];
@@ -214,10 +341,9 @@ impl<R: Replica> Router<R> {
             let h = &mut self.health[i];
             h.trips += 1;
             h.consecutive_failures = 0;
-            let backoff = (BASE_BACKOFF << (h.trips - 1).min(4)).min(MAX_BACKOFF);
-            let base_until = self.now + backoff;
+            let backoff = (BASE_BACKOFF_MS << (h.trips - 1).min(4)).min(MAX_BACKOFF_MS);
             let jitter = self.rng.range(0, backoff as usize / 2 + 1) as u64;
-            self.health[i].open_until = base_until + jitter;
+            self.health[i].open_until = now + backoff + jitter;
             self.breaker_opens += 1;
         }
     }
@@ -228,17 +354,29 @@ impl<R: Replica> Router<R> {
     /// that accepted the request, or the request itself (in the
     /// [`SubmitError`]) when every attempt failed — never loses it.
     pub fn route(&mut self, req: Request) -> Result<usize, SubmitError> {
-        self.now += 1;
+        let now = self.clock.now_ms();
         let mut avail = self.available();
         if avail.is_empty() {
-            // every breaker is open: force-probe the soonest to recover
-            // rather than deadlock the fleet
-            let i = (0..self.replicas.len())
+            // every breaker is open: force-probe the soonest non-quarantined
+            // replica to recover rather than deadlock the fleet
+            match (0..self.replicas.len())
+                .filter(|&i| !self.health[i].quarantined)
                 .min_by_key(|&i| self.health[i].open_until)
-                .expect("router has at least one replica");
-            avail.push(i);
+            {
+                Some(i) => avail.push(i),
+                None => {
+                    return Err(SubmitError {
+                        req,
+                        reason: "every replica is quarantined".to_string(),
+                    });
+                }
+            }
         }
-        let start = self.pick(&req, &avail);
+        let akey = match self.policy {
+            RoutePolicy::Scored => self.affinity_key(&req.prompt),
+            _ => None,
+        };
+        let start = self.pick(&req, akey, &avail);
         let mut req = req;
         let mut last_reason = String::new();
         for attempt in 0..avail.len() {
@@ -254,12 +392,18 @@ impl<R: Replica> Router<R> {
                 Ok(()) => {
                     self.on_success(i);
                     self.routed += 1;
+                    if let (RoutePolicy::Scored, Some(k)) = (self.policy, akey) {
+                        if self.affinity.len() >= AFFINITY_CAP {
+                            self.affinity.clear();
+                        }
+                        self.affinity.insert(k, i);
+                    }
                     return Ok(i);
                 }
                 Err(se) => {
                     req = se.req;
                     last_reason = se.reason;
-                    self.on_failure(i);
+                    self.on_failure(i, now);
                 }
             }
         }
@@ -270,6 +414,7 @@ impl<R: Replica> Router<R> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::clock::SimClock;
     use std::cell::Cell;
     use std::sync::mpsc::channel;
 
@@ -278,6 +423,8 @@ mod tests {
         load: usize,
         /// When set, every submit fails and hands the request back.
         failing: Cell<bool>,
+        /// Signals returned by `signals()` (scored-policy tests).
+        sig: ReplicaSignals,
     }
     impl Replica for MockReplica {
         fn submit(&self, req: Request) -> Result<(), SubmitError> {
@@ -289,6 +436,9 @@ mod tests {
         }
         fn pending(&self) -> usize {
             self.load
+        }
+        fn signals(&self) -> ReplicaSignals {
+            self.sig
         }
     }
 
@@ -302,7 +452,12 @@ mod tests {
     fn mocks(loads: &[usize]) -> Vec<MockReplica> {
         loads
             .iter()
-            .map(|&l| MockReplica { sent: Cell::new(0), load: l, failing: Cell::new(false) })
+            .map(|&l| MockReplica {
+                sent: Cell::new(0),
+                load: l,
+                failing: Cell::new(false),
+                sig: ReplicaSignals { pending: l, ..ReplicaSignals::default() },
+            })
             .collect()
     }
 
@@ -336,6 +491,7 @@ mod tests {
     #[test]
     fn policy_parse() {
         assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("scored").unwrap(), RoutePolicy::Scored);
         assert!(RoutePolicy::parse("nope").is_err());
     }
 
@@ -379,9 +535,11 @@ mod tests {
 
     #[test]
     fn breaker_opens_after_consecutive_failures_and_reprobes() {
+        let sim = SimClock::new();
         let reps = mocks(&[0, 0]);
         reps[0].failing.set(true);
-        let mut r = Router::with_seed(reps, RoutePolicy::RoundRobin, 7);
+        let mut r =
+            Router::with_seed(reps, RoutePolicy::RoundRobin, 7).with_clock(sim.clone());
         // round-robin alternates the first attempt, so every other route
         // hits replica 0 (and fails over to 1); the third failure trips it
         for _ in 0..6 {
@@ -389,19 +547,84 @@ mod tests {
         }
         assert_eq!(r.breaker_opens, 1, "threshold consecutive failures trip the breaker");
         assert!(!r.is_healthy(0));
-        // while open, traffic routes straight to 1 with no failover
+        // while open, traffic routes straight to 1 with no failover — and
+        // since the sim clock is frozen, the breaker cannot half-open
         let failovers_before = r.failovers;
-        for _ in 0..2 {
+        for _ in 0..4 {
             assert_eq!(r.route(req(vec![1]).with_retries(1)).unwrap(), 1);
         }
         assert_eq!(r.failovers, failovers_before, "open breaker removes 0 from rotation");
-        // replica recovers; after the hold-off a half-open probe succeeds
-        // and the breaker closes
+        // replica recovers; advancing past base backoff + max jitter makes
+        // the next route half-open probe replica 0 and close its breaker
         r.replicas()[0].failing.set(false);
-        for _ in 0..(MAX_BACKOFF + MAX_BACKOFF / 2) {
+        sim.advance(BASE_BACKOFF_MS + BASE_BACKOFF_MS / 2 + 1);
+        assert!(r.is_healthy(0), "hold-off elapsed on the sim clock");
+        for _ in 0..4 {
             let _ = r.route(req(vec![1]).with_retries(1)).unwrap();
         }
         assert!(r.is_healthy(0), "successful probe must close the breaker");
         assert!(r.replicas()[0].sent.get() > 0, "replica 0 rejoined the rotation");
+    }
+
+    #[test]
+    fn scored_prefers_free_pages_and_low_load() {
+        let mut reps = mocks(&[0, 0, 0]);
+        reps[0].sig = ReplicaSignals { free_pages: 10, pending: 4, ..ReplicaSignals::default() };
+        reps[1].sig = ReplicaSignals { free_pages: 100, pending: 0, ..ReplicaSignals::default() };
+        reps[2].sig = ReplicaSignals { free_pages: 100, queue_depth: 40, ..Default::default() };
+        let mut r = Router::new(reps, RoutePolicy::Scored);
+        assert_eq!(r.route(req(vec![1])).unwrap(), 1, "most free pages, least pressure");
+    }
+
+    #[test]
+    fn scored_shuns_dead_and_stale_replicas() {
+        let mut reps = mocks(&[0, 0]);
+        reps[0].sig =
+            ReplicaSignals { alive: false, free_pages: 1_000_000, ..ReplicaSignals::default() };
+        reps[1].sig = ReplicaSignals { free_pages: 1, ..ReplicaSignals::default() };
+        let mut r = Router::new(reps, RoutePolicy::Scored);
+        assert_eq!(r.route(req(vec![1])).unwrap(), 1, "dead replica scores -inf");
+        // stale heartbeat discounts an otherwise-attractive replica
+        let mut reps = mocks(&[0, 0]);
+        reps[0].sig =
+            ReplicaSignals { free_pages: 50, heartbeat_age_ms: 10_000, ..Default::default() };
+        reps[1].sig = ReplicaSignals { free_pages: 40, ..ReplicaSignals::default() };
+        let mut r = Router::new(reps, RoutePolicy::Scored);
+        assert_eq!(r.route(req(vec![1])).unwrap(), 1, "stale heartbeat loses the tiebreak");
+    }
+
+    #[test]
+    fn scored_prefix_affinity_hits_and_falls_back_when_unhealthy() {
+        // page_size 4 so an 8-token prompt has a stable first-page hash
+        let prompt: Vec<u32> = vec![5, 6, 7, 8, 9, 10, 11, 12];
+        let mut reps = mocks(&[0, 0, 0]);
+        // replica 2 scores best initially, capturing the affinity entry
+        reps[2].sig = ReplicaSignals { free_pages: 100, ..ReplicaSignals::default() };
+        let mut r = Router::new(reps, RoutePolicy::Scored).with_page_size(4);
+        assert_eq!(r.route(req(prompt.clone())).unwrap(), 2);
+        assert_eq!(r.affinity_hits, 0, "first route is a placement, not a hit");
+        // same prefix routes back to 2 even though scores are now equal
+        assert_eq!(r.route(req(prompt.clone())).unwrap(), 2);
+        assert_eq!(r.affinity_hits, 1);
+        // quarantine the affinity target: same prefix must fall back to a
+        // healthy replica and re-point the affinity entry at it
+        r.quarantine(2);
+        let fallback = r.route(req(prompt.clone())).unwrap();
+        assert_ne!(fallback, 2, "quarantined replica is out of rotation");
+        assert_eq!(r.affinity_hits, 1, "fallback is not an affinity hit");
+        let again = r.route(req(prompt)).unwrap();
+        assert_eq!(again, fallback, "affinity re-points to the fallback replica");
+        assert_eq!(r.affinity_hits, 2);
+    }
+
+    #[test]
+    fn all_quarantined_returns_the_request() {
+        let mut r = Router::new(mocks(&[0, 0]), RoutePolicy::Scored);
+        r.quarantine(0);
+        r.quarantine(1);
+        assert_eq!(r.quarantines, 2);
+        let err = r.route(req(vec![1, 2])).unwrap_err();
+        assert!(err.reason.contains("quarantined"));
+        assert_eq!(err.req.prompt, vec![1, 2]);
     }
 }

@@ -1,21 +1,31 @@
 //! Engine replica server: an [`Engine`] + [`Batcher`] living on a dedicated
-//! thread, fed through an mpsc mailbox.
+//! thread, fed through an mpsc mailbox.  Under supervision
+//! ([`EngineServer::spawn_supervised`]) the thread additionally publishes
+//! lock-free liveness/occupancy signals ([`ReplicaStatus`]), runs its tick
+//! loop behind a panic guard, drains every owned request on a crash, and
+//! draws seeded replica-level faults from a
+//! [`crate::runtime::FaultSchedule`] (DESIGN.md §6).
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Sender, TryRecvError};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig, PrefillBatchItem, PrefillProgress, StepBackend,
                      StepItem};
-use super::request::{Request, RequestId};
-use super::router::SubmitError;
+use super::request::{Request, RequestId, Response};
+use super::router::{Replica, ReplicaSignals, SubmitError};
 use crate::config::{EngineConfig, PreemptMode};
 use crate::engine::{BatchEntry, Engine, PrefillEntry};
 use crate::kvcache::{SeqCache, SwapHandle};
+use crate::runtime::{FaultSchedule, ReplicaFault};
+use crate::util::clock::{Clock, SharedClock, WallClock};
+use crate::util::threadpool::spawn_named;
 
 /// A restore-mode preempted sequence: the page-table skeleton (its
 /// `pool_id`s are stale until swap-in remaps them) plus the host-side
@@ -202,6 +212,10 @@ impl StepBackend for EngineBackend {
     fn has_capacity(&self, _active: usize) -> bool {
         self.engine.pool().free_pages() >= self.pages_per_seq_estimate
     }
+
+    fn free_pages(&self) -> Option<usize> {
+        Some(self.engine.pool().free_pages())
+    }
 }
 
 enum Msg {
@@ -209,90 +223,287 @@ enum Msg {
     Shutdown,
 }
 
+/// Replica lifecycle states, published lock-free in [`ReplicaStatus`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Spawned; the engine is still constructing on the replica thread.
+    Starting,
+    /// Serving its tick loop.
+    Running,
+    /// The watchdog declared it hung (stale heartbeat with pending work
+    /// and no tick progress); it no longer accepts work and dies at its
+    /// next kill-flag check.
+    Hung,
+    /// The replica thread panicked; its owned requests were drained.
+    Crashed,
+    /// Clean exit after a shutdown.
+    Stopped,
+}
+
+impl ReplicaState {
+    fn from_u8(v: u8) -> ReplicaState {
+        match v {
+            0 => ReplicaState::Starting,
+            1 => ReplicaState::Running,
+            2 => ReplicaState::Hung,
+            3 => ReplicaState::Crashed,
+            _ => ReplicaState::Stopped,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            ReplicaState::Starting => 0,
+            ReplicaState::Running => 1,
+            ReplicaState::Hung => 2,
+            ReplicaState::Crashed => 3,
+            ReplicaState::Stopped => 4,
+        }
+    }
+
+    /// Lowercase name for diagnostics.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplicaState::Starting => "starting",
+            ReplicaState::Running => "running",
+            ReplicaState::Hung => "hung",
+            ReplicaState::Crashed => "crashed",
+            ReplicaState::Stopped => "stopped",
+        }
+    }
+}
+
+/// Live, lock-free signals one replica publishes: the watchdog heartbeat
+/// the supervisor polls, and the load/pool/queue occupancy gauges scored
+/// placement reads ([`ReplicaSignals`]).  All fields are written by the
+/// replica thread (except `state`/`kill`, which the supervisor also
+/// writes) and read from anywhere; `Relaxed` ordering is enough because
+/// every consumer tolerates a stale-by-one-tick reading.
+#[derive(Debug, Default)]
+pub struct ReplicaStatus {
+    /// Requests accepted but not yet answered.
+    pub load: AtomicUsize,
+    /// Serving-clock ms of the last tick-loop heartbeat.
+    pub heartbeat_ms: AtomicU64,
+    /// Tick-loop passes completed — the watchdog's progress witness (an
+    /// OS-descheduled replica still ticks between two polls; a hung one
+    /// does not).
+    pub ticks: AtomicU64,
+    /// Free pages in this replica's KV pool.
+    pub free_pages: AtomicUsize,
+    /// Depth of the batcher's FIFO admission queue.
+    pub queue_depth: AtomicUsize,
+    /// Prompts mid-prefill (prefill-budget occupancy).
+    pub prefilling: AtomicUsize,
+    /// [`ReplicaState`] as its `u8` tag.
+    pub state: AtomicU8,
+    /// Cooperative kill flag: the tick loop (and the injected-hang park
+    /// loop) exit at their next check, keeping the thread joinable.
+    pub kill: AtomicBool,
+}
+
+impl ReplicaStatus {
+    /// Current lifecycle state.
+    pub fn state(&self) -> ReplicaState {
+        ReplicaState::from_u8(self.state.load(Ordering::Relaxed))
+    }
+
+    fn set_state(&self, st: ReplicaState) {
+        self.state.store(st.as_u8(), Ordering::Relaxed);
+    }
+
+    /// Whether the replica can accept new work.
+    pub fn accepting(&self) -> bool {
+        !self.kill.load(Ordering::Relaxed)
+            && matches!(self.state(), ReplicaState::Starting | ReplicaState::Running)
+    }
+}
+
+/// Lifecycle events a supervised replica reports on
+/// [`SpawnOpts::events`].
+pub enum ReplicaEvent {
+    /// The replica thread caught a panic.  Every request it still owned —
+    /// in the batcher (decoding, mid-prefill, preempted, queued) or
+    /// sitting unread in its mailbox — rides along for re-dispatch.
+    Crashed {
+        /// [`SpawnOpts::index`] of the dead replica.
+        replica: usize,
+        /// The drained requests, intact and in scheduling order.
+        requests: Vec<Request>,
+        /// Captured panic payload, for diagnostics.
+        panic_msg: String,
+    },
+    /// Clean exit after a `Shutdown` message.
+    Stopped {
+        /// [`SpawnOpts::index`] of the replica.
+        replica: usize,
+    },
+}
+
+/// Supervision hooks for [`EngineServer::spawn_supervised`].
+pub struct SpawnOpts {
+    /// Replica index echoed in [`ReplicaEvent`]s.
+    pub index: usize,
+    /// Serving clock heartbeats are stamped from (must be the clock the
+    /// supervisor's watchdog reads).
+    pub clock: SharedClock,
+    /// Replica-level fault plan: `crash_at_tick`/`hang_at_tick` schedules
+    /// for chaos testing.  `None` = no injected replica faults.
+    pub faults: Option<FaultSchedule>,
+    /// Where lifecycle events go.  `None` = standalone mode: a crash
+    /// fails its drained requests straight back to their callers instead
+    /// of handing them to a supervisor.
+    pub events: Option<Sender<ReplicaEvent>>,
+}
+
+impl Default for SpawnOpts {
+    fn default() -> Self {
+        SpawnOpts { index: 0, clock: WallClock::shared(), faults: None, events: None }
+    }
+}
+
+/// Why the replica loop returned (vs panicking out of it).
+enum LoopExit {
+    /// Shutdown or mailbox disconnect: the loop drained its work.
+    Clean,
+    /// The kill flag fired (watchdog verdict); in-flight work is
+    /// unrecoverable from here — the supervisor already owns the shadow
+    /// copies.
+    Killed,
+}
+
 /// Handle to a replica thread.
 pub struct EngineServer {
     tx: Sender<Msg>,
-    /// Pending-request gauge the router's least-loaded policy reads.
-    pub load: Arc<AtomicUsize>,
+    /// Live signals: watchdog heartbeat, lifecycle state, placement
+    /// occupancy gauges.
+    pub status: Arc<ReplicaStatus>,
+    clock: SharedClock,
     handle: Option<JoinHandle<()>>,
     /// Replica name (thread name suffix, log prefix).
     pub name: String,
 }
 
 impl EngineServer {
-    /// Spawn a replica.  Engine construction happens on the replica thread
-    /// (PJRT clients are not Send-safe to move casually).
+    /// Spawn an unsupervised replica (wall clock, no fault plan, crash
+    /// drains fail straight back to callers).  Engine construction
+    /// happens on the replica thread (PJRT clients are not Send-safe to
+    /// move casually).
     pub fn spawn(name: String, cfg: EngineConfig, bcfg: BatcherConfig,
                  caps: Option<Vec<usize>>) -> Result<EngineServer> {
+        Self::spawn_supervised(name, cfg, bcfg, caps, SpawnOpts::default())
+    }
+
+    /// Spawn a supervised replica: heartbeats on `opts.clock`, panic
+    /// capture with request drain, optional seeded replica faults.  NOTE:
+    /// an injected hang leaves the thread parked until something sets
+    /// [`ReplicaStatus::kill`] (the supervisor's watchdog does; standalone
+    /// callers injecting hangs must kill before drop, or drop joins a
+    /// parked thread forever).
+    pub fn spawn_supervised(name: String, cfg: EngineConfig, bcfg: BatcherConfig,
+                            caps: Option<Vec<usize>>, opts: SpawnOpts) -> Result<EngineServer> {
         let (tx, rx) = channel::<Msg>();
-        let load = Arc::new(AtomicUsize::new(0));
-        let load2 = Arc::clone(&load);
+        let status = Arc::new(ReplicaStatus::default());
         let (ready_tx, ready_rx) = channel::<Result<()>>();
         let thread_name = name.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("raas-replica-{name}"))
-            .spawn(move || {
-                let engine = match caps {
-                    Some(c) => Engine::new_with_capacities(cfg, &c),
-                    None => Engine::new(cfg),
-                };
-                let engine = match engine {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let backend = EngineBackend::new(engine);
-                let mut batcher = Batcher::new(backend, bcfg);
-                loop {
-                    // Drain the mailbox without blocking while work is active;
-                    // block when idle.
-                    let msg = if batcher.pending() == 0 {
-                        match rx.recv() {
-                            Ok(m) => Some(m),
-                            Err(_) => break,
-                        }
-                    } else {
-                        match rx.try_recv() {
-                            Ok(m) => Some(m),
-                            Err(TryRecvError::Empty) => None,
-                            Err(TryRecvError::Disconnected) => break,
-                        }
-                    };
-                    match msg {
-                        Some(Msg::Req(r)) => {
-                            batcher.submit(r);
-                            continue; // keep draining before stepping
-                        }
-                        Some(Msg::Shutdown) => {
-                            batcher.run_to_completion();
-                            break;
-                        }
-                        None => {}
-                    }
-                    batcher.tick();
-                    load2.store(batcher.pending(), Ordering::Relaxed);
+        let SpawnOpts { index, clock, mut faults, events } = opts;
+        let status2 = Arc::clone(&status);
+        let clock2 = Arc::clone(&clock);
+        let handle = spawn_named(format!("raas-replica-{name}"), move || {
+            let engine = match caps {
+                Some(c) => Engine::new_with_capacities(cfg, &c),
+                None => Engine::new(cfg),
+            };
+            let engine = match engine {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
                 }
-                load2.store(0, Ordering::Relaxed);
-            })
-            .expect("spawn replica");
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let backend = EngineBackend::new(engine);
+            let mut batcher = Batcher::with_clock(backend, bcfg, Arc::clone(&clock2));
+            status2.set_state(ReplicaState::Running);
+            // a fresh replica advertises its full pool before any work
+            publish_signals(&batcher, &status2);
+            // The batcher lives OUTSIDE the unwind boundary so a caught
+            // panic can still drain the requests it owns.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                replica_loop(&mut batcher, &rx, &status2, &*clock2, faults.as_mut())
+            }));
+            match result {
+                Ok(LoopExit::Clean) => {
+                    status2.set_state(ReplicaState::Stopped);
+                    status2.load.store(0, Ordering::Relaxed);
+                    if let Some(ev) = &events {
+                        let _ = ev.send(ReplicaEvent::Stopped { replica: index });
+                    }
+                }
+                Ok(LoopExit::Killed) => {
+                    // watchdog kill: the supervisor recovers from its
+                    // shadow registry; nothing to drain here (the batcher
+                    // state is suspect — it was declared hung mid-tick)
+                    status2.load.store(0, Ordering::Relaxed);
+                }
+                Err(panic) => {
+                    status2.set_state(ReplicaState::Crashed);
+                    let panic_msg = panic_text(panic.as_ref());
+                    // Drain everything the batcher still owns, plus any
+                    // requests sitting unread in the mailbox — they must
+                    // reach the supervisor (or their callers), not die
+                    // with the thread.  The drain itself runs behind a
+                    // guard: post-panic backend state may be inconsistent.
+                    let mut requests =
+                        catch_unwind(AssertUnwindSafe(|| batcher.drain_requests()))
+                            .unwrap_or_default();
+                    while let Ok(Msg::Req(r)) = rx.try_recv() {
+                        requests.push(r);
+                    }
+                    status2.load.store(0, Ordering::Relaxed);
+                    match &events {
+                        Some(ev) => {
+                            let _ = ev.send(ReplicaEvent::Crashed {
+                                replica: index,
+                                requests,
+                                panic_msg,
+                            });
+                        }
+                        None => {
+                            for r in requests {
+                                let resp = Response::err(
+                                    r.id,
+                                    r.submitted,
+                                    format!("replica crashed: {panic_msg}"),
+                                );
+                                let _ = r.reply.send(resp);
+                            }
+                        }
+                    }
+                }
+            }
+        });
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("replica {thread_name} died during startup"))??;
-        Ok(EngineServer { tx, load, handle: Some(handle), name: thread_name })
+        Ok(EngineServer { tx, status, clock, handle: Some(handle), name: thread_name })
     }
 
-    /// Enqueue one request into the replica mailbox.  On a dead replica
-    /// the request is handed back inside the error so the caller can
+    /// Enqueue one request into the replica mailbox.  A dead (or dying)
+    /// replica hands the request back inside the error so the caller can
     /// fail over instead of losing it.
     pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        if !self.status.accepting() {
+            return Err(SubmitError {
+                req,
+                reason: format!("replica {} is {}", self.name, self.status.state().name()),
+            });
+        }
         match self.tx.send(Msg::Req(req)) {
             Ok(()) => {
-                self.load.fetch_add(1, Ordering::Relaxed);
+                self.status.load.fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
             Err(e) => {
@@ -307,7 +518,18 @@ impl EngineServer {
 
     /// Requests accepted but not yet answered.
     pub fn pending(&self) -> usize {
-        self.load.load(Ordering::Relaxed)
+        self.status.load.load(Ordering::Relaxed)
+    }
+
+    /// Watchdog verdict: stop accepting work, ask the (possibly wedged)
+    /// thread to die at its next kill check, and unpark it in case it is
+    /// sitting in the injected-hang park loop.
+    pub fn mark_hung(&self) {
+        self.status.set_state(ReplicaState::Hung);
+        self.status.kill.store(true, Ordering::Relaxed);
+        if let Some(h) = &self.handle {
+            h.thread().unpark();
+        }
     }
 
     /// Drain remaining work, then stop and join the replica thread.
@@ -325,5 +547,112 @@ impl Drop for EngineServer {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+impl Replica for EngineServer {
+    fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        EngineServer::submit(self, req)
+    }
+
+    fn pending(&self) -> usize {
+        EngineServer::pending(self)
+    }
+
+    fn signals(&self) -> ReplicaSignals {
+        let s = &self.status;
+        ReplicaSignals {
+            alive: s.accepting(),
+            heartbeat_age_ms: self
+                .clock
+                .now_ms()
+                .saturating_sub(s.heartbeat_ms.load(Ordering::Relaxed)),
+            free_pages: s.free_pages.load(Ordering::Relaxed),
+            queue_depth: s.queue_depth.load(Ordering::Relaxed),
+            prefilling: s.prefilling.load(Ordering::Relaxed),
+            pending: s.load.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The supervised tick loop: kill check → heartbeat → mailbox drain →
+/// injected replica fault point → `Batcher::tick` → signal publication.
+fn replica_loop(batcher: &mut Batcher<EngineBackend>, rx: &Receiver<Msg>,
+                status: &ReplicaStatus, clock: &dyn Clock,
+                mut faults: Option<&mut FaultSchedule>) -> LoopExit {
+    loop {
+        if status.kill.load(Ordering::Relaxed) {
+            return LoopExit::Killed;
+        }
+        status.heartbeat_ms.store(clock.now_ms(), Ordering::Relaxed);
+        // Drain the mailbox without blocking while work is active; block
+        // when idle (an idle replica's stale heartbeat is harmless — the
+        // watchdog exempts replicas with no pending work).
+        let msg = if batcher.pending() == 0 {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return LoopExit::Clean,
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(TryRecvError::Empty) => None,
+                Err(TryRecvError::Disconnected) => return LoopExit::Clean,
+            }
+        };
+        match msg {
+            Some(Msg::Req(r)) => {
+                batcher.submit(r);
+                publish_signals(batcher, status);
+                continue; // keep draining before stepping
+            }
+            Some(Msg::Shutdown) => {
+                batcher.run_to_completion();
+                publish_signals(batcher, status);
+                return LoopExit::Clean;
+            }
+            None => {}
+        }
+        // the replica-level fault point, between mailbox drain and tick
+        if let Some(f) = faults.as_deref_mut() {
+            match f.check_tick() {
+                Some(ReplicaFault::Crash) => panic!("injected replica crash"),
+                Some(ReplicaFault::Hang) => {
+                    // Freeze: no heartbeats, no ticks, mailbox unread —
+                    // exactly what a wedged engine call looks like from
+                    // outside.  The park loop honors the kill flag so the
+                    // thread stays joinable once the watchdog fires.
+                    while !status.kill.load(Ordering::Relaxed) {
+                        std::thread::park_timeout(Duration::from_millis(1));
+                    }
+                    return LoopExit::Killed;
+                }
+                None => {}
+            }
+        }
+        batcher.tick();
+        status.ticks.fetch_add(1, Ordering::Relaxed);
+        publish_signals(batcher, status);
+    }
+}
+
+/// Publish the occupancy gauges scored placement reads.
+fn publish_signals(batcher: &Batcher<EngineBackend>, status: &ReplicaStatus) {
+    status.load.store(batcher.pending(), Ordering::Relaxed);
+    status.queue_depth.store(batcher.queue_depth(), Ordering::Relaxed);
+    status.prefilling.store(batcher.prefilling_len(), Ordering::Relaxed);
+    if let Some(fp) = batcher.backend.free_pages() {
+        status.free_pages.store(fp, Ordering::Relaxed);
+    }
+}
+
+/// Best-effort text of a captured panic payload.
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
     }
 }

@@ -1,0 +1,438 @@
+//! Replica supervision (DESIGN.md §6): the supervisor owns the fleet's
+//! [`Router`], keeps a shadow registry of every in-flight request, and
+//! watches each replica's lock-free [`ReplicaStatus`] signals.  A crash
+//! (panic on the replica thread) hands the drained requests back through
+//! a [`ReplicaEvent`]; a hang (stale heartbeat with pending work and no
+//! tick progress, confirmed on two consecutive polls) is killed via the
+//! cooperative kill flag.  Either way the dead replica is quarantined and
+//! its requests re-dispatched from their original prompts — decode is
+//! batch-composition-invariant (DESIGN.md §4), so recovered requests'
+//! tokens are bit-identical to a fault-free run, and the shadow registry
+//! dedups any zombie reply so every request resolves to exactly one
+//! [`Outcome`](super::request::Outcome).
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::runtime::FaultSchedule;
+use crate::util::clock::SharedClock;
+
+use super::batcher::BatcherConfig;
+use super::request::{Request, RequestId, Response};
+use super::router::{RoutePolicy, Router, SubmitError};
+use super::server::{EngineServer, ReplicaEvent, SpawnOpts};
+
+/// Supervision knobs.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Heartbeat age (serving-clock ms) past which a replica with pending
+    /// work is suspected hung; confirmed (no tick progress) on the next
+    /// poll.
+    pub hang_timeout_ms: u64,
+    /// Router retry budget granted to re-dispatched requests.
+    pub redispatch_retries: u32,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig { hang_timeout_ms: 1000, redispatch_retries: 4 }
+    }
+}
+
+/// Shadow copy of one in-flight request: enough to rebuild it from the
+/// original prompt if its replica dies, plus the caller's reply channel
+/// (the live request's reply is swapped to the supervisor so it can
+/// intercept, dedup, and forward).
+struct Tracked {
+    replica: usize,
+    prompt: Vec<u32>,
+    max_new: usize,
+    deadline_ms: Option<u64>,
+    arrived_ms: Option<u64>,
+    submitted: Instant,
+    reply: Sender<Response>,
+}
+
+/// Two-strike watchdog state per replica.
+#[derive(Debug, Clone, Copy, Default)]
+struct Watch {
+    /// Tick counter at the first strike.
+    ticks_at_strike: u64,
+    /// A strike is pending confirmation.
+    striked: bool,
+}
+
+/// Supervises a fleet of [`EngineServer`] replicas behind a [`Router`].
+pub struct Supervisor {
+    router: Router<EngineServer>,
+    registry: HashMap<RequestId, Tracked>,
+    resp_tx: Sender<Response>,
+    resp_rx: Receiver<Response>,
+    ev_rx: Receiver<ReplicaEvent>,
+    clock: SharedClock,
+    cfg: SupervisorConfig,
+    watch: Vec<Watch>,
+    dead: Vec<bool>,
+    /// Replicas the watchdog declared hung and killed.
+    pub hangs: u64,
+    /// Replica threads that crashed (panicked).
+    pub crashes: u64,
+    /// Requests re-dispatched off a dead replica.
+    pub redispatched: u64,
+    /// Responses forwarded to callers.
+    pub completed: u64,
+    /// Zombie replies (already answered elsewhere) swallowed by the
+    /// registry dedup.
+    pub duplicates_dropped: u64,
+}
+
+impl Supervisor {
+    /// Spawn `n` supervised replicas sharing `clock`, with optional
+    /// per-replica fault schedules (`faults[i]` drives replica `i`; the
+    /// vec may be shorter than `n`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        n: usize,
+        cfg: EngineConfig,
+        bcfg: BatcherConfig,
+        caps: Option<Vec<usize>>,
+        route: RoutePolicy,
+        scfg: SupervisorConfig,
+        clock: SharedClock,
+        mut faults: Vec<Option<FaultSchedule>>,
+    ) -> Result<Supervisor> {
+        assert!(n > 0, "supervisor needs at least one replica");
+        faults.resize_with(n, || None);
+        let page_size = cfg.resolve_meta()?.page_size;
+        let seed = cfg.seed;
+        let (ev_tx, ev_rx) = channel::<ReplicaEvent>();
+        let mut servers = Vec::with_capacity(n);
+        for (i, fault) in faults.into_iter().enumerate() {
+            let opts = SpawnOpts {
+                index: i,
+                clock: clock.clone(),
+                faults: fault,
+                events: Some(ev_tx.clone()),
+            };
+            servers.push(EngineServer::spawn_supervised(
+                format!("r{i}"),
+                cfg.clone(),
+                bcfg.clone(),
+                caps.clone(),
+                opts,
+            )?);
+        }
+        let router = Router::with_seed(servers, route, seed)
+            .with_clock(clock.clone())
+            .with_page_size(page_size);
+        let (resp_tx, resp_rx) = channel::<Response>();
+        Ok(Supervisor {
+            router,
+            registry: HashMap::new(),
+            resp_tx,
+            resp_rx,
+            ev_rx,
+            clock,
+            cfg: scfg,
+            watch: vec![Watch::default(); n],
+            dead: vec![false; n],
+            hangs: 0,
+            crashes: 0,
+            redispatched: 0,
+            completed: 0,
+            duplicates_dropped: 0,
+        })
+    }
+
+    /// Submit one request: its reply is intercepted by the supervisor
+    /// (for dedup + recovery) and forwarded to the original channel on
+    /// completion.  On routing failure the request comes back intact.
+    pub fn submit(&mut self, mut req: Request) -> Result<usize, SubmitError> {
+        let caller_reply = std::mem::replace(&mut req.reply, self.resp_tx.clone());
+        let shadow = Tracked {
+            replica: usize::MAX,
+            prompt: req.prompt.clone(),
+            max_new: req.max_new,
+            deadline_ms: req.deadline_ms,
+            arrived_ms: req.arrived_ms,
+            submitted: req.submitted,
+            reply: caller_reply,
+        };
+        let id = req.id;
+        match self.router.route(req) {
+            Ok(i) => {
+                let mut shadow = shadow;
+                shadow.replica = i;
+                self.registry.insert(id, shadow);
+                Ok(i)
+            }
+            Err(mut se) => {
+                se.req.reply = shadow.reply;
+                Err(se)
+            }
+        }
+    }
+
+    /// One supervision pass: forward finished responses, handle lifecycle
+    /// events (crash recovery), run the hang watchdog, and fail leftovers
+    /// if the whole fleet is dead.  Returns `true` when no request is
+    /// outstanding.
+    pub fn poll(&mut self) -> bool {
+        self.pump_responses();
+        self.pump_events();
+        self.watchdog();
+        if self.dead.iter().all(|&d| d) && !self.registry.is_empty() {
+            self.fail_all("every replica is dead");
+        }
+        self.registry.is_empty()
+    }
+
+    /// Requests currently tracked (submitted, not yet resolved).
+    pub fn outstanding(&self) -> usize {
+        self.registry.len()
+    }
+
+    /// Whether the supervisor has declared replica `i` dead.
+    pub fn is_dead(&self, i: usize) -> bool {
+        self.dead[i]
+    }
+
+    /// The underlying router (counters, replica signals).
+    pub fn router(&self) -> &Router<EngineServer> {
+        &self.router
+    }
+
+    /// Poll until idle or `max_polls` passes elapse; returns whether the
+    /// fleet went idle.  (Wall-clock callers only — with a [`SimClock`]
+    /// the caller must advance time between polls itself.)
+    ///
+    /// [`SimClock`]: crate::util::clock::SimClock
+    pub fn run_until_idle(&mut self, max_polls: u64) -> bool {
+        for _ in 0..max_polls {
+            if self.poll() {
+                return true;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        self.poll()
+    }
+
+    /// Drain replicas and join their threads.
+    pub fn shutdown(self) {
+        for r in self.router.into_replicas() {
+            r.shutdown();
+        }
+    }
+
+    fn pump_responses(&mut self) {
+        while let Ok(resp) = self.resp_rx.try_recv() {
+            match self.registry.remove(&resp.id) {
+                Some(t) => {
+                    self.completed += 1;
+                    let _ = t.reply.send(resp);
+                }
+                None => self.duplicates_dropped += 1,
+            }
+        }
+    }
+
+    fn pump_events(&mut self) {
+        let events: Vec<ReplicaEvent> =
+            std::iter::from_fn(|| self.ev_rx.try_recv().ok()).collect();
+        for ev in events {
+            match ev {
+                ReplicaEvent::Crashed { replica, requests, panic_msg } => {
+                    self.crashes += 1;
+                    self.mark_dead(replica);
+                    // answers that raced out before the panic: forward them
+                    // first so re-dispatch can't double-serve those ids
+                    self.pump_responses();
+                    self.redispatch_requests(requests, &panic_msg);
+                    self.recover_stragglers(replica, &format!("replica crashed: {panic_msg}"));
+                }
+                ReplicaEvent::Stopped { .. } => {}
+            }
+        }
+    }
+
+    fn mark_dead(&mut self, i: usize) {
+        if !self.dead[i] {
+            self.dead[i] = true;
+            self.router.quarantine(i);
+        }
+    }
+
+    /// Two-strike hang detection: a replica with pending work whose
+    /// heartbeat is stale *and* whose tick counter did not move between
+    /// two polls is hung (an OS-descheduled replica still ticks; a wedged
+    /// one does not).  Verdict: kill + quarantine + re-dispatch.
+    fn watchdog(&mut self) {
+        use std::sync::atomic::Ordering;
+        let now = self.clock.now_ms();
+        let mut hung: Vec<usize> = Vec::new();
+        for i in 0..self.router.replicas().len() {
+            if self.dead[i] {
+                continue;
+            }
+            let status = &self.router.replicas()[i].status;
+            let pending = status.load.load(Ordering::Relaxed);
+            let hb = status.heartbeat_ms.load(Ordering::Relaxed);
+            let ticks = status.ticks.load(Ordering::Relaxed);
+            let stale = pending > 0 && now.saturating_sub(hb) >= self.cfg.hang_timeout_ms;
+            let w = &mut self.watch[i];
+            if !stale {
+                w.striked = false;
+            } else if !w.striked || ticks != w.ticks_at_strike {
+                // first strike (or progress since the last one): note the
+                // tick counter and confirm on the next poll
+                w.striked = true;
+                w.ticks_at_strike = ticks;
+            } else {
+                hung.push(i);
+            }
+        }
+        for i in hung {
+            self.hangs += 1;
+            self.router.replicas()[i].mark_hung();
+            self.mark_dead(i);
+            self.pump_responses();
+            self.recover_stragglers(i, "replica hung (watchdog)");
+        }
+    }
+
+    /// Re-dispatch requests drained off a dead replica.  Requests whose
+    /// id already left the registry (answered before the fault) are
+    /// dropped — re-running them would double-answer.
+    fn redispatch_requests(&mut self, requests: Vec<Request>, why: &str) {
+        for mut req in requests {
+            if !self.registry.contains_key(&req.id) {
+                continue;
+            }
+            req.retries_left = req.retries_left.max(self.cfg.redispatch_retries);
+            let id = req.id;
+            match self.router.route(req) {
+                Ok(i) => {
+                    self.redispatched += 1;
+                    if let Some(t) = self.registry.get_mut(&id) {
+                        t.replica = i;
+                    }
+                }
+                Err(se) => self.fail_one(se.req.id, &format!("{why}; re-dispatch: {}", se.reason)),
+            }
+        }
+    }
+
+    /// Rebuild and re-dispatch every registry entry still pointing at
+    /// dead replica `i` (hang recovery: the wedged thread can't drain its
+    /// own batcher, but the shadow registry has everything needed).
+    fn recover_stragglers(&mut self, i: usize, why: &str) {
+        let ids: Vec<RequestId> = self
+            .registry
+            .iter()
+            .filter(|(_, t)| t.replica == i)
+            .map(|(&id, _)| id)
+            .collect();
+        let rebuilt: Vec<Request> = ids
+            .iter()
+            .map(|&id| {
+                let t = &self.registry[&id];
+                let mut req = Request::new(id, t.prompt.clone(), t.max_new, self.resp_tx.clone());
+                req.deadline_ms = t.deadline_ms;
+                req.arrived_ms = t.arrived_ms; // keep the original deadline budget
+                req.submitted = t.submitted; // and the original JCT origin
+                req
+            })
+            .collect();
+        self.redispatch_requests(rebuilt, why);
+    }
+
+    fn fail_one(&mut self, id: RequestId, why: &str) {
+        if let Some(t) = self.registry.remove(&id) {
+            let _ = t.reply.send(Response::err(id, t.submitted, why.to_string()));
+        }
+    }
+
+    fn fail_all(&mut self, why: &str) {
+        let ids: Vec<RequestId> = self.registry.keys().copied().collect();
+        for id in ids {
+            self.fail_one(id, why);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, EngineConfig};
+    use crate::coordinator::request::Outcome;
+    use crate::util::clock::SimClock;
+    use std::sync::mpsc::channel;
+
+    fn sim_cfg(seed: u64) -> EngineConfig {
+        EngineConfig { backend: BackendKind::Sim, seed, ..EngineConfig::default() }
+    }
+
+    #[test]
+    fn crash_with_no_survivor_fails_requests_instead_of_deadlocking() {
+        let sim = SimClock::new();
+        let faults = vec![Some(FaultSchedule::new(1).crash_at_tick(0))];
+        let mut sup = Supervisor::spawn(
+            1,
+            sim_cfg(3),
+            BatcherConfig::default(),
+            Some(vec![64, 128]),
+            RoutePolicy::Scored,
+            SupervisorConfig { hang_timeout_ms: 200, redispatch_retries: 2 },
+            sim.clone(),
+            faults,
+        )
+        .expect("spawn");
+        let (tx, rx) = channel();
+        let mut accepted = 0u32;
+        let mut rejected = 0u32;
+        for id in 0..3u64 {
+            let req = Request::new(id, vec![1, 2, 3, 4], 4, tx.clone());
+            match sup.submit(req) {
+                Ok(_) => accepted += 1,
+                // the replica may already be dead by the later submits —
+                // answer those directly, as a driver would
+                Err(se) => {
+                    rejected += 1;
+                    let _ = se.req.reply.send(Response::err(
+                        se.req.id,
+                        se.req.submitted,
+                        se.reason,
+                    ));
+                }
+            }
+        }
+        assert!(accepted >= 1, "the first submit precedes the crash");
+        let mut polls = 0u64;
+        while !sup.poll() {
+            sim.advance(50);
+            std::thread::sleep(std::time::Duration::from_micros(300));
+            polls += 1;
+            assert!(polls < 20_000, "supervisor must not deadlock");
+        }
+        drop(tx);
+        let mut outcomes: Vec<(u64, Outcome)> = rx.iter().map(|r| (r.id, r.outcome)).collect();
+        outcomes.sort_unstable();
+        assert_eq!(outcomes.len(), 3, "exactly one outcome per request");
+        assert_eq!(
+            outcomes.iter().map(|&(id, _)| id).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "every id answered exactly once"
+        );
+        assert!(
+            outcomes.iter().all(|&(_, o)| o == Outcome::Failed),
+            "sole replica crashed: everything fails, nothing hangs: {outcomes:?}"
+        );
+        assert_eq!(sup.crashes, 1);
+        assert_eq!(accepted + rejected, 3);
+        sup.shutdown();
+    }
+}

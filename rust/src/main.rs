@@ -15,9 +15,11 @@ use anyhow::{bail, Result};
 use raas::config::{BackendKind, EngineConfig, PolicyKind, PreemptMode};
 use raas::coordinator::batcher::BatcherConfig;
 use raas::coordinator::request::{Outcome, Request, Response};
-use raas::coordinator::router::{RoutePolicy, Router};
-use raas::coordinator::server::EngineServer;
+use raas::coordinator::router::RoutePolicy;
+use raas::coordinator::supervisor::{Supervisor, SupervisorConfig};
 use raas::engine::{Engine, GenOptions};
+use raas::runtime::FaultSchedule;
+use raas::util::clock::WallClock;
 use raas::figures;
 use raas::util::cli::Args;
 use raas::util::rng::Rng;
@@ -73,11 +75,14 @@ fn print_help() {
            inspect     show model metadata (backend, capacities, corpus)\n\
            run         decode one sampled problem (--policy, --budget, --steps)\n\
            sweep       model accuracy sweep (--policies, --budgets, --problems)\n\
-           serve       multi-replica serving demo (--replicas, --requests, --rate,\n\
+           serve       supervised multi-replica serving demo (--replicas,\n\
+                       --requests, --rate, --route rr|least|affinity|scored,\n\
                        --prefill-budget N for chunked admission,\n\
                        --prefill-concurrency K to co-admit K prompts,\n\
                        --preempt-mode recompute|restore, --deadline-ms N,\n\
-                       --retry N failovers, --max-queue N sheds beyond depth)\n\
+                       --retry N failovers, --max-queue N sheds beyond depth,\n\
+                       --hang-timeout-ms N watchdog, and fault demos\n\
+                       --crash-tick N / --hang-tick N on replica 0)\n\
            fig1..fig9  regenerate the paper's figures (writes results/*.csv)\n\
          \n\
          common flags: --backend sim|xla  --artifacts DIR\n\
@@ -212,13 +217,14 @@ fn sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Multi-replica serving demo: router + continuous batching under a Poisson
-/// or batch arrival workload; reports throughput and latency percentiles.
+/// Supervised multi-replica serving demo: health/KV-aware routing +
+/// continuous batching under a Poisson or batch arrival workload, with
+/// crash/hang recovery; reports throughput and latency percentiles.
 fn serve(args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 2);
     let n_requests = args.usize_or("requests", 16);
     let rate = args.f64_or("rate", 0.0); // 0 = offline batch
-    let route = RoutePolicy::parse(&args.str_or("route", "least"))?;
+    let route = RoutePolicy::parse(&args.str_or("route", "scored"))?;
     let max_batch = args.usize_or("max-batch", 4);
     // Sarathi-style chunked admission: at most this many prompt tokens per
     // scheduler tick (absent = legacy prefill-first whole-prompt admission).
@@ -233,6 +239,11 @@ fn serve(args: &Args) -> Result<()> {
     let deadline_ms = args.u64_or("deadline-ms", 0); // 0 = no deadline
     let retries = args.usize_or("retry", 1) as u32;
     let max_queue_depth = args.usize_opt("max-queue");
+    // Supervision knobs: watchdog hang timeout, plus optional demo faults
+    // injected into replica 0's tick loop.
+    let hang_timeout_ms = args.u64_or("hang-timeout-ms", 1000);
+    let crash_tick = args.usize_opt("crash-tick");
+    let hang_tick = args.usize_opt("hang-tick");
     let cfg = EngineConfig::from_args(args)?;
     let caps: Option<Vec<usize>> = Some(args.usize_list_or("capacities", &[64, 128, 256, 512]));
 
@@ -242,12 +253,25 @@ fn serve(args: &Args) -> Result<()> {
                                prefill_concurrency,
                                preempt_mode,
                                max_queue_depth };
-    let servers: Vec<EngineServer> = (0..replicas)
-        .map(|i| EngineServer::spawn(format!("r{i}"), cfg.clone(), bcfg.clone(), caps.clone()))
-        .collect::<Result<_>>()?;
     let meta = cfg.resolve_meta()?;
     let spec = meta.corpus.clone();
-    let mut router = Router::new(servers, route);
+    let mut fault0 = None;
+    if let Some(t) = crash_tick {
+        fault0 = Some(FaultSchedule::new(cfg.seed).crash_at_tick(t as u64));
+    } else if let Some(t) = hang_tick {
+        fault0 = Some(FaultSchedule::new(cfg.seed).hang_at_tick(t as u64));
+    }
+    let scfg = SupervisorConfig { hang_timeout_ms, redispatch_retries: retries.max(1) };
+    let mut sup = Supervisor::spawn(
+        replicas,
+        cfg,
+        bcfg,
+        caps,
+        route,
+        scfg,
+        WallClock::shared(),
+        vec![fault0],
+    )?;
 
     let mut rng = Rng::new(args.u64_or("seed", 123));
     let (tx, rx) = std::sync::mpsc::channel::<Response>();
@@ -269,14 +293,18 @@ fn serve(args: &Args) -> Result<()> {
         if deadline_ms > 0 {
             req = req.with_deadline_ms(deadline_ms);
         }
-        if let Err(se) = router.route(req) {
+        if let Err(se) = sup.submit(req) {
             // Every replica refused (or is dead): answer the caller with a
             // failure instead of silently dropping the request.
             let resp = Response::err(se.req.id, se.req.submitted, se.reason);
             let _ = se.req.reply.send(resp);
         }
+        sup.poll(); // keep recovery responsive while arrivals trickle in
     }
     drop(tx);
+    while !sup.poll() {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
 
     let mut jct = Summary::new();
     let mut ttft = Summary::new();
@@ -317,9 +345,14 @@ fn serve(args: &Args) -> Result<()> {
              1e3 * ttft.percentile(99.0));
     println!("accuracy: {:.2} ({correct}/{done}), errors {errors}, shed {sheds}",
              correct as f64 / done.max(1) as f64);
-    for r in router.into_replicas() {
-        r.shutdown();
-    }
+    let r = sup.router();
+    println!(
+        "supervision: crashes {} hangs {} redispatched {} | routing: affinity hits {} \
+         failovers {} breaker opens {} quarantines {}",
+        sup.crashes, sup.hangs, sup.redispatched, r.affinity_hits, r.failovers,
+        r.breaker_opens, r.quarantines
+    );
+    sup.shutdown();
     Ok(())
 }
 

@@ -79,6 +79,20 @@ struct Targeted {
     nth: u64,
 }
 
+/// A replica-level fault drawn by [`FaultSchedule::check_tick`] on the
+/// supervised tick loop (DESIGN.md §6): the whole replica dies, not one
+/// backend call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaFault {
+    /// The replica thread panics mid-loop; the supervisor catches it,
+    /// drains the batcher and re-dispatches.
+    Crash,
+    /// The replica freezes (no heartbeats, no ticks) until killed; the
+    /// supervisor's watchdog detects and recovers from the shadow
+    /// registry.
+    Hang,
+}
+
 /// A seeded, deterministic fault plan (see module docs).  Built with the
 /// `rate`/`fail_nth`/`fail_nth_for`/`hang_after` builders, consumed by the
 /// injector wrappers through [`FaultSchedule::check`].
@@ -94,6 +108,12 @@ pub struct FaultSchedule {
     calls: u64,
     hung: bool,
     injected: u64,
+    /// Replica tick-loop passes observed by [`FaultSchedule::check_tick`].
+    ticks: u64,
+    /// Panic the replica thread at this tick (0-indexed), once.
+    crash_at: Option<u64>,
+    /// Freeze the replica tick loop at this tick (0-indexed), once.
+    hang_at: Option<u64>,
 }
 
 impl FaultSchedule {
@@ -109,6 +129,9 @@ impl FaultSchedule {
             calls: 0,
             hung: false,
             injected: 0,
+            ticks: 0,
+            crash_at: None,
+            hang_at: None,
         }
     }
 
@@ -139,6 +162,43 @@ impl FaultSchedule {
     pub fn hang_after(mut self, calls: u64) -> Self {
         self.hang_after = Some(calls);
         self
+    }
+
+    /// Panic the replica thread on its `tick`-th tick-loop pass
+    /// (0-indexed) — the supervised crash fault ([`ReplicaFault::Crash`]).
+    pub fn crash_at_tick(mut self, tick: u64) -> Self {
+        self.crash_at = Some(tick);
+        self
+    }
+
+    /// Freeze the replica tick loop on its `tick`-th pass (0-indexed) —
+    /// heartbeats stop, the mailbox goes unread, exactly what a wedged
+    /// engine call looks like from outside ([`ReplicaFault::Hang`]).
+    pub fn hang_at_tick(mut self, tick: u64) -> Self {
+        self.hang_at = Some(tick);
+        self
+    }
+
+    /// Record one replica tick-loop pass and decide whether a
+    /// replica-level fault fires on it.  A pending fault fires on the
+    /// first pass *at or after* its scheduled tick (at most one fault per
+    /// pass, crash first), so a fault is never silently skipped when
+    /// another fault consumed its exact tick.  Both faults are one-shot
+    /// (consumed when they fire).
+    pub fn check_tick(&mut self) -> Option<ReplicaFault> {
+        let t = self.ticks;
+        self.ticks += 1;
+        if self.crash_at.is_some_and(|c| t >= c) {
+            self.crash_at = None;
+            self.injected += 1;
+            return Some(ReplicaFault::Crash);
+        }
+        if self.hang_at.is_some_and(|h| t >= h) {
+            self.hang_at = None;
+            self.injected += 1;
+            return Some(ReplicaFault::Hang);
+        }
+        None
     }
 
     /// Record one call of `op` (scoped to `key` when the caller has one)
@@ -580,5 +640,25 @@ mod tests {
         );
         assert!(b.step(&mut seq, 1, 3).is_ok());
         assert_eq!(b.inner.steps, 2, "faulted step never reached the inner backend");
+    }
+
+    #[test]
+    fn tick_faults_fire_once_at_their_scheduled_tick() {
+        let mut s = FaultSchedule::new(0).crash_at_tick(2);
+        assert_eq!(s.check_tick(), None);
+        assert_eq!(s.check_tick(), None);
+        assert_eq!(s.check_tick(), Some(ReplicaFault::Crash));
+        assert_eq!(s.check_tick(), None, "tick faults are one-shot");
+        assert_eq!(s.injected(), 1);
+
+        let mut h = FaultSchedule::new(0).hang_at_tick(0);
+        assert_eq!(h.check_tick(), Some(ReplicaFault::Hang));
+        assert_eq!(h.check_tick(), None);
+
+        // crash wins when both land on the same tick
+        let mut both = FaultSchedule::new(0).crash_at_tick(1).hang_at_tick(1);
+        assert_eq!(both.check_tick(), None);
+        assert_eq!(both.check_tick(), Some(ReplicaFault::Crash));
+        assert_eq!(both.check_tick(), Some(ReplicaFault::Hang), "hang still pending");
     }
 }

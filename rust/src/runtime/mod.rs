@@ -28,7 +28,7 @@ pub mod model;
 
 pub use backend::{AttnBatchItem, Backend, PagedAttnInput, PrefillChunkItem, PrefillChunkOut,
                   PrefillOut, Qkv, QkvBatchItem};
-pub use fault::{FaultInjector, FaultOp, FaultSchedule, StepFaultInjector};
+pub use fault::{FaultInjector, FaultOp, FaultSchedule, ReplicaFault, StepFaultInjector};
 pub use sim_backend::SimBackend;
 pub use tokenizer::Tokenizer;
 

@@ -1,0 +1,100 @@
+//! Injectable serving clock (DESIGN.md §6): deadline expiry, breaker
+//! backoff and watchdog heartbeats all read time through [`Clock`], so the
+//! robustness tests drive a [`SimClock`] deterministically while `main`
+//! serves on the real [`WallClock`].  Durations are plain milliseconds —
+//! a monotonic `u64` is atomically publishable (heartbeat stamps cross
+//! threads lock-free) where `std::time::Instant` is not.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+/// Monotonic millisecond clock.  Implementations must be cheap — the
+/// batcher reads it on every admission tick.
+pub trait Clock: Send + Sync {
+    /// Milliseconds since this clock's origin (process start for
+    /// [`WallClock`], zero for a fresh [`SimClock`]).
+    fn now_ms(&self) -> u64;
+}
+
+/// Shared handle to a clock; replicas, router and supervisor must read the
+/// same one or deadline/heartbeat comparisons are meaningless.
+pub type SharedClock = Arc<dyn Clock>;
+
+/// Real time, measured from a process-wide origin so every `WallClock`
+/// reads the same timeline.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct WallClock;
+
+static WALL_ORIGIN: OnceLock<Instant> = OnceLock::new();
+
+impl WallClock {
+    /// The process-wide shared wall clock.
+    pub fn shared() -> SharedClock {
+        WALL_ORIGIN.get_or_init(Instant::now);
+        Arc::new(WallClock)
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> u64 {
+        WALL_ORIGIN.get_or_init(Instant::now).elapsed().as_millis() as u64
+    }
+}
+
+/// Manually-advanced test clock: time moves only when the test says so,
+/// making deadline expiry, breaker reopen and hang detection exact.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    ms: AtomicU64,
+}
+
+impl SimClock {
+    /// Fresh sim clock at t = 0, ready to share across threads.
+    pub fn new() -> Arc<SimClock> {
+        Arc::new(SimClock { ms: AtomicU64::new(0) })
+    }
+
+    /// Advance by `ms` milliseconds.
+    pub fn advance(&self, ms: u64) {
+        self.ms.fetch_add(ms, Ordering::SeqCst);
+    }
+
+    /// Jump to an absolute time (must not move backwards in tests that
+    /// care about monotonicity; the clock itself does not enforce it).
+    pub fn set(&self, ms: u64) {
+        self.ms.store(ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for SimClock {
+    fn now_ms(&self) -> u64 {
+        self.ms.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_moves_only_on_demand() {
+        let c = SimClock::new();
+        assert_eq!(c.now_ms(), 0);
+        c.advance(250);
+        assert_eq!(c.now_ms(), 250);
+        c.set(1000);
+        assert_eq!(c.now_ms(), 1000);
+        let shared: SharedClock = c.clone();
+        assert_eq!(shared.now_ms(), 1000);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic_and_shared() {
+        let a = WallClock::shared();
+        let b = WallClock::shared();
+        let t0 = a.now_ms();
+        let t1 = b.now_ms();
+        assert!(t1 >= t0, "two WallClock handles must share one origin");
+    }
+}

@@ -3,6 +3,7 @@
 //! the `xla` crate's dependency closure is available (see DESIGN.md §3).
 
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod rng;
 pub mod stats;

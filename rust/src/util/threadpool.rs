@@ -8,6 +8,12 @@ use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Spawn a single named thread (replica threads carry their name into
+/// panic messages and debugger output).
+pub fn spawn_named(name: String, f: impl FnOnce() + Send + 'static) -> JoinHandle<()> {
+    std::thread::Builder::new().name(name).spawn(f).expect("spawn thread")
+}
+
 /// Fixed-size worker pool; dropping it joins every worker.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
