@@ -1,0 +1,155 @@
+//! Accuracy-cliff grid (ISSUE 10 tentpole): where each policy's accuracy
+//! falls off a cliff as decode length grows past its budget — the Lil
+//! very-long-decode workload (8k/16k/32k) over the full policy zoo.
+//!
+//!     cargo bench --bench accuracy_cliff              # full run
+//!     cargo bench --bench accuracy_cliff -- --test    # CI smoke
+//!
+//! Writes `results/BENCH_accuracy_cliff.json` (uploaded by the CI
+//! bench-smoke job; the baseline is provisional, so `bench_compare.py`
+//! only warns).  Per (scenario × decode length) a batch of Lil traces is
+//! generated ONCE and replayed under every policy × budget cell, plus an
+//! unbudgeted dense reference — paired comparison, so `accuracy` and
+//! `token_agreement` differences are pure policy effects (see `LilTrace`).
+//! The dense reference is pinned *exactly* to the shared answer coins and
+//! asserted after the JSON is written.
+//!
+//! Per non-dense policy a `cliff_budget` summary row reports the smallest
+//! budget whose accuracy stays within 0.15 of dense (0 = every budget in
+//! the grid is below the cliff) — the number the paper's Figure-6-style
+//! grids eyeball.
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::kvcache::policy::make_policy;
+use raas::sim::{
+    gen_lil_trace, run_lil_trials, LilAggregate, LilScenario, LilTrace, SimParams, LIL_DECODE_LENS,
+    LIL_SCENARIOS, MODELS,
+};
+use raas::util::json::Json;
+use raas::util::rng::Rng;
+
+/// Cache budgets (tokens) swept per policy.
+const BUDGETS: [usize; 4] = [64, 128, 256, 512];
+
+/// A policy cell is "above the cliff" within this accuracy distance of
+/// the dense reference.
+const CLIFF_MARGIN: f64 = 0.15;
+
+fn run_cell(kind: PolicyKind, budget: usize, sc: &LilScenario, traces: &[LilTrace],
+            target: usize) -> LilAggregate {
+    let cfg = EngineConfig {
+        policy: kind,
+        budget,
+        alpha: sc.raas_alpha,
+        ..Default::default()
+    };
+    let policy = make_policy(&cfg);
+    let params = SimParams {
+        budget_tokens: budget,
+        max_decode: target + 4096,
+        ..Default::default()
+    };
+    run_lil_trials(policy.as_ref(), &params, &MODELS[2], sc, traces)
+}
+
+fn cell_row(name: String, budget: usize, trials: usize, a: &LilAggregate) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("budget_tokens", Json::from(budget)),
+        ("trials", Json::from(trials)),
+        ("accuracy", Json::from(a.accuracy)),
+        ("token_agreement", Json::from(a.token_agreement)),
+        ("mean_decode_len", Json::from(a.mean_decode_len)),
+        ("cap_rate", Json::from(a.cap_rate)),
+        ("milestone_miss_rate", Json::from(a.milestone_miss_rate)),
+        ("phoenix_miss_rate", Json::from(a.phoenix_miss_rate)),
+        ("mean_peak_resident", Json::from(a.mean_peak_resident)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--test" || a == "--quick");
+    let trials = if quick { 1usize } else { 3 };
+    let mp = &MODELS[2];
+
+    let mut rows: Vec<Json> = Vec::new();
+    // (scenario, len, dense accuracy, coin reference, dense agreement) for
+    // the post-write asserts
+    let mut dense_checks: Vec<(&str, usize, f64, f64, f64)> = Vec::new();
+    println!(
+        "{:<44} {:>8} {:>8} {:>8} {:>8} {:>10}",
+        "cell", "acc", "agree", "cap", "ms-miss", "peak-tok"
+    );
+    println!("{}", "-".repeat(92));
+
+    for (si, sc) in LIL_SCENARIOS.iter().enumerate() {
+        for &target in &LIL_DECODE_LENS {
+            // one trace batch per grid point, shared by every cell below
+            let mut rng = Rng::new(0x11f0_0000 + si as u64 * 65_536 + target as u64);
+            let traces: Vec<LilTrace> =
+                (0..trials).map(|_| gen_lil_trace(sc, mp, target, &mut rng)).collect();
+
+            let dense = run_cell(PolicyKind::Dense, 1 << 24, sc, &traces, target);
+            let reference = traces.iter().filter(|t| t.answer_u < sc.base_acc).count() as f64
+                / trials as f64;
+            let stem = format!("accuracy_cliff/{}/{}k", sc.name, target / 1024);
+            println!(
+                "{:<44} {:>8.2} {:>8.3} {:>8.2} {:>8.2} {:>10.0}",
+                format!("{stem}/dense/reference"),
+                dense.accuracy, dense.token_agreement, dense.cap_rate,
+                dense.milestone_miss_rate, dense.mean_peak_resident
+            );
+            rows.push(cell_row(format!("{stem}/dense/reference"), 1 << 24, trials, &dense));
+            dense_checks.push((sc.name, target, dense.accuracy, reference,
+                               dense.token_agreement));
+
+            for kind in PolicyKind::all() {
+                if kind == PolicyKind::Dense {
+                    continue;
+                }
+                let mut cliff_budget = 0usize;
+                for &budget in &BUDGETS {
+                    let a = run_cell(kind, budget, sc, &traces, target);
+                    if cliff_budget == 0 && a.accuracy + 1e-12 >= dense.accuracy - CLIFF_MARGIN
+                    {
+                        cliff_budget = budget;
+                    }
+                    let name = format!("{stem}/{}/b{budget}", kind.name());
+                    println!(
+                        "{:<44} {:>8.2} {:>8.3} {:>8.2} {:>8.2} {:>10.0}",
+                        name, a.accuracy, a.token_agreement, a.cap_rate,
+                        a.milestone_miss_rate, a.mean_peak_resident
+                    );
+                    rows.push(cell_row(name, budget, trials, &a));
+                }
+                rows.push(Json::obj(vec![
+                    ("name", Json::str(format!("cliff_budget/{}/{}k/{}", sc.name,
+                                               target / 1024, kind.name()))),
+                    ("cliff_budget_tokens", Json::from(cliff_budget)),
+                    ("dense_accuracy", Json::from(dense.accuracy)),
+                    ("cliff_margin", Json::from(CLIFF_MARGIN)),
+                ]));
+            }
+        }
+    }
+
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/BENCH_accuracy_cliff.json", Json::Arr(rows).to_string())
+        .expect("write results/BENCH_accuracy_cliff.json");
+    println!("\nwrote results/BENCH_accuracy_cliff.json");
+
+    // Acceptance criteria (checked after the JSON is written so a failure
+    // still leaves the artifact for debugging): the unbudgeted dense
+    // replay is EXACTLY the shared answer coins — no misses, no
+    // derailments, full token agreement — at every grid point.
+    for (name, target, acc, reference, agree) in dense_checks {
+        assert!(
+            (acc - reference).abs() < 1e-12,
+            "{name}/{target}: dense accuracy {acc} must equal the coin count {reference}"
+        );
+        assert!(
+            (agree - 1.0).abs() < 1e-12,
+            "{name}/{target}: dense token agreement {agree} must be exactly 1"
+        );
+    }
+}

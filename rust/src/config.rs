@@ -278,10 +278,18 @@ pub enum PolicyKind {
     Quest,
     /// This paper: milestone timestamps + pinned prefill: O(L)/O(L).
     Raas,
+    /// Reasoning Path Compression (arXiv:2505.13866): the trajectory is
+    /// compressed every R steps from a recent-window importance score;
+    /// between compressions the policy is O(1) per page per step.
+    Rpc,
+    /// LessIsMore (arXiv:2508.07101): one *unified* page set selected
+    /// across heads; retains ALL pages like Quest: O(L) time, O(N) memory.
+    LessIsMore,
 }
 
 impl PolicyKind {
-    /// Parse a CLI policy name (`dense`, `sink`, `h2o`, `quest`, `raas`).
+    /// Parse a CLI policy name (`dense`, `sink`, `h2o`, `quest`, `raas`,
+    /// `rpc`, `lessismore`).
     pub fn parse(s: &str) -> Result<PolicyKind> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "dense" | "full" => PolicyKind::Dense,
@@ -289,7 +297,9 @@ impl PolicyKind {
             "h2o" => PolicyKind::H2o,
             "quest" => PolicyKind::Quest,
             "raas" => PolicyKind::Raas,
-            other => bail!("unknown policy '{other}' (dense|sink|h2o|quest|raas)"),
+            "rpc" | "reasoning-path-compression" => PolicyKind::Rpc,
+            "lessismore" | "less-is-more" | "lim" => PolicyKind::LessIsMore,
+            other => bail!("unknown policy '{other}' (dense|sink|h2o|quest|raas|rpc|lessismore)"),
         })
     }
     /// Canonical lowercase name (matches [`PolicyKind::parse`]).
@@ -300,11 +310,22 @@ impl PolicyKind {
             PolicyKind::H2o => "h2o",
             PolicyKind::Quest => "quest",
             PolicyKind::Raas => "raas",
+            PolicyKind::Rpc => "rpc",
+            PolicyKind::LessIsMore => "lessismore",
         }
     }
-    /// Every policy, in the paper's Figure-2 column order.
-    pub fn all() -> [PolicyKind; 5] {
-        [PolicyKind::Dense, PolicyKind::Sink, PolicyKind::H2o, PolicyKind::Quest, PolicyKind::Raas]
+    /// Every policy: the paper's Figure-2 columns in order, then the
+    /// post-paper zoo (RPC, LessIsMore — ROADMAP item 4).
+    pub const fn all() -> [PolicyKind; 7] {
+        [
+            PolicyKind::Dense,
+            PolicyKind::Sink,
+            PolicyKind::H2o,
+            PolicyKind::Quest,
+            PolicyKind::Raas,
+            PolicyKind::Rpc,
+            PolicyKind::LessIsMore,
+        ]
     }
 }
 
@@ -372,6 +393,13 @@ pub struct EngineConfig {
     pub sink_tokens: usize,
     /// H2O recent-window fraction of the budget.
     pub h2o_recent_fraction: f64,
+    /// RPC compression cadence in decode steps (the paper's R): page
+    /// importance is re-frozen every `rpc_period` steps; between freezes
+    /// the eviction ranking is constant.
+    pub rpc_period: u64,
+    /// RPC selector window in decode steps: the e-folding length of the
+    /// recent-window attention mass RPC freezes at each compression.
+    pub rpc_window: f64,
     /// Pin prefill pages against eviction (RaaS idea #2; the ablation
     /// switch behind `raas ablate`).
     pub pin_prefill: bool,
@@ -403,6 +431,8 @@ impl Default for EngineConfig {
             stamp_fraction: 0.5,
             sink_tokens: 16,
             h2o_recent_fraction: 0.5,
+            rpc_period: 64,
+            rpc_window: 16.0,
             pin_prefill: true,
             max_decode: 4096,
             pool_pages: 16384,
@@ -424,7 +454,8 @@ impl EngineConfig {
     }
 
     /// CLI overrides: --backend --artifacts --policy --budget --alpha
-    /// --max-decode --pool-pages --kv-dtype --seed.
+    /// --rpc-period --rpc-window --max-decode --pool-pages --kv-dtype
+    /// --seed.
     ///
     /// An explicit `--backend` wins; a bare `--artifacts DIR` implies the
     /// xla backend so pre-backend invocations keep driving the real model
@@ -447,6 +478,8 @@ impl EngineConfig {
         c.alpha = args.f64_or("alpha", c.alpha);
         c.stamp_fraction = args.f64_or("stamp-fraction", c.stamp_fraction);
         c.sink_tokens = args.usize_or("sink-tokens", c.sink_tokens);
+        c.rpc_period = args.u64_or("rpc-period", c.rpc_period);
+        c.rpc_window = args.f64_or("rpc-window", c.rpc_window);
         if args.switch("no-pin-prefill") {
             c.pin_prefill = false;
         }
@@ -499,7 +532,14 @@ mod tests {
     fn policy_parse() {
         assert_eq!(PolicyKind::parse("RaaS").unwrap(), PolicyKind::Raas);
         assert_eq!(PolicyKind::parse("streamingllm").unwrap(), PolicyKind::Sink);
+        assert_eq!(PolicyKind::parse("rpc").unwrap(), PolicyKind::Rpc);
+        assert_eq!(PolicyKind::parse("LessIsMore").unwrap(), PolicyKind::LessIsMore);
+        assert_eq!(PolicyKind::parse("lim").unwrap(), PolicyKind::LessIsMore);
         assert!(PolicyKind::parse("bogus").is_err());
+        // the zoo helper and the parser must agree on every name
+        for kind in PolicyKind::all() {
+            assert_eq!(PolicyKind::parse(kind.name()).unwrap(), kind);
+        }
     }
 
     #[test]

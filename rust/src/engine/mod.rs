@@ -23,7 +23,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::config::{ArtifactMeta, BackendKind, EngineConfig, PolicyKind};
-use crate::kvcache::page::{page_probs, PageId, PageMeta, RepBounds};
+use crate::kvcache::page::{page_probs, reduce_head_scores_max, PageId, PageMeta, RepBounds};
 use crate::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
 use crate::kvcache::{prefix_hashes, KvPool, PageView, PageViewBuf, PoolExhausted, PrefixIndex,
                      SeqCache, SwapHandle};
@@ -152,6 +152,9 @@ pub struct Engine {
     evict_scratch: Vec<PageMeta>,
     // scratch buffers reused across steps (no allocation in the hot loop)
     scores: Vec<f32>,
+    /// Page-major per-head rep scores (`[n_pages * n_heads]`) — only
+    /// populated when the policy asks for unified cross-head selection.
+    head_scores: Vec<f32>,
     probs: Vec<f32>,
     sel_buf: Vec<usize>,
     k_buf: Vec<f32>,
@@ -218,6 +221,7 @@ impl Engine {
             cfg,
             meta,
             scores: Vec::new(),
+            head_scores: Vec::new(),
             probs: Vec::new(),
             sel_buf: Vec::new(),
             k_buf: Vec::new(),
@@ -648,8 +652,19 @@ impl Engine {
 
             let t0 = Instant::now();
             let lc = &seq.layers[layer];
-            lc.rep_scores(&qkv.q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
-                          &mut self.scores);
+            // Unified cross-head policies (LessIsMore) score head-major and
+            // select from the full profile; the classic path reduces inside
+            // `RepBounds::score`.  `reduce_head_scores_max` is bitwise that
+            // reduction, so probs/observe/logs are identical either way.
+            let unified = self.policy.unified_selection();
+            if unified {
+                lc.rep_scores_heads(&qkv.q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
+                                    &mut self.head_scores);
+                reduce_head_scores_max(&self.head_scores, spec.n_heads, &mut self.scores);
+            } else {
+                lc.rep_scores(&qkv.q, spec.n_heads, spec.n_kv_heads, spec.head_dim,
+                              &mut self.scores);
+            }
             page_probs(&self.scores, spec.head_dim, &mut self.probs);
             // Figure-3 capture: layer-0 page probabilities exactly as
             // computed this step, paired with the page table *before* any
@@ -666,8 +681,14 @@ impl Engine {
                         .collect(),
                 );
             }
-            self.policy.select_into(&lc.table, &self.scores, self.cfg.budget,
-                                    self.meta.page_size, &mut self.sel_buf);
+            if unified {
+                self.policy.select_unified_into(&lc.table, &self.head_scores, spec.n_heads,
+                                                self.cfg.budget, self.meta.page_size,
+                                                &mut self.sel_buf);
+            } else {
+                self.policy.select_into(&lc.table, &self.scores, self.cfg.budget,
+                                        self.meta.page_size, &mut self.sel_buf);
+            }
             t_policy += t0.elapsed().as_secs_f64();
 
             if paged {
@@ -858,7 +879,14 @@ impl Engine {
             // cannot be freed or reallocated inside this loop, so entries
             // never go stale within the layer.
             let share_scores = self.pool.any_shared();
+            let unified = self.policy.unified_selection();
             let mut score_cache: HashMap<(PageId, usize), f32> = HashMap::new();
+            // Unified policies share the whole head profile, not the
+            // reduced scalar: the cache stores an offset into a per-layer
+            // arena of `n_heads`-wide slices (same key, same lifetime
+            // argument as `score_cache` above).
+            let mut head_cache: HashMap<(PageId, usize), usize> = HashMap::new();
+            let mut head_arena: Vec<f32> = Vec::new();
             let mut qclass: Vec<usize> = Vec::with_capacity(qkvs.len());
             if share_scores {
                 for j in 0..qkvs.len() {
@@ -892,7 +920,40 @@ impl Engine {
                 }
                 let t0 = Instant::now();
                 let lc = &e.seq.layers[layer];
-                if share_scores {
+                if unified {
+                    // head-major scoring for unified cross-head selection;
+                    // the shared-page reuse copies whole head profiles out
+                    // of the arena instead of a single reduced f32
+                    self.head_scores.clear();
+                    if share_scores {
+                        for (p, rep) in lc.table.iter().zip(&lc.reps) {
+                            if self.pool.is_shared(p.pool_id) {
+                                let off = match head_cache.entry((p.pool_id, qclass[j])) {
+                                    Entry::Occupied(hit) => {
+                                        self.metrics.inc("decode.rep_score_shared");
+                                        *hit.get()
+                                    }
+                                    Entry::Vacant(slot) => {
+                                        let off = head_arena.len();
+                                        rep.score_heads_into(&qkvs[j].q, spec.n_heads,
+                                                             spec.n_kv_heads, spec.head_dim,
+                                                             &mut head_arena);
+                                        *slot.insert(off)
+                                    }
+                                };
+                                self.head_scores
+                                    .extend_from_slice(&head_arena[off..off + spec.n_heads]);
+                            } else {
+                                rep.score_heads_into(&qkvs[j].q, spec.n_heads, spec.n_kv_heads,
+                                                     spec.head_dim, &mut self.head_scores);
+                            }
+                        }
+                    } else {
+                        lc.rep_scores_heads(&qkvs[j].q, spec.n_heads, spec.n_kv_heads,
+                                            spec.head_dim, &mut self.head_scores);
+                    }
+                    reduce_head_scores_max(&self.head_scores, spec.n_heads, &mut self.scores);
+                } else if share_scores {
                     self.scores.clear();
                     for (p, rep) in lc.table.iter().zip(&lc.reps) {
                         let s = if self.pool.is_shared(p.pool_id) {
@@ -926,9 +987,15 @@ impl Engine {
                             .collect(),
                     );
                 }
-                self.policy.select_into(&lc.table, &self.scores, self.cfg.budget,
-                                        self.meta.page_size,
-                                        &mut self.batch_scratch[i].sel);
+                if unified {
+                    self.policy.select_unified_into(&lc.table, &self.head_scores, spec.n_heads,
+                                                    self.cfg.budget, self.meta.page_size,
+                                                    &mut self.batch_scratch[i].sel);
+                } else {
+                    self.policy.select_into(&lc.table, &self.scores, self.cfg.budget,
+                                            self.meta.page_size,
+                                            &mut self.batch_scratch[i].sel);
+                }
                 t_policy += t0.elapsed().as_secs_f64();
 
                 // the paged route defers to one batched zero-copy call

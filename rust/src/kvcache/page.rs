@@ -23,8 +23,13 @@ pub struct PageMeta {
     /// RaaS: last step at which this page's estimated attention score
     /// exceeded alpha (or placed in the top-r fraction).
     pub last_stamp: u64,
-    /// H2O: accumulated estimated attention mass.
+    /// Policy accumulator: H2O's lifetime attention mass, or RPC's frozen
+    /// importance snapshot (copied from `win_score` at each compression).
     pub acc_score: f64,
+    /// RPC: exponentially-decayed recent-window attention mass — the
+    /// running selector score `acc_score` is frozen from every
+    /// `rpc_period` steps.
+    pub win_score: f64,
 }
 
 /// Sentinel pool id for simulator-only pages that hold no real KV bytes.
@@ -33,7 +38,15 @@ pub const NO_POOL: PageId = u32::MAX;
 impl PageMeta {
     /// Fresh empty page starting at `start_pos`, stamped `now`.
     pub fn new(pool_id: PageId, start_pos: usize, pinned: bool, now: u64) -> Self {
-        PageMeta { pool_id, start_pos, len: 0, pinned, last_stamp: now, acc_score: 0.0 }
+        PageMeta {
+            pool_id,
+            start_pos,
+            len: 0,
+            pinned,
+            last_stamp: now,
+            acc_score: 0.0,
+            win_score: 0.0,
+        }
     }
     /// One past the absolute position of the last filled slot.
     pub fn end_pos(&self) -> usize {
@@ -175,6 +188,47 @@ impl RepBounds {
         }
         best
     }
+
+    /// Per-query-head Quest upper bounds, appended to `out` (`n_heads`
+    /// values).  Same arithmetic as [`RepBounds::score`] minus the final
+    /// max over heads — the unified-selection hook
+    /// ([`crate::kvcache::policy::SparsityPolicy::select_unified_into`])
+    /// consumes the full head profile instead of the per-page reduction.
+    pub fn score_heads_into(&self, q: &[f32], n_heads: usize, n_kv: usize, head_dim: usize,
+                            out: &mut Vec<f32>) {
+        let group = n_heads / n_kv;
+        for h in 0..n_heads {
+            let g = h / group;
+            let qh = &q[h * head_dim..(h + 1) * head_dim];
+            let kmin = &self.kmin[g * head_dim..(g + 1) * head_dim];
+            let kmax = &self.kmax[g * head_dim..(g + 1) * head_dim];
+            let mut s = 0.0f32;
+            for c in 0..head_dim {
+                s += (qh[c] * kmin[c]).max(qh[c] * kmax[c]);
+            }
+            out.push(s);
+        }
+    }
+}
+
+/// Collapse page-major per-head scores (`[n_pages * n_heads]`, from
+/// [`crate::kvcache::seq::LayerCache::rep_scores_heads`]) to the per-page
+/// max over heads — bitwise the reduction [`RepBounds::score`] bakes in,
+/// so the classic `page_probs`/`observe` feed is identical whichever
+/// scoring route produced it.
+pub fn reduce_head_scores_max(head_scores: &[f32], n_heads: usize, out: &mut Vec<f32>) {
+    out.clear();
+    let nh = n_heads.max(1);
+    debug_assert_eq!(head_scores.len() % nh, 0);
+    for page in head_scores.chunks_exact(nh) {
+        let mut best = f32::NEG_INFINITY;
+        for &s in page {
+            if s > best {
+                best = s;
+            }
+        }
+        out.push(best);
+    }
 }
 
 /// Softmax the per-page upper-bound scores into pseudo-probabilities —
@@ -237,6 +291,32 @@ mod tests {
         let q = [1.0f32, 0.0, /* head 1: */ 5.0, 5.0];
         let s = b.score(&q, 2, 1, 2);
         assert!((s - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn head_scores_reduce_to_classic_score() {
+        // 4 q heads over 2 kv heads: the max over the per-head profile must
+        // be bitwise the scalar `score` fold.
+        let mut b = RepBounds::empty(4);
+        b.update(&[0.3, -0.5, 1.0, 0.2]);
+        b.update(&[-0.1, 0.4, -0.2, 0.8]);
+        let q = [0.7f32, -0.3, 0.5, 1.1, -0.2, 0.9, 0.1, -0.6];
+        let mut heads = Vec::new();
+        b.score_heads_into(&q, 4, 2, 2, &mut heads);
+        assert_eq!(heads.len(), 4);
+        let mut reduced = Vec::new();
+        reduce_head_scores_max(&heads, 4, &mut reduced);
+        assert_eq!(reduced.len(), 1);
+        assert_eq!(reduced[0].to_bits(), b.score(&q, 4, 2, 2).to_bits());
+    }
+
+    #[test]
+    fn reduce_handles_multiple_pages() {
+        // page-major [2 pages * 3 heads]
+        let hs = [1.0f32, 5.0, 2.0, -1.0, -3.0, -2.0];
+        let mut out = vec![9.0];
+        reduce_head_scores_max(&hs, 3, &mut out);
+        assert_eq!(out, vec![5.0, -1.0]);
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! LessIsMore (arXiv:2508.07101): cross-head *unified* page selection.
+//!
+//! Per-head top-L selection (Quest) lets every head vote for a different
+//! page set: the union inflates the pages actually touched, and heads in
+//! the minority are starved of the pages the majority agrees matter.
+//! LessIsMore instead normalizes each head's scores into attention shares
+//! over pages, sums the shares *across heads*, and selects ONE unified
+//! page set every head attends — same budget, fewer distinct pages, and
+//! cross-head agreement on milestones is preserved.  A slice of the
+//! budget is always spent on the most recent pages (the paper's local
+//! window), which also guarantees the active page is selected.
+//!
+//! This is the policy the `select_unified_into` trait hook exists for:
+//! the engine feeds it the page-major per-head score profile
+//! (`LayerCache::rep_scores_heads`) instead of the max-reduced classic
+//! scores.  Like Quest it is selection-sparse: everything stays resident
+//! (O(N) memory), sparsity is in which pages the kernel touches (O(L)
+//! time).
+
+use std::cell::RefCell;
+
+use super::{PageMeta, SparsityPolicy};
+use crate::config::PolicyKind;
+
+/// LessIsMore: head-aggregated unified top-L page selection over a fully
+/// resident cache.
+#[derive(Default)]
+pub struct LessIsMorePolicy {
+    /// Reusable per-page aggregated-share scratch (`select_*` takes
+    /// `&self`, hence the cell); steady-state selection allocates nothing.
+    /// `RefCell`, not a lock: policies live on one replica thread.
+    agg_scratch: RefCell<Vec<f32>>,
+}
+
+/// Sum each head's softmax-normalized attention share into one unified
+/// per-page importance.  Normalizing per head first means a loud head
+/// (large score scale) cannot drown a quiet one — each head contributes
+/// exactly one unit of share mass.  A head whose profile is non-finite
+/// (NaN/±inf anywhere that poisons its partition sum) abstains rather
+/// than panicking or dominating; if every head abstains the aggregate is
+/// all-zero and the deterministic index tie-break takes over.
+fn aggregate_shares(head_scores: &[f32], n_heads: usize, agg: &mut Vec<f32>) {
+    let n_pages = head_scores.len() / n_heads;
+    agg.clear();
+    agg.resize(n_pages, 0.0);
+    for h in 0..n_heads {
+        let mut m = f32::NEG_INFINITY;
+        for page in head_scores.chunks_exact(n_heads) {
+            let s = page[h];
+            if s > m {
+                m = s;
+            }
+        }
+        let mut denom = 0.0f32;
+        for page in head_scores.chunks_exact(n_heads) {
+            denom += (page[h] - m).exp();
+        }
+        if denom > 0.0 && denom.is_finite() {
+            for (a, page) in agg.iter_mut().zip(head_scores.chunks_exact(n_heads)) {
+                *a += (page[h] - m).exp() / denom;
+            }
+        }
+    }
+}
+
+impl SparsityPolicy for LessIsMorePolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::LessIsMore
+    }
+
+    fn observe(&self, _table: &mut [PageMeta], _probs: &[f32], _now: u64) {}
+
+    fn unified_selection(&self) -> bool {
+        true
+    }
+
+    fn select_unified_into(&self, table: &[PageMeta], head_scores: &[f32], n_heads: usize,
+                           budget_tokens: usize, page_size: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let n = table.len();
+        if n == 0 {
+            return;
+        }
+        let nh = n_heads.max(1);
+        debug_assert_eq!(head_scores.len(), n * nh);
+        let budget_pages = (budget_tokens / page_size.max(1)).max(1);
+        if n <= budget_pages {
+            out.extend(0..n);
+            return;
+        }
+        // Unified recent window: 1/8 of the page budget (at least the
+        // active page) is always spent on the most recent pages, shared by
+        // every head.
+        let recent = (budget_pages / 8).max(1);
+        let cut = n - recent;
+        let k = budget_pages - recent;
+        let mut agg = self.agg_scratch.borrow_mut();
+        aggregate_shares(head_scores, nh, &mut agg);
+        // Top-k of the non-recent prefix by aggregated share.  Partial
+        // selection + index tie-break, mirroring Quest: `total_cmp` keeps
+        // degenerate scores deterministic and panic-free, ties resolve to
+        // the earlier page.
+        out.extend(0..cut);
+        if k < out.len() {
+            out.select_nth_unstable_by(k, |&a, &b| agg[b].total_cmp(&agg[a]).then(a.cmp(&b)));
+            out.truncate(k);
+        }
+        out.extend(cut..n);
+        out.sort_unstable();
+    }
+
+    fn select_into(&self, table: &[PageMeta], scores: &[f32], budget_tokens: usize,
+                   page_size: usize, out: &mut Vec<usize>) {
+        // Classic entry point (trace simulator, conformance suite): the
+        // reduced per-page scores are a one-head profile, under which
+        // unified selection degenerates to softmax-monotone top-L with the
+        // same recent window.
+        self.select_unified_into(table, scores, 1, budget_tokens, page_size, out);
+    }
+
+    fn evict_candidate(&self, _table: &[PageMeta]) -> Option<usize> {
+        None // retains everything, like Quest
+    }
+
+    fn bounds_memory(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mk_table;
+    use super::*;
+
+    #[test]
+    fn unified_set_covers_disagreeing_heads() {
+        // head 0 cares about page 0, head 1 about page 2; the unified set
+        // must include BOTH (plus the recent window) — per-head top-1
+        // would have starved one of them.
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 5]);
+        #[rustfmt::skip]
+        let hs = [
+            5.0f32, 0.0, // page 0
+            0.0, 0.0,    // page 1
+            0.0, 5.0,    // page 2
+            0.0, 0.0,    // page 3
+            0.0, 0.0,    // page 4 (active)
+        ];
+        let mut sel = Vec::new();
+        p.select_unified_into(&t, &hs, 2, 48, 16, &mut sel);
+        assert_eq!(sel, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn loud_head_cannot_drown_quiet_head() {
+        // Head 0's scores are 100x head 1's scale; per-head share
+        // normalization makes both contribute one unit of mass, so head
+        // 1's favorite page still wins a slot over head 0's runner-up.
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 5]);
+        #[rustfmt::skip]
+        let hs = [
+            300.0f32, 0.0, // page 0: head 0's favorite
+            250.0, 0.0,    // page 1: head 0's runner-up
+            0.0, 3.0,      // page 2: head 1's favorite
+            0.0, 0.0,      // page 3
+            0.0, 0.0,      // page 4 (active)
+        ];
+        let mut sel = Vec::new();
+        p.select_unified_into(&t, &hs, 2, 48, 16, &mut sel);
+        assert_eq!(sel, vec![0, 2, 4], "raw-magnitude ranking would pick pages 0,1");
+    }
+
+    #[test]
+    fn classic_entry_point_is_single_head_top_l() {
+        // Through `select_into`, softmax over one head is score-monotone:
+        // same shape as Quest's test, with the recent window at the end.
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 6]);
+        let sel = p.select(&t, &[0.1, 0.9, 0.2, 0.8, 0.05, 0.0], 48, 16);
+        assert_eq!(sel, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn tied_scores_select_earlier_pages() {
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 6]);
+        let sel = p.select(&t, &[0.5; 6], 48, 16);
+        assert_eq!(sel, vec![0, 1, 5]);
+        // one-page budget degenerates to the active page alone
+        let sel = p.select(&t, &[0.5; 6], 16, 16);
+        assert_eq!(sel, vec![5]);
+    }
+
+    #[test]
+    fn recent_window_scales_with_budget() {
+        // 16-page budget -> 2 recent pages; the two most recent pages are
+        // always in, even with zero aggregated share.
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 20]);
+        let mut scores = vec![1.0f32; 20];
+        scores[18] = -50.0;
+        scores[19] = -50.0;
+        let sel = p.select(&t, &scores, 256, 16);
+        assert_eq!(sel.len(), 16);
+        assert!(sel.contains(&18) && sel.contains(&19), "recent window always selected");
+        assert_eq!(&sel[..14], &(0..14).collect::<Vec<_>>()[..], "ties pick earliest prefix");
+    }
+
+    #[test]
+    fn small_table_selected_fully() {
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false), (8, false)]);
+        let mut sel = Vec::new();
+        p.select_unified_into(&t, &[0.0; 4], 2, 1024, 16, &mut sel);
+        assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn non_finite_heads_abstain_deterministically() {
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 5]);
+        #[rustfmt::skip]
+        let hs = [
+            f32::NAN, 0.0,          // NaN poisons head 0 everywhere
+            f32::NAN, 9.0,          // head 1's favorite: page 1
+            f32::NAN, 0.0,
+            f32::NAN, f32::NEG_INFINITY,
+            f32::NAN, 0.0,
+        ];
+        let mut sel = Vec::new();
+        p.select_unified_into(&t, &hs, 2, 48, 16, &mut sel);
+        assert_eq!(sel, vec![0, 1, 4], "head 0 abstains; head 1 still ranks");
+        // every head poisoned: all-zero aggregate, earliest-index ties
+        let all_nan = [f32::NAN; 10];
+        p.select_unified_into(&t, &all_nan, 2, 48, 16, &mut sel);
+        assert_eq!(sel, vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn scratch_reuse_is_pure() {
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 8]);
+        let scores = [0.3f32, 0.9, 0.1, 0.7, 0.2, 0.8, 0.4, 0.0];
+        let mut a = vec![99usize; 5];
+        let mut b = Vec::new();
+        p.select_into(&t, &scores, 64, 16, &mut a);
+        p.select_into(&t, &scores, 64, 16, &mut b);
+        assert_eq!(a, b, "dirty out + warm scratch must not change the selection");
+    }
+
+    #[test]
+    fn never_evicts() {
+        let p = LessIsMorePolicy::default();
+        let t = mk_table(&[(16, false); 8]);
+        assert_eq!(p.evict_candidate(&t), None);
+        assert!(!p.bounds_memory());
+        assert!(p.unified_selection());
+    }
+}

@@ -1,42 +1,51 @@
-//! The five sparsity algorithms of the paper's evaluation (Figure 2).
+//! The sparsity-policy zoo: the paper's five algorithms (Figure 2) plus
+//! the post-paper follow-ons, RPC (arXiv:2505.13866) and LessIsMore
+//! (arXiv:2508.07101) — seven in all (`PolicyKind::all`).
 //!
 //! A policy sees, per decode step and per layer, the resident page table and
 //! the per-page estimated attention probabilities (softmaxed Quest-style
 //! representative scores — `page::page_probs`).  It decides
 //!
-//!  * which resident pages the Pallas kernel attends this step (`select`),
+//!  * which resident pages the Pallas kernel attends this step (`select`,
+//!    or `select_unified_into` for cross-head unified policies),
 //!  * how per-page statistics evolve (`observe` — RaaS timestamps, H2O
-//!    accumulators), and
+//!    accumulators, RPC recent windows), and
 //!  * which page to evict when the resident set exceeds the budget
 //!    (`evict_candidate`).
 //!
 //! The same implementations serve both the real engine and the trace
-//! simulator, so the accuracy grids (Figures 6/8/9) exercise exactly the
-//! code that runs on the serving path.
+//! simulator, so the accuracy grids (Figures 6/8/9, the accuracy-cliff
+//! bench) exercise exactly the code that runs on the serving path.  The
+//! cross-policy trait contract is pinned by
+//! `rust/tests/policy_conformance.rs`.
 
 mod dense;
 mod h2o;
+mod lessismore;
 mod quest;
 mod raas;
+mod rpc;
 mod sink;
 
 pub use dense::DensePolicy;
 pub use h2o::H2oPolicy;
+pub use lessismore::LessIsMorePolicy;
 pub use quest::QuestPolicy;
 pub use raas::RaasPolicy;
+pub use rpc::RpcPolicy;
 pub use sink::SinkPolicy;
 
 use super::page::PageMeta;
 use crate::config::{EngineConfig, PolicyKind};
 
-/// A KV-cache sparsity algorithm (one of the paper's five).
+/// A KV-cache sparsity algorithm (one of the zoo's seven).
 ///
 /// Policies are driven per decode step, per layer, with the resident page
 /// table and per-page estimated attention probabilities; the same
 /// implementations serve the engine and the trace simulator, so the
 /// accuracy grids exercise exactly the serving-path code.
 pub trait SparsityPolicy: Send {
-    /// Which of the five algorithms this is.
+    /// Which of the zoo's algorithms this is.
     fn kind(&self) -> PolicyKind;
 
     /// Update per-page statistics after this step's estimated probabilities
@@ -64,9 +73,39 @@ pub trait SparsityPolicy: Send {
         out
     }
 
+    /// Whether this policy selects one *unified* page set from the full
+    /// per-head score profile (LessIsMore) instead of the per-page reduced
+    /// scores.  The engine only pays for head-major scoring
+    /// (`LayerCache::rep_scores_heads`) when this returns true; every
+    /// per-head-oblivious policy keeps the classic reduced-score path
+    /// bit-for-bit.
+    fn unified_selection(&self) -> bool {
+        false
+    }
+
+    /// Unified cross-head selection: like [`SparsityPolicy::select_into`]
+    /// but over page-major per-head scores (`[table.len() * n_heads]`,
+    /// from `LayerCache::rep_scores_heads`).  The default reduces each
+    /// page's head profile to its max — exactly the aggregation
+    /// `RepBounds::score` bakes into the classic scores — and defers to
+    /// `select_into`, so per-head-oblivious policies behave identically
+    /// through either entry point.  (The default allocates; the engine
+    /// only routes here when [`SparsityPolicy::unified_selection`] is
+    /// true, and unified policies override with scratch-backed impls.)
+    fn select_unified_into(&self, table: &[PageMeta], head_scores: &[f32], n_heads: usize,
+                           budget_tokens: usize, page_size: usize, out: &mut Vec<usize>) {
+        let nh = n_heads.max(1);
+        debug_assert_eq!(head_scores.len(), table.len() * nh);
+        let mut reduced = Vec::new();
+        super::page::reduce_head_scores_max(head_scores, nh, &mut reduced);
+        self.select_into(table, &reduced, budget_tokens, page_size, out);
+    }
+
     /// Page to evict while the resident set exceeds the budget.  `None`
-    /// means nothing is evictable (Dense/Quest always; RaaS when only
-    /// pinned prefill pages remain — the paper retains prefill regardless).
+    /// means nothing is evictable (Dense/Quest/LessIsMore always; RaaS
+    /// when only pinned prefill pages remain — the paper retains prefill
+    /// regardless; RPC when pins cover everything older than its
+    /// uncompressed recent window).
     ///
     /// Shared pages (refcount > 1 in the pool: forked sequences, prefix
     /// cache hits) are handled above the policy: the engine feeds this
@@ -91,6 +130,8 @@ pub fn make_policy(cfg: &EngineConfig) -> Box<dyn SparsityPolicy> {
         }),
         PolicyKind::Quest => Box::new(QuestPolicy),
         PolicyKind::Raas => Box::new(RaasPolicy::new(cfg.alpha, cfg.stamp_fraction)),
+        PolicyKind::Rpc => Box::new(RpcPolicy { period: cfg.rpc_period, window: cfg.rpc_window }),
+        PolicyKind::LessIsMore => Box::new(LessIsMorePolicy::default()),
     }
 }
 
@@ -130,5 +171,36 @@ mod tests {
     fn resident_token_count() {
         let t = mk_table(&[(16, true), (16, false), (5, false)]);
         assert_eq!(resident_tokens(&t), 37);
+    }
+
+    #[test]
+    fn unified_default_matches_classic_reduction() {
+        // Per-head-oblivious policies select identically through either
+        // entry point: the default hook max-reduces the head profile into
+        // exactly the classic scores, then delegates.
+        let t = mk_table(&[(16, false); 6]);
+        #[rustfmt::skip]
+        let hs = [
+            0.9f32, 0.1, // page 0
+            0.2, 0.8,    // page 1
+            0.5, 0.5,    // page 2
+            0.0, 0.3,    // page 3
+            0.7, 0.6,    // page 4
+            0.1, 0.0,    // page 5 (active)
+        ];
+        let mut reduced = Vec::new();
+        crate::kvcache::page::reduce_head_scores_max(&hs, 2, &mut reduced);
+        for kind in PolicyKind::all() {
+            let cfg = EngineConfig { policy: kind, ..Default::default() };
+            let p = make_policy(&cfg);
+            if p.unified_selection() {
+                continue; // unified policies override the hook outright
+            }
+            let mut via_hook = Vec::new();
+            let mut classic = Vec::new();
+            p.select_unified_into(&t, &hs, 2, 48, 16, &mut via_hook);
+            p.select_into(&t, &reduced, 48, 16, &mut classic);
+            assert_eq!(via_hook, classic, "{kind:?}");
+        }
     }
 }

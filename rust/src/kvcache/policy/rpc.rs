@@ -1,0 +1,195 @@
+//! RPC — Reasoning Path Compression (arXiv:2505.13866): periodically
+//! compress the generated trajectory, keeping the pages a recent window of
+//! queries found important.
+//!
+//! Two pieces, mirroring the paper's design:
+//!
+//! 1. **Recent-window selector.**  Each page carries an exponentially
+//!    decayed recent-attention mass (`PageMeta::win_score`, e-folding
+//!    length `window` steps) — the paper's importance score computed from
+//!    a sliding window of recent queries, maintained in O(1) per page per
+//!    step (no per-query history is stored).
+//!
+//! 2. **Periodic compression.**  Every `period` steps the running window
+//!    is *frozen* into the page's importance snapshot
+//!    (`PageMeta::acc_score`).  Eviction always ranks by the snapshot, so
+//!    the retained set changes only at compression boundaries — unlike
+//!    H2O's per-step lifetime accumulator or RaaS's per-step stamps.  The
+//!    trailing ~one-period of trajectory is exempt (the paper's
+//!    uncompressed recent segment), as is the prompt (pinned pages are
+//!    skipped: RPC compresses only the *generated* path and keeps the
+//!    input intact).
+//!
+//! Like RaaS/H2O it is eviction-sparse: O(L) attention time because the
+//! resident set is budget-bounded, O(L) memory.
+
+use super::{PageMeta, SparsityPolicy};
+use crate::config::PolicyKind;
+
+/// RPC: periodic trajectory compression from a recent-window selector.
+pub struct RpcPolicy {
+    /// Compression cadence in decode steps (the paper's R).
+    pub period: u64,
+    /// Selector window in decode steps: the e-folding length of the
+    /// recent-window attention mass.
+    pub window: f64,
+}
+
+impl RpcPolicy {
+    /// Pages of trailing trajectory exempt from compression — the
+    /// uncompressed recent segment, ~one period of decode (page size is
+    /// inferred from the table like H2O's recent window, so the policy
+    /// needs no engine plumbing).
+    fn protected_pages(&self, table: &[PageMeta]) -> usize {
+        let page_size = table.iter().map(|p| p.len).max().unwrap_or(16).max(1);
+        (self.period as usize / page_size + 1).min(table.len().saturating_sub(1))
+    }
+}
+
+impl SparsityPolicy for RpcPolicy {
+    fn kind(&self) -> PolicyKind {
+        PolicyKind::Rpc
+    }
+
+    fn observe(&self, table: &mut [PageMeta], probs: &[f32], now: u64) {
+        if table.is_empty() {
+            return;
+        }
+        // O(1) per page: decay the recent window, fold in this step's
+        // estimated mass.  mu = 1 - 1/W gives an e-folding length of ~W
+        // steps without storing any query history.
+        let mu = 1.0 - 1.0 / self.window.max(1.0);
+        for (page, &p) in table.iter_mut().zip(probs) {
+            page.win_score = page.win_score * mu + p as f64;
+        }
+        // Compression boundary: freeze the window into the snapshot the
+        // eviction ranking reads.  A NaN window freezes as NaN, which
+        // `total_cmp` orders above +inf — never the minimum, so a
+        // degenerate score errs towards retention (H2O's convention).
+        if now % self.period.max(1) == 0 {
+            for page in table.iter_mut() {
+                page.acc_score = page.win_score;
+            }
+        }
+    }
+
+    fn select_into(&self, table: &[PageMeta], _scores: &[f32], _budget_tokens: usize,
+                   _page_size: usize, out: &mut Vec<usize>) {
+        // RPC attends the full (budget-bounded) resident set; sparsity
+        // comes from compression-driven eviction, like RaaS.
+        out.clear();
+        out.extend(0..table.len());
+    }
+
+    fn evict_candidate(&self, table: &[PageMeta]) -> Option<usize> {
+        if table.len() <= 1 {
+            return None;
+        }
+        let protected = self.protected_pages(table);
+        table[..table.len() - protected]
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| !p.pinned)
+            .min_by(|(_, a), (_, b)| {
+                a.acc_score
+                    .total_cmp(&b.acc_score)
+                    .then(a.start_pos.cmp(&b.start_pos))
+            })
+            .map(|(i, _)| i)
+    }
+
+    fn bounds_memory(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::mk_table;
+    use super::*;
+
+    fn policy() -> RpcPolicy {
+        RpcPolicy { period: 4, window: 2.0 }
+    }
+
+    #[test]
+    fn window_decays_and_accumulates() {
+        let p = policy();
+        let mut t = mk_table(&[(16, false), (16, false)]);
+        p.observe(&mut t, &[0.8, 0.2], 1);
+        assert!((t[0].win_score - 0.8).abs() < 1e-9);
+        p.observe(&mut t, &[0.0, 0.2], 2);
+        // mu = 1 - 1/2 = 0.5: 0.8 * 0.5 + 0.0
+        assert!((t[0].win_score - 0.4).abs() < 1e-9);
+        assert!((t[1].win_score - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_freezes_only_at_period_boundaries() {
+        let p = policy();
+        let mut t = mk_table(&[(16, false), (16, false)]);
+        for now in 1..=3 {
+            p.observe(&mut t, &[0.9, 0.1], now);
+            assert_eq!(t[0].acc_score, 0.0, "no compression before the boundary");
+        }
+        p.observe(&mut t, &[0.9, 0.1], 4);
+        assert!(t[0].acc_score > 1.0, "boundary freezes the accumulated window");
+    }
+
+    #[test]
+    fn ranking_is_frozen_between_compressions() {
+        let p = policy();
+        // period 4 / page size 16 -> 1 protected trailing page; 0..5 evictable
+        let mut t = mk_table(&[(16, false); 6]);
+        // boundary at step 4: page 0 cold, pages 1..5 warm
+        for now in 1..=4 {
+            p.observe(&mut t, &[0.0, 0.3, 0.3, 0.3, 0.3, 0.3], now);
+        }
+        assert_eq!(p.evict_candidate(&t), Some(0));
+        // page 0 heats up AFTER the boundary; the frozen snapshot still
+        // ranks it coldest until the next compression
+        for now in 5..=7 {
+            p.observe(&mut t, &[0.9, 0.0, 0.3, 0.3, 0.3, 0.3], now);
+        }
+        assert_eq!(p.evict_candidate(&t), Some(0), "ranking constant mid-period");
+        p.observe(&mut t, &[0.9, 0.0, 0.3, 0.3, 0.3, 0.3], 8);
+        assert_eq!(p.evict_candidate(&t), Some(1), "next boundary re-ranks");
+    }
+
+    #[test]
+    fn recent_tail_is_protected() {
+        // period 20 / page size 16 -> 20/16 + 1 = 2 protected trailing pages
+        let p = RpcPolicy { period: 20, window: 2.0 };
+        let t = mk_table(&[(16, false); 5]);
+        // all snapshots are 0 (tied); the victim must still come from the
+        // compressible prefix, tie-breaking towards the older position
+        assert_eq!(p.evict_candidate(&t), Some(0));
+        let mut t = mk_table(&[(16, false); 5]);
+        t[0].acc_score = 1.0;
+        t[1].acc_score = 1.0;
+        t[2].acc_score = 1.0;
+        // pages 3,4 (the recent segment) are never candidates even though
+        // their snapshots are colder than the compressible prefix
+        assert_eq!(p.evict_candidate(&t), Some(0), "cold tail exempt from compression");
+    }
+
+    #[test]
+    fn pinned_prompt_is_never_compressed() {
+        let p = policy();
+        let mut t = mk_table(&[(16, true), (16, true), (16, false), (16, false), (16, false)]);
+        t[2].acc_score = 0.5;
+        t[3].acc_score = 0.9;
+        assert_eq!(p.evict_candidate(&t), Some(2), "pins skipped even when coldest");
+        let t = mk_table(&[(16, true), (16, true), (16, false)]);
+        // protected tail (1 page) + pins cover everything -> unevictable
+        assert_eq!(p.evict_candidate(&t), None);
+    }
+
+    #[test]
+    fn bounds_memory_and_full_selection() {
+        let p = policy();
+        let t = mk_table(&[(16, false); 3]);
+        assert!(p.bounds_memory());
+        assert_eq!(p.select(&t, &[0.0; 3], 16, 16), vec![0, 1, 2]);
+    }
+}

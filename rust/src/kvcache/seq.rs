@@ -35,6 +35,19 @@ impl LayerCache {
         out.extend(self.reps.iter().map(|r| r.score(q, n_heads, n_kv, head_dim)));
     }
 
+    /// Page-major per-head upper-bound scores for every resident page
+    /// (`[table.len() * n_heads]`) — the unified-selection feed
+    /// ([`super::policy::SparsityPolicy::select_unified_into`]).  Reducing
+    /// with [`super::page::reduce_head_scores_max`] recovers
+    /// [`LayerCache::rep_scores`] bitwise.
+    pub fn rep_scores_heads(&self, q: &[f32], n_heads: usize, n_kv: usize, head_dim: usize,
+                            out: &mut Vec<f32>) {
+        out.clear();
+        for r in &self.reps {
+            r.score_heads_into(q, n_heads, n_kv, head_dim, out);
+        }
+    }
+
     /// Softmaxed pseudo-probabilities (what RaaS thresholds against alpha).
     pub fn rep_probs(&self, scores: &[f32], head_dim: usize, out: &mut Vec<f32>) {
         page_probs(scores, head_dim, out);
@@ -804,5 +817,23 @@ mod tests {
         sc.layers[0].rep_scores(&[2.0, 0.0, 0.0], 1, 1, 3, &mut scores);
         assert_eq!(scores.len(), 2);
         assert!(scores[0] >= 2.0 - 1e-6, "page 0 contains the aligned key");
+    }
+
+    #[test]
+    fn head_scores_reduce_to_rep_scores() {
+        let (mut sc, mut pool) = mk();
+        for pos in 0..7 {
+            let k = [pos as f32 * 0.1, 1.0 - pos as f32 * 0.05, 0.3];
+            sc.append(0, &mut pool, pos, &k, &[0.0; 3], false, 0).unwrap();
+        }
+        let q = [0.4f32, -0.7, 0.9];
+        let (mut heads, mut reduced, mut classic) = (Vec::new(), Vec::new(), Vec::new());
+        sc.layers[0].rep_scores_heads(&q, 1, 1, 3, &mut heads);
+        assert_eq!(heads.len(), sc.layers[0].table.len());
+        crate::kvcache::page::reduce_head_scores_max(&heads, 1, &mut reduced);
+        sc.layers[0].rep_scores(&q, 1, 1, 3, &mut classic);
+        let a: Vec<u32> = reduced.iter().map(|s| s.to_bits()).collect();
+        let b: Vec<u32> = classic.iter().map(|s| s.to_bits()).collect();
+        assert_eq!(a, b, "head-major reduction must be bitwise the classic fold");
     }
 }

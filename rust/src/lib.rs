@@ -5,10 +5,11 @@
 //! Findings):
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: request router,
-//!   continuous batcher, paged KV-cache manager and the five sparsity
-//!   policies (Dense, StreamingLLM/Sink, H2O, Quest, **RaaS**), plus the
-//!   trace-driven evaluation substrate that regenerates every figure of the
-//!   paper's evaluation section.
+//!   continuous batcher, paged KV-cache manager and the seven-policy
+//!   sparsity zoo (Dense, StreamingLLM/Sink, H2O, Quest, **RaaS**, plus the
+//!   post-paper RPC and LessIsMore follow-ons), and the trace-driven
+//!   evaluation substrate that regenerates every figure of the paper's
+//!   evaluation section.
 //! * **Layer 2** — a small GQA transformer authored in JAX (`python/compile`),
 //!   AOT-lowered to HLO-text executables with the weights baked in.
 //! * **Layer 1** — Pallas paged sparse-attention kernel, lowered inside the

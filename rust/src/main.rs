@@ -86,7 +86,7 @@ fn print_help() {
            fig1..fig9  regenerate the paper's figures (writes results/*.csv)\n\
          \n\
          common flags: --backend sim|xla  --artifacts DIR\n\
-           --policy dense|sink|h2o|quest|raas\n\
+           --policy dense|sink|h2o|quest|raas|rpc|lessismore\n\
            --budget N  --alpha A  --seed S  --out results/\n\
            --kv-dtype f32|fp8|int8 (KV-slab storage; f32 is bit-exact)\n\
          \n\
@@ -155,7 +155,10 @@ fn run_one(args: &Args) -> Result<()> {
 fn sweep(args: &Args) -> Result<()> {
     let n = args.usize_or("problems", 30);
     let budgets = args.usize_list_or("budgets", &[64, 128, 256]);
-    let policies = args.str_list_or("policies", &["dense", "sink", "h2o", "quest", "raas"]);
+    let policies = args.str_list_or(
+        "policies",
+        &["dense", "sink", "h2o", "quest", "raas", "rpc", "lessismore"],
+    );
     let out_dir = figures::common::results_dir(args.str_opt("out"))?;
     // parse once: per-cell configs are clones with policy/budget overridden
     let base_cfg = EngineConfig::from_args(args)?;

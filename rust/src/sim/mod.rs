@@ -9,9 +9,20 @@
 //! `kvcache::policy` against it, so the grids exercise exactly the code
 //! that runs on the serving path.  The in-repo-trained tiny model validates
 //! the same orderings end-to-end (`examples/budget_sweep.rs`).
+//!
+//! The Lil accuracy-cliff harness (`gen_lil_trace`/`run_lil_trials`)
+//! extends the simulator to 8k–32k decodes with pre-generated traces
+//! shared across policies, feeding `benches/accuracy_cliff.rs` and
+//! `tests/accuracy_cliff.rs`.
 
 pub mod profiles;
 pub mod reasoning;
 
-pub use profiles::{DatasetProfile, ModelProfile, DATASETS, MODELS};
-pub use reasoning::{run_trial, AggregateOutcome, SimParams, TrialOutcome};
+pub use profiles::{
+    lil_scenario_by_name, DatasetProfile, LilScenario, ModelProfile, DATASETS, LIL_DECODE_LENS,
+    LIL_SCENARIOS, MODELS,
+};
+pub use reasoning::{
+    gen_lil_trace, run_lil_trial, run_lil_trials, run_trial, AggregateOutcome, LilAggregate,
+    LilOutcome, LilStep, LilTrace, SimParams, TrialOutcome,
+};

@@ -136,6 +136,97 @@ pub fn dataset_by_name(name: &str) -> Option<DatasetProfile> {
     DATASETS.iter().find(|d| d.name == name).copied()
 }
 
+/// A Lil (arXiv:2601.03043) very-long-decode scenario: the milestone
+/// cadence and distractor pressure of an 8k–32k reasoning trace.
+///
+/// Two shapes matter for where a policy's accuracy cliff sits:
+///
+/// * **milestone-dense** (`era_steps == 1`): almost every step consumes a
+///   recently emitted milestone at a short lookback — retention pressure
+///   is shallow but constant.
+/// * **milestone-sparse** (`era_steps > 1`): the chain anchors on one
+///   milestone per era and re-reads it every `consume_every` steps until
+///   the era ends — a few pages must survive deep into the decode while
+///   thousands of distractor tokens churn past.
+#[derive(Debug, Clone, Copy)]
+pub struct LilScenario {
+    /// Scenario name (`milestone-dense`, `milestone-sparse`).
+    pub name: &'static str,
+    /// A consuming step re-reads its operand every this many steps.
+    pub consume_every: usize,
+    /// Steps per era (1 = fresh short-lookback milestone per step).
+    pub era_steps: usize,
+    /// Max lookback (in steps) of milestone-dense consumption.
+    pub lookback: usize,
+    /// Prompt length in tokens (pinned; holds the phoenix operands).
+    pub prompt_tokens: usize,
+    /// Every this many steps, a step re-reads its phoenix operand.
+    pub phoenix_every: usize,
+    /// Per-token probability that a resident page flares (spurious
+    /// attention spike).  Flare pressure scales with the resident-set
+    /// size — the long-decode failure mode of selection over O(N) caches.
+    pub flare_p: f64,
+    /// Attention mass a flare adds to its page.
+    pub flare_hot: f64,
+    /// Dense-reference accuracy ceiling of the scenario.
+    pub base_acc: f64,
+    /// Probability a milestone miss still recovers the right answer.
+    pub milestone_survive_p: f64,
+    /// Probability a phoenix miss still recovers the right answer.
+    pub phoenix_survive_p: f64,
+    /// RaaS alpha used by the accuracy-cliff harness: tuned above the
+    /// scenario's background mass AND its faded waterfall residuals (the
+    /// default 1e-4 sits below `noise/n` at long decode, which would stamp
+    /// every page every step; an alpha below the residual tail keeps cold
+    /// pages stamp-fresh for ~50 tokens, blurring the recency signal the
+    /// eviction ranking needs once flares churn the rest of the cache).
+    pub raas_alpha: f64,
+}
+
+/// Decode-length grid of the accuracy-cliff bench (tokens).
+pub const LIL_DECODE_LENS: [usize; 3] = [8192, 16384, 32768];
+
+/// The two Lil trace shapes (see [`LilScenario`]).
+pub const LIL_SCENARIOS: [LilScenario; 2] = [
+    LilScenario {
+        name: "milestone-dense",
+        consume_every: 1,
+        era_steps: 1,
+        lookback: 4,
+        prompt_tokens: 64,
+        phoenix_every: 16,
+        flare_p: 0.02,
+        flare_hot: 0.20,
+        base_acc: 0.82,
+        milestone_survive_p: 0.60,
+        phoenix_survive_p: 0.80,
+        raas_alpha: 5e-3,
+    },
+    LilScenario {
+        // The era anchor is re-read every step until the era ends: its
+        // attention (and thus a stamp-refresh) recurs every ~17 tokens,
+        // while a cold page goes ~flare_p^-1 tokens between spurious
+        // flares — the recency gap RaaS's min-stamp eviction rides.
+        name: "milestone-sparse",
+        consume_every: 1,
+        era_steps: 48,
+        lookback: 48,
+        prompt_tokens: 64,
+        phoenix_every: 16,
+        flare_p: 0.05,
+        flare_hot: 0.20,
+        base_acc: 0.82,
+        milestone_survive_p: 0.60,
+        phoenix_survive_p: 0.80,
+        raas_alpha: 0.06,
+    },
+];
+
+/// Look up a Lil scenario by its exact name.
+pub fn lil_scenario_by_name(name: &str) -> Option<LilScenario> {
+    LIL_SCENARIOS.iter().find(|s| s.name == name).copied()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +253,21 @@ mod tests {
             assert!(m.decay > 0.0 && m.decay < 1.0);
             assert!(m.est_noise >= 0.0);
         }
+    }
+
+    #[test]
+    fn lil_scenarios_sane() {
+        assert_eq!(lil_scenario_by_name("milestone-sparse").unwrap().era_steps, 48);
+        assert!(lil_scenario_by_name("milestone-cheap").is_none());
+        for sc in LIL_SCENARIOS {
+            assert!(sc.consume_every >= 1 && sc.era_steps >= 1);
+            assert!(sc.flare_p >= 0.0 && sc.flare_p < 0.5);
+            assert!(sc.base_acc > 0.0 && sc.base_acc < 1.0);
+            assert!(sc.raas_alpha > 0.0);
+            assert_eq!(sc.prompt_tokens % 16, 0, "prompt fills whole pages");
+        }
+        // the grid is sorted and strictly long-decode
+        assert!(LIL_DECODE_LENS.windows(2).all(|w| w[0] < w[1]));
+        assert!(LIL_DECODE_LENS[0] >= 8192);
     }
 }

@@ -7,20 +7,26 @@
 //! synthesises page-level attention probabilities (the structure of paper
 //! Figure 3), feeds them to the policy exactly as the engine feeds
 //! estimated rep-scores, enforces the cache budget by eviction, and checks
-//! *visibility* of required pages at consumption time:
-//!
-//! * bounded policies (RaaS/Sink/H2O): required page still resident?
-//! * Quest: required page inside the top-L selection?
-//! * Dense: always visible.
+//! *visibility* of required pages at consumption time: a required page is
+//! visible iff it is both resident AND inside the step's selection.  For
+//! eviction-sparse policies (Dense/Sink/H2O/RaaS/RPC) the selection is the
+//! full resident set, so visibility reduces to residency; for
+//! selection-sparse policies (Quest/LessIsMore) everything stays resident
+//! and visibility is decided by the top-L pick.
 //!
 //! A missed milestone derails the chain (extra re-derivation steps, chance
 //! of looping to the decode cap — Figure 8) and usually costs the answer;
 //! a missed phoenix operand usually costs the answer.
+//!
+//! The Lil harness (`gen_lil_trace`/`run_lil_trial`) layers very-long
+//! decodes (8k–32k) on the same machinery: pre-generated traces replayed
+//! under every policy, with per-page attention flares so distractor
+//! pressure grows with the resident set — the accuracy-cliff workload of
+//! `benches/accuracy_cliff.rs`.
 
-use crate::config::PolicyKind;
 use crate::kvcache::page::{PageMeta, NO_POOL};
 use crate::kvcache::policy::{resident_tokens, SparsityPolicy};
-use crate::sim::profiles::{DatasetProfile, ModelProfile};
+use crate::sim::profiles::{DatasetProfile, LilScenario, ModelProfile};
 use crate::util::rng::Rng;
 
 /// Simulator knobs shared by every trial (mirrors `EngineConfig`).
@@ -268,18 +274,15 @@ pub fn run_trial(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProf
             if t == consume_at {
                 // milestone of step r needed (unless it comes from the prompt)
                 if r > 0 {
-                    let visible = match ms_page {
-                        Some(i) => policy.kind() != PolicyKind::Quest || sel.contains(&i),
-                        None => false,
-                    };
+                    // resident AND selected — identity-selection policies
+                    // always select every resident page, so this is purely
+                    // a residency test for them
+                    let visible = matches!(ms_page, Some(i) if sel.contains(&i));
                     if !visible && emitted_ok[r] {
                         ms_missed = true;
                     }
                 }
-                let ph_visible = match ph_page {
-                    Some(i) => policy.kind() != PolicyKind::Quest || sel.contains(&i),
-                    None => false,
-                };
+                let ph_visible = matches!(ph_page, Some(i) if sel.contains(&i));
                 if !ph_visible {
                     ph_missed = true;
                 }
@@ -393,6 +396,330 @@ pub fn run_trials(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelPro
     agg
 }
 
+// ---------------------------------------------------------------------------
+// Lil: very-long-decode accuracy-cliff harness (arXiv:2601.03043 shape)
+// ---------------------------------------------------------------------------
+
+/// One step of a pre-generated Lil trace (see [`gen_lil_trace`]).
+#[derive(Debug, Clone, Copy)]
+pub struct LilStep {
+    /// Chain step whose milestone this step consumes (0 = none).
+    pub reads: usize,
+    /// Whether this step re-reads its phoenix (prompt) operand.
+    pub phoenix: bool,
+    /// Tokens this step decodes.
+    pub len: usize,
+}
+
+/// A pre-generated very-long-decode problem instance.  The *same* trace is
+/// replayed under every policy (and under the unbudgeted dense reference),
+/// so accuracy and token agreement are paired comparisons: a policy can
+/// differ from dense only through visibility misses, never through RNG
+/// drift.
+#[derive(Debug, Clone)]
+pub struct LilTrace {
+    /// Prompt length in tokens (pinned pages holding phoenix operands).
+    pub prompt_len: usize,
+    /// The chain, in order.
+    pub steps: Vec<LilStep>,
+    /// Shared answer coin: the final answer is correct iff
+    /// `answer_u < p_correct`.  Dense never misses, so its accuracy over a
+    /// trace batch is *exactly* `count(answer_u < base_acc) / n` — the
+    /// pinned reference the bench asserts against.
+    pub answer_u: f64,
+    /// Seed of the per-replay noise stream (estimation noise, flares,
+    /// derailment lengths) — deterministic per (policy, trace).
+    pub noise_seed: u64,
+}
+
+impl LilTrace {
+    /// Decode length of the trace with no derailments, in tokens.
+    pub fn nominal_len(&self) -> usize {
+        self.steps.iter().map(|s| s.len).sum()
+    }
+}
+
+/// Generate one Lil trace of at least `target_decode` nominal tokens under
+/// scenario `sc` with `mp`'s step-length distribution.
+pub fn gen_lil_trace(sc: &LilScenario, mp: &ModelProfile, target_decode: usize, rng: &mut Rng)
+                     -> LilTrace {
+    let mut steps = Vec::new();
+    let mut total = 0usize;
+    let mut i = 0usize;
+    let mut era_anchor = 0usize;
+    while total < target_decode {
+        i += 1;
+        let era_pos = (i - 1) % sc.era_steps.max(1);
+        if sc.era_steps > 1 && era_pos == 0 {
+            // a new era anchors on the milestone this step emits
+            era_anchor = i;
+        }
+        let reads = if sc.era_steps <= 1 {
+            // milestone-dense: short-lookback consumption of a recent step
+            if i > 1 && i % sc.consume_every.max(1) == 0 {
+                let back = sc.lookback.min(i - 1).max(1);
+                i - rng.range(1, back + 1)
+            } else {
+                0
+            }
+        } else if era_pos > 0 && era_pos % sc.consume_every.max(1) == 0 {
+            // milestone-sparse: keep re-reading the era's anchor
+            era_anchor
+        } else {
+            0
+        };
+        let phoenix = i % sc.phoenix_every.max(1) == 0;
+        let len = rng.lognormal(mp.step_tokens.0, mp.step_tokens.1).round().max(3.0) as usize;
+        total += len;
+        steps.push(LilStep { reads, phoenix, len });
+    }
+    LilTrace {
+        prompt_len: sc.prompt_tokens,
+        steps,
+        answer_u: rng.f64(),
+        noise_seed: rng.next_u64(),
+    }
+}
+
+/// What one Lil trace replay produced.
+#[derive(Debug, Clone, Default)]
+pub struct LilOutcome {
+    /// Whether the shared answer coin landed under this replay's
+    /// `p_correct`.
+    pub correct: bool,
+    /// Decode length in tokens (inflated by derailments).
+    pub decode_len: usize,
+    /// Whether decoding looped until the cap.
+    pub hit_cap: bool,
+    /// Chain steps whose milestone was invisible at consumption.
+    pub milestone_misses: usize,
+    /// Chain steps whose phoenix operand was invisible at consumption.
+    pub phoenix_misses: usize,
+    /// Tokens of chain steps completed with every read visible — the
+    /// numerator of token agreement vs the dense reference.
+    pub visible_tokens: usize,
+    /// High-water resident KV in tokens.
+    pub peak_resident_tokens: usize,
+}
+
+/// Means over a batch of Lil traces (one accuracy-cliff grid cell).
+#[derive(Debug, Clone, Default)]
+pub struct LilAggregate {
+    /// Traces replayed.
+    pub trials: usize,
+    /// Fraction of replays answering correctly.
+    pub accuracy: f64,
+    /// Mean `visible_tokens / max(decode_len, nominal_len)` — exactly 1.0
+    /// for the unbudgeted dense reference, degraded by both misses and
+    /// derailment inflation.
+    pub token_agreement: f64,
+    /// Mean decode length in tokens.
+    pub mean_decode_len: f64,
+    /// Fraction of replays that hit the decode cap.
+    pub cap_rate: f64,
+    /// Mean milestone misses per replay.
+    pub milestone_miss_rate: f64,
+    /// Mean phoenix misses per replay.
+    pub phoenix_miss_rate: f64,
+    /// Mean per-replay peak resident tokens.
+    pub mean_peak_resident: f64,
+}
+
+/// Per-resident-page attention flares: each page spikes with probability
+/// `flare_p` this token, then the distribution is renormalised.  Because
+/// every resident page rolls independently, distractor pressure grows
+/// with the resident-set size — selection over an O(N) cache faces ever
+/// more flares as the decode lengthens, eviction-bounded caches do not.
+fn add_flares(probs: &mut [f32], sc: &LilScenario, rng: &mut Rng) {
+    if sc.flare_p <= 0.0 || probs.is_empty() {
+        return;
+    }
+    let mut extra = 0.0f32;
+    for p in probs.iter_mut() {
+        if rng.chance(sc.flare_p) {
+            *p += sc.flare_hot as f32;
+            extra += sc.flare_hot as f32;
+        }
+    }
+    if extra > 0.0 {
+        let norm = 1.0 + extra;
+        for p in probs.iter_mut() {
+            *p /= norm;
+        }
+    }
+}
+
+/// Advance the cache one filler token (derailment re-derivation): no
+/// consumption, same observe/append/evict cycle as a normal token.
+fn lil_filler_token(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProfile,
+                    cache: &mut SimCache, probs: &mut Vec<f32>, pos: &mut usize, now: &mut u64) {
+    *now += 1;
+    cache.synth_probs(mp, *now, None, None, probs);
+    policy.observe(&mut cache.table, probs, *now);
+    cache.append_token(*pos, false, *now);
+    *pos += 1;
+    while resident_tokens(&cache.table) > params.budget_tokens {
+        match policy.evict_candidate(&cache.table) {
+            Some(idx) => cache.evict(idx),
+            None => break,
+        }
+    }
+}
+
+/// Replay one Lil trace under `policy`.  Mirrors [`run_trial`]'s decode
+/// loop (synth → estimate → select → visibility → observe → append →
+/// evict) plus the scenario's attention flares; all randomness comes from
+/// the trace's `noise_seed`, so a replay is deterministic per
+/// (policy, trace).
+pub fn run_lil_trial(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProfile,
+                     sc: &LilScenario, trace: &LilTrace) -> LilOutcome {
+    let k = trace.steps.len();
+    let mut cache = SimCache::new(params.page_size, k);
+    let mut out = LilOutcome::default();
+    let mut rng = Rng::new(trace.noise_seed);
+
+    // pinned prompt; phoenix operands spread over it, one tag per step
+    for pos in 0..trace.prompt_len {
+        cache.append_token(pos, params.pin_prefill, 0);
+    }
+    for step in 1..=k {
+        let pos = (7 * step) % trace.prompt_len.max(1);
+        let page = (pos / params.page_size).min(cache.phoenixes.len() - 1);
+        cache.phoenixes[page].push(step);
+    }
+
+    let mut pos = trace.prompt_len;
+    let mut now: u64 = 0;
+    let mut probs: Vec<f32> = Vec::new();
+    let mut sel: Vec<usize> = Vec::new();
+    let mut emitted = vec![false; k + 1];
+
+    'outer: for (idx, st) in trace.steps.iter().enumerate() {
+        let step = idx + 1;
+        let consume_at = st.len / 2;
+        let mut ms_missed = false;
+        let mut ph_missed = false;
+        for t in 0..st.len {
+            if out.decode_len >= params.max_decode {
+                out.hit_cap = true;
+                break 'outer;
+            }
+            now += 1;
+            out.decode_len += 1;
+
+            let consuming = t >= consume_at;
+            let ms_page = if st.reads > 0 { cache.milestone_page(st.reads) } else { None };
+            let ph_page = if st.phoenix { cache.phoenix_page(step) } else { None };
+            cache.synth_probs(mp, now, if consuming { ms_page } else { None },
+                              if consuming { ph_page } else { None }, &mut probs);
+            add_flares(&mut probs, sc, &mut rng);
+            let est: Vec<f32> = probs
+                .iter()
+                .map(|&p| p * ((mp.est_noise * rng.normal()).exp() as f32))
+                .collect();
+            policy.select_into(&cache.table, &est, params.budget_tokens, params.page_size,
+                               &mut sel);
+
+            if t == consume_at {
+                if st.reads > 0 && emitted[st.reads] {
+                    let visible = matches!(ms_page, Some(i) if sel.contains(&i));
+                    if !visible {
+                        ms_missed = true;
+                    }
+                }
+                if st.phoenix {
+                    let visible = matches!(ph_page, Some(i) if sel.contains(&i));
+                    if !visible {
+                        ph_missed = true;
+                    }
+                }
+            }
+
+            let est_sum: f32 = est.iter().sum();
+            let est_probs: Vec<f32> = est.iter().map(|&e| e / est_sum.max(1e-30)).collect();
+            policy.observe(&mut cache.table, &est_probs, now);
+            cache.append_token(pos, false, now);
+            pos += 1;
+            while resident_tokens(&cache.table) > params.budget_tokens {
+                match policy.evict_candidate(&cache.table) {
+                    Some(idx) => cache.evict(idx),
+                    None => break,
+                }
+            }
+            out.peak_resident_tokens =
+                out.peak_resident_tokens.max(resident_tokens(&cache.table));
+        }
+
+        cache.tag_milestone(step, now);
+        emitted[step] = true;
+        if !ms_missed && !ph_missed {
+            out.visible_tokens += st.len;
+        }
+        if ms_missed {
+            out.milestone_misses += 1;
+            if rng.chance(mp.stuck_p) {
+                // loses track and loops to the cap (Figure-8 shape)
+                while out.decode_len < params.max_decode {
+                    out.decode_len += 1;
+                    lil_filler_token(policy, params, mp, &mut cache, &mut probs, &mut pos,
+                                     &mut now);
+                }
+                out.hit_cap = true;
+                break 'outer;
+            }
+            let extra = rng.lognormal(mp.derail_extra.0, mp.derail_extra.1).round() as usize;
+            for _ in 0..extra.min(params.max_decode.saturating_sub(out.decode_len)) {
+                out.decode_len += 1;
+                lil_filler_token(policy, params, mp, &mut cache, &mut probs, &mut pos, &mut now);
+            }
+        }
+        if ph_missed {
+            out.phoenix_misses += 1;
+        }
+    }
+
+    let mut p_correct = sc.base_acc;
+    for _ in 0..out.milestone_misses {
+        p_correct *= sc.milestone_survive_p;
+    }
+    for _ in 0..out.phoenix_misses {
+        p_correct *= sc.phoenix_survive_p;
+    }
+    if out.hit_cap {
+        p_correct = 0.0;
+    }
+    out.correct = trace.answer_u < p_correct;
+    out
+}
+
+/// Replay a batch of traces under `policy` and aggregate.  The batch is
+/// generated once per grid cell and shared across policies (paired
+/// comparison — see [`LilTrace`]).
+pub fn run_lil_trials(policy: &dyn SparsityPolicy, params: &SimParams, mp: &ModelProfile,
+                      sc: &LilScenario, traces: &[LilTrace]) -> LilAggregate {
+    let mut agg = LilAggregate { trials: traces.len(), ..Default::default() };
+    for trace in traces {
+        let t = run_lil_trial(policy, params, mp, sc, trace);
+        let denom = t.decode_len.max(trace.nominal_len()).max(1) as f64;
+        agg.accuracy += t.correct as usize as f64;
+        agg.token_agreement += t.visible_tokens as f64 / denom;
+        agg.mean_decode_len += t.decode_len as f64;
+        agg.cap_rate += t.hit_cap as usize as f64;
+        agg.milestone_miss_rate += t.milestone_misses as f64;
+        agg.phoenix_miss_rate += t.phoenix_misses as f64;
+        agg.mean_peak_resident += t.peak_resident_tokens as f64;
+    }
+    let n = traces.len().max(1) as f64;
+    agg.accuracy /= n;
+    agg.token_agreement /= n;
+    agg.mean_decode_len /= n;
+    agg.cap_rate /= n;
+    agg.milestone_miss_rate /= n;
+    agg.phoenix_miss_rate /= n;
+    agg.mean_peak_resident /= n;
+    agg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -471,5 +798,80 @@ mod tests {
         let large = agg(PolicyKind::Raas, 1024, 100);
         assert!(large.accuracy >= small.accuracy - 0.05,
                 "raas acc should improve with budget: {} -> {}", small.accuracy, large.accuracy);
+    }
+
+    use crate::sim::profiles::LIL_SCENARIOS;
+
+    fn lil_traces(sc_idx: usize, target: usize, n: usize, seed: u64) -> Vec<LilTrace> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| gen_lil_trace(&LIL_SCENARIOS[sc_idx], &MODELS[2], target, &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn lil_trace_hits_target_length() {
+        for trace in lil_traces(1, 2048, 5, 7) {
+            assert!(trace.nominal_len() >= 2048, "nominal {}", trace.nominal_len());
+            // one step of overshoot at most (~e^2.75 ≈ 16 tokens + tail)
+            assert!(trace.nominal_len() < 2048 + 512);
+            assert!((0.0..1.0).contains(&trace.answer_u));
+            // every consumed milestone was emitted by an earlier step
+            for (i, st) in trace.steps.iter().enumerate() {
+                assert!(st.reads <= i, "step {} reads future step {}", i + 1, st.reads);
+            }
+        }
+    }
+
+    #[test]
+    fn lil_dense_reference_is_exact() {
+        let sc = &LIL_SCENARIOS[1];
+        let traces = lil_traces(1, 2048, 20, 11);
+        let cfg = EngineConfig { policy: PolicyKind::Dense, ..Default::default() };
+        let policy = make_policy(&cfg);
+        let params = SimParams {
+            budget_tokens: 1 << 24,
+            max_decode: 2048 + 4096,
+            ..Default::default()
+        };
+        let agg = run_lil_trials(policy.as_ref(), &params, &MODELS[2], sc, &traces);
+        // dense never misses and never derails: accuracy is EXACTLY the
+        // answer-coin count and token agreement is exactly 1
+        let expected =
+            traces.iter().filter(|t| t.answer_u < sc.base_acc).count() as f64 / 20.0;
+        assert!((agg.accuracy - expected).abs() < 1e-12, "{} vs {}", agg.accuracy, expected);
+        assert!((agg.token_agreement - 1.0).abs() < 1e-12);
+        assert_eq!(agg.milestone_miss_rate, 0.0);
+        assert_eq!(agg.phoenix_miss_rate, 0.0);
+        assert_eq!(agg.cap_rate, 0.0);
+    }
+
+    #[test]
+    fn lil_policies_complete() {
+        // every zoo policy replays a small trace without panicking, and
+        // memory-bounding policies respect the budget
+        let sc = &LIL_SCENARIOS[0];
+        let traces = lil_traces(0, 512, 2, 13);
+        let params = SimParams {
+            budget_tokens: 256,
+            max_decode: 512 + 2048,
+            ..Default::default()
+        };
+        for kind in PolicyKind::all() {
+            let cfg = EngineConfig {
+                policy: kind,
+                budget: 256,
+                alpha: sc.raas_alpha,
+                ..Default::default()
+            };
+            let policy = make_policy(&cfg);
+            let agg = run_lil_trials(policy.as_ref(), &params, &MODELS[2], sc, &traces);
+            assert_eq!(agg.trials, 2, "{kind:?}");
+            assert!(agg.mean_decode_len > 0.0, "{kind:?}");
+            if policy.bounds_memory() {
+                assert!(agg.mean_peak_resident < 256.0 + 160.0,
+                        "{kind:?} peak {}", agg.mean_peak_resident);
+            }
+        }
     }
 }

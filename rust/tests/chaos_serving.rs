@@ -30,13 +30,7 @@ use raas::engine::Engine;
 use raas::kvcache::{KvDtype, SeqCache};
 use raas::runtime::{FaultOp, FaultSchedule, StepFaultInjector};
 
-const POLICIES: [PolicyKind; 5] = [
-    PolicyKind::Dense,
-    PolicyKind::Sink,
-    PolicyKind::H2o,
-    PolicyKind::Quest,
-    PolicyKind::Raas,
-];
+const POLICIES: [PolicyKind; 7] = PolicyKind::all();
 const DTYPES: [KvDtype; 3] = [KvDtype::F32, KvDtype::Fp8E4M3, KvDtype::Int8];
 const N_REQS: u64 = 12;
 

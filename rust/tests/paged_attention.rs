@@ -96,7 +96,7 @@ fn engine_routes_paged_on_sim_and_gathered_on_wrapper() {
 
 #[test]
 fn paged_and_gathered_decode_step_bitwise_identical() {
-    // Sequential path (`generate` -> `decode_step`), all five policies:
+    // Sequential path (`generate` -> `decode_step`), all seven policies:
     // tokens and Figure-3 score logs must match bit for bit.
     let steps = 72;
     for policy in PolicyKind::all() {
@@ -125,7 +125,7 @@ fn paged_and_gathered_decode_step_bitwise_identical() {
 
 #[test]
 fn paged_and_gathered_decode_batch_bitwise_identical() {
-    // Batched path (`decode_batch`), all five policies — covers the
+    // Batched path (`decode_batch`), all seven policies — covers the
     // flattened-view assembly and `layer_attn_mlp_paged_batch`'s
     // cross-item weight reuse (the duplicate prompt pair).
     let steps = 72;

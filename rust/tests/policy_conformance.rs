@@ -1,0 +1,280 @@
+//! Policy-conformance suite: the cross-policy trait contract every member
+//! of the zoo (`PolicyKind::all`) must honour, regardless of what it
+//! ranks.  The engine's decode paths, the eviction loop, the trace
+//! simulator, and the bit-identity matrices all assume these properties;
+//! a new policy that passes this file can be dropped into any of them.
+//!
+//! Pinned per policy:
+//!  * selection is a sorted, duplicate-free subset of the live table that
+//!    always includes the active page;
+//!  * selection-sparse policies respect the page budget, identity
+//!    policies select everything;
+//!  * `select_into` is pure: dirty out-params and warm internal scratch
+//!    never change the result;
+//!  * fully tied scores resolve deterministically (earliest index);
+//!  * NaN/±inf scores and probs never panic, and `observe` never touches
+//!    table *structure* (ids, positions, lengths, pins);
+//!  * eviction candidates are live non-active pages, prefill-pinning
+//!    policies never evict pins, and the eviction loop terminates;
+//!  * `bounds_memory` matches eviction behaviour (never-evicting
+//!    policies report O(N), evicting policies report O(L));
+//!  * pool-level stamp aggregation (`note_stamp`/`stamp_max`) is
+//!    monotone and survives retain/COW — the shared-page machinery the
+//!    engine layers on top of sharing-oblivious policies.
+
+use raas::config::{EngineConfig, PolicyKind};
+use raas::kvcache::page::PageMeta;
+use raas::kvcache::policy::{make_policy, resident_tokens, SparsityPolicy};
+use raas::kvcache::KvPool;
+use raas::util::rng::Rng;
+
+const SEEDS: u64 = 60;
+
+/// Random live table: mixed page lengths, a pinned prefix, randomized
+/// policy statistics (stamps, accumulators, RPC windows).
+fn random_table(rng: &mut Rng) -> (Vec<PageMeta>, Vec<f32>) {
+    let n = rng.range(2, 40);
+    let mut table = Vec::new();
+    let mut pos = 0;
+    for i in 0..n {
+        let mut m = PageMeta::new(i as u32, pos, i < 3 && rng.chance(0.5), 0);
+        m.len = rng.range(1, 17);
+        m.last_stamp = rng.range(0, 50) as u64;
+        m.acc_score = rng.f64() * 10.0;
+        m.win_score = rng.f64() * 4.0;
+        pos += m.len;
+        table.push(m);
+    }
+    let scores: Vec<f32> = (0..n).map(|_| rng.f64() as f32 * 6.0 - 3.0).collect();
+    (table, scores)
+}
+
+fn policy_for(kind: PolicyKind, budget: usize) -> Box<dyn SparsityPolicy> {
+    let cfg = EngineConfig { policy: kind, budget, ..Default::default() };
+    make_policy(&cfg)
+}
+
+/// Policies whose selection is a strict subset under pressure (everything
+/// else selects the full resident set and sparsifies via eviction).
+fn selection_sparse(kind: PolicyKind) -> bool {
+    matches!(kind, PolicyKind::Quest | PolicyKind::LessIsMore)
+}
+
+#[test]
+fn selection_is_sorted_subset_including_active() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed * 31 + 5);
+        let (table, scores) = random_table(&mut rng);
+        for kind in PolicyKind::all() {
+            let budget = rng.range(16, 2048);
+            let policy = policy_for(kind, budget);
+            let sel = policy.select(&table, &scores, budget, 16);
+            assert!(!sel.is_empty(), "{kind:?} empty selection");
+            assert!(sel.windows(2).all(|w| w[0] < w[1]),
+                    "{kind:?} selection not sorted/duplicate-free: {sel:?}");
+            assert!(*sel.last().unwrap() < table.len(), "{kind:?} out of range");
+            assert!(sel.contains(&(table.len() - 1)), "{kind:?} dropped active page");
+            let budget_pages = (budget / 16).max(1);
+            if selection_sparse(kind) && table.len() > budget_pages {
+                assert!(sel.len() <= budget_pages,
+                        "{kind:?} over page budget: {} > {budget_pages}", sel.len());
+            }
+            if !selection_sparse(kind) {
+                assert_eq!(sel, (0..table.len()).collect::<Vec<_>>(),
+                           "{kind:?} must select the full resident set");
+            }
+        }
+    }
+}
+
+#[test]
+fn select_into_is_pure_across_scratch_reuse() {
+    // A dirty out-param and warm internal scratch (LessIsMore's aggregation
+    // buffer, any future policy caches) must not change the selection; the
+    // out-param form must equal the allocating wrapper.
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed * 67 + 9);
+        let (table, scores) = random_table(&mut rng);
+        for kind in PolicyKind::all() {
+            let budget = rng.range(16, 1024);
+            let policy = policy_for(kind, budget);
+            let fresh = policy.select(&table, &scores, budget, 16);
+            let mut dirty = vec![usize::MAX; rng.range(1, 9)];
+            policy.select_into(&table, &scores, budget, 16, &mut dirty);
+            assert_eq!(dirty, fresh, "{kind:?} first reuse diverged");
+            policy.select_into(&table, &scores, budget, 16, &mut dirty);
+            assert_eq!(dirty, fresh, "{kind:?} second reuse diverged");
+        }
+    }
+}
+
+#[test]
+fn tied_scores_resolve_to_earliest_pages() {
+    // All-tied scores are the degenerate case every comparator must handle
+    // identically on every platform: `total_cmp` + index tie-break means
+    // the earliest pages win, with the active page always appended.
+    let mut table = Vec::new();
+    for i in 0..8 {
+        let mut m = PageMeta::new(i as u32, i * 16, false, 0);
+        m.len = 16;
+        table.push(m);
+    }
+    let scores = [0.5f32; 8];
+    for kind in PolicyKind::all() {
+        let policy = policy_for(kind, 64);
+        let sel = policy.select(&table, &scores, 64, 16); // 4-page budget
+        if selection_sparse(kind) {
+            // Quest: 3 earliest ties + active.  LessIsMore: 3 earliest by
+            // (uniform) aggregated share + 1-page recent window.
+            assert_eq!(sel, vec![0, 1, 2, 7], "{kind:?}");
+        } else {
+            assert_eq!(sel, (0..8).collect::<Vec<_>>(), "{kind:?}");
+        }
+    }
+}
+
+#[test]
+fn non_finite_scores_never_panic_and_observe_preserves_structure() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed * 101 + 3);
+        let (table, mut scores) = random_table(&mut rng);
+        let mut probs: Vec<f32> = scores.iter().map(|s| s.abs() / 10.0).collect();
+        for _ in 0..rng.range(1, 6) {
+            let i = rng.range(0, scores.len());
+            let bad = match rng.range(0, 3) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                _ => f32::NEG_INFINITY,
+            };
+            scores[i] = bad;
+            probs[i] = bad;
+        }
+        for kind in PolicyKind::all() {
+            let policy = policy_for(kind, 128);
+            let mut t = table.clone();
+            let shape: Vec<_> =
+                t.iter().map(|p| (p.pool_id, p.start_pos, p.len, p.pinned)).collect();
+            for now in 1..=3 {
+                policy.observe(&mut t, &probs, now);
+            }
+            let after: Vec<_> =
+                t.iter().map(|p| (p.pool_id, p.start_pos, p.len, p.pinned)).collect();
+            assert_eq!(shape, after, "{kind:?} observe mutated table structure");
+            let sel = policy.select(&t, &scores, 128, 16);
+            assert!(!sel.is_empty(), "{kind:?} empty under NaN");
+            assert!(sel.windows(2).all(|w| w[0] < w[1]), "{kind:?} malformed under NaN");
+            assert!(sel.contains(&(t.len() - 1)), "{kind:?} dropped active under NaN");
+            if let Some(v) = policy.evict_candidate(&t) {
+                assert!(v < t.len() - 1, "{kind:?} evicted active under NaN");
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_candidates_are_live_non_active_and_respect_pins() {
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed * 131 + 7);
+        let (table, _) = random_table(&mut rng);
+        for kind in PolicyKind::all() {
+            let policy = policy_for(kind, 64);
+            if let Some(v) = policy.evict_candidate(&table) {
+                assert!(v < table.len() - 1, "{kind:?} evicted the active page");
+                if matches!(kind, PolicyKind::Raas | PolicyKind::Rpc) {
+                    assert!(!table[v].pinned, "{kind:?} evicted pinned prefill");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_loop_terminates_within_table_len_steps() {
+    // The engine's budget-enforcement loop must never spin: each candidate
+    // shrinks the table, and a `None` must be sticky enough to break on.
+    for seed in 0..SEEDS {
+        let mut rng = Rng::new(seed * 151 + 11);
+        let (table, _) = random_table(&mut rng);
+        let budget = rng.range(16, 128);
+        for kind in PolicyKind::all() {
+            let policy = policy_for(kind, budget);
+            let mut t = table.clone();
+            let mut iters = 0;
+            while resident_tokens(&t) > budget {
+                match policy.evict_candidate(&t) {
+                    Some(v) => {
+                        t.remove(v);
+                    }
+                    None => break,
+                }
+                iters += 1;
+                assert!(iters <= table.len(), "{kind:?} eviction loop did not terminate");
+            }
+            if kind == PolicyKind::H2o {
+                // the one policy with no pin/sink exemptions always reaches
+                // the budget or a single page
+                assert!(resident_tokens(&t) <= budget || t.len() <= 1, "{kind:?} over budget");
+            }
+        }
+    }
+}
+
+#[test]
+fn bounds_memory_flag_matches_eviction_behaviour() {
+    let mut table = Vec::new();
+    for i in 0..12 {
+        let mut m = PageMeta::new(i as u32, i * 16, false, 0);
+        m.len = 16;
+        m.acc_score = i as f64;
+        table.push(m);
+    }
+    for kind in PolicyKind::all() {
+        let policy = policy_for(kind, 64);
+        let bounded = matches!(
+            kind,
+            PolicyKind::Sink | PolicyKind::H2o | PolicyKind::Raas | PolicyKind::Rpc
+        );
+        assert_eq!(policy.bounds_memory(), bounded, "{kind:?}");
+        if !bounded {
+            assert_eq!(policy.evict_candidate(&table), None,
+                       "{kind:?} claims O(N) memory but evicts");
+        } else {
+            assert!(policy.evict_candidate(&table).is_some(),
+                    "{kind:?} claims O(L) memory but never evicts");
+        }
+    }
+}
+
+#[test]
+fn pool_stamp_aggregation_is_monotone_under_sharing_and_cow() {
+    // Shared-page stamps: `note_stamp` is a monotone max, `stamp_max`
+    // starts at zero on alloc, retain does not disturb it, and a COW
+    // detach inherits the source's aggregate (same tokens, same heat).
+    let mut pool = KvPool::new(8, 16, 4);
+    let id = pool.alloc().unwrap();
+    assert_eq!(pool.stamp_max(id), 0);
+    let mut high = 0;
+    for stamp in [5u64, 3, 9, 2, 9, 11] {
+        pool.note_stamp(id, stamp);
+        high = high.max(stamp);
+        assert_eq!(pool.stamp_max(id), high, "stamp aggregate must be a running max");
+    }
+    // exclusive page: COW is the identity and stamps are untouched
+    assert_eq!(pool.cow_page(id, 4).unwrap(), id);
+    assert_eq!(pool.stamp_max(id), 11);
+    // shared page: detach inherits the aggregate, both copies stay monotone
+    pool.retain(id);
+    assert!(pool.is_shared(id));
+    let detached = pool.cow_page(id, 4).unwrap();
+    assert_ne!(detached, id, "shared page must detach");
+    assert_eq!(pool.stamp_max(detached), 11, "COW copy inherits the stamp aggregate");
+    assert_eq!(pool.stamp_max(id), 11);
+    pool.note_stamp(detached, 4);
+    assert_eq!(pool.stamp_max(detached), 11, "stale sharer stamp cannot lower the max");
+    pool.note_stamp(detached, 20);
+    assert_eq!(pool.stamp_max(detached), 20);
+    assert_eq!(pool.stamp_max(id), 11, "copies aggregate independently after detach");
+    pool.release(id);
+    pool.release(detached);
+    assert_eq!(pool.allocated_pages(), 0);
+}

@@ -2,8 +2,8 @@
 //! under pool pressure and later resumed must decode the exact token
 //! stream — and emit the exact Figure-3 score log — of an uninterrupted
 //! run, in BOTH preemption modes (recompute: drop pages + replay history;
-//! restore: swap pages to a host buffer and back) across all five
-//! policies.  Two layers:
+//! restore: swap pages to a host buffer and back) across the full policy
+//! zoo (`PolicyKind::all`).  Two layers:
 //!
 //!  * engine-level: manual decode with score logging, preempted mid-run;
 //!  * serving-level: `Batcher` + `EngineBackend` with a deterministic
@@ -21,13 +21,6 @@ use raas::engine::{Engine, GenOptions};
 use raas::kvcache::SeqCache;
 use raas::runtime::{FaultOp, FaultSchedule, StepFaultInjector};
 
-const POLICIES: [PolicyKind; 5] = [
-    PolicyKind::Dense,
-    PolicyKind::Sink,
-    PolicyKind::H2o,
-    PolicyKind::Quest,
-    PolicyKind::Raas,
-];
 const MODES: [PreemptMode; 2] = [PreemptMode::Recompute, PreemptMode::Restore];
 
 fn mk_engine(policy: PolicyKind) -> Engine {
@@ -42,7 +35,7 @@ fn engine_level_preempt_resume_is_bit_identical() {
     // reference run — stamps, H2O accumulators and page tables all rebuild.
     let prompt: Vec<u32> = (0..20u32).map(|i| 1 + i % 40).collect();
     let steps = 12usize;
-    for policy in POLICIES {
+    for policy in PolicyKind::all() {
         let opts = GenOptions {
             max_new: steps,
             force_len: Some(steps),
@@ -178,7 +171,7 @@ fn serving_preempt_resume_is_bit_identical_across_policies_and_modes() {
     // must rewind the stalled step, preempt a victim (mode under test),
     // resume it, and still answer every request with exactly the tokens a
     // fault-free run decodes.
-    for policy in POLICIES {
+    for policy in PolicyKind::all() {
         for mode in MODES {
             let (control, cb) = serve(policy, mode, FaultSchedule::new(0));
             assert_eq!(cb.preemptions, 0, "control run must not preempt");

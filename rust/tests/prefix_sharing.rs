@@ -6,12 +6,12 @@
 //!    the parent it forked from) must decode bit-identically to an
 //!    independently prefilled sequence: same tokens, same Figure-3 score
 //!    logs, same slab bytes / page tables (pool ids excepted), across all
-//!    five policies.
+//!    seven policies.
 //!  * the pool-level prefix index (`prefix_cache: true`) — a repeated
 //!    prompt attaches its already-resident full prefix pages instead of
 //!    re-running prefill over them.  The warm sequence must be
 //!    bit-identical to the cold one, and to a `prefix_cache: false`
-//!    engine's, across all five policies — including prompts that exceed
+//!    engine's, across all seven policies — including prompts that exceed
 //!    the budget so post-prefill trims evict index-retained (shared) pages.
 //!
 //! Plus the shared-page lifecycle edges the satellites name: eviction of a

@@ -279,20 +279,29 @@ fn prop_eviction_respects_pins_and_active_page() {
             let policy = make_policy(&cfg);
             if let Some(victim) = policy.evict_candidate(&table) {
                 assert!(victim < table.len() - 1, "{kind:?} evicted the active page");
-                if kind == PolicyKind::Raas {
-                    assert!(!table[victim].pinned, "raas evicted pinned prefill");
+                if matches!(kind, PolicyKind::Raas | PolicyKind::Rpc) {
+                    assert!(!table[victim].pinned, "{kind:?} evicted pinned prefill");
                 }
             } else {
-                assert!(
-                    matches!(kind, PolicyKind::Dense | PolicyKind::Quest)
-                        || table.len() <= 1
-                        || table[..table.len() - 1].iter().all(|p| match kind {
-                            PolicyKind::Raas => p.pinned,
-                            PolicyKind::Sink => p.start_pos < cfg.sink_tokens,
-                            _ => false,
-                        }),
-                    "{kind:?} refused eviction with evictable pages present"
-                );
+                let len = table.len();
+                let ok = match kind {
+                    PolicyKind::Dense | PolicyKind::Quest | PolicyKind::LessIsMore => true,
+                    _ if len <= 1 => true,
+                    PolicyKind::Raas => table[..len - 1].iter().all(|p| p.pinned),
+                    PolicyKind::Sink => {
+                        table[..len - 1].iter().all(|p| p.start_pos < cfg.sink_tokens)
+                    }
+                    PolicyKind::Rpc => {
+                        // mirror the policy's page-size inference: refusal is
+                        // legitimate only when pins cover everything outside
+                        // the protected recent tail
+                        let ps = table.iter().map(|p| p.len).max().unwrap_or(16).max(1);
+                        let protected = (cfg.rpc_period as usize / ps + 1).min(len - 1);
+                        table[..len - protected].iter().all(|p| p.pinned)
+                    }
+                    PolicyKind::H2o => false,
+                };
+                assert!(ok, "{kind:?} refused eviction with evictable pages present");
             }
         }
     });
@@ -407,8 +416,8 @@ fn prop_policies_tolerate_non_finite_scores() {
             assert!(sel.contains(&(t.len() - 1)), "{kind:?} dropped active page under NaN");
             if let Some(victim) = policy.evict_candidate(&t) {
                 assert!(victim < t.len() - 1, "{kind:?} evicted active page under NaN");
-                if kind == PolicyKind::Raas {
-                    assert!(!t[victim].pinned, "raas evicted pinned prefill under NaN");
+                if matches!(kind, PolicyKind::Raas | PolicyKind::Rpc) {
+                    assert!(!t[victim].pinned, "{kind:?} evicted pinned prefill under NaN");
                 }
             }
         }

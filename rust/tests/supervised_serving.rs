@@ -31,13 +31,7 @@ use raas::runtime::FaultSchedule;
 use raas::util::clock::SimClock;
 use raas::util::rng::Rng;
 
-const POLICIES: [PolicyKind; 5] = [
-    PolicyKind::Dense,
-    PolicyKind::Sink,
-    PolicyKind::H2o,
-    PolicyKind::Quest,
-    PolicyKind::Raas,
-];
+const POLICIES: [PolicyKind; 7] = PolicyKind::all();
 
 fn chaos_seed() -> u64 {
     std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
@@ -135,7 +129,7 @@ fn assert_all_done(out: &CellOut, n_reqs: u64, what: &str) {
     }
 }
 
-/// The ISSUE-9 acceptance matrix: 2/4/8 replicas × all five policies ×
+/// The ISSUE-9 acceptance matrix: 2/4/8 replicas × all seven policies ×
 /// {control, crash, hang}.  Faulted cells must recover every request with
 /// tokens bit-identical to the fault-free control.
 #[test]
@@ -215,7 +209,7 @@ fn seeded_fault_sequences_never_lose_or_duplicate_requests() {
 /// The determinism foundation recovery rests on: an engine whose state was
 /// "warmed" by unrelated sequences decodes a fresh prompt with tokens AND
 /// Figure-3 score logs bit-identical to a factory-fresh engine, across all
-/// five policies.  (This is why a re-prefilled recovered request matches
+/// seven policies.  (This is why a re-prefilled recovered request matches
 /// the fault-free control exactly.)
 #[test]
 fn warm_engine_matches_fresh_engine_tokens_and_figure3_logs() {
